@@ -1,0 +1,33 @@
+//! Ablation (DESIGN.md §Perf): IS-vs-FS kernel gap as a function of group
+//! size. Smaller groups mean more per-group epilogue work, so the
+//! float-scale conversion penalty — and Integer Scale's advantage — grows
+//! as granularity gets finer (the paper's motivation quantified on CPU).
+
+use integer_scale::bench_harness::{black_box, Bencher};
+use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::quant::{Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let (m, k, n) = (16usize, 1024usize, 2048usize);
+    let x = Mat::randn(m, k, 1.0, &mut rng);
+    let w = Mat::randn(n, k, 0.05, &mut rng);
+    let qa = QuantAct::quantize(&x, Bits::B8);
+    println!("IS vs FS W4A8 kernel, M={m} K={k} N={n}, sweeping group size");
+    for g in [16usize, 32, 64, 128, 256] {
+        let pf = pack_for_test(&w, Bits::B4, Granularity::Group(g), None);
+        let pi = pack_for_test(&w, Bits::B4, Granularity::Group(g), Some(1024));
+        let mut b = Bencher::group(&format!("group={g}")).sample_size(15);
+        let fs = b.bench("float_scale", || {
+            black_box(gemm::w4a8_fg_float::gemm(&qa, &pf));
+        });
+        let is = b.bench("integer_scale", || {
+            black_box(gemm::w4a8_fg_int::gemm(&qa, &pi));
+        });
+        println!(
+            ">> g={g}: IS speedup over FS = {:.3}x",
+            fs.median.as_secs_f64() / is.median.as_secs_f64()
+        );
+    }
+}

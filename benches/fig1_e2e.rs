@@ -1,0 +1,61 @@
+//! Fig. 1 — end-to-end serving latency through the full coordinator:
+//! FP16 vs Marlin-like W4A16 vs W4A8 float-scale vs W4A8 Integer Scale.
+
+use integer_scale::bench_harness::Bencher;
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::quant::{BitWidth, Granularity};
+use integer_scale::tensor::Rng;
+use std::sync::Arc;
+
+fn workload(model: &Arc<Transformer>, gen: &CorpusGen) {
+    let mut e = Engine::new(
+        model.clone(),
+        EngineConfig { max_batch: 8, kv_token_budget: 8 * 256, seed: 1 },
+    );
+    let mut rng = Rng::new(9);
+    for i in 0..8u64 {
+        let doc = gen.document(12, Split::C4, &mut rng);
+        let mut r = Request::greedy(i, doc, 8);
+        r.stop_at_eos = false;
+        e.submit(r);
+    }
+    let res = e.run_to_completion();
+    assert_eq!(res.len(), 8);
+}
+
+fn main() {
+    let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
+    let weights = ModelWeights::random(cfg, 42);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(128, Split::C4, 11);
+
+    let schemes: [(&str, Option<QuantSpec>); 4] = [
+        ("fp16", None),
+        ("w4a16", Some(QuantSpec::new(Method::Rtn, BitWidth::W4A16, Granularity::Group(128)))),
+        ("w4a8_fs", Some(QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)))),
+        (
+            "w4a8_is",
+            Some(QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024)),
+        ),
+    ];
+    let mut b = Bencher::group("fig1_e2e_serving (8 reqs, 12 prompt + 8 new)").sample_size(6);
+    for (name, spec) in schemes {
+        let model = Arc::new(match &spec {
+            None => Transformer::from_weights(&weights),
+            Some(s) => quantize_model(&weights, s, &calib),
+        });
+        b.bench(name, || workload(&model, &gen));
+    }
+    if let Some(r) = b.ratio("fp16", "w4a8_is") {
+        println!("\n>> W4A8 Integer Scale end-to-end speedup over FP16: {r:.2}x (paper: up to 1.85x)");
+    }
+    if let Some(r) = b.ratio("w4a8_fs", "w4a8_is") {
+        println!(">> over W4A8 float scale: {r:.2}x (paper: up to 1.83x)");
+    }
+    if let Some(r) = b.ratio("w4a16", "w4a8_is") {
+        println!(">> over Marlin-like W4A16: {r:.2}x (paper: up to 1.17x)");
+    }
+}

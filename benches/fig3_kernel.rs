@@ -1,0 +1,33 @@
+//! Fig. 3 — kernel latency: fine-grained W4A8 float-scale vs FP16 across
+//! batch sizes (the measured-CPU counterpart of the cost-model figure).
+
+use integer_scale::bench_harness::{black_box, Bencher};
+use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::quant::{Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+const K: usize = 1024;
+const N: usize = 2048; // scaled from the paper's K=4096, N=22016
+const G: usize = 128;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let w = Mat::randn(N, K, 0.05, &mut rng);
+    let pw = pack_for_test(&w, Bits::B4, Granularity::Group(G), None);
+    println!("Fig 3: W4A8 FG float-scale vs FP16 (K={K}, N={N}, g={G})");
+    for m in [1usize, 4, 16, 64, 128] {
+        let x = Mat::randn(m, K, 1.0, &mut rng);
+        let qa = QuantAct::quantize(&x, Bits::B8);
+        let mut b = Bencher::group(&format!("fig3 M={m}")).sample_size(10);
+        let s_fp = b.bench("fp16", || {
+            black_box(gemm::fp32::gemm_f32(&x, &w));
+        });
+        let s_fs = b.bench("w4a8_fg_float", || {
+            black_box(gemm::w4a8_fg_float::gemm(&qa, &pw));
+        });
+        println!(
+            ">> M={m}: FS acceleration over FP16 = {:.2}x",
+            s_fp.median.as_secs_f64() / s_fs.median.as_secs_f64()
+        );
+    }
+}

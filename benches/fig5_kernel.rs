@@ -1,0 +1,54 @@
+//! Fig. 5(a) — the kernel sweep: W4A8 Integer-Scale vs float-scale vs
+//! Marlin-like W4A16 vs Odyssey-like coarse W4A8 across batch sizes.
+//! The paper's headline kernel claim: IS up to 2.3× over FS.
+
+use integer_scale::bench_harness::{black_box, Bencher};
+use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::quant::{Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+const K: usize = 1024;
+const N: usize = 2048;
+const G: usize = 128;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let w = Mat::randn(N, K, 0.05, &mut rng);
+    let pw_fs = pack_for_test(&w, Bits::B4, Granularity::Group(G), None);
+    let pw_is = pack_for_test(&w, Bits::B4, Granularity::Group(G), Some(1024));
+    let pw_coarse = pack_for_test(&w, Bits::B4, Granularity::PerChannel, None);
+    println!("Fig 5a: kernel sweep (K={K}, N={N}, g={G})");
+    println!(
+        "{:>5} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "M", "fp16(ms)", "w4a16(ms)", "FS(ms)", "IS(ms)", "IS/FS x"
+    );
+    for m in [1usize, 8, 32, 128] {
+        let x = Mat::randn(m, K, 1.0, &mut rng);
+        let qa = QuantAct::quantize(&x, Bits::B8);
+        let mut b = Bencher::group(&format!("fig5a M={m}")).sample_size(10);
+        let fp = b.bench("fp16", || {
+            black_box(gemm::fp32::gemm_f32(&x, &w));
+        });
+        let w16 = b.bench("w4a16_marlin", || {
+            black_box(gemm::w4a16::gemm(&x, &pw_fs));
+        });
+        let _co = b.bench("w4a8_coarse", || {
+            black_box(gemm::w4a8_coarse::gemm(&qa, &pw_coarse));
+        });
+        let fs = b.bench("w4a8_float_scale", || {
+            black_box(gemm::w4a8_fg_float::gemm(&qa, &pw_fs));
+        });
+        let is = b.bench("w4a8_integer_scale", || {
+            black_box(gemm::w4a8_fg_int::gemm(&qa, &pw_is));
+        });
+        println!(
+            "{:>5} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10.2}",
+            m,
+            fp.median.as_secs_f64() * 1e3,
+            w16.median.as_secs_f64() * 1e3,
+            fs.median.as_secs_f64() * 1e3,
+            is.median.as_secs_f64() * 1e3,
+            fs.median.as_secs_f64() / is.median.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! Fig. 6/7 — ours vs QServe-style dual-grained W4A8. The paper attributes
+//! QServe's deficit to the per-element `(w4−z)·s2` expansion (§B.2); the
+//! same overhead is measurable here.
+
+use integer_scale::bench_harness::{black_box, Bencher};
+use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::quant::methods::dual_grained::dual_grain_quantize;
+use integer_scale::quant::{Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+const K: usize = 1024;
+const G: usize = 128;
+
+fn main() {
+    let mut rng = Rng::new(4);
+    for n in [2048usize, 1024] {
+        let w = Mat::randn(n, K, 0.05, &mut rng);
+        let pw_is = pack_for_test(&w, Bits::B4, Granularity::Group(G), Some(1024));
+        let pw_coarse = pack_for_test(&w, Bits::B4, Granularity::PerChannel, None);
+        let dg = dual_grain_quantize(&w, G);
+        let gs = gemm::qserve::unit_group_scales(&dg);
+        println!("\nFig {}: vs QServe (K={K}, N={n})", if n == 2048 { 6 } else { 7 });
+        for m in [1usize, 16, 64] {
+            let x = Mat::randn(m, K, 1.0, &mut rng);
+            let qa = QuantAct::quantize(&x, Bits::B8);
+            let mut b = Bencher::group(&format!("fig6 N={n} M={m}")).sample_size(10);
+            b.bench("ours_coarse", || {
+                black_box(gemm::w4a8_coarse::gemm(&qa, &pw_coarse));
+            });
+            let is = b.bench("ours_fine_IS", || {
+                black_box(gemm::w4a8_fg_int::gemm(&qa, &pw_is));
+            });
+            b.bench("qserve_coarse", || {
+                black_box(gemm::qserve::gemm_coarse(&qa, &dg));
+            });
+            let qf = b.bench("qserve_fine", || {
+                black_box(gemm::qserve::gemm_fine(&qa, &dg, &gs));
+            });
+            println!(
+                ">> M={m}: ours(IS fine) vs QServe fine = {:.2}x faster",
+                qf.median.as_secs_f64() / is.median.as_secs_f64()
+            );
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Micro-benchmarks over the whole kernel zoo at one canonical shape — the
+//! raw data behind EXPERIMENTS.md §Perf. (criterion is unavailable offline;
+//! `integer_scale::bench_harness` provides the same warmup/median protocol.)
+
+use integer_scale::bench_harness::{black_box, Bencher};
+use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::quant::methods::dual_grained::dual_grain_quantize;
+use integer_scale::quant::{Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+const M: usize = 16;
+const K: usize = 1024;
+const N: usize = 2048;
+const G: usize = 128;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let x = Mat::randn(M, K, 1.0, &mut rng);
+    let w = Mat::randn(N, K, 0.05, &mut rng);
+    let qa8 = QuantAct::quantize(&x, Bits::B8);
+    let qa4 = QuantAct::quantize(&x, Bits::B4);
+    let pw_fs = pack_for_test(&w, Bits::B4, Granularity::Group(G), None);
+    let pw_is = pack_for_test(&w, Bits::B4, Granularity::Group(G), Some(1024));
+    let pw_coarse = pack_for_test(&w, Bits::B4, Granularity::PerChannel, None);
+    let pw_w8 = pack_for_test(&w, Bits::B8, Granularity::PerChannel, None);
+    let dg = dual_grain_quantize(&w, G);
+    let gs = gemm::qserve::unit_group_scales(&dg);
+
+    let mut b = Bencher::group(&format!("gemm_zoo M={M} K={K} N={N} g={G}")).sample_size(15);
+    b.bench("fp16", || {
+        black_box(gemm::fp32::gemm_f32(&x, &w));
+    });
+    b.bench("w8a8", || {
+        black_box(gemm::w8a8::gemm(&qa8, &pw_w8));
+    });
+    b.bench("w4a16_marlin", || {
+        black_box(gemm::w4a16::gemm(&x, &pw_fs));
+    });
+    b.bench("w4a8_coarse_odyssey", || {
+        black_box(gemm::w4a8_coarse::gemm(&qa8, &pw_coarse));
+    });
+    b.bench("w4a8_fg_float_scale", || {
+        black_box(gemm::w4a8_fg_float::gemm(&qa8, &pw_fs));
+    });
+    b.bench("w4a8_fg_integer_scale", || {
+        black_box(gemm::w4a8_fg_int::gemm(&qa8, &pw_is));
+    });
+    b.bench("w4a4_atom", || {
+        black_box(gemm::w4a4::gemm_float_scale(&qa4, &pw_fs));
+    });
+    b.bench("qserve_coarse", || {
+        black_box(gemm::qserve::gemm_coarse(&qa8, &dg));
+    });
+    b.bench("qserve_fine", || {
+        black_box(gemm::qserve::gemm_fine(&qa8, &dg, &gs));
+    });
+    if let Some(r) = b.ratio("w4a8_fg_float_scale", "w4a8_fg_integer_scale") {
+        println!("\n>> Integer Scale speedup over float scale: {r:.2}x (paper: up to 2.3x)");
+    }
+    if let Some(r) = b.ratio("qserve_fine", "w4a8_fg_integer_scale") {
+        println!(">> Integer Scale speedup over QServe fine: {r:.2}x (paper: up to 1.53x)");
+    }
+}

@@ -1,0 +1,53 @@
+//! Quickstart: quantize one linear layer with GPTQ, attach Integer Scale,
+//! run both kernels, and verify the "free lunch" — same numerics, fewer
+//! conversions.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use integer_scale::gemm::{self, trace, Kernel, PackedWeight, QuantAct};
+use integer_scale::quant::methods::{Gptq, PtqMethod};
+use integer_scale::quant::{BitWidth, Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // a 1024→512 linear layer and some calibration activations
+    let w = Mat::randn(512, 1024, 0.03, &mut rng);
+    let x = Mat::randn(64, 1024, 1.0, &mut rng);
+
+    // 1. quantize with GPTQ at fine-grained W4A8, group size 128
+    let ql = Gptq::default().quantize(&w, &x, BitWidth::W4A8, Granularity::Group(128));
+    println!("quantized: {} output channels × {} inputs, {} groups/row",
+        ql.qw.n, ql.qw.k, ql.qw.groups_per_row());
+
+    // 2. plug-and-play: attach Integer Scale with α = 2^10
+    let (ql_is, alpha) = ql.clone().with_integer_scale(Some(1024));
+    println!("attached Integer Scale with amplifier α = {alpha}");
+
+    // 3. run the real kernels
+    let qa = QuantAct::quantize(&x, Bits::B8);
+    let pw_fs = PackedWeight::from_quantized(&ql);
+    let pw_is = PackedWeight::from_quantized(&ql_is);
+    let out_fs = gemm::w4a8_fg_float::gemm(&qa, &pw_fs);
+    let out_is = gemm::w4a8_fg_int::gemm(&qa, &pw_is);
+    let ref_out = x.matmul_t(&w);
+
+    let rel = |a: &Mat, b: &Mat| {
+        a.mse(b).sqrt() / (b.frob() / (b.data.len() as f64).sqrt())
+    };
+    println!("float-scale kernel vs FP32 reference: rel err {:.4}", rel(&out_fs, &ref_out));
+    println!("Integer-Scale kernel vs FP32 reference: rel err {:.4}", rel(&out_is, &ref_out));
+    println!("Integer-Scale vs float-scale kernel:   rel err {:.6}", rel(&out_is, &out_fs));
+
+    // 4. why it is faster: the conversion counts (paper Fig. 2)
+    let t_fs = trace::trace(Kernel::W4A8FgFloat, 64, 1024, 512, 128);
+    let t_is = trace::trace(Kernel::W4A8FgInt, 64, 1024, 512, 128);
+    println!(
+        "I32→F32 conversions: float scale = {}, Integer Scale = {} ({}x fewer)",
+        t_fs.i32_to_f32,
+        t_is.i32_to_f32,
+        t_fs.i32_to_f32 / t_is.i32_to_f32
+    );
+}

@@ -1,0 +1,144 @@
+"""AOT exporter: lower the L2 JAX model (float and W4A8-Integer-Scale
+variants, the latter calling the L1 Pallas kernels) plus standalone GEMM
+probes to **HLO text** the Rust PJRT runtime loads.
+
+HLO text — NOT ``lowered.compile()``/``serialize()`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.fg_gemm import fg_float_scale_gemm, fg_int_scale_gemm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def load_iswb(path: str) -> dict[str, np.ndarray]:
+    tensors = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"ISWB"
+        struct.unpack("<I", f.read(4))  # version
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            rows, cols = struct.unpack("<II", f.read(8))
+            data = np.frombuffer(f.read(rows * cols * 4), dtype="<f4")
+            tensors[name] = data.reshape(rows, cols) if rows > 1 else data
+    return tensors
+
+
+def tensors_to_params(tensors: dict[str, np.ndarray], cfg: M.Config):
+    params = {
+        "embed": jnp.asarray(tensors["embed"]),
+        "lm_head": jnp.asarray(tensors["lm_head"]),
+        "final_norm": jnp.asarray(tensors["final_norm"]),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        layer = {
+            "attn_norm": jnp.asarray(tensors[f"{p}.attn_norm"]),
+            "mlp_norm": jnp.asarray(tensors[f"{p}.mlp_norm"]),
+            "experts": [],
+        }
+        for nm in ("wq", "wk", "wv", "wo"):
+            layer[nm] = jnp.asarray(tensors[f"{p}.{nm}"])
+        e = 0
+        while f"{p}.experts.{e}.gate" in tensors:
+            layer["experts"].append({
+                "gate": jnp.asarray(tensors[f"{p}.experts.{e}.gate"]),
+                "up": jnp.asarray(tensors[f"{p}.experts.{e}.up"]),
+                "down": jnp.asarray(tensors[f"{p}.experts.{e}.down"]),
+            })
+            e += 1
+        if f"{p}.router" in tensors:
+            layer["router"] = jnp.asarray(tensors[f"{p}.router"])
+        params["layers"].append(layer)
+    return params
+
+
+def write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seq", type=int, default=16)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.tiny()
+    wpath = os.path.join(args.out, "weights.bin")
+    if os.path.exists(wpath):
+        params = tensors_to_params(load_iswb(wpath), cfg)
+        print("using trained weights")
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        print("WARNING: artifacts/weights.bin missing — exporting random-init model")
+
+    # 1. float model forward: tokens (1, T) int32 → logits
+    def model_fwd(tokens):
+        return (jax.vmap(lambda t: M.forward_tokens(params, t, cfg))(tokens),)
+
+    spec = jax.ShapeDtypeStruct((1, args.seq), jnp.int32)
+    write(os.path.join(args.out, "model_fwd.hlo.txt"),
+          to_hlo_text(jax.jit(model_fwd).lower(spec)))
+
+    # 2. W4A8 Integer-Scale model forward — the Pallas kernel lowers into
+    #    this HLO (interpret=True ⇒ plain HLO ops, runnable on CPU PJRT)
+    def model_fwd_is(tokens):
+        return (M.forward_w4a8_is(params, tokens[0], cfg),)
+
+    write(os.path.join(args.out, "model_fwd_w4a8is.hlo.txt"),
+          to_hlo_text(jax.jit(model_fwd_is).lower(spec)))
+
+    # 3/4. standalone GEMM probes on the trained layer-0 wq (256×256):
+    #      x (4, 256) f32 → (4, 256) f32
+    w = params["layers"][0]["wq"]
+    wq, scales = ref.quantize_weight_sym(w, 4, 128)
+    iscales = ref.to_int_scales(scales, 1024)
+
+    def gemm_is_probe(x):
+        xq, sa = ref.quantize_act_per_token(x, 8)
+        return (fg_int_scale_gemm(xq, sa, wq, iscales, group=128,
+                                  amplifier=1024, tm=4, tn=128),)
+
+    def gemm_fs_probe(x):
+        xq, sa = ref.quantize_act_per_token(x, 8)
+        return (fg_float_scale_gemm(xq, sa, wq, scales, group=128,
+                                    tm=4, tn=128),)
+
+    xspec = jax.ShapeDtypeStruct((4, cfg.d_model), jnp.float32)
+    write(os.path.join(args.out, "gemm_is_probe.hlo.txt"),
+          to_hlo_text(jax.jit(gemm_is_probe).lower(xspec)))
+    write(os.path.join(args.out, "gemm_fs_probe.hlo.txt"),
+          to_hlo_text(jax.jit(gemm_fs_probe).lower(xspec)))
+
+
+if __name__ == "__main__":
+    main()

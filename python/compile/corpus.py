@@ -1,0 +1,124 @@
+"""Synthetic Zipf–Markov corpus — bit-exact Python port of
+``rust/src/data/corpus.rs`` + ``rust/src/tensor/rng.rs`` (SplitMix64), so the
+JAX trainer learns exactly the distribution the Rust evaluation measures.
+
+The cross-language equality is pinned by ``python/tests/test_corpus.py``
+against token sequences dumped from the Rust implementation.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+GOLDEN = 0x9E3779B97F4A7C15
+N_SPECIAL = 4
+EOS = 2
+
+
+class Rng:
+    """SplitMix64 with Box–Muller normals — mirrors tensor::Rng."""
+
+    def __init__(self, seed: int):
+        self.state = (seed + GOLDEN) & MASK64
+        self.spare = None
+
+    def next_u64(self) -> int:
+        self.state = (self.state + GOLDEN) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def uniform(self) -> float:
+        # f32 semantics: (next >> 40) / 2^24 is exact in binary32
+        return (self.next_u64() >> 40) / float(1 << 24)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def categorical(self, weights) -> int:
+        # f32-accurate accumulation to mirror the Rust implementation
+        import numpy as np
+
+        total = np.float32(0.0)
+        for w in weights:
+            total = np.float32(total + w)
+        x = np.float32(np.float32(self.uniform()) * total)
+        for i, w in enumerate(weights):
+            x = np.float32(x - w)
+            if x <= 0.0:
+                return i
+        return len(weights) - 1
+
+
+class CorpusGen:
+    """Mirror of data::corpus::CorpusGen (same RNG call order)."""
+
+    def __init__(self, vocab: int, seed: int):
+        import numpy as np
+
+        rng = Rng(seed)
+        content = vocab - N_SPECIAL
+        self.vocab = vocab
+        self.n_topics = 32
+        # f32 prior exactly as Rust computes it
+        self.prior = [
+            np.float32(1.0) / np.float32(float(i + 1) ** 1.1) for i in range(content)
+        ]
+        self.succ = [
+            [
+                N_SPECIAL + rng.below(content),
+                N_SPECIAL + rng.below(content),
+                N_SPECIAL + rng.below(content),
+                N_SPECIAL + rng.below(content),
+            ]
+            for _ in range(content)
+        ]
+        # disjoint lexicons from a seeded Fisher–Yates permutation (mirror
+        # of the Rust implementation, same RNG call order)
+        perm = [N_SPECIAL + i for i in range(content)]
+        for i in range(len(perm) - 1, 0, -1):
+            j = rng.below(i + 1)
+            perm[i], perm[j] = perm[j], perm[i]
+        lex_size = max(1, min(12, content // self.n_topics))
+        self.topic_lex = [
+            perm[t * lex_size:(t + 1) * lex_size] for t in range(self.n_topics)
+        ]
+        self.topic_answer = [lex[0] for lex in self.topic_lex]
+
+    @staticmethod
+    def coherence(split: str) -> float:
+        return 0.6 if split == "c4" else 0.45
+
+    def sample_token(self, prev, topic, coherence, rng: Rng) -> int:
+        r = rng.uniform()
+        if prev is not None and r < coherence:
+            s = self.succ[prev - N_SPECIAL]
+            return s[rng.below(4)]
+        if r < coherence + 0.2:
+            lex = self.topic_lex[topic]
+            return lex[rng.below(len(lex))]
+        return N_SPECIAL + rng.categorical(self.prior)
+
+    def document(self, length: int, split: str, rng: Rng):
+        coherence = self.coherence(split)
+        topic = rng.below(self.n_topics)
+        cued = length >= 8 and rng.below(4) == 0
+        body = length - 2 if cued else length
+        toks = []
+        prev = None
+        for _ in range(body):
+            t = self.sample_token(prev, topic, coherence, rng)
+            toks.append(t)
+            prev = t
+        if cued:
+            toks.append(self.vocab - 1)  # cue token
+            toks.append(self.topic_answer[topic])
+        return toks
+
+    def stream(self, total: int, split: str, seed: int):
+        rng = Rng(seed)
+        out = []
+        while len(out) < total:
+            out.extend(self.document(64, split, rng))
+            out.append(EOS)
+        return out[:total]

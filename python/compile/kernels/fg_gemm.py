@@ -1,0 +1,173 @@
+"""L1 Pallas kernels — fine-grained W4A8 GEMM, float-scale and Integer-Scale
+variants (paper Fig. 2 b/c, Eq. 1/2).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+threadblock tiling becomes a Pallas grid over (M, N) output tiles with the
+whole K / group loop inside the kernel, so group partials live in VMEM and
+never round-trip HBM. ``jnp.dot(..., preferred_element_type=jnp.int32)`` maps
+to the MXU's int8 systolic path on real TPUs; here ``interpret=True`` lowers
+to plain HLO the CPU PJRT client can run (the Mosaic custom-call of a real
+TPU lowering is compile-only on this testbed).
+
+VMEM budget per grid step (defaults TM=8, TN=128, K≤4096):
+  x tile   TM·K   int8  ≤ 32 KiB
+  w tile   TN·K   int8  ≤ 512 KiB
+  scales   TN·G   i32   ≤ 16 KiB
+  acc      TM·TN  i32       4 KiB        → well under the ~16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _is_kernel(xq_ref, sa_ref, wq_ref, iscale_ref, o_ref, *, group: int, amplifier: int):
+    """Integer-Scale kernel body: integer-domain group accumulation, ONE
+    I32→F32 conversion in the epilogue (Eq. 2)."""
+    xq = xq_ref[...].astype(jnp.int32)          # (TM, K)
+    wq = wq_ref[...].astype(jnp.int32)          # (TN, K)
+    iscales = iscale_ref[...]                   # (TN, G) int32
+    tm, k = xq.shape
+    tn = wq.shape[0]
+    gpr = k // group
+    acc = jnp.zeros((tm, tn), jnp.int32)
+    for g in range(gpr):                        # static unroll over groups
+        xg = xq[:, g * group:(g + 1) * group]
+        wg = wq[:, g * group:(g + 1) * group]
+        part = jax.lax.dot_general(
+            xg, wg,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )                                        # (TM, TN) int32
+        acc = acc + part * iscales[None, :, g]   # stays in int32
+    sa = sa_ref[...]                             # (TM,)
+    o_ref[...] = acc.astype(jnp.float32) * (sa[:, None] * (1.0 / amplifier))
+
+
+def _fs_kernel(xq_ref, sa_ref, wq_ref, fscale_ref, o_ref, *, group: int):
+    """Float-scale kernel body: I32→F32 conversion + float FMA per group —
+    the Fig. 2(b) bottleneck structure, kept identical to the IS kernel
+    except for the scale handling."""
+    xq = xq_ref[...].astype(jnp.int32)
+    wq = wq_ref[...].astype(jnp.int32)
+    fscales = fscale_ref[...]                    # (TN, G) f32
+    tm, k = xq.shape
+    tn = wq.shape[0]
+    gpr = k // group
+    accf = jnp.zeros((tm, tn), jnp.float32)
+    for g in range(gpr):
+        xg = xq[:, g * group:(g + 1) * group]
+        wg = wq[:, g * group:(g + 1) * group]
+        part = jax.lax.dot_general(
+            xg, wg,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        # the per-group conversion Integer Scale removes:
+        accf = accf + part.astype(jnp.float32) * fscales[None, :, g]
+    sa = sa_ref[...]
+    o_ref[...] = accf * sa[:, None]
+
+
+def _tiles(m: int, n: int, tm: int, tn: int):
+    assert m % tm == 0 and n % tn == 0, f"M={m},N={n} not divisible by tile {tm}x{tn}"
+    return m // tm, n // tn
+
+
+@functools.partial(jax.jit, static_argnames=("group", "amplifier", "tm", "tn"))
+def fg_int_scale_gemm(xq, sa, wq, int_scales, *, group: int = 128,
+                      amplifier: int = 1024, tm: int = 8, tn: int = 128):
+    """Pallas fine-grained W4A8 GEMM with Integer Scale.
+
+    xq (M,K) int8, sa (M,) f32, wq (N,K) int8, int_scales (N, K//g) int32.
+    """
+    m, k = xq.shape
+    n = wq.shape[0]
+    gm, gn = _tiles(m, n, tm, tn)
+    return pl.pallas_call(
+        functools.partial(_is_kernel, group=group, amplifier=amplifier),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, k // group), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xq, sa, wq, int_scales)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "tm", "tn"))
+def fg_float_scale_gemm(xq, sa, wq, scales, *, group: int = 128,
+                        tm: int = 8, tn: int = 128):
+    """Pallas fine-grained W4A8 GEMM with per-group float scales (Eq. 1)."""
+    m, k = xq.shape
+    n = wq.shape[0]
+    gm, gn = _tiles(m, n, tm, tn)
+    return pl.pallas_call(
+        functools.partial(_fs_kernel, group=group),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, k // group), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(xq, sa, wq, scales)
+
+
+def _w4a16_kernel(x_ref, wq_ref, scale_ref, o_ref, *, group: int):
+    """Marlin-like weight-only kernel: dequantize in registers, fp matmul."""
+    x = x_ref[...]                               # (TM, K) f32
+    wq = wq_ref[...].astype(jnp.float32)         # (TN, K)
+    scales = scale_ref[...]                      # (TN, G)
+    tn, k = wq.shape
+    gpr = k // group
+    wdq = (wq.reshape(tn, gpr, group) * scales[..., None]).reshape(tn, k)
+    o_ref[...] = jax.lax.dot_general(
+        x, wdq, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("group", "tm", "tn"))
+def w4a16_gemm(x, wq, scales, *, group: int = 128, tm: int = 8, tn: int = 128):
+    """Pallas weight-only W4A16 GEMM (Marlin baseline)."""
+    m, k = x.shape
+    n = wq.shape[0]
+    gm, gn = _tiles(m, n, tm, tn)
+    return pl.pallas_call(
+        functools.partial(_w4a16_kernel, group=group),
+        grid=(gm, gn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, k // group), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wq, scales)
+
+
+def quantized_linear_is(x, w, *, group: int = 128, amplifier: int = 1024,
+                        tm: int = 8, tn: int = 128):
+    """Full W4A8-IS linear from float operands: quantize activations
+    per-token on the fly (as the serving engine does), weights offline.
+    Used by the L2 model so the Pallas kernel lowers into the model HLO."""
+    from . import ref
+
+    wq, scales = ref.quantize_weight_sym(w, 4, group)
+    iscales = ref.to_int_scales(scales, amplifier)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    return fg_int_scale_gemm(xq, sa, wq, iscales, group=group,
+                             amplifier=amplifier, tm=tm, tn=tn)

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+ground truth (paper Eq. 1 and Eq. 2), plus the quantization helpers shared
+by the kernels, the L2 model, and the AOT exporter.
+
+Layouts match the Rust side: activations ``(M, K)`` row-per-token, weights
+``(N, K)`` row-per-output-channel, group scales ``(N, K//g)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_weight_sym(w, bits: int = 4, group: int = 128):
+    """Symmetric group-wise weight quantization (paper Eq. 3–4).
+
+    Returns (codes int8 (N,K), scales f32 (N, K//group)).
+    """
+    n, k = w.shape
+    assert k % group == 0, f"K={k} not divisible by group={group}"
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    wg = w.reshape(n, k // group, group)
+    amax = jnp.max(jnp.abs(wg), axis=-1)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(wg / scales[..., None]), qmin, qmax)
+    return codes.reshape(n, k).astype(jnp.int8), scales
+
+
+def quantize_act_per_token(x, bits: int = 8):
+    """Per-token symmetric activation quantization.
+
+    Returns (codes int8 (M,K), scales f32 (M,)).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    qmin = -(2 ** (bits - 1))
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(x / scales[:, None]), qmin, qmax)
+    return codes.astype(jnp.int8), scales
+
+
+def to_int_scales(scales, amplifier: int = 1024):
+    """``INT(s_g · α)``, clamped to ≥ 1 (paper §4.1)."""
+    return jnp.clip(jnp.round(scales * amplifier), 1, 2**31 - 1).astype(jnp.int32)
+
+
+def fg_float_scale_ref(xq, sa, wq, scales, group: int):
+    """Eq. 1 — fine-grained GEMM with per-group float scales.
+
+    Per group: INT32 partial → I32toF32 convert → float FMA (Fig. 2b).
+    xq (M,K) int8, sa (M,) f32, wq (N,K) int8, scales (N, K//g) f32.
+    """
+    m, k = xq.shape
+    n = wq.shape[0]
+    gpr = k // group
+    xg = xq.astype(jnp.int32).reshape(m, gpr, group)
+    wg = wq.astype(jnp.int32).reshape(n, gpr, group)
+    # (m, gpr, n) int32 group partials
+    parts = jnp.einsum("mgk,ngk->mgn", xg, wg, preferred_element_type=jnp.int32)
+    accf = jnp.sum(parts.astype(jnp.float32) * scales.T[None], axis=1)
+    return accf * sa[:, None]
+
+
+def fg_int_scale_ref(xq, sa, wq, int_scales, amplifier: int, group: int):
+    """Eq. 2 — fine-grained GEMM with Integer Scale.
+
+    All group accumulation in int32; ONE conversion at the end (Fig. 2c).
+    """
+    m, k = xq.shape
+    n = wq.shape[0]
+    gpr = k // group
+    xg = xq.astype(jnp.int32).reshape(m, gpr, group)
+    wg = wq.astype(jnp.int32).reshape(n, gpr, group)
+    parts = jnp.einsum("mgk,ngk->mgn", xg, wg, preferred_element_type=jnp.int32)
+    acc = jnp.sum(parts * int_scales.T[None], axis=1)  # int32 domain
+    return acc.astype(jnp.float32) * (sa[:, None] / amplifier)
+
+
+def w4a16_ref(x, wq, scales, group: int):
+    """Marlin-like weight-only GEMM: dequantize int4 codes, float matmul."""
+    n, k = wq.shape
+    wdq = wq.astype(jnp.float32).reshape(n, k // group, group) * scales[..., None]
+    return x @ wdq.reshape(n, k).T
+
+
+def full_quantized_ref(x, w, group: int = 128, amplifier: int | None = 1024):
+    """End-to-end W4A8 reference from float inputs: quantize both operands,
+    run Eq. 2 (or Eq. 1 when amplifier is None)."""
+    wq, scales = quantize_weight_sym(w, 4, group)
+    xq, sa = quantize_act_per_token(x, 8)
+    if amplifier is None:
+        return fg_float_scale_ref(xq, sa, wq, scales, group)
+    return fg_int_scale_ref(xq, sa, wq, to_int_scales(scales, amplifier), amplifier, group)

@@ -1,0 +1,196 @@
+"""L2 — the JAX tiny-LLaMA (decoder-only, RoPE + SwiGLU + RMSNorm), an
+exact architectural mirror of ``rust/src/model/transformer.rs`` so the
+trained weights interchange via ``artifacts/weights.bin``.
+
+Two forward paths:
+* ``forward``           — float (the FP16 reference the AOT artifact serves);
+* ``forward_w4a8_is``   — every linear runs the L1 Pallas Integer-Scale
+                          kernel, so the paper's kernel lowers into the same
+                          HLO the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fg_gemm import quantized_linear_is
+
+
+# ----------------------------------------------------------------- config
+
+class Config:
+    """Mirror of ModelConfig::tiny() / moe_tiny()."""
+
+    def __init__(self, vocab=512, d_model=256, n_heads=4, n_layers=4,
+                 d_ff=512, max_seq=256, n_experts=None):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_heads = n_heads
+        self.n_layers = n_layers
+        self.d_ff = d_ff
+        self.max_seq = max_seq
+        self.n_experts = n_experts
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def tiny():
+    return Config()
+
+
+def moe_tiny():
+    return Config(n_experts=8)
+
+
+# ----------------------------------------------------------------- params
+
+def init_params(cfg: Config, key):
+    """Gaussian init matching ModelWeights::random's magnitudes."""
+    std = 0.7 / cfg.d_model ** 0.5
+    n_exp = cfg.n_experts or 1
+    params = {"embed": None, "lm_head": None, "final_norm": jnp.ones(cfg.d_model),
+              "layers": []}
+    key, k1, k2 = jax.random.split(key, 3)
+    params["embed"] = jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02
+    params["lm_head"] = jax.random.normal(k2, (cfg.vocab, cfg.d_model)) * std
+    for _ in range(cfg.n_layers):
+        key, *ks = jax.random.split(key, 7)
+        layer = {
+            "attn_norm": jnp.ones(cfg.d_model),
+            "wq": jax.random.normal(ks[0], (cfg.d_model, cfg.d_model)) * std,
+            "wk": jax.random.normal(ks[1], (cfg.d_model, cfg.d_model)) * std,
+            "wv": jax.random.normal(ks[2], (cfg.d_model, cfg.d_model)) * std,
+            "wo": jax.random.normal(ks[3], (cfg.d_model, cfg.d_model)) * std,
+            "mlp_norm": jnp.ones(cfg.d_model),
+            "experts": [],
+        }
+        for _ in range(n_exp):
+            key, kg, ku, kd = jax.random.split(key, 4)
+            layer["experts"].append({
+                "gate": jax.random.normal(kg, (cfg.d_ff, cfg.d_model)) * std,
+                "up": jax.random.normal(ku, (cfg.d_ff, cfg.d_model)) * std,
+                "down": jax.random.normal(kd, (cfg.d_model, cfg.d_ff)) * std,
+            })
+        if cfg.n_experts:
+            key, kr = jax.random.split(key)
+            layer["router"] = jax.random.normal(kr, (cfg.n_experts, cfg.d_model)) * std
+        params["layers"].append(layer)
+    return params
+
+
+# ----------------------------------------------------------------- ops
+
+def rms_norm(x, gain, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope(x, n_heads, pos0=0):
+    """Rotary embedding over (..., T, d); pairs (2i, 2i+1) per head —
+    identical to rope_row in rust/src/model/mod.rs."""
+    *lead, t, d = x.shape
+    hd = d // n_heads
+    half = hd // 2
+    pos = jnp.arange(pos0, pos0 + t)[:, None]                     # (T,1)
+    i = jnp.arange(half)[None, :]                                  # (1,half)
+    theta = pos / (10000.0 ** (2.0 * i / hd))                      # (T,half)
+    sin, cos = jnp.sin(theta), jnp.cos(theta)
+    xh = x.reshape(*lead, t, n_heads, half, 2)
+    a, b = xh[..., 0], xh[..., 1]
+    # broadcast (T,half) over heads
+    ar = a * cos[..., :, None, :] - b * sin[..., :, None, :]
+    br = a * sin[..., :, None, :] + b * cos[..., :, None, :]
+    return jnp.stack([ar, br], axis=-1).reshape(*lead, t, d)
+
+
+def attention(q, k, v, n_heads):
+    """Causal multi-head attention over (T, d) single-sequence tensors."""
+    t, d = q.shape
+    hd = d // n_heads
+    qh = q.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    kh = k.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(t, n_heads, hd).transpose(1, 0, 2)
+    scores = qh @ kh.transpose(0, 2, 1) / hd ** 0.5               # (h, T, T)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None], scores, -1e9)
+    att = jax.nn.softmax(scores, axis=-1) @ vh                     # (h, T, hd)
+    return att.transpose(1, 0, 2).reshape(t, d)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _linear(h, w, quant: bool):
+    if quant:
+        return quantized_linear_is(h, w, group=128, amplifier=1024,
+                                   tm=_pick_tile(h.shape[0]), tn=128)
+    return h @ w.T
+
+
+def _pick_tile(m):
+    for t in (16, 8, 4, 2, 1):
+        if m % t == 0:
+            return t
+    return 1
+
+
+def _mlp(layer, h, cfg: Config, quant: bool):
+    if cfg.n_experts:
+        router_logits = h @ layer["router"].T                       # (T, E)
+        probs = jax.nn.softmax(router_logits, axis=-1)
+        top2 = jax.lax.top_k(probs, 2)[1]                           # (T, 2)
+        w2 = jnp.take_along_axis(probs, top2, axis=-1)
+        w2 = w2 / jnp.sum(w2, axis=-1, keepdims=True)
+        out = jnp.zeros_like(h)
+        for e, ex in enumerate(layer["experts"]):
+            ge = silu(_linear(h, ex["gate"], quant)) * _linear(h, ex["up"], quant)
+            oe = _linear(ge, ex["down"], quant)
+            we = jnp.sum(jnp.where(top2 == e, w2, 0.0), axis=-1, keepdims=True)
+            out = out + we * oe
+        return out
+    ex = layer["experts"][0]
+    ge = silu(_linear(h, ex["gate"], quant)) * _linear(h, ex["up"], quant)
+    return _linear(ge, ex["down"], quant)
+
+
+def forward_tokens(params, tokens, cfg: Config, quant: bool = False):
+    """tokens (T,) int32 → logits (T, vocab). Single sequence (the prefill
+    path the Rust engine mirrors)."""
+    x = params["embed"][tokens]
+    for layer in params["layers"]:
+        h = rms_norm(x, layer["attn_norm"])
+        q = _linear(h, layer["wq"], quant)
+        k = _linear(h, layer["wk"], quant)
+        v = _linear(h, layer["wv"], quant)
+        q = rope(q, cfg.n_heads)
+        k = rope(k, cfg.n_heads)
+        att = attention(q, k, v, cfg.n_heads)
+        x = x + _linear(att, layer["wo"], quant)
+        h = rms_norm(x, layer["mlp_norm"])
+        x = x + _mlp(layer, h, cfg, quant)
+    h = rms_norm(x, params["final_norm"])
+    return h @ params["lm_head"].T
+
+
+def forward(params, tokens, cfg: Config):
+    """Batched float forward: tokens (B, T) → logits (B, T, V)."""
+    return jax.vmap(lambda t: forward_tokens(params, t, cfg, quant=False))(tokens)
+
+
+def forward_w4a8_is(params, tokens, cfg: Config):
+    """Quantized forward with the Pallas Integer-Scale kernel in every
+    linear (single sequence, used for the AOT artifact)."""
+    return forward_tokens(params, tokens, cfg, quant=True)
+
+
+def loss_fn(params, tokens, cfg: Config):
+    """Next-token cross entropy over (B, T) token batches."""
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)

@@ -1,0 +1,139 @@
+"""Build-time trainer: fit the tiny-LLaMA (and the MoE variant) on the
+synthetic Zipf–Markov corpus, log the loss curve, and export weights in the
+ISWB binary format the Rust engine loads. Runs ONCE under `make artifacts`;
+Python never touches the request path.
+
+Usage: python -m compile.train --out ../artifacts [--steps 400]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .corpus import CorpusGen
+
+
+# ---------------------------------------------------------------- ISWB I/O
+
+def save_iswb(path: str, tensors: dict[str, np.ndarray]):
+    """Write the ISWB format (see rust/src/model/weights.rs)."""
+    with open(path, "wb") as f:
+        f.write(b"ISWB")
+        f.write(struct.pack("<I", 1))
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            a = np.asarray(arr, dtype="<f4")
+            if a.ndim == 1:
+                rows, cols = 1, a.shape[0]
+            else:
+                rows, cols = a.shape
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<II", rows, cols))
+            f.write(a.tobytes())
+
+
+def params_to_tensors(params, cfg: M.Config) -> dict[str, np.ndarray]:
+    out = {
+        "embed": np.asarray(params["embed"]),
+        "lm_head": np.asarray(params["lm_head"]),
+        "final_norm": np.asarray(params["final_norm"]),
+    }
+    for i, layer in enumerate(params["layers"]):
+        p = f"layers.{i}"
+        for nm in ("wq", "wk", "wv", "wo"):
+            out[f"{p}.{nm}"] = np.asarray(layer[nm])
+        out[f"{p}.attn_norm"] = np.asarray(layer["attn_norm"])
+        out[f"{p}.mlp_norm"] = np.asarray(layer["mlp_norm"])
+        for e, ex in enumerate(layer["experts"]):
+            out[f"{p}.experts.{e}.gate"] = np.asarray(ex["gate"])
+            out[f"{p}.experts.{e}.up"] = np.asarray(ex["up"])
+            out[f"{p}.experts.{e}.down"] = np.asarray(ex["down"])
+        if cfg.n_experts:
+            out[f"{p}.router"] = np.asarray(layer["router"])
+    return out
+
+
+# ---------------------------------------------------------------- training
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree.map(lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+                       params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def batches(gen: CorpusGen, batch: int, seq: int, steps: int, seed: int):
+    """Seeded token batches from the training split."""
+    total = batch * (seq + 1) * steps
+    stream = np.asarray(gen.stream(total, "c4", seed), dtype=np.int32)
+    for s in range(steps):
+        chunk = stream[s * batch * (seq + 1):(s + 1) * batch * (seq + 1)]
+        yield jnp.asarray(chunk.reshape(batch, seq + 1))
+
+
+def train_one(cfg: M.Config, steps: int, seed: int, log, tag: str):
+    gen = CorpusGen(cfg.vocab, 7)   # same generator seed as the Rust side
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, toks):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(p, toks, cfg))(params)
+        params, state = adam_step(params, grads, state)
+        return params, state, loss
+
+    t0 = time.time()
+    for i, toks in enumerate(batches(gen, 8, 64, steps, seed=1000 + seed)):
+        params, state, loss = step(params, state, toks)
+        if i % 25 == 0 or i == steps - 1:
+            msg = f"[{tag}] step {i:4d}  loss {float(loss):.4f}  ppl {float(jnp.exp(loss)):9.2f}  ({time.time()-t0:.0f}s)"
+            print(msg, flush=True)
+            log.append(msg)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--moe-steps", type=int, default=150)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    log: list[str] = []
+
+    cfg = M.tiny()
+    params = train_one(cfg, args.steps, seed=0, log=log, tag="dense")
+    save_iswb(os.path.join(args.out, "weights.bin"), params_to_tensors(params, cfg))
+    print(f"wrote {args.out}/weights.bin")
+
+    moe_cfg = M.moe_tiny()
+    moe_params = train_one(moe_cfg, args.moe_steps, seed=1, log=log, tag="moe")
+    save_iswb(os.path.join(args.out, "weights_moe.bin"),
+              params_to_tensors(moe_params, moe_cfg))
+    print(f"wrote {args.out}/weights_moe.bin")
+
+    with open(os.path.join(args.out, "train_log.txt"), "w") as f:
+        f.write("\n".join(log) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE build-time
+signal), with hypothesis sweeping shapes and scale regimes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fg_gemm import (
+    fg_float_scale_gemm,
+    fg_int_scale_gemm,
+    quantized_linear_is,
+    w4a16_gemm,
+)
+
+
+def make_case(m, k, n, g, seed, wstd=0.05):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    w = jnp.asarray((rng.normal(size=(n, k)) * wstd).astype(np.float32))
+    return x, w
+
+
+def test_is_kernel_exact_vs_ref():
+    x, w = make_case(8, 256, 128, 64, 0)
+    wq, sc = ref.quantize_weight_sym(w, 4, 64)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    isc = ref.to_int_scales(sc, 1024)
+    got = fg_int_scale_gemm(xq, sa, wq, isc, group=64, amplifier=1024, tm=4, tn=64)
+    want = ref.fg_int_scale_ref(xq, sa, wq, isc, 1024, 64)
+    # integer arithmetic ⇒ bit-exact
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fs_kernel_close_vs_ref():
+    x, w = make_case(8, 256, 128, 64, 1)
+    wq, sc = ref.quantize_weight_sym(w, 4, 64)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    got = fg_float_scale_gemm(xq, sa, wq, sc, group=64, tm=4, tn=64)
+    want = ref.fg_float_scale_ref(xq, sa, wq, sc, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_w4a16_kernel_exact_vs_ref():
+    x, w = make_case(4, 256, 128, 128, 2)
+    wq, sc = ref.quantize_weight_sym(w, 4, 128)
+    got = w4a16_gemm(x, wq, sc, group=128, tm=4, tn=128)
+    want = ref.w4a16_ref(x, wq, sc, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_is_tracks_float_matmul():
+    x, w = make_case(8, 512, 256, 128, 3)
+    out = quantized_linear_is(x, w, group=128, amplifier=1024, tm=4, tn=128)
+    want = np.asarray(x @ w.T)
+    rel = np.linalg.norm(np.asarray(out) - want) / np.linalg.norm(want)
+    assert rel < 0.12, rel
+
+
+def test_is_vs_fs_free_lunch():
+    """IS output ≈ FS output up to α-rounding — the free-lunch claim."""
+    x, w = make_case(8, 256, 128, 64, 4)
+    wq, sc = ref.quantize_weight_sym(w, 4, 64)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    isc = ref.to_int_scales(sc, 1024)
+    a = np.asarray(fg_int_scale_gemm(xq, sa, wq, isc, group=64, amplifier=1024, tm=4, tn=64))
+    b = np.asarray(fg_float_scale_gemm(xq, sa, wq, sc, group=64, tm=4, tn=64))
+    rel = np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9)
+    assert rel < 0.04, rel
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([2, 4, 8]),
+    kg=st.sampled_from([(128, 32), (128, 64), (256, 64), (256, 128)]),
+    n=st.sampled_from([64, 128]),
+    seed=st.integers(0, 1000),
+    amplifier=st.sampled_from([512, 1024, 4096]),
+)
+def test_is_kernel_property_sweep(m, kg, n, seed, amplifier):
+    """Hypothesis sweep: the Pallas IS kernel is bit-exact vs the oracle for
+    every shape/group/amplifier combination."""
+    k, g = kg
+    x, w = make_case(m, k, n, g, seed)
+    wq, sc = ref.quantize_weight_sym(w, 4, g)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    isc = ref.to_int_scales(sc, amplifier)
+    got = fg_int_scale_gemm(xq, sa, wq, isc, group=g, amplifier=amplifier,
+                            tm=min(m, 4), tn=min(n, 64))
+    want = ref.fg_int_scale_ref(xq, sa, wq, isc, amplifier, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), wstd=st.sampled_from([0.01, 0.05, 0.3]))
+def test_fs_kernel_property_sweep(seed, wstd):
+    x, w = make_case(4, 128, 64, 32, seed, wstd)
+    wq, sc = ref.quantize_weight_sym(w, 4, 32)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    got = fg_float_scale_gemm(xq, sa, wq, sc, group=32, tm=4, tn=64)
+    want = ref.fg_float_scale_ref(xq, sa, wq, sc, 32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_amplifier_128_much_worse_than_1024():
+    """Table 7 / Fig. 4c at kernel level: tiny amplifiers wreck the scale
+    representation (weight MSE between int-scale and float-scale dequant)."""
+    _, w = make_case(8, 256, 128, 128, 5)
+    wq, sc = ref.quantize_weight_sym(w, 4, 128)
+
+    def scale_mse(amp):
+        isc = ref.to_int_scales(sc, amp)
+        d_float = np.asarray(wq, np.float32).reshape(128, 2, 128) * np.asarray(sc)[..., None]
+        d_int = np.asarray(wq, np.float32).reshape(128, 2, 128) * (
+            np.asarray(isc, np.float32)[..., None] / amp
+        )
+        return float(np.mean((d_float - d_int) ** 2))
+
+    assert scale_mse(128) > 10 * scale_mse(1024)
+    assert scale_mse(4096) <= scale_mse(1024)
+
+
+def test_int32_accumulator_headroom():
+    """Fig. 8 at kernel level: worst-case |acc| with α=1024 stays far below
+    2^31 for realistic magnitudes."""
+    x, w = make_case(4, 4096 // 8, 64, 128, 6)  # k=512
+    wq, sc = ref.quantize_weight_sym(w, 4, 128)
+    xq, sa = ref.quantize_act_per_token(x, 8)
+    isc = ref.to_int_scales(sc, 1024)
+    xg = np.asarray(xq, dtype=np.int64).reshape(4, 4, 128)
+    wg = np.asarray(wq, dtype=np.int64).reshape(64, 4, 128)
+    parts = np.einsum("mgk,ngk->mgn", xg, wg)
+    acc = np.cumsum(parts * np.asarray(isc, dtype=np.int64).T[None], axis=1)
+    assert np.abs(acc).max() < 2**31 * 0.05

@@ -1,0 +1,100 @@
+"""L2 correctness: JAX model shapes, RoPE/RMSNorm invariants, training
+signal, and the quantized (Pallas-in-model) forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny2():
+    cfg = M.Config(n_layers=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_forward_shapes(tiny2):
+    cfg, params = tiny2
+    toks = jnp.arange(16, dtype=jnp.int32)[None] % cfg.vocab
+    logits = M.forward(params, toks, cfg)
+    assert logits.shape == (1, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 32))
+    y = M.rope(x, n_heads=4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_identity():
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32))
+    y = M.rope(x, n_heads=2)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64)) * 7.0
+    y = M.rms_norm(x, jnp.ones(64))
+    ms = np.mean(np.asarray(y) ** 2, axis=-1)
+    np.testing.assert_allclose(ms, 1.0, rtol=1e-2)
+
+
+def test_attention_causal(tiny2):
+    """Changing a future token must not change past logits."""
+    cfg, params = tiny2
+    t1 = jnp.array([[5, 6, 7, 8]], dtype=jnp.int32)
+    t2 = jnp.array([[5, 6, 7, 99]], dtype=jnp.int32)
+    l1 = M.forward(params, t1, cfg)
+    l2 = M.forward(params, t2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[0, :3]), np.asarray(l2[0, :3]), atol=1e-5)
+    assert not np.allclose(np.asarray(l1[0, 3]), np.asarray(l2[0, 3]))
+
+
+def test_loss_decreases_quickly(tiny2):
+    cfg, params = tiny2
+    from compile.corpus import CorpusGen
+    from compile.train import adam_init, adam_step
+
+    gen = CorpusGen(cfg.vocab, 7)
+    stream = np.asarray(gen.stream(8 * 33 * 12, "c4", 5), dtype=np.int32)
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, toks):
+        loss, grads = jax.value_and_grad(lambda p: M.loss_fn(p, toks, cfg))(params)
+        params, state = adam_step(params, grads, state, lr=3e-3)
+        return params, state, loss
+
+    losses = []
+    for s in range(12):
+        toks = jnp.asarray(stream[s * 8 * 33:(s + 1) * 8 * 33].reshape(8, 33))
+        params, state, loss = step(params, state, toks)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_quantized_forward_tracks_float(tiny2):
+    cfg, params = tiny2
+    toks = jnp.asarray([4, 9, 12, 100, 101, 7, 8, 9], dtype=jnp.int32)
+    lf = M.forward_tokens(params, toks, cfg, quant=False)
+    lq = M.forward_w4a8_is(params, toks, cfg)
+    assert lq.shape == lf.shape
+    rel = np.linalg.norm(np.asarray(lq - lf)) / np.linalg.norm(np.asarray(lf))
+    assert rel < 0.35, rel
+
+
+def test_moe_forward_runs():
+    cfg = M.Config(n_layers=1, n_experts=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(4))
+    toks = jnp.arange(8, dtype=jnp.int32)[None] + 4
+    logits = M.forward(params, toks, cfg)
+    assert logits.shape == (1, 8, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,106 @@
+//! Minimal criterion-style benchmark harness (the real criterion crate is
+//! not available in this offline environment). Provides warmup, repeated
+//! sampling, median/min/mean statistics, and the same console layout, so
+//! `cargo bench` output stays comparable across the perf-pass iterations
+//! recorded in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    pub group: String,
+    pub sample_size: usize,
+    pub warmup: usize,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Bencher {
+    pub fn group(name: &str) -> Self {
+        println!("\n== bench group: {name} ==");
+        Bencher { group: name.to_string(), sample_size: 12, warmup: 2, results: Vec::new() }
+    }
+
+    pub fn sample_size(mut self, n: usize) -> Self {
+        self.sample_size = n.max(3);
+        self
+    }
+
+    /// Run one benchmark; `f` is the measured closure.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_size);
+        for _ in 0..self.sample_size {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let stats = Stats { median, mean, min: samples[0], max: *samples.last().unwrap() };
+        println!(
+            "{:<44} median {:>12?}  mean {:>12?}  min {:>12?}",
+            format!("{}/{}", self.group, name),
+            stats.median,
+            stats.mean,
+            stats.min
+        );
+        self.results.push((name.to_string(), stats));
+        stats
+    }
+
+    /// Ratio of two completed benchmarks' medians (a/b), for speedup lines.
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|(n, _)| n == a)?.1;
+        let fb = self.results.iter().find(|(n, _)| n == b)?.1;
+        Some(fa.median.as_secs_f64() / fb.median.as_secs_f64())
+    }
+
+    pub fn finish(self) -> Vec<(String, Stats)> {
+        self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::group("test").sample_size(3);
+        let mut acc = 0u64;
+        let s = b.bench("noop", || {
+            acc = black_box(acc + 1);
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(acc >= 3);
+    }
+
+    #[test]
+    fn ratio_between_benches() {
+        let mut b = Bencher::group("test").sample_size(3);
+        b.bench("fast", || {
+            black_box(1 + 1);
+        });
+        b.bench("slow", || {
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        let r = b.ratio("slow", "fast").unwrap();
+        assert!(r > 1.0);
+    }
+}

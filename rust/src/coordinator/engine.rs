@@ -1,0 +1,249 @@
+//! The serving engine: continuous batching over the quantized transformer.
+//!
+//! Owns the model, per-sequence KV caches, the scheduler, and metrics. The
+//! synchronous [`Engine::run_to_completion`] drives a whole workload (used
+//! by benches and the table harness); [`Engine::step`] exposes the inner
+//! loop for the async server in `examples/serve_quantized.rs`.
+
+use super::metrics::Metrics;
+use super::request::{Request, Response, Tracked};
+use super::scheduler::Scheduler;
+use crate::data::tokenizer::EOS;
+use crate::model::sampler::{sample, Sampling};
+use crate::model::{KvCache, Transformer};
+use crate::tensor::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    /// KV budget in tokens (sum over running sequences).
+    pub kv_token_budget: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { max_batch: 16, kv_token_budget: 4096, seed: 0 }
+    }
+}
+
+struct Running {
+    tracked: Tracked,
+    cache: KvCache,
+    next_token: u32,
+}
+
+pub struct Engine {
+    pub model: Arc<Transformer>,
+    pub cfg: EngineConfig,
+    scheduler: Scheduler,
+    running: Vec<Running>,
+    rng: Rng,
+    pub metrics: Metrics,
+    finished: Vec<Response>,
+}
+
+impl Engine {
+    pub fn new(model: Arc<Transformer>, cfg: EngineConfig) -> Self {
+        Engine {
+            scheduler: Scheduler::new(cfg.max_batch, cfg.kv_token_budget),
+            model,
+            cfg,
+            running: Vec::new(),
+            rng: Rng::new(cfg.seed),
+            metrics: Metrics::default(),
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.metrics.submitted += 1;
+        self.scheduler.submit(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.scheduler.queue_depth() + self.running.len()
+    }
+
+    /// One engine iteration: admit + prefill newcomers, batched decode for
+    /// everyone, retire finished sequences. Returns responses completed in
+    /// this step.
+    pub fn step(&mut self) -> Vec<Response> {
+        // 1. admission + prefill
+        for tracked in self.scheduler.admit() {
+            // degenerate requests complete immediately with no tokens
+            if tracked.req.prompt.is_empty() || tracked.req.max_new_tokens == 0 {
+                self.scheduler.retire(&tracked.req);
+                self.metrics.completed += 1;
+                self.finished.push(Response {
+                    id: tracked.req.id,
+                    prompt_len: tracked.req.prompt.len(),
+                    tokens: Vec::new(),
+                    ttft: std::time::Duration::ZERO,
+                    total: tracked.arrived.elapsed(),
+                });
+                continue;
+            }
+            let t0 = Instant::now();
+            let mut cache = self.model.new_cache();
+            let logits = self.model.prefill(&tracked.req.prompt, &mut cache);
+            let last = logits.row(tracked.req.prompt.len() - 1);
+            let tok = sample(last, tracked.req.sampling, &mut self.rng);
+            let mut tr = tracked;
+            tr.first_token_at = Some(Instant::now());
+            tr.generated.push(tok);
+            self.metrics.prefill_tokens += tr.req.prompt.len() as u64;
+            self.metrics.prefill_time += t0.elapsed();
+            self.running.push(Running { tracked: tr, cache, next_token: tok });
+        }
+
+        // 2. retire sequences that completed on the prefill token
+        self.retire_done();
+
+        // 3. batched decode step
+        if !self.running.is_empty() {
+            let t0 = Instant::now();
+            let tokens: Vec<u32> = self.running.iter().map(|r| r.next_token).collect();
+            let mut caches: Vec<&mut KvCache> =
+                self.running.iter_mut().map(|r| &mut r.cache).collect();
+            let logits = self.model.decode_batch(&tokens, &mut caches);
+            self.metrics.record_batch(tokens.len());
+            self.metrics.decode_time += t0.elapsed();
+            self.metrics.decode_tokens += tokens.len() as u64;
+            for (i, r) in self.running.iter_mut().enumerate() {
+                let tok = sample(logits.row(i), r.tracked.req.sampling, &mut self.rng);
+                r.tracked.generated.push(tok);
+                r.next_token = tok;
+            }
+            self.retire_done();
+        }
+        std::mem::take(&mut self.finished)
+    }
+
+    fn retire_done(&mut self) {
+        let mut i = 0;
+        while i < self.running.len() {
+            let r = &self.running[i];
+            let done_len = r.tracked.generated.len() >= r.tracked.req.max_new_tokens;
+            let done_eos = r.tracked.req.stop_at_eos
+                && r.tracked.generated.last() == Some(&EOS);
+            // cache capacity guard: stop before overflow
+            let done_cap = r.cache.seq_len + 1 >= r.cache.capacity;
+            if done_len || done_eos || done_cap {
+                let r = self.running.swap_remove(i);
+                self.scheduler.retire(&r.tracked.req);
+                let now = Instant::now();
+                self.metrics.completed += 1;
+                self.finished.push(Response {
+                    id: r.tracked.req.id,
+                    prompt_len: r.tracked.req.prompt.len(),
+                    tokens: r.tracked.generated,
+                    ttft: r
+                        .tracked
+                        .first_token_at
+                        .map(|t| t - r.tracked.arrived)
+                        .unwrap_or_default(),
+                    total: now - r.tracked.arrived,
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Drive until every submitted request completes; returns all responses
+    /// sorted by request id.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step());
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Aggregate decode throughput in tokens/s since construction.
+    pub fn decode_throughput(&self) -> f64 {
+        let s = self.metrics.decode_time.as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.metrics.decode_tokens as f64 / s
+        }
+    }
+
+    /// Sampling mode helper for tests.
+    pub fn greedy() -> Sampling {
+        Sampling::Greedy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ModelWeights, Transformer};
+
+    fn engine(max_batch: usize) -> Engine {
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        Engine::new(model, EngineConfig { max_batch, kv_token_budget: 4096, seed: 1 })
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let mut e = engine(4);
+        for i in 0..10 {
+            e.submit(Request::greedy(i, vec![5, 6, 7], 5));
+        }
+        let res = e.run_to_completion();
+        assert_eq!(res.len(), 10);
+        for (i, r) in res.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(!r.tokens.is_empty() && r.tokens.len() <= 5);
+        }
+        assert_eq!(e.metrics.completed, 10);
+    }
+
+    #[test]
+    fn batched_equals_sequential_outputs() {
+        // continuous batching must not change greedy outputs (determinism)
+        let mut e1 = engine(8);
+        for i in 0..6 {
+            e1.submit(Request::greedy(i, vec![(i % 30) as u32 + 4, 6], 6));
+        }
+        let batched = e1.run_to_completion();
+        let mut seq_out = Vec::new();
+        for i in 0..6 {
+            let mut e2 = engine(1);
+            e2.submit(Request::greedy(i, vec![(i % 30) as u32 + 4, 6], 6));
+            seq_out.extend(e2.run_to_completion());
+        }
+        for (a, b) in batched.iter().zip(seq_out.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "batching changed tokens for req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut e = engine(2);
+        for i in 0..8 {
+            e.submit(Request::greedy(i, vec![3, 4, 5], 8));
+        }
+        while e.pending() > 0 {
+            e.step();
+            assert!(e.running.len() <= 2);
+        }
+        assert!(e.metrics.max_batch_seen <= 2);
+    }
+
+    #[test]
+    fn ttft_before_total() {
+        let mut e = engine(4);
+        e.submit(Request::greedy(0, vec![2, 3], 4));
+        let r = &e.run_to_completion()[0];
+        assert!(r.ttft <= r.total);
+    }
+}

@@ -1,0 +1,74 @@
+//! Serving metrics: throughput, latency decomposition, batch occupancy.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    /// Batch-size histogram over decode steps (index = batch size).
+    pub batch_hist: Vec<u64>,
+    pub max_batch_seen: usize,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, b: usize) {
+        if self.batch_hist.len() <= b {
+            self.batch_hist.resize(b + 1, 0);
+        }
+        self.batch_hist[b] += 1;
+        self.max_batch_seen = self.max_batch_seen.max(b);
+    }
+
+    /// Mean decode batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        let (mut n, mut sum) = (0u64, 0u64);
+        for (b, &c) in self.batch_hist.iter().enumerate() {
+            n += c;
+            sum += c * b as u64;
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} prefill_tok={} decode_tok={} prefill={:?} decode={:?} mean_batch={:.2}",
+            self.submitted,
+            self.completed,
+            self.prefill_tokens,
+            self.decode_tokens,
+            self.prefill_time,
+            self.decode_time,
+            self.mean_batch()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_histogram() {
+        let mut m = Metrics::default();
+        m.record_batch(2);
+        m.record_batch(2);
+        m.record_batch(4);
+        assert_eq!(m.batch_hist[2], 2);
+        assert_eq!(m.max_batch_seen, 4);
+        assert!((m.mean_batch() - 8.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_mean_batch_zero() {
+        assert_eq!(Metrics::default().mean_batch(), 0.0);
+    }
+}

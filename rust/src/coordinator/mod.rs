@@ -1,0 +1,19 @@
+//! L3 serving coordinator — the vLLM-style runtime that turns the quantized
+//! model into a service: request queue, continuous batcher, prefill/decode
+//! scheduler, KV-cache budget manager, multi-engine router, and metrics.
+//!
+//! Python never appears here: the engine calls the Rust kernels (or the
+//! PJRT-compiled artifact via [`crate::runtime`]) directly. The end-to-end
+//! Fig. 1 / Fig. 5(b,c) experiments run through this module.
+
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, Response};
+pub use router::Router;
+pub use scheduler::{Scheduler, SchedulerState};

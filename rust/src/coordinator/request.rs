@@ -1,0 +1,89 @@
+//! Request / response types for the serving API.
+
+use crate::model::sampler::Sampling;
+use std::time::{Duration, Instant};
+
+pub type RequestId = u64;
+
+/// An inference request: prompt token ids + generation parameters.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: Sampling,
+    /// stop at EOS (`data::tokenizer::EOS`)?
+    pub stop_at_eos: bool,
+}
+
+impl Request {
+    pub fn greedy(id: RequestId, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Request { id, prompt, max_new_tokens, sampling: Sampling::Greedy, stop_at_eos: true }
+    }
+}
+
+/// Completed generation with per-request latency accounting.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    /// Time to first token (prefill + queueing).
+    pub ttft: Duration,
+    /// Total time in the engine.
+    pub total: Duration,
+}
+
+impl Response {
+    /// Mean time per output token after the first.
+    pub fn tpot(&self) -> Duration {
+        if self.tokens.len() <= 1 {
+            return Duration::ZERO;
+        }
+        (self.total.saturating_sub(self.ttft)) / (self.tokens.len() as u32 - 1)
+    }
+}
+
+/// Internal: a request plus arrival bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Tracked {
+    pub req: Request,
+    pub arrived: Instant,
+    pub first_token_at: Option<Instant>,
+    pub generated: Vec<u32>,
+}
+
+impl Tracked {
+    pub fn new(req: Request) -> Self {
+        Tracked { req, arrived: Instant::now(), first_token_at: None, generated: Vec::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpot_zero_for_single_token() {
+        let r = Response {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![9],
+            ttft: Duration::from_millis(5),
+            total: Duration::from_millis(9),
+        };
+        assert_eq!(r.tpot(), Duration::ZERO);
+    }
+
+    #[test]
+    fn tpot_averages_rest() {
+        let r = Response {
+            id: 1,
+            prompt_len: 4,
+            tokens: vec![9, 9, 9],
+            ttft: Duration::from_millis(10),
+            total: Duration::from_millis(30),
+        };
+        assert_eq!(r.tpot(), Duration::from_millis(10));
+    }
+}

@@ -1,0 +1,131 @@
+//! Multi-engine request router — least-loaded dispatch across replicas
+//! (the multi-GPU topology of the paper's 70B / Mixtral setups, where four
+//! A100s serve one model; here each replica is an [`Engine`]).
+
+use super::engine::Engine;
+use super::request::{Request, Response};
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    RoundRobin,
+    LeastLoaded,
+}
+
+pub struct Router {
+    pub engines: Vec<Engine>,
+    pub policy: Policy,
+    rr_next: usize,
+    pub routed: Vec<u64>,
+}
+
+impl Router {
+    pub fn new(engines: Vec<Engine>, policy: Policy) -> Self {
+        let n = engines.len();
+        assert!(n > 0);
+        Router { engines, policy, rr_next: 0, routed: vec![0; n] }
+    }
+
+    /// Pick a replica for the next request.
+    pub fn pick(&mut self) -> usize {
+        match self.policy {
+            Policy::RoundRobin => {
+                let i = self.rr_next;
+                self.rr_next = (self.rr_next + 1) % self.engines.len();
+                i
+            }
+            Policy::LeastLoaded => {
+                let mut best = 0;
+                for i in 1..self.engines.len() {
+                    if self.engines[i].pending() < self.engines[best].pending() {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        let i = self.pick();
+        self.routed[i] += 1;
+        self.engines[i].submit(req);
+    }
+
+    /// Step every engine once; collect finished responses.
+    pub fn step_all(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        for e in self.engines.iter_mut() {
+            out.extend(e.step());
+        }
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.engines.iter().map(|e| e.pending()).sum()
+    }
+
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step_all());
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::model::{ModelConfig, ModelWeights, Transformer};
+    use std::sync::Arc;
+
+    fn router(n: usize, policy: Policy) -> Router {
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        let engines = (0..n)
+            .map(|i| {
+                Engine::new(
+                    model.clone(),
+                    EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: i as u64 },
+                )
+            })
+            .collect();
+        Router::new(engines, policy)
+    }
+
+    #[test]
+    fn round_robin_balances_exactly() {
+        let mut r = router(3, Policy::RoundRobin);
+        for i in 0..9 {
+            r.submit(Request::greedy(i, vec![4, 5], 2));
+        }
+        assert_eq!(r.routed, vec![3, 3, 3]);
+        assert_eq!(r.run_to_completion().len(), 9);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let mut r = router(2, Policy::LeastLoaded);
+        // preload engine 0
+        for i in 0..4 {
+            r.engines[0].submit(Request::greedy(100 + i, vec![4], 2));
+        }
+        r.submit(Request::greedy(0, vec![4], 2));
+        assert_eq!(r.routed[1], 1, "new request should go to the idle engine");
+    }
+
+    #[test]
+    fn all_complete_across_replicas() {
+        let mut r = router(2, Policy::LeastLoaded);
+        for i in 0..12 {
+            r.submit(Request::greedy(i, vec![3, 4, 5], 3));
+        }
+        let res = r.run_to_completion();
+        assert_eq!(res.len(), 12);
+        let ids: Vec<u64> = res.iter().map(|x| x.id).collect();
+        assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    }
+}

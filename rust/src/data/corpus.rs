@@ -1,0 +1,286 @@
+//! Synthetic corpus generator — Zipf–Markov language with topics.
+//!
+//! The generative process (all seeded):
+//! * a Zipf(1.1) unigram prior over content tokens;
+//! * a per-token Markov affinity: each token `t` prefers a small successor
+//!   set `succ(t)` with probability `coherence`, otherwise samples the prior
+//!   (this produces learnable bigram structure ⇒ non-trivial perplexity);
+//! * 32 latent *topics*; each sentence samples a topic which biases token
+//!   choice toward the topic's lexicon and *determines the final token* of
+//!   LAMBADA items (long-range dependency);
+//! * MCQ items condition on a topic ("domain") and ask which of 4
+//!   completions continues the sentence — MMLU domains are 4 disjoint
+//!   topic buckets.
+//!
+//! The same process with a shifted coherence temperature provides the
+//! "WikiText-2" split (same language, different statistics) while held-out
+//! sequences from the training distribution provide "C4".
+
+use super::tokenizer::N_SPECIAL;
+use crate::tensor::Rng;
+
+/// Which evaluation split to draw (paper dataset stand-ins).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// Training distribution (held-out) — "C4".
+    C4,
+    /// Shifted coherence — "WikiText-2".
+    WikiText2,
+}
+
+/// LAMBADA-style item: predict the final token from long context.
+#[derive(Clone, Debug)]
+pub struct LambadaItem {
+    pub context: Vec<u32>,
+    pub target: u32,
+}
+
+/// Multiple-choice item (CSQA/MMLU): 4 single-token completions, one gold.
+#[derive(Clone, Debug)]
+pub struct McqItem {
+    pub prompt: Vec<u32>,
+    pub choices: [u32; 4],
+    pub gold: usize,
+    /// MMLU domain index (0..4) — Hums/STEM/Social/Other stand-ins.
+    pub domain: usize,
+}
+
+pub struct CorpusGen {
+    vocab: u32,
+    n_topics: usize,
+    /// Zipf weights over content tokens.
+    prior: Vec<f32>,
+    /// succ[t] = preferred successors of token t.
+    succ: Vec<[u32; 4]>,
+    /// topic lexicons (content tokens biased under the topic).
+    topic_lex: Vec<Vec<u32>>,
+    /// topic → deterministic LAMBADA answer token.
+    topic_answer: Vec<u32>,
+}
+
+impl CorpusGen {
+    pub fn new(vocab: u32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let content = (vocab - N_SPECIAL) as usize;
+        let n_topics = 32;
+        // Zipf(1.1) prior
+        let prior: Vec<f32> =
+            (0..content).map(|i| 1.0 / ((i + 1) as f32).powf(1.1)).collect();
+        // random successor sets
+        let succ: Vec<[u32; 4]> = (0..content)
+            .map(|_| {
+                [
+                    N_SPECIAL + rng.below(content) as u32,
+                    N_SPECIAL + rng.below(content) as u32,
+                    N_SPECIAL + rng.below(content) as u32,
+                    N_SPECIAL + rng.below(content) as u32,
+                ]
+            })
+            .collect();
+        // DISJOINT topic lexicons (12 tokens each) carved from a seeded
+        // permutation of the content vocabulary: context tokens identify the
+        // topic unambiguously, which makes the LAMBADA/MCQ long-range
+        // dependency learnable by a ~4M-param model.
+        let mut perm: Vec<u32> = (0..content as u32).map(|i| N_SPECIAL + i).collect();
+        for i in (1..perm.len()).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        let lex_size = (content / n_topics).min(12).max(1);
+        let topic_lex: Vec<Vec<u32>> = (0..n_topics)
+            .map(|t| perm[t * lex_size..(t + 1) * lex_size].to_vec())
+            .collect();
+        // the answer token is the topic's first lexicon member, so it is
+        // both distinctive and frequent within the topic
+        let topic_answer: Vec<u32> = (0..n_topics).map(|t| topic_lex[t][0]).collect();
+        CorpusGen { vocab, n_topics, prior, succ, topic_lex, topic_answer }
+    }
+
+    pub fn vocab_size(&self) -> u32 {
+        self.vocab
+    }
+
+    fn coherence(split: Split) -> f32 {
+        match split {
+            Split::C4 => 0.6,
+            Split::WikiText2 => 0.45, // noisier transitions ⇒ higher PPL
+        }
+    }
+
+    fn sample_token(&self, prev: Option<u32>, topic: usize, coherence: f32, rng: &mut Rng) -> u32 {
+        let r = rng.uniform();
+        if let Some(p) = prev {
+            if r < coherence {
+                // Markov successor
+                let set = &self.succ[(p - N_SPECIAL) as usize];
+                return set[rng.below(4)];
+            }
+        }
+        if r < coherence + 0.2 {
+            // topic lexicon
+            let lex = &self.topic_lex[topic];
+            return lex[rng.below(lex.len())];
+        }
+        N_SPECIAL + rng.categorical(&self.prior) as u32
+    }
+
+    /// One document of `len` tokens from the given split. A quarter of
+    /// documents end with the corpus-wide cue bigram `(cue, topic_answer)`
+    /// — the long-range dependency LAMBADA/MCQ evaluation probes (the model
+    /// must infer the topic from the early context to predict the answer).
+    pub fn document(&self, len: usize, split: Split, rng: &mut Rng) -> Vec<u32> {
+        let coherence = Self::coherence(split);
+        let topic = rng.below(self.n_topics);
+        let cued = len >= 8 && rng.below(4) == 0;
+        let body = if cued { len - 2 } else { len };
+        let mut toks = Vec::with_capacity(len);
+        let mut prev = None;
+        for _ in 0..body {
+            let t = self.sample_token(prev, topic, coherence, rng);
+            toks.push(t);
+            prev = Some(t);
+        }
+        if cued {
+            toks.push(self.vocab - 1); // cue token
+            toks.push(self.topic_answer[topic]);
+        }
+        toks
+    }
+
+    /// A long token stream for training / perplexity evaluation.
+    pub fn stream(&self, total: usize, split: Split, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(total);
+        while out.len() < total {
+            let doc = self.document(64, split, &mut rng);
+            out.extend(doc);
+            out.push(super::tokenizer::EOS);
+        }
+        out.truncate(total);
+        out
+    }
+
+    /// LAMBADA-style set: context primes a topic heavily (first 8 tokens from
+    /// the topic lexicon), the target is the topic's answer token, and the
+    /// context *ends with a cue bigram* (`answer-cue` token) the model can
+    /// learn to resolve only via the topic.
+    pub fn lambada(&self, n: usize, seed: u64) -> Vec<LambadaItem> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let topic = rng.below(self.n_topics);
+                let mut context = Vec::with_capacity(24);
+                let lex = &self.topic_lex[topic];
+                for _ in 0..8 {
+                    context.push(lex[rng.below(lex.len())]);
+                }
+                let mut prev = Some(*context.last().unwrap());
+                for _ in 0..14 {
+                    let t = self.sample_token(prev, topic, 0.6, &mut rng);
+                    context.push(t);
+                    prev = Some(t);
+                }
+                // cue token: vocab-wide "the-answer-is" marker
+                context.push(self.vocab - 1);
+                LambadaItem { context, target: self.topic_answer[topic] }
+            })
+            .collect()
+    }
+
+    /// MCQ set across 4 domains; distractors are answers of other topics in
+    /// the same domain bucket.
+    pub fn mcq(&self, n: usize, seed: u64) -> Vec<McqItem> {
+        let mut rng = Rng::new(seed);
+        let per_domain = self.n_topics / 4;
+        (0..n)
+            .map(|_| {
+                let domain = rng.below(4);
+                let topic = domain * per_domain + rng.below(per_domain);
+                let mut prompt = Vec::with_capacity(18);
+                let lex = &self.topic_lex[topic];
+                for _ in 0..8 {
+                    prompt.push(lex[rng.below(lex.len())]);
+                }
+                let mut prev = Some(*prompt.last().unwrap());
+                for _ in 0..8 {
+                    let t = self.sample_token(prev, topic, 0.6, &mut rng);
+                    prompt.push(t);
+                    prev = Some(t);
+                }
+                prompt.push(self.vocab - 1);
+                let gold = rng.below(4);
+                let mut choices = [0u32; 4];
+                for (slot, c) in choices.iter_mut().enumerate() {
+                    if slot == gold {
+                        *c = self.topic_answer[topic];
+                    } else {
+                        // distractor: answer of a different topic
+                        let mut other = rng.below(self.n_topics);
+                        while other == topic {
+                            other = rng.below(self.n_topics);
+                        }
+                        *c = self.topic_answer[other];
+                    }
+                }
+                McqItem { prompt, choices, gold, domain }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = CorpusGen::new(512, 7);
+        let a = g.stream(256, Split::C4, 1);
+        let b = g.stream(256, Split::C4, 1);
+        assert_eq!(a, b);
+        let c = g.stream(256, Split::C4, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let g = CorpusGen::new(256, 7);
+        for &t in &g.stream(1024, Split::WikiText2, 3) {
+            assert!(t < 256);
+        }
+    }
+
+    #[test]
+    fn lambada_targets_are_topic_answers() {
+        let g = CorpusGen::new(512, 7);
+        let items = g.lambada(64, 5);
+        for it in &items {
+            assert_eq!(*it.context.last().unwrap(), 511); // cue token
+            assert!(g.topic_answer.contains(&it.target));
+        }
+    }
+
+    #[test]
+    fn mcq_gold_in_choices_and_unique() {
+        let g = CorpusGen::new(512, 7);
+        for it in g.mcq(128, 6) {
+            assert!(it.domain < 4);
+            let gold_tok = it.choices[it.gold];
+            // gold appears exactly once
+            assert_eq!(it.choices.iter().filter(|&&c| c == gold_tok).count(), 1);
+        }
+    }
+
+    #[test]
+    fn zipf_prior_head_heavy() {
+        let g = CorpusGen::new(512, 7);
+        let s = g.stream(20_000, Split::C4, 9);
+        let mut counts = vec![0usize; 512];
+        for &t in &s {
+            counts[t as usize] += 1;
+        }
+        // token id N_SPECIAL (rank-1 content token) should be among the most common
+        let max = *counts.iter().max().unwrap();
+        assert!(counts[N_SPECIAL as usize] as f64 > max as f64 * 0.1);
+    }
+}

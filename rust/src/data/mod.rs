@@ -1,0 +1,20 @@
+//! Data substrate — seeded synthetic stand-ins for the paper's datasets.
+//!
+//! The paper evaluates on C4, WikiText-2, LAMBADA, MMLU and CommonSenseQA.
+//! Those corpora (and the LLaMA models trained on them) are out of scope for
+//! this testbed, so we build a generative process with the properties the
+//! benchmarks actually exercise, keeping metric definitions identical:
+//!
+//! * a Zipf-distributed vocabulary with Markov transition structure
+//!   (perplexity is meaningful and a small transformer learns it well);
+//! * long-range topic→final-word dependencies (LAMBADA-style last-word
+//!   prediction);
+//! * domain-conditioned multiple-choice completions (MMLU/CSQA-style).
+//!
+//! Everything is deterministic given a seed; see DESIGN.md §3.
+
+pub mod corpus;
+pub mod tokenizer;
+
+pub use corpus::{CorpusGen, LambadaItem, McqItem, Split};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,98 @@
+//! Word-level tokenizer over the synthetic vocabulary.
+//!
+//! The corpus generator emits token ids directly, but downstream users (the
+//! serving API, the examples) speak text; this tokenizer round-trips between
+//! the two. Vocabulary: 4 specials + `w0000…wNNNN` synthetic words.
+
+/// Special token ids.
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const UNK: u32 = 3;
+pub const N_SPECIAL: u32 = 4;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab_size: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab_size: u32) -> Self {
+        assert!(vocab_size > N_SPECIAL);
+        Tokenizer { vocab_size }
+    }
+
+    pub fn vocab_size(&self) -> u32 {
+        self.vocab_size
+    }
+
+    pub fn id_to_token(&self, id: u32) -> String {
+        match id {
+            PAD => "<pad>".into(),
+            BOS => "<s>".into(),
+            EOS => "</s>".into(),
+            UNK => "<unk>".into(),
+            _ if id < self.vocab_size => format!("w{:04}", id - N_SPECIAL),
+            _ => "<unk>".into(),
+        }
+    }
+
+    pub fn token_to_id(&self, tok: &str) -> u32 {
+        match tok {
+            "<pad>" => PAD,
+            "<s>" => BOS,
+            "</s>" => EOS,
+            _ => {
+                if let Some(num) = tok.strip_prefix('w').and_then(|s| s.parse::<u32>().ok()) {
+                    let id = num + N_SPECIAL;
+                    if id < self.vocab_size {
+                        return id;
+                    }
+                }
+                UNK
+            }
+        }
+    }
+
+    /// Whitespace-split encode with BOS prepended.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = vec![BOS];
+        ids.extend(text.split_whitespace().map(|t| self.token_to_id(t)));
+        ids
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .filter(|&&id| id != BOS && id != PAD)
+            .map(|&id| self.id_to_token(id))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tk = Tokenizer::new(512);
+        let ids = tk.encode("w0001 w0099 w0400");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(tk.decode(&ids), "w0001 w0099 w0400");
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let tk = Tokenizer::new(64);
+        assert_eq!(tk.token_to_id("zzz"), UNK);
+        assert_eq!(tk.token_to_id("w9999"), UNK); // out of vocab
+    }
+
+    #[test]
+    fn specials_roundtrip() {
+        let tk = Tokenizer::new(512);
+        assert_eq!(tk.token_to_id("</s>"), EOS);
+        assert_eq!(tk.id_to_token(EOS), "</s>");
+    }
+}

@@ -1,0 +1,122 @@
+//! Evaluation harnesses — the paper's metric suite with identical
+//! definitions: perplexity (C4/WikiText-2 stand-ins), last-word accuracy
+//! (LAMBADA), and multiple-choice accuracy by max sequence likelihood
+//! (CommonSenseQA / MMLU).
+
+use crate::data::{LambadaItem, McqItem};
+use crate::model::Transformer;
+
+/// Perplexity of the model over a token stream, chunked into windows of
+/// `window` tokens (the standard strided PPL protocol, stride = window).
+pub fn perplexity(model: &Transformer, tokens: &[u32], window: usize) -> f64 {
+    let mut nll = 0f64;
+    let mut count = 0usize;
+    for chunk in tokens.chunks(window) {
+        if chunk.len() < 2 {
+            continue;
+        }
+        let mut cache = model.new_cache();
+        let logits = model.prefill(chunk, &mut cache);
+        for t in 0..chunk.len() - 1 {
+            nll -= Transformer::log_prob(logits.row(t), chunk[t + 1]);
+            count += 1;
+        }
+    }
+    (nll / count as f64).exp()
+}
+
+/// LAMBADA-style accuracy: greedy-predict the final token from the context.
+pub fn lambada_accuracy(model: &Transformer, items: &[LambadaItem]) -> f64 {
+    let mut correct = 0usize;
+    for it in items {
+        let mut cache = model.new_cache();
+        let logits = model.prefill(&it.context, &mut cache);
+        let pred = crate::model::sampler::argmax(logits.row(it.context.len() - 1));
+        if pred == it.target {
+            correct += 1;
+        }
+    }
+    correct as f64 / items.len() as f64
+}
+
+/// MCQ accuracy: pick the choice with the highest model log-probability as
+/// continuation of the prompt (zero-shot likelihood scoring, the LM Eval
+/// Harness protocol for single-token options).
+pub fn mcq_accuracy(model: &Transformer, items: &[McqItem]) -> f64 {
+    let (acc, _) = mcq_accuracy_by_domain(model, items);
+    acc
+}
+
+/// MCQ accuracy overall and per domain (MMLU's Hums/STEM/Social/Other rows).
+pub fn mcq_accuracy_by_domain(model: &Transformer, items: &[McqItem]) -> (f64, [f64; 4]) {
+    let mut correct = 0usize;
+    let mut dom_correct = [0usize; 4];
+    let mut dom_total = [0usize; 4];
+    for it in items {
+        let mut cache = model.new_cache();
+        let logits = model.prefill(&it.prompt, &mut cache);
+        let last = logits.row(it.prompt.len() - 1);
+        let mut best = 0usize;
+        let mut best_lp = f64::MIN;
+        for (i, &c) in it.choices.iter().enumerate() {
+            let lp = Transformer::log_prob(last, c);
+            if lp > best_lp {
+                best_lp = lp;
+                best = i;
+            }
+        }
+        dom_total[it.domain] += 1;
+        if best == it.gold {
+            correct += 1;
+            dom_correct[it.domain] += 1;
+        }
+    }
+    let per_dom = std::array::from_fn(|d| {
+        if dom_total[d] == 0 {
+            0.0
+        } else {
+            dom_correct[d] as f64 / dom_total[d] as f64
+        }
+    });
+    (correct as f64 / items.len() as f64, per_dom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusGen, Split};
+    use crate::model::{ModelConfig, ModelWeights};
+
+    fn tiny_model() -> Transformer {
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 128, n_experts: None };
+        Transformer::from_weights(&ModelWeights::random(cfg, 5))
+    }
+
+    #[test]
+    fn random_model_ppl_near_vocab() {
+        // an untrained model should have PPL ≈ vocab size (uniform-ish)
+        let m = tiny_model();
+        let gen = CorpusGen::new(64, 3);
+        let toks = gen.stream(256, Split::C4, 1);
+        let ppl = perplexity(&m, &toks, 64);
+        assert!(ppl > 20.0 && ppl < 200.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn mcq_random_model_chance_level() {
+        let m = tiny_model();
+        let gen = CorpusGen::new(64, 3);
+        let items = gen.mcq(80, 2);
+        let acc = mcq_accuracy(&m, &items);
+        assert!(acc < 0.6, "acc={acc}"); // chance ≈ 0.25 for untrained
+    }
+
+    #[test]
+    fn lambada_runs() {
+        let m = tiny_model();
+        let gen = CorpusGen::new(64, 3);
+        let items = gen.lambada(20, 2);
+        let acc = lambada_accuracy(&m, &items);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,66 @@
+//! FP16-baseline GEMM (f32 on CPU).
+//!
+//! The reference every acceleration ratio in the paper is measured against
+//! (Figures 3, 5, 6, 7). 8-lane multi-accumulator dot products let LLVM
+//! vectorize the float reduction (float adds are not associative, so a
+//! single-accumulator loop cannot be auto-vectorized) — the baseline is
+//! honest; an artificially slow FP16 baseline would inflate our speedups.
+
+use crate::tensor::Mat;
+
+/// Vectorizable f32 dot product: 8 independent accumulator lanes.
+#[inline(always)]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0f32; 8];
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let ac = &a[c * 8..c * 8 + 8];
+        let bc = &b[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            lanes[l] += ac[l] * bc[l];
+        }
+    }
+    let mut acc = lanes.iter().sum::<f32>();
+    for j in chunks * 8..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+/// `out[m][n] = Σ_k x[m][k] · w[n][k]`
+pub fn gemm_f32(x: &Mat, w: &Mat) -> Mat {
+    assert_eq!(x.cols, w.cols, "K mismatch");
+    let (m, k, n) = (x.rows, x.cols, w.rows);
+    let mut out = Mat::zeros(m, n);
+    for j in 0..n {
+        let wrow = &w.data[j * k..(j + 1) * k];
+        for i in 0..m {
+            out.data[i * n + j] = dot_f32(x.row(i), wrow);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(5, 33, 1.0, &mut rng);
+        let w = Mat::randn(7, 33, 1.0, &mut rng);
+        let fast = gemm_f32(&x, &w);
+        let slow = x.matmul_t(&w);
+        assert!(fast.max_abs_diff(&slow) < 1e-4);
+    }
+
+    #[test]
+    fn odd_n_tail_handled() {
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(2, 16, 1.0, &mut rng);
+        let w = Mat::randn(5, 16, 1.0, &mut rng); // n=5 exercises the tail
+        assert!(gemm_f32(&x, &w).max_abs_diff(&x.matmul_t(&w)) < 1e-5);
+    }
+}

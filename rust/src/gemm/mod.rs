@@ -1,0 +1,189 @@
+//! The kernel zoo (paper §4.2, Table 2, Figures 3/5/6/7).
+//!
+//! CPU implementations of every GEMM scheme the paper measures. The paper's
+//! kernels run on A100 integer tensor cores; here the *same arithmetic
+//! structure* runs on CPU integer/float units, so the cost asymmetry the
+//! paper exploits — per-group I32→F32 conversions + float FMAs (float scale)
+//! vs pure integer MACs (Integer Scale) — is physically present and
+//! measurable with criterion (see `benches/`).
+//!
+//! Layout conventions:
+//! * activations `x`: row-major `M×K` (one token per row), int8 codes with a
+//!   per-token scale, or f32 for the A16 paths;
+//! * weights: row-major `N×K` (one output channel per row), int4 packed two
+//!   codes per byte ([`crate::quant::pack`]) or int8;
+//! * output: row-major `M×N` f32.
+
+pub mod fp32;
+pub mod qserve;
+pub mod trace;
+pub mod w4a16;
+pub mod w4a4;
+pub mod w4a8_coarse;
+pub mod w4a8_fg_float;
+pub mod w4a8_fg_int;
+pub mod w8a8;
+
+use crate::quant::methods::QuantizedLinear;
+use crate::quant::pack::pack_int4;
+use crate::quant::{Bits, Granularity};
+use crate::tensor::Mat;
+
+/// Which kernel scheme to run — the paper's comparison axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// FP16 baseline (f32 stand-in).
+    Fp16,
+    /// Coarse W8A8 (SmoothQuant-style): per-channel/per-token scales.
+    W8A8,
+    /// Marlin-like weight-only W4A16: fused unpack+dequant into float GEMM.
+    W4A16,
+    /// Odyssey-like coarse W4A8 FastGEMM: per-channel scale, one conversion.
+    W4A8Coarse,
+    /// Fine-grained W4A8 with per-group FLOAT scales — Fig. 2(b), the
+    /// bottleneck baseline.
+    W4A8FgFloat,
+    /// Fine-grained W4A8 with INTEGER scales — Fig. 2(c), the contribution.
+    W4A8FgInt,
+    /// Atom-like fine-grained W4A4 (float scales).
+    W4A4,
+    /// QServe/DGQ dual-grained W4A8 (asymmetric 4-bit level-2).
+    QServe { fine: bool },
+}
+
+impl Kernel {
+    pub fn label(self) -> &'static str {
+        match self {
+            Kernel::Fp16 => "FP16",
+            Kernel::W8A8 => "W8A8",
+            Kernel::W4A16 => "W4A16 (Marlin)",
+            Kernel::W4A8Coarse => "W4A8 coarse (Odyssey)",
+            Kernel::W4A8FgFloat => "W4A8 FG float-scale",
+            Kernel::W4A8FgInt => "W4A8 FG Integer Scale",
+            Kernel::W4A4 => "W4A4 FG (Atom)",
+            Kernel::QServe { fine: false } => "QServe W4A8 coarse",
+            Kernel::QServe { fine: true } => "QServe W4A8 fine",
+        }
+    }
+}
+
+/// A weight tensor prepared (packed, scales laid out) for one kernel.
+/// Preparation happens offline at quantization time, exactly as the paper's
+/// weight pre-processing step — never on the request path.
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    pub n: usize,
+    pub k: usize,
+    pub group: usize,
+    /// int4: two codes per byte; int8: one code per byte (reinterpreted).
+    pub packed: Vec<u8>,
+    pub bits: Bits,
+    /// Per-(channel, group) float scales, row-major `n × k/group`.
+    pub scales: Vec<f32>,
+    /// Integer scales (same layout) and amplifier, when Integer Scale is on.
+    pub int_scales: Option<Vec<i32>>,
+    pub amplifier: i64,
+    /// Set when the Fig.-8 audit flags this layer: the W4A8FgInt dispatch
+    /// falls back to the overflow-safe degraded kernel (paper §B.4).
+    pub overflow_risk: bool,
+}
+
+impl PackedWeight {
+    /// Prepare from a quantized linear layer.
+    pub fn from_quantized(ql: &QuantizedLinear) -> PackedWeight {
+        let qw = &ql.qw;
+        let group = qw.gran.group_size(qw.k);
+        let (packed, bits) = match qw.bits {
+            Bits::B4 => (pack_int4(&qw.q.data, qw.k), Bits::B4),
+            Bits::B8 => (qw.q.data.iter().map(|&v| v as u8).collect(), Bits::B8),
+            Bits::F16 => panic!("cannot pack float weights"),
+        };
+        PackedWeight {
+            n: qw.n,
+            k: qw.k,
+            group,
+            packed,
+            bits,
+            scales: qw.scales.data.clone(),
+            int_scales: qw.int_scales.as_ref().map(|is| is.scales.clone()),
+            amplifier: qw.int_scales.as_ref().map_or(1, |is| is.amplifier),
+            overflow_risk: false,
+        }
+    }
+
+    pub fn groups_per_row(&self) -> usize {
+        self.k / self.group
+    }
+}
+
+/// Quantized activations: int8 codes with one scale per row (per-token).
+#[derive(Clone, Debug)]
+pub struct QuantAct {
+    pub m: usize,
+    pub k: usize,
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl QuantAct {
+    pub fn quantize(x: &Mat, bits: Bits) -> QuantAct {
+        let (q, scales) = crate::quant::quantize_act_per_token(x, bits);
+        QuantAct { m: x.rows, k: x.cols, q: q.data, scales }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.q[r * self.k..(r + 1) * self.k]
+    }
+}
+
+/// Reference float GEMM for correctness: `x @ dequant(w)ᵀ`.
+pub fn reference(x: &Mat, ql: &QuantizedLinear, int_scale: bool) -> Mat {
+    let w = if int_scale { ql.qw.dequant_int_scale() } else { ql.qw.dequant() };
+    x.matmul_t(&w)
+}
+
+/// Helper used by tests: build a packed weight straight from a float matrix.
+pub fn pack_for_test(
+    w: &Mat,
+    bits: Bits,
+    gran: Granularity,
+    amplifier: Option<i64>,
+) -> PackedWeight {
+    let mut qw = crate::quant::quantize_weight_sym(w, bits, gran);
+    if let Some(a) = amplifier {
+        crate::quant::integer_scale::attach_integer_scales(&mut qw, Some(a));
+    }
+    let ql = QuantizedLinear { qw, act_smooth: None, rotate: false, bw: crate::quant::BitWidth::W4A8 };
+    PackedWeight::from_quantized(&ql)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn packed_weight_shapes() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 128, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(32), Some(1024));
+        assert_eq!(pw.packed.len(), 16 * 128 / 2);
+        assert_eq!(pw.scales.len(), 16 * 4);
+        assert_eq!(pw.int_scales.as_ref().unwrap().len(), 16 * 4);
+        assert_eq!(pw.amplifier, 1024);
+    }
+
+    #[test]
+    fn quant_act_roundtrip() {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(4, 64, 1.0, &mut rng);
+        let qa = QuantAct::quantize(&x, Bits::B8);
+        for r in 0..4 {
+            for c in 0..64 {
+                let re = qa.q[r * 64 + c] as f32 * qa.scales[r];
+                assert!((re - x[(r, c)]).abs() <= qa.scales[r] * 0.5 + 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! QServe-style dual-grained W4A8 kernel [27] (paper §5.8, §B.2, Eq. 7–8).
+//!
+//! QServe stores 4-bit asymmetric codes over an 8-bit intermediate domain.
+//! Its main loop must *expand* each 4-bit weight back to 8-bit with an
+//! element-wise multiply and subtract — `w8 = (w4 − z)·s2` — before the int8
+//! MAC. Those element-wise ops run on CUDA cores (vadd4 etc.) on GPU and as
+//! extra scalar integer ops here, which is exactly why the paper's
+//! Integer-Scale kernel beats it (Fig. 6/7): IS has no per-element expansion
+//! at all.
+
+use super::QuantAct;
+use crate::quant::methods::dual_grained::DualGrainedWeight;
+use crate::tensor::Mat;
+
+/// Expand one dual-grained weight row into int8: the per-element
+/// `(w4 − z)·s2` multiply/subtract/clamp chain QServe's main loop pays
+/// (vadd4 + IMAD on CUDA cores; scalar-ish integer ops here). This is the
+/// structural overhead our Integer-Scale kernel does not have — its unpack
+/// is a shift+mask only.
+#[inline(always)]
+fn expand_row(q4row: &[i8], s2: &[i16], z2: &[i16], group: usize, out: &mut [i8]) {
+    let gpr = q4row.len() / group;
+    for gi in 0..gpr {
+        let s = s2[gi] as i32;
+        let z = z2[gi] as i32;
+        for j in gi * group..(gi + 1) * group {
+            out[j] = ((q4row[j] as i32 - z) * s).clamp(-128, 127) as i8;
+        }
+    }
+}
+
+/// Coarse dual-grained W4A8: level-2 expansion, single INT32 reduction over
+/// K, per-channel epilogue.
+pub fn gemm_coarse(x: &QuantAct, w: &DualGrainedWeight) -> Mat {
+    assert_eq!(x.k, w.k);
+    let (m, k, n) = (x.m, x.k, w.n);
+    let gpr = w.groups_per_row();
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        expand_row(
+            &w.q4.data[jn * k..(jn + 1) * k],
+            &w.s2[jn * gpr..(jn + 1) * gpr],
+            &w.z2[jn * gpr..(jn + 1) * gpr],
+            w.group,
+            &mut wbuf,
+        );
+        let s1 = w.s1[jn];
+        for i in 0..m {
+            let acc = crate::gemm::w4a8_fg_int::dot_i8(x.row(i), &wbuf);
+            out.data[i * n + jn] = acc as f32 * x.scales[i] * s1;
+        }
+    }
+    out
+}
+
+/// Fine-grained dual-grained W4A8: additionally converts each group partial
+/// to float for a per-group float scale (the worst of both worlds — QServe's
+/// fine-grained configuration in Fig. 6).
+pub fn gemm_fine(x: &QuantAct, w: &DualGrainedWeight, group_scales: &[f32]) -> Mat {
+    assert_eq!(x.k, w.k);
+    let (m, k, n) = (x.m, x.k, w.n);
+    let gpr = w.groups_per_row();
+    let g = w.group;
+    assert_eq!(group_scales.len(), n * gpr);
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        expand_row(
+            &w.q4.data[jn * k..(jn + 1) * k],
+            &w.s2[jn * gpr..(jn + 1) * gpr],
+            &w.z2[jn * gpr..(jn + 1) * gpr],
+            g,
+            &mut wbuf,
+        );
+        let s1 = w.s1[jn];
+        let srow = &group_scales[jn * gpr..(jn + 1) * gpr];
+        for i in 0..m {
+            let xrow = x.row(i);
+            let mut accf = 0f32;
+            for gi in 0..gpr {
+                let part =
+                    crate::gemm::w4a8_fg_int::dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                accf += part as f32 * srow[gi];
+            }
+            out.data[i * n + jn] = accf * x.scales[i] * s1;
+        }
+    }
+    out
+}
+
+/// Uniform per-group scales of 1.0 for the fine variant when the level-1
+/// scale already carries the dequantization (benchmark configuration).
+pub fn unit_group_scales(w: &DualGrainedWeight) -> Vec<f32> {
+    vec![1.0; w.n * w.groups_per_row()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::dual_grained::dual_grain_quantize;
+    use crate::quant::Bits;
+    use crate::tensor::{Mat, Rng};
+
+    #[test]
+    fn coarse_matches_expanded_reference() {
+        let mut rng = Rng::new(70);
+        let xf = Mat::randn(4, 128, 1.0, &mut rng);
+        let wf = Mat::randn(16, 128, 0.05, &mut rng);
+        let dg = dual_grain_quantize(&wf, 32);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let got = gemm_coarse(&qa, &dg);
+        // reference: int8-expanded weight GEMM — note gemm_coarse does NOT
+        // clamp the expansion (GPU vadd4 path), so compare against the
+        // unclamped formula, which for well-formed dual-grained codes
+        // matches the clamped one.
+        let w8 = dg.expand_int8();
+        for i in 0..4 {
+            for jn in 0..16 {
+                let mut acc = 0i64;
+                for j in 0..128 {
+                    acc += qa.q[i * 128 + j] as i64 * w8.data[jn * 128 + j] as i64;
+                }
+                let expect = acc as f32 * qa.scales[i] * dg.s1[jn];
+                let gotv = got[(i, jn)];
+                assert!(
+                    (gotv - expect).abs() <= expect.abs() * 1e-4 + 1e-3,
+                    "({i},{jn}): {gotv} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fine_with_unit_scales_matches_coarse() {
+        let mut rng = Rng::new(71);
+        let xf = Mat::randn(3, 64, 1.0, &mut rng);
+        let wf = Mat::randn(8, 64, 0.05, &mut rng);
+        let dg = dual_grain_quantize(&wf, 32);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let a = gemm_coarse(&qa, &dg);
+        let b = gemm_fine(&qa, &dg, &unit_group_scales(&dg));
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn dual_grained_accuracy_close_to_float() {
+        let mut rng = Rng::new(72);
+        let xf = Mat::randn(4, 128, 1.0, &mut rng);
+        let wf = Mat::randn(16, 128, 0.05, &mut rng);
+        let dg = dual_grain_quantize(&wf, 32);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let got = gemm_coarse(&qa, &dg);
+        let exact = xf.matmul_t(&wf);
+        let rel = got.mse(&exact).sqrt() / (exact.frob() / (exact.data.len() as f64).sqrt());
+        assert!(rel < 0.12, "rel={rel}");
+    }
+}

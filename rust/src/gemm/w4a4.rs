@@ -1,0 +1,96 @@
+//! Fine-grained W4A4 GEMM — Atom [52] analogue (Table 2 middle column).
+//!
+//! Both operands are int4; group partials are collected with an extra
+//! register and, in Atom's design, converted to float per group — the same
+//! float-scale bottleneck. We implement the float-scale variant (Atom) and
+//! the Integer-Scale variant to show the fix applies at W4A4 too (the paper
+//! lists W4A4 among the "various bandwidths" IS supports).
+
+use super::w4a8_fg_int::dot_i8;
+use super::{PackedWeight, QuantAct};
+use crate::quant::pack::unpack_row_into;
+use crate::tensor::Mat;
+
+/// Atom-style: per-group I32→F32 conversion (activations already quantized
+/// to 4-bit codes stored in i8, weights packed int4).
+pub fn gemm_float_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
+    assert_eq!(x.k, w.k);
+    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    let gpr = w.groups_per_row();
+    let kb = k / 2;
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
+        let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
+        for i in 0..m {
+            let xrow = x.row(i);
+            let mut accf = 0f32;
+            for gi in 0..gpr {
+                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                accf += part as f32 * srow[gi];
+            }
+            out.data[i * n + jn] = accf * x.scales[i];
+        }
+    }
+    out
+}
+
+/// Integer-Scale W4A4.
+pub fn gemm_int_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
+    let is = w.int_scales.as_ref().expect("int scales required");
+    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    let gpr = w.groups_per_row();
+    let kb = k / 2;
+    let inv_amp = 1.0f32 / w.amplifier as f32;
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
+        let srow = &is[jn * gpr..(jn + 1) * gpr];
+        for i in 0..m {
+            let xrow = x.row(i);
+            let mut acc: i32 = 0;
+            for gi in 0..gpr {
+                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
+            }
+            out.data[i * n + jn] = acc as f32 * (x.scales[i] * inv_amp);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack_for_test;
+    use crate::quant::{Bits, Granularity};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn int_scale_matches_float_scale() {
+        let mut rng = Rng::new(60);
+        let xf = Mat::randn(4, 128, 1.0, &mut rng);
+        let wf = Mat::randn(16, 128, 0.05, &mut rng);
+        let qa = QuantAct::quantize(&xf, Bits::B4);
+        let pf = pack_for_test(&wf, Bits::B4, Granularity::Group(32), None);
+        let pi = pack_for_test(&wf, Bits::B4, Granularity::Group(32), Some(1024));
+        let a = gemm_float_scale(&qa, &pf);
+        let b = gemm_int_scale(&qa, &pi);
+        let rel = a.mse(&b).sqrt() / (a.frob() / (a.data.len() as f64).sqrt());
+        assert!(rel < 0.04, "rel={rel}");
+    }
+
+    #[test]
+    fn a4_noisier_than_a8() {
+        let mut rng = Rng::new(61);
+        let xf = Mat::randn(4, 128, 1.0, &mut rng);
+        let wf = Mat::randn(16, 128, 0.05, &mut rng);
+        let exact = xf.matmul_t(&wf);
+        let pf = pack_for_test(&wf, Bits::B4, Granularity::Group(32), None);
+        let a4 = gemm_float_scale(&QuantAct::quantize(&xf, Bits::B4), &pf);
+        let a8 = crate::gemm::w4a8_fg_float::gemm(&QuantAct::quantize(&xf, Bits::B8), &pf);
+        assert!(a4.mse(&exact) > a8.mse(&exact));
+    }
+}

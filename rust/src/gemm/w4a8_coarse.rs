@@ -1,0 +1,54 @@
+//! Coarse W4A8 GEMM — OdysseyLLM FastGEMM [23] analogue.
+//!
+//! Per-channel weight scale, per-token activation scale: the full K
+//! reduction runs in INT32 and the epilogue is one conversion + one scale
+//! multiply per output. This is the "optimal acceleration ratio over FP16"
+//! scheme in Fig. 5(a); fine granularity gives up this efficiency unless
+//! Integer Scale restores it.
+
+use super::w4a8_fg_int::dot_i8;
+use super::{PackedWeight, QuantAct};
+use crate::quant::pack::unpack_row_into;
+use crate::tensor::Mat;
+
+pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    assert_eq!(x.k, w.k);
+    let (m, k, n) = (x.m, x.k, w.n);
+    let gpr = w.groups_per_row();
+    assert_eq!(gpr, 1, "coarse kernel requires per-channel scales");
+    let kb = k / 2;
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
+        let sw = w.scales[jn];
+        for i in 0..m {
+            // full-K integer reduction, single conversion + scale epilogue
+            let acc = dot_i8(x.row(i), &wbuf);
+            out.data[i * n + jn] = acc as f32 * x.scales[i] * sw;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack_for_test;
+    use crate::quant::{Bits, Granularity};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn matches_fg_float_with_single_group() {
+        // With one group per row, coarse and fine-grained float are the same
+        // arithmetic; assert bit-near equality.
+        let mut rng = Rng::new(50);
+        let xf = Mat::randn(4, 128, 1.0, &mut rng);
+        let wf = Mat::randn(8, 128, 0.05, &mut rng);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::PerChannel, None);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let a = gemm(&qa, &pw);
+        let b = crate::gemm::w4a8_fg_float::gemm(&qa, &pw);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+}

@@ -1,0 +1,108 @@
+//! Fine-grained W4A8 GEMM with per-group **float** scales — Fig. 2(b), the
+//! bottleneck this paper removes.
+//!
+//! Structure (mirrors the CUTLASS fine-grained epilogue):
+//! for every output element, each group's INT32 partial sum must leave the
+//! integer domain — `I32toF32` conversion — and be folded into an f32
+//! accumulator with the group's float scale:
+//!
+//! ```text
+//! accf = 0.0
+//! for g in groups:  accf += f32(Σ_j x[j]·w[j]) · s_g      // convert PER GROUP
+//! out = accf · s_a
+//! ```
+//!
+//! On the GPU the conversions run on CUDA cores between tensor-core MMAs;
+//! here they are scalar converts between vectorized integer MAC loops — the
+//! same structural stall, measured by `benches/fig3_kernel.rs`.
+
+use super::w4a8_fg_int::dot_i8;
+use super::{PackedWeight, QuantAct};
+use crate::quant::pack::unpack_row_into;
+use crate::tensor::Mat;
+
+/// `x (M×K int8, per-token scales) @ wᵀ (N×K int4 packed, n×k/g float scales)`
+///
+/// Weight-major like the IS kernel; the ONLY difference is the per-group
+/// epilogue: I32→F32 convert + float FMA (Fig. 2b) instead of an integer
+/// multiply-accumulate.
+pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    assert_eq!(x.k, w.k, "K mismatch");
+    assert!(w.group % 2 == 0);
+    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    let gpr = w.groups_per_row();
+    let kb = k / 2;
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
+        let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
+        for i in 0..m {
+            let xrow = x.row(i);
+            let mut accf = 0f32;
+            for gi in 0..gpr {
+                // --- integer domain: group partial (vectorized MAC loop)
+                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                // --- leave the integer domain: I32→F32 convert + float FMA,
+                //     once per group — the cost Integer Scale removes.
+                accf += part as f32 * srow[gi];
+            }
+            out.data[i * n + jn] = accf * x.scales[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::pack_for_test;
+    use crate::quant::{quantize_weight_sym, Bits, Granularity};
+    use crate::tensor::{Mat, Rng};
+
+    #[test]
+    fn matches_reference_dequant_path() {
+        let mut rng = Rng::new(10);
+        let xf = Mat::randn(6, 256, 1.0, &mut rng);
+        let wf = Mat::randn(24, 256, 0.05, &mut rng);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::Group(64), None);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let got = gemm(&qa, &pw);
+
+        // exact reference in f64: sa * Σ_g s_g * (Σ_j xq·wq)
+        let qw = quantize_weight_sym(&wf, Bits::B4, Granularity::Group(64));
+        let gpr = 4;
+        for i in 0..6 {
+            for jn in 0..24 {
+                let mut acc = 0f64;
+                for gi in 0..gpr {
+                    let mut part = 0i64;
+                    for j in gi * 64..(gi + 1) * 64 {
+                        part += qa.q[i * 256 + j] as i64 * qw.q.data[jn * 256 + j] as i64;
+                    }
+                    acc += part as f64 * qw.scales.data[jn * gpr + gi] as f64;
+                }
+                let expect = (acc * qa.scales[i] as f64) as f32;
+                let gotv = got[(i, jn)];
+                assert!(
+                    (gotv - expect).abs() <= expect.abs() * 1e-4 + 1e-4,
+                    "({i},{jn}): {gotv} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn approximates_float_gemm() {
+        let mut rng = Rng::new(11);
+        let xf = Mat::randn(4, 128, 1.0, &mut rng);
+        let wf = Mat::randn(16, 128, 0.05, &mut rng);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::Group(32), None);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let got = gemm(&qa, &pw);
+        let exact = xf.matmul_t(&wf);
+        // quantization noise only — relative Frobenius error small
+        let rel = got.mse(&exact).sqrt() / (exact.frob() / (exact.data.len() as f64).sqrt());
+        assert!(rel < 0.15, "rel={rel}");
+    }
+}

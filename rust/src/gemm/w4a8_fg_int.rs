@@ -1,0 +1,242 @@
+//! Fine-grained W4A8 GEMM with **Integer Scale** — Fig. 2(c), the paper's
+//! contribution (Eq. 2).
+//!
+//! The per-group float scale is replaced offline by `INT(s_g · α)`; the
+//! whole group reduction stays in the integer domain and exactly **one**
+//! conversion happens in the epilogue:
+//!
+//! ```text
+//! acc = 0
+//! for g in groups:  acc += (Σ_j x[j]·w[j]) · is_g        // integer only
+//! out = f32(acc) · s_a / α                               // ONE convert
+//! ```
+//!
+//! The group partial fits i32 (|part| ≤ g·127·7); the scaled accumulator is
+//! held in i64 on CPU — the paper holds it in i32 and audits overflow
+//! (Fig. 8); we audit identically in `quant::integer_scale::overflow_audit`
+//! and additionally verify in debug builds that the i32 bound holds.
+
+use super::{PackedWeight, QuantAct};
+use crate::quant::pack::unpack_row_into;
+use crate::tensor::Mat;
+
+/// Vectorizable int8 group dot product (LLVM lowers this to pmaddwd-style
+/// SIMD on AVX2 — the CPU stand-in for the int8 tensor-core MMA).
+#[inline(always)]
+pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (x, w) in a.iter().zip(b.iter()) {
+        acc += *x as i32 * *w as i32;
+    }
+    acc
+}
+
+/// `x (M×K int8) @ wᵀ (N×K int4 packed, integer scales + amplifier)`
+///
+/// Weight-major loop: each packed weight row is unpacked into L1 once and
+/// reused across the whole activation batch (Marlin's dequant-in-registers
+/// trick), so the measured cost difference vs the float-scale kernel is
+/// exactly the per-group epilogue.
+pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    let is = w
+        .int_scales
+        .as_ref()
+        .expect("integer scales required — call attach_integer_scales first");
+    assert_eq!(x.k, w.k, "K mismatch");
+    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    let gpr = w.groups_per_row();
+    let kb = k / 2;
+    let inv_amp = 1.0f32 / w.amplifier as f32;
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
+        let srow = &is[jn * gpr..(jn + 1) * gpr];
+        for i in 0..m {
+            let xrow = x.row(i);
+            // INT32 accumulator — exactly the paper's kernel. α is chosen
+            // so this cannot overflow (Fig. 8 audit:
+            // `quant::integer_scale::overflow_audit`); debug builds verify.
+            let mut acc: i32 = 0;
+            for gi in 0..gpr {
+                // --- integer domain: group partial (same MAC loop as the
+                //     float-scale kernel — the ONLY difference is below)
+                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                // --- stay in the integer domain: int multiply-accumulate
+                debug_assert!(
+                    (acc as i64 + part as i64 * srow[gi] as i64).abs() <= i32::MAX as i64,
+                    "IS accumulator overflowed i32 (α too large)"
+                );
+                acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
+            }
+            // --- the single conversion of the whole reduction
+            out.data[i * n + jn] = acc as f32 * (x.scales[i] * inv_amp);
+        }
+    }
+    out
+}
+
+/// Overflow-safe **degraded** Integer-Scale kernel (paper §B.4).
+///
+/// When a layer's Fig.-8 audit shows the INT32 accumulator could overflow
+/// under its amplifier, the paper proposes trading speed for safety by
+/// removing the amplifier per group: each scaled group partial is converted
+/// to f32 *before* accumulation. This reintroduces one conversion per group
+/// (like the float-scale kernel) but keeps the integer scale representation,
+/// so the quantized weights and scales are unchanged — only the epilogue
+/// degrades.
+pub fn gemm_overflow_safe(x: &QuantAct, w: &PackedWeight) -> Mat {
+    let is = w.int_scales.as_ref().expect("integer scales required");
+    assert_eq!(x.k, w.k, "K mismatch");
+    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    let gpr = w.groups_per_row();
+    let kb = k / 2;
+    let inv_amp = 1.0f32 / w.amplifier as f32;
+    let mut out = Mat::zeros(m, n);
+    let mut wbuf = vec![0i8; k];
+    for jn in 0..n {
+        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
+        let srow = &is[jn * gpr..(jn + 1) * gpr];
+        for i in 0..m {
+            let xrow = x.row(i);
+            let mut accf = 0f64;
+            for gi in 0..gpr {
+                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                // degraded epilogue: leave the integer domain per group so
+                // the accumulator can never overflow
+                accf += part as f64 * srow[gi] as f64;
+            }
+            out.data[i * n + jn] = (accf as f32) * (x.scales[i] * inv_amp);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{pack_for_test, w4a8_fg_float};
+    use crate::quant::{Bits, Granularity};
+    use crate::tensor::{Mat, Rng};
+
+    #[test]
+    fn overflow_safe_matches_fast_kernel_when_no_overflow() {
+        let mut rng = Rng::new(25);
+        let xf = Mat::randn(4, 256, 1.0, &mut rng);
+        let wf = Mat::randn(16, 256, 0.05, &mut rng);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::Group(64), Some(1024));
+        let fast = gemm(&qa, &pw);
+        let safe = gemm_overflow_safe(&qa, &pw);
+        assert!(fast.max_abs_diff(&safe) < 1e-3);
+    }
+
+    #[test]
+    fn overflow_safe_survives_huge_amplifier() {
+        // α so large the fast kernel WOULD overflow i32; the degraded kernel
+        // must still produce the correct result.
+        let mut rng = Rng::new(26);
+        let xf = Mat::randn(2, 512, 4.0, &mut rng);
+        let wf = Mat::randn(8, 512, 0.5, &mut rng);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::Group(128), Some(1 << 24));
+        let safe = gemm_overflow_safe(&qa, &pw);
+        // reference via dequant-int-scale float path
+        let mut qw = crate::quant::quantize_weight_sym(&wf, Bits::B4, Granularity::Group(128));
+        crate::quant::integer_scale::attach_integer_scales(&mut qw, Some(1 << 24));
+        let xdq = {
+            let mut xm = Mat::zeros(2, 512);
+            for r in 0..2 {
+                for c in 0..512 {
+                    xm.data[r * 512 + c] = qa.q[r * 512 + c] as f32 * qa.scales[r];
+                }
+            }
+            xm
+        };
+        let expect = xdq.matmul_t(&qw.dequant_int_scale());
+        let rel = safe.mse(&expect).sqrt() / (expect.frob() / (expect.data.len() as f64).sqrt());
+        assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn matches_float_scale_kernel_within_rounding() {
+        // The IS kernel must agree with the float-scale kernel up to the
+        // scale-rounding error of α=1024 — the "free lunch" at kernel level.
+        let mut rng = Rng::new(20);
+        let xf = Mat::randn(8, 256, 1.0, &mut rng);
+        let wf = Mat::randn(32, 256, 0.05, &mut rng);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let pw_f = pack_for_test(&wf, Bits::B4, Granularity::Group(64), None);
+        let pw_i = pack_for_test(&wf, Bits::B4, Granularity::Group(64), Some(1024));
+        let of = w4a8_fg_float::gemm(&qa, &pw_f);
+        let oi = gemm(&qa, &pw_i);
+        let rel = of.mse(&oi).sqrt() / (of.frob() / (of.data.len() as f64).sqrt());
+        assert!(rel < 0.04, "rel={rel}");
+    }
+
+    #[test]
+    fn exact_integer_arithmetic() {
+        // Bit-exact check of Eq. 2 against a scalar i64 evaluation.
+        let mut rng = Rng::new(21);
+        let xf = Mat::randn(3, 128, 1.0, &mut rng);
+        let wf = Mat::randn(8, 128, 0.05, &mut rng);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::Group(32), Some(1024));
+        let is = pw.int_scales.as_ref().unwrap();
+        let codes = crate::quant::pack::unpack_int4(&pw.packed);
+        let got = gemm(&qa, &pw);
+        let gpr = 4;
+        for i in 0..3 {
+            for jn in 0..8 {
+                let mut acc: i64 = 0;
+                for gi in 0..gpr {
+                    let mut part: i64 = 0;
+                    for j in gi * 32..(gi + 1) * 32 {
+                        part += qa.q[i * 128 + j] as i64 * codes[jn * 128 + j] as i64;
+                    }
+                    acc += part * is[jn * gpr + gi] as i64;
+                }
+                let expect = acc as f32 * (qa.scales[i] / 1024.0);
+                let gotv = got[(i, jn)];
+                assert!(
+                    (gotv - expect).abs() <= expect.abs() * 1e-5 + 1e-5,
+                    "({i},{jn}): {gotv} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heuristic_amplifier_also_correct() {
+        let mut rng = Rng::new(22);
+        let xf = Mat::randn(2, 128, 1.0, &mut rng);
+        let wf = Mat::randn(8, 128, 0.05, &mut rng);
+        let mut qw = crate::quant::quantize_weight_sym(&wf, Bits::B4, Granularity::Group(32));
+        let a = crate::quant::integer_scale::attach_integer_scales(&mut qw, None);
+        assert!((a as u64).is_power_of_two());
+        let ql = crate::quant::methods::QuantizedLinear {
+            qw,
+            act_smooth: None,
+            rotate: false,
+            bw: crate::quant::BitWidth::W4A8,
+        };
+        let pw = super::super::PackedWeight::from_quantized(&ql);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let got = gemm(&qa, &pw);
+        let refr = crate::gemm::reference(
+            &Mat::from_vec(
+                2,
+                128,
+                qa.q
+                    .iter()
+                    .enumerate()
+                    .map(|(idx, &v)| v as f32 * qa.scales[idx / 128])
+                    .collect(),
+            ),
+            &ql,
+            true,
+        );
+        let rel = got.mse(&refr).sqrt() / (refr.frob() / (refr.data.len() as f64).sqrt() + 1e-12);
+        assert!(rel < 1e-4, "rel={rel}");
+    }
+}

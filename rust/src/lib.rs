@@ -1,0 +1,29 @@
+//! # integer-scale
+//!
+//! A production-grade reproduction of *“Integer Scale: A Free Lunch for
+//! Faster Fine-grained Quantization of LLMs”* (Li et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — serving coordinator (router, continuous batcher,
+//!   scheduler, KV-cache manager), the quantization toolkit with every
+//!   baseline PTQ method, the CPU kernel zoo, evaluation harnesses, and the
+//!   PJRT runtime that executes AOT-compiled JAX artifacts.
+//! * **L2 (`python/compile/model.py`)** — the JAX transformer, lowered once
+//!   to HLO text at build time.
+//! * **L1 (`python/compile/kernels/`)** — Pallas GEMM kernels (float-scale
+//!   and Integer-Scale variants) checked against pure-jnp oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod eval;
+pub mod gemm;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tables;
+pub mod tensor;

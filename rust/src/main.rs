@@ -1,0 +1,297 @@
+//! `repro` — the leader binary: experiment harness + serving CLI.
+//!
+//! ```text
+//! repro tables                      # regenerate every accuracy table
+//! repro table1 … table8            # one table
+//! repro figs | fig1 fig3 fig4 …    # figures
+//! repro serve [--scheme w4a8-is] [--requests 32] [--max-batch 16]
+//!             [--prompt-len 16] [--new-tokens 32] [--moe]
+//! repro runtime-check              # load + execute the PJRT artifacts
+//! repro info                       # model / config / artifact inventory
+//! repro --eval-tokens 1536 tables  # steadier PPL estimates
+//! ```
+//!
+//! (CLI is hand-rolled: clap is not available in this offline environment.)
+
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::quant::{BitWidth, Granularity};
+use integer_scale::runtime::{try_load, PjrtRuntime};
+use integer_scale::tables::{self, Ctx};
+use integer_scale::tensor::Mat;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut cmd = String::new();
+    let mut flags = std::collections::HashMap::new();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            // boolean flags take no value; value flags consume the next arg
+            if name == "moe" {
+                flags.insert(name.to_string(), "true".to_string());
+            } else if i + 1 < argv.len() {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+            }
+        } else if cmd.is_empty() {
+            cmd = a.clone();
+        }
+        i += 1;
+    }
+    Args { cmd, flags }
+}
+
+impl Args {
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+    fn get_bool(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn scheme_spec(name: &str) -> Option<QuantSpec> {
+    match name {
+        "fp16" => None,
+        "w8a8" => Some(QuantSpec::new(Method::SmoothQuant, BitWidth::W8A8, Granularity::Group(128))),
+        "w4a16" => Some(QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128))),
+        "w4a8-coarse" => {
+            Some(QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel))
+        }
+        "w4a8-fs" => Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128))),
+        "w4a8-is" => Some(
+            QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+        ),
+        "w4a4" => Some(QuantSpec::new(Method::QuaRot, BitWidth::W4A4, Granularity::Group(128))),
+        other => {
+            eprintln!("unknown scheme '{other}', using w4a8-is");
+            Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024))
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    let moe = args.get_bool("moe");
+    let scheme = args.get_str("scheme", "w4a8-is");
+    let requests = args.get_usize("requests", 32);
+    let max_batch = args.get_usize("max-batch", 16);
+    let prompt_len = args.get_usize("prompt-len", 16);
+    let new_tokens = args.get_usize("new-tokens", 32);
+
+    let cfg = if moe { ModelConfig::moe_tiny() } else { ModelConfig::tiny() };
+    let wpath = if moe { "artifacts/weights_moe.bin" } else { "artifacts/weights.bin" };
+    let weights = ModelWeights::load_or_random(Path::new(wpath), cfg, 1234);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(192, Split::C4, 11);
+    let spec = scheme_spec(&scheme);
+    let model = match &spec {
+        None => Transformer::from_weights(&weights),
+        Some(s) => quantize_model(&weights, s, &calib),
+    };
+    println!(
+        "scheme={scheme} model={} params={} max_batch={max_batch}",
+        if moe { "moe" } else { "dense" },
+        cfg.param_count()
+    );
+    let mut engine = Engine::new(
+        Arc::new(model),
+        EngineConfig { max_batch, kv_token_budget: 128 * 256, seed: 3 },
+    );
+    let mut rng = integer_scale::tensor::Rng::new(77);
+    for i in 0..requests {
+        let doc = gen.document(prompt_len, Split::C4, &mut rng);
+        let mut req = Request::greedy(i as u64, doc, new_tokens);
+        req.stop_at_eos = false;
+        engine.submit(req);
+    }
+    let t0 = Instant::now();
+    let res = engine.run_to_completion();
+    let wall = t0.elapsed();
+    let gen_toks: usize = res.iter().map(|r| r.tokens.len()).sum();
+    let mean_ttft: f64 =
+        res.iter().map(|r| r.ttft.as_secs_f64()).sum::<f64>() / res.len() as f64;
+    let mean_tpot: f64 =
+        res.iter().map(|r| r.tpot().as_secs_f64()).sum::<f64>() / res.len() as f64;
+    println!("completed {} requests in {:.3}s", res.len(), wall.as_secs_f64());
+    println!(
+        "throughput {:.1} tok/s | mean TTFT {:.1} ms | mean TPOT {:.2} ms | mean batch {:.2}",
+        gen_toks as f64 / wall.as_secs_f64(),
+        mean_ttft * 1e3,
+        mean_tpot * 1e3,
+        engine.metrics.mean_batch()
+    );
+    println!("{}", engine.metrics.summary());
+}
+
+fn runtime_check() {
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT client failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let mut ok = true;
+    for stem in ["gemm_is_probe", "gemm_fs_probe", "model_fwd"] {
+        match try_load(&rt, stem) {
+            Some(art) => {
+                println!("loaded artifact '{}'", art.name);
+                if stem.starts_with("gemm") {
+                    // probe shape baked by aot.py: x 4×256
+                    let mut rng = integer_scale::tensor::Rng::new(1);
+                    let x = Mat::randn(4, 256, 1.0, &mut rng);
+                    match art.run_f32(&[&x]) {
+                        Ok(outs) => println!(
+                            "  executed: {} outputs, out[0] len={}",
+                            outs.len(),
+                            outs[0].len()
+                        ),
+                        Err(e) => {
+                            ok = false;
+                            eprintln!("  execute failed: {e}");
+                        }
+                    }
+                } else {
+                    let tokens: Vec<i32> = (0..16).map(|i| (i % 100) + 4).collect();
+                    match art.run_tokens(&tokens, (1, 16)) {
+                        Ok(outs) => println!("  executed: logits len={}", outs[0].len()),
+                        Err(e) => {
+                            ok = false;
+                            eprintln!("  execute failed: {e}");
+                        }
+                    }
+                }
+            }
+            None => println!("artifact '{stem}' not present (run `make artifacts`)"),
+        }
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+fn info() {
+    let cfg = ModelConfig::tiny();
+    println!("dense config: {cfg:?}  params={}", cfg.param_count());
+    let moe = ModelConfig::moe_tiny();
+    println!("moe   config: {moe:?}  params={}", moe.param_count());
+    for p in ["artifacts/weights.bin", "artifacts/weights_moe.bin", "artifacts/model_fwd.hlo.txt"] {
+        println!(
+            "{p}: {}",
+            if Path::new(p).exists() { "present" } else { "MISSING (make artifacts)" }
+        );
+    }
+}
+
+fn main() {
+    let args = parse_args();
+    let eval_tokens = args.get_usize("eval-tokens", 768);
+    let ctx = || Ctx::load(eval_tokens);
+    match args.cmd.as_str() {
+        "tables" => {
+            let c = ctx();
+            tables::table1(&c);
+            tables::table2();
+            tables::table3(&c);
+            tables::table4(&c);
+            tables::table5(&c);
+            tables::table6(&c);
+            tables::table7(&c);
+            tables::table8(&c);
+        }
+        "table1" => {
+            tables::table1(&ctx());
+        }
+        "table2" => {
+            tables::table2();
+        }
+        "table3" => {
+            tables::table3(&ctx());
+        }
+        "table4" => {
+            tables::table4(&ctx());
+        }
+        "table5" => {
+            tables::table5(&ctx());
+        }
+        "table6" => {
+            tables::table6(&ctx());
+        }
+        "table7" => {
+            tables::table7(&ctx());
+        }
+        "table8" => {
+            tables::table8(&ctx());
+        }
+        "figs" => {
+            let c = ctx();
+            tables::fig1(&c);
+            tables::fig3();
+            tables::fig4(&c);
+            tables::fig5a();
+            tables::fig5b(&c);
+            tables::fig67(4096, 22016);
+            tables::fig67(4096, 4096);
+            tables::fig8(&c);
+        }
+        "fig1" => {
+            tables::fig1(&ctx());
+        }
+        "fig3" => {
+            tables::fig3();
+        }
+        "fig4" => {
+            tables::fig4(&ctx());
+        }
+        "fig5a" => {
+            tables::fig5a();
+        }
+        "fig5b" => {
+            tables::fig5b(&ctx());
+        }
+        "fig6" => {
+            tables::fig67(4096, 22016);
+        }
+        "fig7" => {
+            tables::fig67(4096, 4096);
+        }
+        "fig8" => {
+            tables::fig8(&ctx());
+        }
+        "dump-corpus" => {
+            // hidden: cross-language golden data for python/tests/test_corpus.py
+            let n = args.get_usize("n", 64);
+            let seed = args.get_usize("seed", 1) as u64;
+            let gen = CorpusGen::new(512, 7);
+            let toks = gen.stream(n, Split::C4, seed);
+            println!("{}", toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","));
+        }
+        "serve" => serve(&args),
+        "runtime-check" => runtime_check(),
+        "info" => info(),
+        other => {
+            eprintln!(
+                "unknown command '{other}'\ncommands: tables table1..table8 figs fig1 fig3 fig4 fig5a fig5b fig6 fig7 fig8 serve runtime-check info"
+            );
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Per-sequence KV cache.
+//!
+//! Append-only key/value storage per layer, sized `max_seq × d_model` with
+//! rotary embedding already applied to keys. The coordinator owns one cache
+//! per live sequence and releases it on completion (the paper's serving
+//! substrate; block-paging is unnecessary at this scale but the manager in
+//! `coordinator::engine` enforces a capacity budget the same way vLLM does).
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// keys[layer]: seq_len × d_model (rope-applied)
+    pub keys: Vec<Mat>,
+    /// values[layer]: seq_len × d_model
+    pub values: Vec<Mat>,
+    pub seq_len: usize,
+    pub capacity: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, d_model: usize, capacity: usize) -> Self {
+        KvCache {
+            n_layers,
+            d_model,
+            keys: (0..n_layers).map(|_| Mat::zeros(capacity, d_model)).collect(),
+            values: (0..n_layers).map(|_| Mat::zeros(capacity, d_model)).collect(),
+            seq_len: 0,
+            capacity,
+        }
+    }
+
+    /// Append `t` new K/V rows for `layer`. All layers must be appended the
+    /// same number of rows before `advance` is called.
+    pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
+        let t = k_rows.rows;
+        assert_eq!(v_rows.rows, t);
+        assert!(self.seq_len + t <= self.capacity, "KV cache overflow");
+        let base = self.seq_len;
+        for r in 0..t {
+            self.keys[layer].row_mut(base + r).copy_from_slice(k_rows.row(r));
+            self.values[layer].row_mut(base + r).copy_from_slice(v_rows.row(r));
+        }
+    }
+
+    /// Commit `t` appended positions (after all layers appended).
+    pub fn advance(&mut self, t: usize) {
+        self.seq_len += t;
+        assert!(self.seq_len <= self.capacity);
+    }
+
+    /// Key rows visible at this point (seq_len + pending rows for a layer is
+    /// handled by the caller passing `upto`).
+    pub fn key_rows(&self, layer: usize, upto: usize) -> &[f32] {
+        &self.keys[layer].data[..upto * self.d_model]
+    }
+
+    pub fn value_rows(&self, layer: usize, upto: usize) -> &[f32] {
+        &self.values[layer].data[..upto * self.d_model]
+    }
+
+    /// Bytes held (for the coordinator's memory accounting).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.capacity * self.d_model * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn append_and_advance() {
+        let mut c = KvCache::new(2, 8, 16);
+        let mut rng = Rng::new(1);
+        let k = Mat::randn(3, 8, 1.0, &mut rng);
+        let v = Mat::randn(3, 8, 1.0, &mut rng);
+        c.append(0, &k, &v);
+        c.append(1, &k, &v);
+        c.advance(3);
+        assert_eq!(c.seq_len, 3);
+        assert_eq!(c.key_rows(0, 3).len(), 24);
+        assert_eq!(&c.key_rows(0, 3)[..8], k.row(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_detected() {
+        let mut c = KvCache::new(1, 4, 2);
+        let k = Mat::zeros(3, 4);
+        c.append(0, &k, &k);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = KvCache::new(4, 256, 128);
+        assert_eq!(c.bytes(), 2 * 4 * 128 * 256 * 4);
+    }
+}

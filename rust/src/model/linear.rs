@@ -1,0 +1,167 @@
+//! Quantizable linear layers.
+//!
+//! A [`Linear`] either runs the float GEMM (FP16 baseline) or a real integer
+//! kernel from [`crate::gemm`] over packed weights — the same code path the
+//! paper's serving engine uses, so per-layer latency and accuracy are both
+//! exercised by every forward pass.
+
+use crate::gemm::{self, Kernel, PackedWeight, QuantAct};
+use crate::quant::methods::QuantizedLinear;
+use crate::quant::Bits;
+use crate::tensor::{fwht_rows, Mat};
+
+/// How a quantized linear executes at inference time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPlan {
+    /// Kernel dispatch (the real serving path).
+    Kernel(Kernel),
+}
+
+#[derive(Clone, Debug)]
+pub enum Linear {
+    /// FP16 baseline (f32 stand-in), `n×k` row-major weights.
+    Float(Mat),
+    Quant {
+        pw: PackedWeight,
+        kernel: Kernel,
+        /// online activation transforms carried over from the PTQ method
+        act_smooth: Option<Vec<f32>>,
+        rotate: bool,
+        act_bits: Bits,
+    },
+}
+
+impl Linear {
+    pub fn from_quantized(ql: &QuantizedLinear, kernel: Kernel) -> Linear {
+        Linear::Quant {
+            pw: PackedWeight::from_quantized(ql),
+            kernel,
+            act_smooth: ql.act_smooth.clone(),
+            rotate: ql.rotate,
+            act_bits: ql.bw.act,
+        }
+    }
+
+    pub fn out_features(&self) -> usize {
+        match self {
+            Linear::Float(w) => w.rows,
+            Linear::Quant { pw, .. } => pw.n,
+        }
+    }
+
+    pub fn in_features(&self) -> usize {
+        match self {
+            Linear::Float(w) => w.cols,
+            Linear::Quant { pw, .. } => pw.k,
+        }
+    }
+
+    /// `x (M×k) → M×n`.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        match self {
+            Linear::Float(w) => gemm::fp32::gemm_f32(x, w),
+            Linear::Quant { pw, kernel, act_smooth, rotate, act_bits } => {
+                // online activation transforms (QuaRot FWHT / smoothing)
+                let xt = if *rotate || act_smooth.is_some() {
+                    let mut xt = x.clone();
+                    if *rotate {
+                        fwht_rows(&mut xt);
+                    }
+                    if let Some(s) = act_smooth {
+                        for r in 0..xt.rows {
+                            for (c, v) in xt.row_mut(r).iter_mut().enumerate() {
+                                *v /= s[c];
+                            }
+                        }
+                    }
+                    std::borrow::Cow::Owned(xt)
+                } else {
+                    std::borrow::Cow::Borrowed(x)
+                };
+                match kernel {
+                    Kernel::Fp16 => unreachable!("float path handled above"),
+                    Kernel::W4A16 => gemm::w4a16::gemm(&xt, pw),
+                    Kernel::W8A8 => {
+                        let qa = QuantAct::quantize(&xt, Bits::B8);
+                        gemm::w8a8::gemm(&qa, pw)
+                    }
+                    Kernel::W4A8Coarse => {
+                        let qa = QuantAct::quantize(&xt, Bits::B8);
+                        gemm::w4a8_coarse::gemm(&qa, pw)
+                    }
+                    Kernel::W4A8FgFloat => {
+                        let qa = QuantAct::quantize(&xt, Bits::B8);
+                        gemm::w4a8_fg_float::gemm(&qa, pw)
+                    }
+                    Kernel::W4A8FgInt => {
+                        let qa = QuantAct::quantize(&xt, Bits::B8);
+                        if pw.overflow_risk {
+                            // paper §B.4: degraded epilogue for flagged layers
+                            gemm::w4a8_fg_int::gemm_overflow_safe(&qa, pw)
+                        } else {
+                            gemm::w4a8_fg_int::gemm(&qa, pw)
+                        }
+                    }
+                    Kernel::W4A4 => {
+                        let qa = QuantAct::quantize(&xt, *act_bits);
+                        if pw.int_scales.is_some() {
+                            gemm::w4a4::gemm_int_scale(&qa, pw)
+                        } else {
+                            gemm::w4a4::gemm_float_scale(&qa, pw)
+                        }
+                    }
+                    Kernel::QServe { .. } => {
+                        unreachable!("QServe kernels run via DualGrainedWeight, not Linear")
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::{PtqMethod, Rtn};
+    use crate::quant::{BitWidth, Granularity};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn quant_linear_close_to_float() {
+        let mut rng = Rng::new(80);
+        let w = Mat::randn(64, 256, 0.05, &mut rng);
+        let x = Mat::randn(8, 256, 1.0, &mut rng);
+        let fl = Linear::Float(w.clone());
+        let ref_out = fl.forward(&x);
+
+        let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(64));
+        let (ql, _) = ql.with_integer_scale(Some(1024));
+        let qlin = Linear::from_quantized(&ql, Kernel::W4A8FgInt);
+        let out = qlin.forward(&x);
+        let rel = out.mse(&ref_out).sqrt() / (ref_out.frob() / (ref_out.data.len() as f64).sqrt());
+        assert!(rel < 0.12, "rel={rel}");
+    }
+
+    #[test]
+    fn int_and_float_scale_linears_agree() {
+        let mut rng = Rng::new(81);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let x = Mat::randn(4, 128, 1.0, &mut rng);
+        let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
+        let (qli, _) = ql.clone().with_integer_scale(Some(1024));
+        let a = Linear::from_quantized(&ql, Kernel::W4A8FgFloat).forward(&x);
+        let b = Linear::from_quantized(&qli, Kernel::W4A8FgInt).forward(&x);
+        let rel = a.mse(&b).sqrt() / (a.frob() / (a.data.len() as f64).sqrt());
+        assert!(rel < 0.04, "rel={rel}");
+    }
+
+    #[test]
+    fn w4a16_linear_runs() {
+        let mut rng = Rng::new(82);
+        let w = Mat::randn(16, 128, 0.05, &mut rng);
+        let x = Mat::randn(2, 128, 1.0, &mut rng);
+        let ql = Rtn.quantize(&w, &x, BitWidth::W4A16, Granularity::Group(32));
+        let out = Linear::from_quantized(&ql, Kernel::W4A16).forward(&x);
+        assert_eq!((out.rows, out.cols), (2, 16));
+    }
+}

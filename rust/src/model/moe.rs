@@ -1,0 +1,163 @@
+//! Mixtral-style sparse Mixture-of-Experts layer [18] (paper §5.5).
+//!
+//! Top-2 softmax routing over `n_experts` SwiGLU experts. The router stays
+//! in float (it is tiny and routing decisions are precision-sensitive); the
+//! experts' three linears are quantizable like any dense MLP — this is how
+//! the paper applies fine-grained W4A8 + Integer Scale to Mixtral 8x7B.
+
+use super::linear::Linear;
+use super::softmax;
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct MoeLayer {
+    /// Router: `n_experts × d_model`, always float.
+    pub router: Mat,
+    /// Per-expert (gate, up, down).
+    pub experts: Vec<(Linear, Linear, Linear)>,
+    pub top_k: usize,
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+impl MoeLayer {
+    /// Routed forward: each row goes through its top-k experts, outputs
+    /// combined with renormalized router weights.
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let ne = self.experts.len();
+        let logits = x.matmul_t(&self.router); // m × ne
+        let mut out = Mat::zeros(x.rows, self.experts[0].2.out_features());
+
+        // group rows by expert so each expert runs ONE batched GEMM —
+        // the same batching trick real MoE serving uses.
+        let mut assignments: Vec<Vec<(usize, f32)>> = vec![Vec::new(); ne];
+        for r in 0..x.rows {
+            let mut row = logits.row(r).to_vec();
+            softmax(&mut row);
+            // top-k indices
+            let mut idx: Vec<usize> = (0..ne).collect();
+            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            let top = &idx[..self.top_k];
+            let norm: f32 = top.iter().map(|&e| row[e]).sum();
+            for &e in top {
+                assignments[e].push((r, row[e] / norm));
+            }
+        }
+        for (e, rows) in assignments.iter().enumerate() {
+            if rows.is_empty() {
+                continue;
+            }
+            let mut xe = Mat::zeros(rows.len(), x.cols);
+            for (i, &(r, _)) in rows.iter().enumerate() {
+                xe.row_mut(i).copy_from_slice(x.row(r));
+            }
+            let (gate, up, down) = &self.experts[e];
+            let g = gate.forward(&xe);
+            let u = up.forward(&xe);
+            let mut h = Mat::zeros(g.rows, g.cols);
+            for i in 0..h.data.len() {
+                h.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            let o = down.forward(&h);
+            for (i, &(r, w)) in rows.iter().enumerate() {
+                for (ov, &nv) in out.row_mut(r).iter_mut().zip(o.row(i)) {
+                    *ov += w * nv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Tokens-per-expert histogram for a batch (load-balance diagnostics,
+    /// used by the MoE serving example).
+    pub fn routing_histogram(&self, x: &Mat) -> Vec<usize> {
+        let ne = self.experts.len();
+        let logits = x.matmul_t(&self.router);
+        let mut hist = vec![0usize; ne];
+        for r in 0..x.rows {
+            let mut row = logits.row(r).to_vec();
+            softmax(&mut row);
+            let mut idx: Vec<usize> = (0..ne).collect();
+            idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+            for &e in &idx[..self.top_k] {
+                hist[e] += 1;
+            }
+        }
+        hist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn tiny_moe(rng: &mut Rng) -> MoeLayer {
+        let d = 16;
+        let ff = 32;
+        MoeLayer {
+            router: Mat::randn(4, d, 0.5, rng),
+            experts: (0..4)
+                .map(|_| {
+                    (
+                        Linear::Float(Mat::randn(ff, d, 0.2, rng)),
+                        Linear::Float(Mat::randn(ff, d, 0.2, rng)),
+                        Linear::Float(Mat::randn(d, ff, 0.2, rng)),
+                    )
+                })
+                .collect(),
+            top_k: 2,
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let mut rng = Rng::new(1);
+        let moe = tiny_moe(&mut rng);
+        let x = Mat::randn(6, 16, 1.0, &mut rng);
+        let y = moe.forward(&x);
+        assert_eq!((y.rows, y.cols), (6, 16));
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn histogram_counts_topk() {
+        let mut rng = Rng::new(2);
+        let moe = tiny_moe(&mut rng);
+        let x = Mat::randn(10, 16, 1.0, &mut rng);
+        let hist = moe.routing_histogram(&x);
+        assert_eq!(hist.iter().sum::<usize>(), 10 * 2);
+    }
+
+    #[test]
+    fn single_expert_equals_dense() {
+        // with one expert and top_k=1 the MoE is exactly a SwiGLU MLP
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let ff = 32;
+        let gate = Mat::randn(ff, d, 0.2, &mut rng);
+        let up = Mat::randn(ff, d, 0.2, &mut rng);
+        let down = Mat::randn(d, ff, 0.2, &mut rng);
+        let moe = MoeLayer {
+            router: Mat::randn(1, d, 0.5, &mut rng),
+            experts: vec![(
+                Linear::Float(gate.clone()),
+                Linear::Float(up.clone()),
+                Linear::Float(down.clone()),
+            )],
+            top_k: 1,
+        };
+        let x = Mat::randn(5, d, 1.0, &mut rng);
+        let y = moe.forward(&x);
+        let g = x.matmul_t(&gate);
+        let u = x.matmul_t(&up);
+        let mut h = Mat::zeros(5, ff);
+        for i in 0..h.data.len() {
+            h.data[i] = silu(g.data[i]) * u.data[i];
+        }
+        let expect = h.matmul_t(&down);
+        assert!(y.max_abs_diff(&expect) < 1e-4);
+    }
+}

@@ -1,0 +1,405 @@
+//! Model-level quantization: calibrate, quantize every linear with a PTQ
+//! method, attach Integer Scale, and pick the matching kernel — the paper's
+//! full recipe pipeline (§5.1 setup, §5.6 LLaMA-3 recipe).
+
+use super::linear::Linear;
+use super::moe::MoeLayer;
+use super::transformer::{MlpOp, Transformer, TransformerLayer};
+use super::weights::ModelWeights;
+use super::{rms_norm, ModelConfig};
+use crate::gemm::Kernel;
+use crate::quant::methods::{
+    Awq, Fptq, Gptq, Odyssey, Omniquant, PtqMethod, QuaRot, Rtn, SmoothQuant,
+};
+use crate::quant::{BitWidth, Granularity};
+use crate::tensor::Mat;
+
+/// Which PTQ method to apply (paper method axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Rtn,
+    Gptq,
+    Awq,
+    SmoothQuant,
+    Omniquant,
+    QuaRot,
+    Fptq,
+    Odyssey,
+}
+
+impl Method {
+    pub fn build(self) -> Box<dyn PtqMethod> {
+        match self {
+            Method::Rtn => Box::new(Rtn),
+            Method::Gptq => Box::new(Gptq::default()),
+            Method::Awq => Box::new(Awq::default()),
+            Method::SmoothQuant => Box::new(SmoothQuant::default()),
+            Method::Omniquant => Box::new(Omniquant::default()),
+            Method::QuaRot => Box::new(QuaRot),
+            Method::Fptq => Box::new(Fptq::default()),
+            Method::Odyssey => Box::new(Odyssey::default()),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::Rtn => "RTN",
+            Method::Gptq => "GPTQ",
+            Method::Awq => "AWQ",
+            Method::SmoothQuant => "SmoothQuant",
+            Method::Omniquant => "Omniquant",
+            Method::QuaRot => "QuaRot",
+            Method::Fptq => "FPTQ",
+            Method::Odyssey => "Odyssey",
+        }
+    }
+
+    pub fn all() -> [Method; 8] {
+        [
+            Method::Rtn,
+            Method::Gptq,
+            Method::Awq,
+            Method::SmoothQuant,
+            Method::Omniquant,
+            Method::QuaRot,
+            Method::Fptq,
+            Method::Odyssey,
+        ]
+    }
+}
+
+/// Full quantization recipe for a model.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSpec {
+    pub method: Method,
+    pub bw: BitWidth,
+    pub gran: Granularity,
+    /// `Some(α)` attaches Integer Scale with fixed amplifier, `Some(0)` uses
+    /// the Listing-1 heuristic per tensor, `None` keeps float scales.
+    pub int_scale: Option<i64>,
+    /// LLaMA-3 recipe (§5.6): keep down-projections at fine-grained W8A8.
+    pub down_proj_w8a8: bool,
+    /// Paper §B.4: audit each layer's INT32 accumulator on the calibration
+    /// activations; layers using more than 25% of the i32 headroom fall back
+    /// to the overflow-safe degraded IS kernel.
+    pub overflow_guard: bool,
+}
+
+impl QuantSpec {
+    pub fn new(method: Method, bw: BitWidth, gran: Granularity) -> Self {
+        QuantSpec { method, bw, gran, int_scale: None, down_proj_w8a8: false, overflow_guard: false }
+    }
+
+    pub fn with_is(mut self, amplifier: i64) -> Self {
+        self.int_scale = Some(amplifier);
+        self
+    }
+
+    /// Kernel for this spec's main linears.
+    pub fn kernel(&self) -> Kernel {
+        match (self.bw, self.gran.is_fine_grained(), self.int_scale.is_some()) {
+            (BitWidth::W16A16, _, _) => Kernel::Fp16,
+            (BitWidth::W8A8, _, _) => Kernel::W8A8,
+            (BitWidth::W4A16, _, _) => Kernel::W4A16,
+            (BitWidth::W4A8, false, _) => Kernel::W4A8Coarse,
+            (BitWidth::W4A8, true, false) => Kernel::W4A8FgFloat,
+            (BitWidth::W4A8, true, true) => Kernel::W4A8FgInt,
+            (BitWidth::W4A4, _, _) => Kernel::W4A4,
+            _ => Kernel::W4A8FgFloat,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        let is = match self.int_scale {
+            Some(0) => " w/ IS(heur)".to_string(),
+            Some(a) => format!(" w/ IS({a})"),
+            None => String::new(),
+        };
+        format!("{} {} g={}{}", self.method.label(), self.bw.label(), self.gran.label(), is)
+    }
+}
+
+/// Calibration activations captured per layer from the float model.
+pub struct CalibSet {
+    /// Input to wq/wk/wv (post attn_norm), per layer.
+    pub attn_in: Vec<Mat>,
+    /// Input to wo (attention output), per layer.
+    pub wo_in: Vec<Mat>,
+    /// Input to gate/up (post mlp_norm), per layer.
+    pub mlp_in: Vec<Mat>,
+    /// Input to down (SwiGLU product), per layer.
+    pub down_in: Vec<Mat>,
+}
+
+/// Run the float model over calibration tokens recording every linear's
+/// input (the standard PTQ calibration pass).
+pub fn collect_calib(w: &ModelWeights, tokens: &[u32]) -> CalibSet {
+    let model = Transformer::from_weights(w);
+    let mut cache = model.new_cache();
+    let mut attn_in = Vec::new();
+    let mut wo_in = Vec::new();
+    let mut mlp_in = Vec::new();
+    let mut down_in = Vec::new();
+
+    // re-run prefill manually to capture intermediates
+    let mut x = {
+        let d = w.config.d_model;
+        let mut x = Mat::zeros(tokens.len(), d);
+        for (r, &t) in tokens.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(w.embed.row(t as usize));
+        }
+        x
+    };
+    for (li, layer) in model.layers.iter().enumerate() {
+        let h = rms_norm(&x, &layer.attn_norm);
+        attn_in.push(h.clone());
+        let mut q = layer.wq.forward(&h);
+        let mut k = layer.wk.forward(&h);
+        let v = layer.wv.forward(&h);
+        let att = model_attention(&model, li, &mut q, &mut k, &v, &mut cache);
+        wo_in.push(att.clone());
+        let att = layer.wo.forward(&att);
+        x.add_assign(&att);
+        let h = rms_norm(&x, &layer.mlp_norm);
+        mlp_in.push(h.clone());
+        // SwiGLU intermediate for down-proj calibration
+        if let MlpOp::Dense { gate, up, down: _ } = &layer.mlp {
+            let g = gate.forward(&h);
+            let u = up.forward(&h);
+            let mut z = Mat::zeros(g.rows, g.cols);
+            for i in 0..z.data.len() {
+                z.data[i] = (g.data[i] / (1.0 + (-g.data[i]).exp())) * u.data[i];
+            }
+            down_in.push(z);
+        } else if let MlpOp::Moe(moe) = &layer.mlp {
+            // use expert-0 activations as shared down-proj calibration
+            let (gate, up, _) = &moe.experts[0];
+            let g = gate.forward(&h);
+            let u = up.forward(&h);
+            let mut z = Mat::zeros(g.rows, g.cols);
+            for i in 0..z.data.len() {
+                z.data[i] = (g.data[i] / (1.0 + (-g.data[i]).exp())) * u.data[i];
+            }
+            down_in.push(z);
+        }
+        let m = model_mlp(&model, layer, &h);
+        x.add_assign(&m);
+    }
+    cache.advance(tokens.len());
+    CalibSet { attn_in, wo_in, mlp_in, down_in }
+}
+
+// Reuse Transformer internals (pub(crate) attention / mlp_forward).
+fn model_attention(
+    model: &Transformer,
+    li: usize,
+    q: &mut Mat,
+    k: &mut Mat,
+    v: &Mat,
+    cache: &mut super::kv_cache::KvCache,
+) -> Mat {
+    model.attention(li, q, k, v, cache)
+}
+
+fn model_mlp(model: &Transformer, layer: &TransformerLayer, h: &Mat) -> Mat {
+    model.mlp_forward(layer, h)
+}
+
+fn quantize_linear(
+    w: &Mat,
+    calib: &Mat,
+    spec: &QuantSpec,
+    is_down_proj: bool,
+) -> Linear {
+    let (bw, gran, kernel) = if is_down_proj && spec.down_proj_w8a8 {
+        // LLaMA-3 recipe: down-proj stays at fine-grained W8A8
+        (BitWidth::W8A8, Granularity::Group(spec.gran.group_size(w.cols).min(128)), Kernel::W8A8)
+    } else {
+        (spec.bw, spec.gran, spec.kernel())
+    };
+    if bw == BitWidth::W16A16 {
+        return Linear::Float(w.clone());
+    }
+    let method = spec.method.build();
+    let mut ql = method.quantize(w, calib, bw, gran);
+    if let Some(a) = spec.int_scale {
+        let amp = if a == 0 { None } else { Some(a) };
+        let (q, _) = ql.with_integer_scale(amp);
+        ql = q;
+    }
+    let mut lin = Linear::from_quantized(&ql, kernel);
+    if spec.overflow_guard && ql.qw.int_scales.is_some() {
+        // audit on (a sample of) the calibration activations — §B.4
+        let sample_rows = calib.rows.min(16);
+        let sample = crate::tensor::Mat::from_vec(
+            sample_rows,
+            calib.cols,
+            calib.data[..sample_rows * calib.cols].to_vec(),
+        );
+        let xt = ql.transform_act(&sample);
+        let (xq, _) = crate::quant::quantize_act_per_token(&xt, crate::quant::Bits::B8);
+        let audit = crate::quant::integer_scale::overflow_audit(&xq, &ql.qw);
+        if audit.utilization > 0.25 {
+            if let Linear::Quant { pw, .. } = &mut lin {
+                pw.overflow_risk = true;
+            }
+        }
+    }
+    lin
+}
+
+/// Quantize a whole model per `spec`, calibrating on `calib_tokens`.
+pub fn quantize_model(w: &ModelWeights, spec: &QuantSpec, calib_tokens: &[u32]) -> Transformer {
+    if spec.bw == BitWidth::W16A16 {
+        return Transformer::from_weights(w);
+    }
+    let calib = collect_calib(w, calib_tokens);
+    let layers = w
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| TransformerLayer {
+            attn_norm: l.attn_norm.clone(),
+            wq: quantize_linear(&l.wq, &calib.attn_in[li], spec, false),
+            wk: quantize_linear(&l.wk, &calib.attn_in[li], spec, false),
+            wv: quantize_linear(&l.wv, &calib.attn_in[li], spec, false),
+            wo: quantize_linear(&l.wo, &calib.wo_in[li], spec, false),
+            mlp_norm: l.mlp_norm.clone(),
+            mlp: match &l.router {
+                Some(r) => MlpOp::Moe(MoeLayer {
+                    router: r.clone(),
+                    experts: l
+                        .experts
+                        .iter()
+                        .map(|(g, u, d)| {
+                            (
+                                quantize_linear(g, &calib.mlp_in[li], spec, false),
+                                quantize_linear(u, &calib.mlp_in[li], spec, false),
+                                quantize_linear(d, &calib.down_in[li], spec, true),
+                            )
+                        })
+                        .collect(),
+                    top_k: 2,
+                }),
+                None => {
+                    let (g, u, d) = &l.experts[0];
+                    MlpOp::Dense {
+                        gate: quantize_linear(g, &calib.mlp_in[li], spec, false),
+                        up: quantize_linear(u, &calib.mlp_in[li], spec, false),
+                        down: quantize_linear(d, &calib.down_in[li], spec, true),
+                    }
+                }
+            },
+        })
+        .collect();
+    Transformer {
+        config: w.config,
+        embed: w.embed.clone(),
+        layers,
+        final_norm: w.final_norm.clone(),
+        // lm_head kept in float (standard practice; the paper quantizes
+        // only the transformer linears)
+        lm_head: Linear::Float(w.lm_head.clone()),
+    }
+}
+
+/// Shared tiny config for experiments that need a config by name.
+pub fn config_by_name(name: &str) -> ModelConfig {
+    match name {
+        "tiny" | "llama2-tiny" => ModelConfig::tiny(),
+        "moe" | "mixtral-tiny" => ModelConfig::moe_tiny(),
+        "medium" => ModelConfig::scaled(2),
+        "large" => ModelConfig::scaled(4),
+        _ => ModelConfig::tiny(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusGen, Split};
+
+    #[test]
+    fn quantized_model_runs_and_tracks_float() {
+        let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
+        let w = ModelWeights::random(cfg, 3);
+        let gen = CorpusGen::new(cfg.vocab as u32, 7);
+        let calib = gen.stream(64, Split::C4, 1);
+        let spec = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(64)).with_is(1024);
+        let qm = quantize_model(&w, &spec, &calib);
+        let fm = Transformer::from_weights(&w);
+        let toks = gen.stream(16, Split::C4, 2);
+        let mut c1 = fm.new_cache();
+        let mut c2 = qm.new_cache();
+        let lf = fm.prefill(&toks, &mut c1);
+        let lq = qm.prefill(&toks, &mut c2);
+        assert_eq!((lf.rows, lf.cols), (lq.rows, lq.cols));
+        // logits correlated: relative error bounded
+        let rel = lf.mse(&lq).sqrt() / (lf.frob() / (lf.data.len() as f64).sqrt());
+        assert!(rel < 0.5, "rel={rel}");
+    }
+
+    #[test]
+    fn down_proj_w8a8_recipe_applies() {
+        let cfg = ModelConfig { n_layers: 1, ..ModelConfig::tiny() };
+        let w = ModelWeights::random(cfg, 4);
+        let gen = CorpusGen::new(cfg.vocab as u32, 7);
+        let calib = gen.stream(48, Split::C4, 1);
+        let mut spec =
+            QuantSpec::new(Method::QuaRot, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
+        spec.down_proj_w8a8 = true;
+        let qm = quantize_model(&w, &spec, &calib);
+        if let MlpOp::Dense { down, .. } = &qm.layers[0].mlp {
+            if let Linear::Quant { pw, kernel, .. } = down {
+                assert_eq!(*kernel, Kernel::W8A8);
+                assert_eq!(pw.bits, crate::quant::Bits::B8);
+            } else {
+                panic!("down-proj should be quantized");
+            }
+        } else {
+            panic!("dense expected");
+        }
+    }
+
+    #[test]
+    fn overflow_guard_flags_risky_layers() {
+        use crate::model::linear::Linear;
+        let cfg = ModelConfig { n_layers: 1, ..ModelConfig::tiny() };
+        let mut w = ModelWeights::random(cfg, 5);
+        // blow up one layer's norms so its IS accumulator uses real headroom
+        w.inject_outliers(120.0);
+        let gen = crate::data::CorpusGen::new(cfg.vocab as u32, 7);
+        let calib = gen.stream(48, crate::data::Split::C4, 1);
+        let mut spec = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128))
+            .with_is(1 << 22); // huge amplifier to force utilization up
+        spec.overflow_guard = true;
+        let qm = quantize_model(&w, &spec, &calib);
+        let mut flagged = 0;
+        let mut total = 0;
+        for l in &qm.layers {
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo] {
+                if let Linear::Quant { pw, .. } = lin {
+                    total += 1;
+                    if pw.overflow_risk {
+                        flagged += 1;
+                    }
+                }
+            }
+        }
+        assert!(total > 0);
+        assert!(flagged > 0, "guard should flag at least one risky layer");
+        // the model still runs (degraded kernel path)
+        let mut c = qm.new_cache();
+        let logits = qm.prefill(&[5, 6, 7], &mut c);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn spec_kernel_mapping() {
+        let s = QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128));
+        assert_eq!(s.kernel(), Kernel::W4A8FgFloat);
+        assert_eq!(s.with_is(1024).kernel(), Kernel::W4A8FgInt);
+        let c = QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel);
+        assert_eq!(c.kernel(), Kernel::W4A8Coarse);
+    }
+}

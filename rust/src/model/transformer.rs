@@ -1,0 +1,309 @@
+//! The decoder-only transformer: prefill + batched decode with KV caches.
+//!
+//! One code path serves float and quantized models — every projection is a
+//! [`Linear`] that dispatches to the right kernel. Batched decode stacks one
+//! token per live sequence into a single `b × d` activation so the linears
+//! run one GEMM per layer (continuous batching's source of throughput).
+
+use super::kv_cache::KvCache;
+use super::linear::Linear;
+use super::moe::MoeLayer;
+use super::weights::ModelWeights;
+use super::{rms_norm, rope_row, softmax, ModelConfig};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub enum MlpOp {
+    Dense { gate: Linear, up: Linear, down: Linear },
+    Moe(MoeLayer),
+}
+
+#[derive(Clone, Debug)]
+pub struct TransformerLayer {
+    pub attn_norm: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub mlp_norm: Vec<f32>,
+    pub mlp: MlpOp,
+}
+
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub config: ModelConfig,
+    pub embed: Mat,
+    pub layers: Vec<TransformerLayer>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Linear,
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+impl Transformer {
+    /// Float (FP16-baseline) model from weights.
+    pub fn from_weights(w: &ModelWeights) -> Self {
+        let layers = w
+            .layers
+            .iter()
+            .map(|l| TransformerLayer {
+                attn_norm: l.attn_norm.clone(),
+                wq: Linear::Float(l.wq.clone()),
+                wk: Linear::Float(l.wk.clone()),
+                wv: Linear::Float(l.wv.clone()),
+                wo: Linear::Float(l.wo.clone()),
+                mlp_norm: l.mlp_norm.clone(),
+                mlp: match &l.router {
+                    Some(r) => MlpOp::Moe(MoeLayer {
+                        router: r.clone(),
+                        experts: l
+                            .experts
+                            .iter()
+                            .map(|(g, u, d)| {
+                                (
+                                    Linear::Float(g.clone()),
+                                    Linear::Float(u.clone()),
+                                    Linear::Float(d.clone()),
+                                )
+                            })
+                            .collect(),
+                        top_k: 2,
+                    }),
+                    None => {
+                        let (g, u, d) = &l.experts[0];
+                        MlpOp::Dense {
+                            gate: Linear::Float(g.clone()),
+                            up: Linear::Float(u.clone()),
+                            down: Linear::Float(d.clone()),
+                        }
+                    }
+                },
+            })
+            .collect();
+        Transformer {
+            config: w.config,
+            embed: w.embed.clone(),
+            layers,
+            final_norm: w.final_norm.clone(),
+            lm_head: Linear::Float(w.lm_head.clone()),
+        }
+    }
+
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.config.n_layers, self.config.d_model, self.config.max_seq)
+    }
+
+    fn embed_tokens(&self, tokens: &[u32]) -> Mat {
+        let d = self.config.d_model;
+        let mut x = Mat::zeros(tokens.len(), d);
+        for (r, &t) in tokens.iter().enumerate() {
+            x.row_mut(r).copy_from_slice(self.embed.row(t as usize));
+        }
+        x
+    }
+
+    pub(crate) fn mlp_forward(&self, layer: &TransformerLayer, h: &Mat) -> Mat {
+        match &layer.mlp {
+            MlpOp::Dense { gate, up, down } => {
+                let g = gate.forward(h);
+                let u = up.forward(h);
+                let mut z = Mat::zeros(g.rows, g.cols);
+                for i in 0..z.data.len() {
+                    z.data[i] = silu(g.data[i]) * u.data[i];
+                }
+                down.forward(&z)
+            }
+            MlpOp::Moe(moe) => moe.forward(h),
+        }
+    }
+
+    /// Causal self-attention for `t` new tokens of ONE sequence whose cache
+    /// already holds `past` positions. `q/k/v` are `t × d` (k/v pre-rope).
+    /// Appends to the cache and returns the attention output (t × d).
+    pub(crate) fn attention(
+        &self,
+        layer_idx: usize,
+        q: &mut Mat,
+        k: &mut Mat,
+        v: &Mat,
+        cache: &mut KvCache,
+    ) -> Mat {
+        let nh = self.config.n_heads;
+        let hd = self.config.head_dim();
+        let d = self.config.d_model;
+        let t = q.rows;
+        let past = cache.seq_len;
+        // rope
+        for r in 0..t {
+            rope_row(q.row_mut(r), nh, past + r);
+            rope_row(k.row_mut(r), nh, past + r);
+        }
+        cache.append(layer_idx, k, v);
+        let total = past + t;
+        let keys = &cache.keys[layer_idx];
+        let values = &cache.values[layer_idx];
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Mat::zeros(t, d);
+        let mut scores = vec![0f32; total];
+        for r in 0..t {
+            let visible = past + r + 1; // causal
+            let qrow = q.row(r);
+            for h in 0..nh {
+                let qh = &qrow[h * hd..(h + 1) * hd];
+                for (s, score) in scores[..visible].iter_mut().enumerate() {
+                    let krow = &keys.data[s * d + h * hd..s * d + (h + 1) * hd];
+                    let mut dot = 0f32;
+                    for (a, b) in qh.iter().zip(krow.iter()) {
+                        dot += a * b;
+                    }
+                    *score = dot * scale;
+                }
+                softmax(&mut scores[..visible]);
+                let orow = &mut out.data[r * d + h * hd..r * d + (h + 1) * hd];
+                for (s, &w) in scores[..visible].iter().enumerate() {
+                    let vrow = &values.data[s * d + h * hd..s * d + (h + 1) * hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Prefill `tokens` for one sequence; returns logits for every position
+    /// (`t × vocab`). The cache must be empty or a continuation.
+    pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Mat {
+        let mut x = self.embed_tokens(tokens);
+        let t = tokens.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let h = rms_norm(&x, &layer.attn_norm);
+            let mut q = layer.wq.forward(&h);
+            let mut k = layer.wk.forward(&h);
+            let v = layer.wv.forward(&h);
+            let att = self.attention(li, &mut q, &mut k, &v, cache);
+            let att = layer.wo.forward(&att);
+            x.add_assign(&att);
+            let h = rms_norm(&x, &layer.mlp_norm);
+            let m = self.mlp_forward(layer, &h);
+            x.add_assign(&m);
+        }
+        cache.advance(t);
+        let h = rms_norm(&x, &self.final_norm);
+        self.lm_head.forward(&h)
+    }
+
+    /// Decode one token for each of `b` sequences in a single batched pass.
+    /// `tokens[i]` is the newest token of sequence `i`; `caches[i]` its KV
+    /// cache. Returns `b × vocab` logits.
+    pub fn decode_batch(&self, tokens: &[u32], caches: &mut [&mut KvCache]) -> Mat {
+        assert_eq!(tokens.len(), caches.len());
+        let b = tokens.len();
+        let d = self.config.d_model;
+        let mut x = self.embed_tokens(tokens);
+        for (li, layer) in self.layers.iter().enumerate() {
+            let h = rms_norm(&x, &layer.attn_norm);
+            // ONE batched GEMM per projection across all sequences
+            let q_all = layer.wq.forward(&h);
+            let k_all = layer.wk.forward(&h);
+            let v_all = layer.wv.forward(&h);
+            let mut att_all = Mat::zeros(b, d);
+            for i in 0..b {
+                let mut q = Mat::from_vec(1, d, q_all.row(i).to_vec());
+                let mut k = Mat::from_vec(1, d, k_all.row(i).to_vec());
+                let v = Mat::from_vec(1, d, v_all.row(i).to_vec());
+                let o = self.attention(li, &mut q, &mut k, &v, caches[i]);
+                att_all.row_mut(i).copy_from_slice(o.row(0));
+            }
+            let att = layer.wo.forward(&att_all);
+            x.add_assign(&att);
+            let h = rms_norm(&x, &layer.mlp_norm);
+            let m = self.mlp_forward(layer, &h);
+            x.add_assign(&m);
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        let h = rms_norm(&x, &self.final_norm);
+        self.lm_head.forward(&h)
+    }
+
+    /// Log-softmax probability of `target` under `logits_row`.
+    pub fn log_prob(logits_row: &[f32], target: u32) -> f64 {
+        let max = logits_row.iter().fold(f32::MIN, |m, &v| m.max(v));
+        let lse: f64 = logits_row.iter().map(|&v| ((v - max) as f64).exp()).sum::<f64>().ln()
+            + max as f64;
+        logits_row[target as usize] as f64 - lse
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Transformer {
+        let cfg = ModelConfig { n_layers: 2, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        Transformer::from_weights(&ModelWeights::random(cfg, 11))
+    }
+
+    use super::super::weights::ModelWeights;
+
+    #[test]
+    fn prefill_then_decode_matches_full_prefill() {
+        // decoding token-by-token must produce the same final logits as one
+        // prefill over the whole sequence — the KV cache invariant.
+        let m = tiny();
+        let toks = [1u32, 5, 9, 13, 2];
+        let mut c1 = m.new_cache();
+        let full = m.prefill(&toks, &mut c1);
+        let last_full = full.row(toks.len() - 1).to_vec();
+
+        let mut c2 = m.new_cache();
+        let _ = m.prefill(&toks[..2], &mut c2);
+        let mut logits = Mat::zeros(1, 64);
+        for &t in &toks[2..] {
+            let mut refs = [&mut c2];
+            logits = m.decode_batch(&[t], &mut refs);
+        }
+        for (a, b) in last_full.iter().zip(logits.row(0)) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_individual() {
+        let m = tiny();
+        // two sequences with different prefixes
+        let s1 = [1u32, 2, 3];
+        let s2 = [7u32, 8];
+        let mut ca = m.new_cache();
+        let mut cb = m.new_cache();
+        m.prefill(&s1, &mut ca);
+        m.prefill(&s2, &mut cb);
+        // batched step
+        let mut ca2 = ca.clone();
+        let mut cb2 = cb.clone();
+        let mut refs = [&mut ca2, &mut cb2];
+        let batched = m.decode_batch(&[4, 9], &mut refs);
+        // individual steps
+        let mut r1 = [&mut ca];
+        let ind1 = m.decode_batch(&[4], &mut r1);
+        let mut r2 = [&mut cb];
+        let ind2 = m.decode_batch(&[9], &mut r2);
+        for (a, b) in batched.row(0).iter().zip(ind1.row(0)) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in batched.row(1).iter().zip(ind2.row(0)) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn log_prob_normalized() {
+        let logits = vec![0.5f32, 1.5, -0.3, 2.0];
+        let total: f64 = (0..4).map(|t| Transformer::log_prob(&logits, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+}

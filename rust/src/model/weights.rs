@@ -1,0 +1,252 @@
+//! Model weights: container, random init, and the binary interchange format
+//! shared with the JAX trainer (`python/compile/train.py` writes
+//! `artifacts/weights.bin`; we read it here so the Rust engine serves the
+//! *trained* model, not random weights).
+//!
+//! Format (little-endian): magic `ISWB`, u32 version, u32 n_tensors, then
+//! per tensor: u32 name_len, name utf-8, u32 rows, u32 cols, rows·cols f32.
+
+use super::ModelConfig;
+use crate::tensor::{Mat, Rng};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Per-layer weights. Row-major `out × in` (each row an output channel),
+/// matching `Mat::matmul_t` / the packed kernels.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub wq: Mat,
+    pub wk: Mat,
+    pub wv: Mat,
+    pub wo: Mat,
+    pub mlp_norm: Vec<f32>,
+    /// Per expert: (w_gate, w_up, w_down). Dense models have one expert.
+    pub experts: Vec<(Mat, Mat, Mat)>,
+    /// MoE router `n_experts × d_model` (empty for dense).
+    pub router: Option<Mat>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub config: ModelConfig,
+    pub embed: Mat, // vocab × d_model
+    pub layers: Vec<LayerWeights>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Mat, // vocab × d_model
+}
+
+impl ModelWeights {
+    /// Seeded random init (used in tests and before training).
+    pub fn random(config: ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let d = config.d_model;
+        let std = 0.7 / (d as f32).sqrt();
+        let n_exp = config.n_experts.unwrap_or(1);
+        let layers = (0..config.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: vec![1.0; d],
+                wq: Mat::randn(d, d, std, &mut rng),
+                wk: Mat::randn(d, d, std, &mut rng),
+                wv: Mat::randn(d, d, std, &mut rng),
+                wo: Mat::randn(d, d, std, &mut rng),
+                mlp_norm: vec![1.0; d],
+                experts: (0..n_exp)
+                    .map(|_| {
+                        (
+                            Mat::randn(config.d_ff, d, std, &mut rng),
+                            Mat::randn(config.d_ff, d, std, &mut rng),
+                            Mat::randn(d, config.d_ff, std, &mut rng),
+                        )
+                    })
+                    .collect(),
+                router: config
+                    .n_experts
+                    .map(|ne| Mat::randn(ne, d, std, &mut rng)),
+            })
+            .collect();
+        ModelWeights {
+            config,
+            embed: Mat::randn(config.vocab, d, 0.02, &mut rng),
+            layers,
+            final_norm: vec![1.0; d],
+            lm_head: Mat::randn(config.vocab, d, std, &mut rng),
+        }
+    }
+
+    /// Inject per-channel outliers into activations by scaling a few embed /
+    /// norm channels — emulates the LLaMA-3 "hard to quantize" pathology
+    /// (paper §5.6, [17]) on top of trained weights.
+    pub fn inject_outliers(&mut self, factor: f32) {
+        let d = self.config.d_model;
+        for c in [1usize, d / 3, d / 2, 2 * d / 3] {
+            for l in &mut self.layers {
+                l.attn_norm[c] *= factor;
+                l.mlp_norm[c] *= factor;
+            }
+        }
+    }
+
+    fn tensor_map(&self) -> BTreeMap<String, &Mat> {
+        let mut m = BTreeMap::new();
+        m.insert("embed".to_string(), &self.embed);
+        m.insert("lm_head".to_string(), &self.lm_head);
+        for (i, l) in self.layers.iter().enumerate() {
+            m.insert(format!("layers.{i}.wq"), &l.wq);
+            m.insert(format!("layers.{i}.wk"), &l.wk);
+            m.insert(format!("layers.{i}.wv"), &l.wv);
+            m.insert(format!("layers.{i}.wo"), &l.wo);
+            for (e, (g, u, dn)) in l.experts.iter().enumerate() {
+                m.insert(format!("layers.{i}.experts.{e}.gate"), g);
+                m.insert(format!("layers.{i}.experts.{e}.up"), u);
+                m.insert(format!("layers.{i}.experts.{e}.down"), dn);
+            }
+            if let Some(r) = &l.router {
+                m.insert(format!("layers.{i}.router"), r);
+            }
+        }
+        m
+    }
+
+    /// Serialize to the ISWB format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        // norms stored as 1×d tensors
+        let mut named: Vec<(String, Vec<f32>, u32, u32)> = Vec::new();
+        for (name, mat) in self.tensor_map() {
+            named.push((name, mat.data.clone(), mat.rows as u32, mat.cols as u32));
+        }
+        named.push(("final_norm".into(), self.final_norm.clone(), 1, self.final_norm.len() as u32));
+        for (i, l) in self.layers.iter().enumerate() {
+            named.push((format!("layers.{i}.attn_norm"), l.attn_norm.clone(), 1, l.attn_norm.len() as u32));
+            named.push((format!("layers.{i}.mlp_norm"), l.mlp_norm.clone(), 1, l.mlp_norm.len() as u32));
+        }
+        f.write_all(b"ISWB")?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(named.len() as u32).to_le_bytes())?;
+        for (name, data, rows, cols) in named {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&rows.to_le_bytes())?;
+            f.write_all(&cols.to_le_bytes())?;
+            for v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from the ISWB format, validating against `config`.
+    pub fn load(path: &Path, config: ModelConfig) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"ISWB" {
+            bail!("bad magic in {path:?}");
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?; // version
+        f.read_exact(&mut u32buf)?;
+        let n_tensors = u32::from_le_bytes(u32buf) as usize;
+        let mut tensors: BTreeMap<String, Mat> = BTreeMap::new();
+        for _ in 0..n_tensors {
+            f.read_exact(&mut u32buf)?;
+            let name_len = u32::from_le_bytes(u32buf) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            f.read_exact(&mut u32buf)?;
+            let rows = u32::from_le_bytes(u32buf) as usize;
+            f.read_exact(&mut u32buf)?;
+            let cols = u32::from_le_bytes(u32buf) as usize;
+            let mut data = vec![0f32; rows * cols];
+            let mut fbuf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut fbuf)?;
+                *v = f32::from_le_bytes(fbuf);
+            }
+            tensors.insert(name, Mat::from_vec(rows, cols, data));
+        }
+        let take = |tensors: &mut BTreeMap<String, Mat>, name: &str| -> Result<Mat> {
+            tensors.remove(name).ok_or_else(|| anyhow!("missing tensor {name}"))
+        };
+        let mut mw = ModelWeights::random(config, 0);
+        mw.embed = take(&mut tensors, "embed")?;
+        mw.lm_head = take(&mut tensors, "lm_head")?;
+        mw.final_norm = take(&mut tensors, "final_norm")?.data;
+        for i in 0..config.n_layers {
+            let l = &mut mw.layers[i];
+            l.wq = take(&mut tensors, &format!("layers.{i}.wq"))?;
+            l.wk = take(&mut tensors, &format!("layers.{i}.wk"))?;
+            l.wv = take(&mut tensors, &format!("layers.{i}.wv"))?;
+            l.wo = take(&mut tensors, &format!("layers.{i}.wo"))?;
+            l.attn_norm = take(&mut tensors, &format!("layers.{i}.attn_norm"))?.data;
+            l.mlp_norm = take(&mut tensors, &format!("layers.{i}.mlp_norm"))?.data;
+            let n_exp = config.n_experts.unwrap_or(1);
+            for e in 0..n_exp {
+                l.experts[e] = (
+                    take(&mut tensors, &format!("layers.{i}.experts.{e}.gate"))?,
+                    take(&mut tensors, &format!("layers.{i}.experts.{e}.up"))?,
+                    take(&mut tensors, &format!("layers.{i}.experts.{e}.down"))?,
+                );
+            }
+            if config.n_experts.is_some() {
+                l.router = Some(take(&mut tensors, &format!("layers.{i}.router"))?);
+            }
+        }
+        Ok(mw)
+    }
+
+    /// Load trained weights if present, else seeded random (so everything
+    /// works before `make artifacts`).
+    pub fn load_or_random(path: &Path, config: ModelConfig, seed: u64) -> Self {
+        match Self::load(path, config) {
+            Ok(w) => w,
+            Err(_) => Self::random(config, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
+        let w = ModelWeights::random(cfg, 42);
+        let dir = std::env::temp_dir().join("iswb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        w.save(&path).unwrap();
+        let w2 = ModelWeights::load(&path, cfg).unwrap();
+        assert_eq!(w.embed, w2.embed);
+        assert_eq!(w.layers[1].wo, w2.layers[1].wo);
+        assert_eq!(w.final_norm, w2.final_norm);
+    }
+
+    #[test]
+    fn moe_roundtrip() {
+        let cfg = ModelConfig { n_layers: 1, ..ModelConfig::moe_tiny() };
+        let w = ModelWeights::random(cfg, 7);
+        let dir = std::env::temp_dir().join("iswb_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("moe.bin");
+        w.save(&path).unwrap();
+        let w2 = ModelWeights::load(&path, cfg).unwrap();
+        assert_eq!(w.layers[0].experts.len(), 8);
+        assert_eq!(w.layers[0].experts[3].1, w2.layers[0].experts[3].1);
+        assert_eq!(w.layers[0].router, w2.layers[0].router);
+    }
+
+    #[test]
+    fn load_or_random_falls_back() {
+        let cfg = ModelConfig::tiny();
+        let w = ModelWeights::load_or_random(Path::new("/nonexistent/x.bin"), cfg, 5);
+        assert_eq!(w.embed.rows, cfg.vocab);
+    }
+}

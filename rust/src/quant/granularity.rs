@@ -1,0 +1,63 @@
+//! Quantization granularity (paper §A.2): per-tensor, per-channel/token,
+//! and group-wise (fine-grained). In the paper's tables `Group = -1` means
+//! coarse per-channel and `Group = 128` means fine-grained groups of 128.
+
+/// Weight quantization granularity along the input (k) dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole tensor.
+    PerTensor,
+    /// One scale per output channel (row) — the paper's "coarse", group = −1.
+    PerChannel,
+    /// One scale per contiguous group of `g` inputs within each channel —
+    /// the paper's fine-grained scheme (typically g = 128).
+    Group(usize),
+}
+
+impl Granularity {
+    /// Effective group size along k.
+    pub fn group_size(self, k: usize) -> usize {
+        match self {
+            Granularity::PerTensor | Granularity::PerChannel => k,
+            Granularity::Group(g) => g.min(k),
+        }
+    }
+
+    pub fn groups_per_row(self, k: usize) -> usize {
+        k / self.group_size(k)
+    }
+
+    /// The paper's table notation: −1 for coarse, g for fine.
+    pub fn label(self) -> String {
+        match self {
+            Granularity::PerTensor => "tensor".into(),
+            Granularity::PerChannel => "-1".into(),
+            Granularity::Group(g) => g.to_string(),
+        }
+    }
+
+    pub fn is_fine_grained(self) -> bool {
+        matches!(self, Granularity::Group(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_math() {
+        assert_eq!(Granularity::PerChannel.group_size(256), 256);
+        assert_eq!(Granularity::PerChannel.groups_per_row(256), 1);
+        assert_eq!(Granularity::Group(128).group_size(256), 128);
+        assert_eq!(Granularity::Group(128).groups_per_row(256), 2);
+        // group larger than k clamps
+        assert_eq!(Granularity::Group(128).group_size(64), 64);
+    }
+
+    #[test]
+    fn labels_match_paper_notation() {
+        assert_eq!(Granularity::PerChannel.label(), "-1");
+        assert_eq!(Granularity::Group(128).label(), "128");
+    }
+}

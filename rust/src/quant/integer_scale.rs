@@ -1,0 +1,267 @@
+//! **Integer Scale with adaptive scale amplifier** — the paper's
+//! contribution (§4.1, Eq. 2, Listing 1).
+//!
+//! Group scales of fine-grained quantization are floats in (0, 1); using them
+//! directly forces an I32→F32 conversion per group partial (Fig. 2b). Integer
+//! Scale multiplies every scale by a power-of-two amplifier `α`, rounds to
+//! integer, and keeps the whole group accumulation in integer arithmetic:
+//!
+//! ```text
+//! O_i = s_a · FLOAT( Σ_g (X_g × W_gᵀ) · INT(s_g · α) ) / α
+//! ```
+//!
+//! This module implements the amplifier heuristic (Listing 1), the scale
+//! conversion, the Fig. 4 scale analyses, and the Fig. 8 overflow audit.
+
+use super::QuantizedWeight;
+
+/// The default amplifier the paper selects (α = 2¹⁰ = 1024, §4.1/Table 7).
+pub const DEFAULT_AMPLIFIER: i64 = 1024;
+
+/// Integer scales for one quantized weight tensor.
+#[derive(Clone, Debug)]
+pub struct IntScales {
+    /// `round(s_g · α)` per group, same layout as `QuantizedWeight::scales`.
+    pub scales: Vec<i32>,
+    /// The power-of-two amplifier α.
+    pub amplifier: i64,
+}
+
+/// Listing 1 — quick heuristic search for the integer scale amplifier:
+/// double from 2⁰ until the **minimum** scale amplifies past 1, then return
+/// the last power of two (`2^(n-1)`).
+pub fn heuristic_amplifier(scales: &[f32]) -> i64 {
+    let scale_min = scales
+        .iter()
+        .copied()
+        .filter(|s| *s > 0.0)
+        .fold(f32::INFINITY, f32::min);
+    if !scale_min.is_finite() {
+        return DEFAULT_AMPLIFIER;
+    }
+    // Faithful transcription of Listing 1:
+    //   n, tmp = 0, scale_min
+    //   while tmp < 1: tmp = scale_min * 2**n; n += 1
+    //   scale_amplifier = 2**(n-1)
+    let mut n: i64 = 0;
+    let mut tmp = scale_min;
+    while tmp < 1.0 {
+        tmp = scale_min * (2f32).powi(n as i32);
+        n += 1;
+        if n > 62 {
+            break; // degenerate: scale underflow; cap at 2^61
+        }
+    }
+    1i64 << (n - 1).max(0)
+}
+
+/// Number of bit shifts (`log2 α`) Listing 1 requires for one scale — the
+/// Fig. 4(b) statistic.
+pub fn bit_shifts_required(scale: f32) -> u32 {
+    heuristic_amplifier(&[scale]).trailing_zeros()
+}
+
+/// Convert float scales to integer scales with the given amplifier
+/// (`INT(s_g · α)`, rounded to nearest). Scales that round to 0 are clamped
+/// to 1 so the group is never silently erased.
+pub fn to_int_scales(scales: &[f32], amplifier: i64) -> IntScales {
+    let s = scales
+        .iter()
+        .map(|&f| {
+            let v = (f as f64 * amplifier as f64).round() as i64;
+            v.clamp(1, i32::MAX as i64) as i32
+        })
+        .collect();
+    IntScales { scales: s, amplifier }
+}
+
+/// Attach integer scales to a quantized weight (plug-and-play step).
+/// `amplifier = None` runs the Listing-1 heuristic over this tensor's scales.
+pub fn attach_integer_scales(qw: &mut QuantizedWeight, amplifier: Option<i64>) -> i64 {
+    let a = amplifier.unwrap_or_else(|| heuristic_amplifier(&qw.scales.data));
+    qw.int_scales = Some(to_int_scales(&qw.scales.data, a));
+    a
+}
+
+/// Weight MSE introduced by the integer-scale rounding relative to the float
+/// scales — the Fig. 4(c) curve. For the paper's models at α = 2¹⁰ this is
+/// O(1e-7..1e-6); ours is checked in tests and printed by `repro fig4`.
+pub fn scale_rounding_mse(qw: &QuantizedWeight) -> f64 {
+    qw.dequant().mse(&qw.dequant_int_scale())
+}
+
+/// Histogram of amplified scales mapped to 16-bit integers (Fig. 4a):
+/// returns the number of scales representable in ≤ 8 bits, ≤ 12 bits and
+/// ≤ 16 bits plus the max amplified value.
+#[derive(Clone, Debug, Default)]
+pub struct AmplifiedScaleStats {
+    pub total: usize,
+    pub le_8bit: usize,
+    pub le_12bit: usize,
+    pub le_16bit: usize,
+    pub max_value: i32,
+}
+
+pub fn amplified_scale_stats(scales: &[f32], amplifier: i64) -> AmplifiedScaleStats {
+    let is = to_int_scales(scales, amplifier);
+    let mut st = AmplifiedScaleStats { total: is.scales.len(), ..Default::default() };
+    for &v in &is.scales {
+        if v <= 0xFF {
+            st.le_8bit += 1;
+        }
+        if v <= 0xFFF {
+            st.le_12bit += 1;
+        }
+        if v <= 0xFFFF {
+            st.le_16bit += 1;
+        }
+        st.max_value = st.max_value.max(v);
+    }
+    st
+}
+
+/// Fig. 8 / §B.4 — overflow audit for one layer. The integer accumulator of
+/// the IS kernel holds `Σ_g (X_g·W_g) · INT(s_g·α)`; this bounds its max
+/// absolute value and compares against the INT32 limit.
+#[derive(Clone, Debug)]
+pub struct OverflowReport {
+    /// Worst-case |accumulator| given the observed activation magnitudes.
+    pub max_abs_acc: i64,
+    /// i32::MAX.
+    pub bound: i64,
+    pub overflows: bool,
+    /// Fraction of headroom used (max_abs_acc / bound).
+    pub utilization: f64,
+}
+
+/// Audit the IS accumulator for activations `x_q` (per-token int8 codes with
+/// scales `x_scales`) against weight `qw`. Exact, not a bound: runs the
+/// integer arithmetic in i64 and reports the true max partial sum.
+pub fn overflow_audit(
+    x_q: &crate::tensor::MatI8,
+    qw: &QuantizedWeight,
+) -> OverflowReport {
+    let is = qw.int_scales.as_ref().expect("int scales required for audit");
+    let g = qw.gran.group_size(qw.k);
+    let gpr = qw.groups_per_row();
+    let mut max_abs: i64 = 0;
+    for r in 0..x_q.rows {
+        let xrow = x_q.row(r);
+        for n in 0..qw.n {
+            let wrow = &qw.q.data[n * qw.k..(n + 1) * qw.k];
+            let mut acc: i64 = 0;
+            for gi in 0..gpr {
+                let mut part: i64 = 0;
+                for j in gi * g..(gi + 1) * g {
+                    part += xrow[j] as i64 * wrow[j] as i64;
+                }
+                acc += part * is.scales[n * gpr + gi] as i64;
+                max_abs = max_abs.max(acc.abs());
+            }
+        }
+    }
+    let bound = i32::MAX as i64;
+    OverflowReport {
+        max_abs_acc: max_abs,
+        bound,
+        overflows: max_abs > bound,
+        utilization: max_abs as f64 / bound as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_act_per_token, quantize_weight_sym, Bits, Granularity};
+    use crate::tensor::{Mat, Rng};
+
+    #[test]
+    fn listing1_exact_powers() {
+        // scale_min = 0.25 → 0.25·2² = 1 ≥ 1 stops at n=3 → α = 2² = 4
+        assert_eq!(heuristic_amplifier(&[0.25, 0.9]), 4);
+        // 0.5 → α = 2
+        assert_eq!(heuristic_amplifier(&[0.5]), 2);
+        // ≥ 1 already → loop never runs... tmp=scale_min≥1 → n stays 0 → 2^-1 → clamp to 2^0
+        assert_eq!(heuristic_amplifier(&[1.5]), 1);
+    }
+
+    #[test]
+    fn typical_llm_scales_need_9_or_10_shifts() {
+        // Paper Fig. 4b: LLaMA-2-7B group scales mostly need 9–10 bit shifts,
+        // i.e. min scales around 1/512..1/1024. Replicate with matching mags.
+        let s = 1.0 / 700.0;
+        let a = heuristic_amplifier(&[s, 0.01, 0.005]);
+        assert_eq!(a, 1024);
+        assert_eq!(bit_shifts_required(s), 10);
+    }
+
+    #[test]
+    fn int_scales_round_and_clamp() {
+        let is = to_int_scales(&[0.001, 0.5, 0.0000001], 1024);
+        assert_eq!(is.scales[0], 1); // 1.024 → 1
+        assert_eq!(is.scales[1], 512);
+        assert_eq!(is.scales[2], 1); // would round to 0 → clamped
+    }
+
+    #[test]
+    fn rounding_mse_tiny_at_1024_matches_fig4c() {
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(64, 512, 0.02, &mut rng);
+        let mut qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(128));
+        attach_integer_scales(&mut qw, Some(1024));
+        let mse = scale_rounding_mse(&qw);
+        // Paper: MSE in (1e-7, 1e-6) at α=2^10 for real scales; ours has
+        // similar scale magnitudes so the same order holds.
+        assert!(mse < 1e-5, "mse={mse}");
+        // and a bigger amplifier shrinks it further
+        attach_integer_scales(&mut qw, Some(4096));
+        assert!(scale_rounding_mse(&qw) <= mse);
+    }
+
+    #[test]
+    fn tiny_amplifier_is_catastrophic() {
+        // Paper Table 7: α=128 collapses accuracy — scale rounding error blows up.
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(32, 256, 0.02, &mut rng);
+        let mut qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(128));
+        attach_integer_scales(&mut qw, Some(128));
+        let coarse = scale_rounding_mse(&qw);
+        attach_integer_scales(&mut qw, Some(1024));
+        let fine = scale_rounding_mse(&qw);
+        assert!(coarse > 10.0 * fine, "coarse={coarse} fine={fine}");
+    }
+
+    #[test]
+    fn heuristic_matches_fixed_when_scales_typical() {
+        let mut rng = Rng::new(6);
+        let w = Mat::randn(16, 256, 0.02, &mut rng);
+        let mut qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(128));
+        let a = attach_integer_scales(&mut qw, None);
+        assert!((a as u64).is_power_of_two());
+        assert!(a >= 64, "heuristic α should amplify small scales, got {a}");
+    }
+
+    #[test]
+    fn amplified_scales_mostly_8bit() {
+        // Fig. 4a: the majority of α=2^10-amplified scales fit in 8 bits.
+        let mut rng = Rng::new(7);
+        let w = Mat::randn(64, 1024, 0.02, &mut rng);
+        let qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(128));
+        let st = amplified_scale_stats(&qw.scales.data, 1024);
+        assert!(st.le_16bit == st.total);
+        assert!(st.le_8bit as f64 / st.total as f64 > 0.5);
+    }
+
+    #[test]
+    fn no_overflow_at_default_amplifier() {
+        // Fig. 8: with α=1024 the accumulator stays far below 2^31.
+        let mut rng = Rng::new(8);
+        let x = Mat::randn(4, 512, 1.0, &mut rng);
+        let w = Mat::randn(32, 512, 0.02, &mut rng);
+        let mut qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(128));
+        attach_integer_scales(&mut qw, Some(1024));
+        let (xq, _) = quantize_act_per_token(&x, Bits::B8);
+        let rep = overflow_audit(&xq, &qw);
+        assert!(!rep.overflows, "utilization={}", rep.utilization);
+    }
+}

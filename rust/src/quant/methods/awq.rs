@@ -1,0 +1,134 @@
+//! AWQ [26] — activation-aware weight quantization.
+//!
+//! Salient weight channels are protected by scaling them up before
+//! quantization (and dividing activations down online). The per-channel
+//! scale is `s_c = mean|X_c|^β`, with β grid-searched to minimize the output
+//! reconstruction error on calibration data.
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{fake_quant_act, quantize_weight_sym, BitWidth, Granularity};
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Awq {
+    /// Grid resolution for β ∈ {0, 1/n, …, 1}.
+    pub grid: usize,
+}
+
+impl Default for Awq {
+    fn default() -> Self {
+        Awq { grid: 10 }
+    }
+}
+
+/// Mean absolute activation per input channel.
+fn act_channel_mean_abs(x: &Mat) -> Vec<f32> {
+    let mut m = vec![0f32; x.cols];
+    for r in 0..x.rows {
+        for (c, &v) in x.row(r).iter().enumerate() {
+            m[c] += v.abs();
+        }
+    }
+    for v in m.iter_mut() {
+        *v /= x.rows as f32;
+        if *v < 1e-6 {
+            *v = 1e-6;
+        }
+    }
+    m
+}
+
+/// Scale weights up / activations down by `s` (per input channel).
+fn apply_smooth(w: &Mat, s: &[f32]) -> Mat {
+    let mut ws = w.clone();
+    for r in 0..ws.rows {
+        for (c, v) in ws.row_mut(r).iter_mut().enumerate() {
+            *v *= s[c];
+        }
+    }
+    ws
+}
+
+impl PtqMethod for Awq {
+    fn name(&self) -> &'static str {
+        "AWQ"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        let mean_abs = act_channel_mean_abs(calib);
+        let ref_out = calib.matmul_t(w);
+
+        let mut best: Option<(f64, Vec<f32>)> = None;
+        for step in 0..=self.grid {
+            let beta = step as f32 / self.grid as f32;
+            let s: Vec<f32> = mean_abs.iter().map(|m| m.powf(beta).max(1e-4)).collect();
+            let ws = apply_smooth(w, &s);
+            let qw = quantize_weight_sym(&ws, bw.weight, gran);
+            // simulate the full online path: x/s → act quant → @ dequant(W·s)ᵀ
+            let mut xs = calib.clone();
+            for r in 0..xs.rows {
+                for (c, v) in xs.row_mut(r).iter_mut().enumerate() {
+                    *v /= s[c];
+                }
+            }
+            let xq = fake_quant_act(&xs, bw.act);
+            let out = xq.matmul_t(&qw.dequant());
+            let err = ref_out.mse(&out);
+            if best.as_ref().is_none_or(|(b, _)| err < *b) {
+                best = Some((err, s));
+            }
+        }
+        let (_, s) = best.expect("grid nonempty");
+        let qw = quantize_weight_sym(&apply_smooth(w, &s), bw.weight, gran);
+        QuantizedLinear { qw, act_smooth: Some(s), rotate: false, bw }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::{recon_error, Rtn};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn awq_protects_salient_channels() {
+        let mut rng = Rng::new(31);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let mut x = Mat::randn(48, 128, 1.0, &mut rng);
+        // strong per-channel outliers: AWQ's raison d'être
+        for r in 0..x.rows {
+            for c in [0usize, 17, 64] {
+                x.data[r * 128 + c] *= 25.0;
+            }
+        }
+        let e_awq = recon_error(
+            &Awq::default().quantize(&w, &x, BitWidth::W4A8, Granularity::PerChannel),
+            &w,
+            &x,
+            false,
+        );
+        let e_rtn = recon_error(
+            &Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::PerChannel),
+            &w,
+            &x,
+            false,
+        );
+        assert!(e_awq < e_rtn, "awq={e_awq:.4e} rtn={e_rtn:.4e}");
+    }
+
+    #[test]
+    fn smooth_vector_positive() {
+        let mut rng = Rng::new(32);
+        let w = Mat::randn(16, 64, 0.05, &mut rng);
+        let x = Mat::randn(24, 64, 1.0, &mut rng);
+        let ql = Awq::default().quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
+        let s = ql.act_smooth.as_ref().unwrap();
+        assert!(s.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+}

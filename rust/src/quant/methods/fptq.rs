@@ -1,0 +1,100 @@
+//! FPTQ [24] — fine-grained W4A8 post-training quantization.
+//!
+//! FPTQ combines (i) offline per-channel activation smoothing in log scale
+//! ("layerwise activation-weight balancing") with (ii) fine-grained group
+//! quantization of the 4-bit weights and 8-bit per-token activations. The
+//! paper uses it as the canonical fine-grained W4A8 recipe whose latency
+//! Integer Scale rescues.
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{quantize_weight_sym, BitWidth, Granularity};
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Fptq {
+    /// Smoothing exponent (log-balanced migration strength).
+    pub alpha: f32,
+}
+
+impl Default for Fptq {
+    fn default() -> Self {
+        Fptq { alpha: 0.45 }
+    }
+}
+
+impl PtqMethod for Fptq {
+    fn name(&self) -> &'static str {
+        "FPTQ"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        let k = w.cols;
+        // log-balanced smoothing: s_c = max|X_c|^α / median-ish weight norm
+        let mut xmax = vec![1e-6f32; k];
+        for r in 0..calib.rows {
+            for (c, &v) in calib.row(r).iter().enumerate() {
+                xmax[c] = xmax[c].max(v.abs());
+            }
+        }
+        let geo_mean = {
+            let s: f32 = xmax.iter().map(|v| v.max(1e-6).ln()).sum::<f32>() / k as f32;
+            s.exp()
+        };
+        let s: Vec<f32> = xmax
+            .iter()
+            .map(|&xm| (xm / geo_mean).powf(self.alpha).max(1e-4))
+            .collect();
+        let mut ws = w.clone();
+        for r in 0..ws.rows {
+            for (c, v) in ws.row_mut(r).iter_mut().enumerate() {
+                *v *= s[c];
+            }
+        }
+        QuantizedLinear {
+            qw: quantize_weight_sym(&ws, bw.weight, gran),
+            act_smooth: Some(s),
+            rotate: false,
+            bw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::recon_error;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn fptq_w4a8_fine_grained_reasonable() {
+        let mut rng = Rng::new(71);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let mut x = Mat::randn(48, 128, 1.0, &mut rng);
+        for r in 0..x.rows {
+            x.data[r * 128 + 9] *= 15.0;
+        }
+        let ql = Fptq::default().quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
+        let e = recon_error(&ql, &w, &x, false);
+        let ref_norm = x.matmul_t(&w).frob().powi(2) / (48.0 * 32.0);
+        assert!(e < ref_norm * 0.05, "relative error too large: {e} vs {ref_norm}");
+    }
+
+    #[test]
+    fn smoothing_normalized_around_one() {
+        // geo-mean normalization keeps typical factors near 1 so the online
+        // division does not distort non-outlier channels.
+        let mut rng = Rng::new(72);
+        let w = Mat::randn(8, 64, 0.05, &mut rng);
+        let x = Mat::randn(32, 64, 1.0, &mut rng);
+        let ql = Fptq::default().quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
+        let s = ql.act_smooth.as_ref().unwrap();
+        let mean: f32 = s.iter().sum::<f32>() / s.len() as f32;
+        assert!((0.5..2.0).contains(&mean), "mean smoothing {mean}");
+    }
+}

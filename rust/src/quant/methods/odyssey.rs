@@ -1,0 +1,121 @@
+//! OdysseyLLM [23] — coarse-grained W4A8 ("A Speed Odyssey for Deployable
+//! Quantization"). Per-channel symmetric 4-bit weights + per-token 8-bit
+//! activations with a light weight-clipping search; its FastGEMM kernel
+//! (weight pre-processing + fused dequant) is what our coarse W4A8 kernel in
+//! `gemm::w4a8_coarse` models, and the paper reuses its kernel-fusion tricks.
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{Bits, BitWidth, Granularity, QuantizedWeight};
+use crate::tensor::{Mat, MatI8};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Odyssey {
+    /// Clip grid for the per-channel max (Odyssey uses a small search).
+    pub clip_grid: [f32; 4],
+}
+
+impl Default for Odyssey {
+    fn default() -> Self {
+        Odyssey { clip_grid: [1.0, 0.95, 0.9, 0.85] }
+    }
+}
+
+impl PtqMethod for Odyssey {
+    fn name(&self) -> &'static str {
+        "Odyssey"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        _calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        let (n, k) = (w.rows, w.cols);
+        let g = gran.group_size(k);
+        let gpr = k / g;
+        let qmax = bw.weight.qmax() as f32;
+        let qmin = bw.weight.qmin() as f32;
+        let mut q = MatI8::zeros(n, k);
+        let mut scales = Mat::zeros(n, gpr);
+        for r in 0..n {
+            for gi in 0..gpr {
+                let span = &w.data[r * k + gi * g..r * k + (gi + 1) * g];
+                let amax = span.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                let mut best: Option<(f32, f32)> = None; // (err, scale)
+                for &gamma in &self.clip_grid {
+                    let s = if amax > 0.0 { gamma * amax / qmax } else { 1.0 };
+                    let err: f32 = span
+                        .iter()
+                        .map(|&v| {
+                            let qv = (v / s).round().clamp(qmin, qmax);
+                            let d = v - qv * s;
+                            d * d
+                        })
+                        .sum();
+                    if best.is_none_or(|(b, _)| err < b) {
+                        best = Some((err, s));
+                    }
+                }
+                let (_, s) = best.unwrap();
+                scales.data[r * gpr + gi] = s;
+                for (j, &v) in span.iter().enumerate() {
+                    q.data[r * k + gi * g + j] = (v / s).round().clamp(qmin, qmax) as i8;
+                }
+            }
+        }
+        QuantizedLinear {
+            qw: QuantizedWeight {
+                n,
+                k,
+                bits: bw.weight,
+                gran,
+                q,
+                scales,
+                zeros: None,
+                int_scales: None,
+            },
+            act_smooth: None,
+            rotate: false,
+            bw,
+        }
+    }
+}
+
+// silence unused-import lint for Bits in non-test builds
+#[allow(unused)]
+fn _keep(_: Bits) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::recon_error;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn odyssey_coarse_w4a8_runs() {
+        let mut rng = Rng::new(81);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let x = Mat::randn(16, 128, 1.0, &mut rng);
+        let ql = Odyssey::default().quantize(&w, &x, BitWidth::W4A8, Granularity::PerChannel);
+        assert_eq!(ql.qw.scales.cols, 1);
+        let e = recon_error(&ql, &w, &x, false);
+        assert!(e.is_finite() && e > 0.0);
+    }
+
+    #[test]
+    fn clip_search_never_worse_than_no_clip() {
+        let mut rng = Rng::new(82);
+        let mut w = Mat::randn(16, 64, 0.05, &mut rng);
+        for i in (0..w.data.len()).step_by(61) {
+            w.data[i] *= 6.0;
+        }
+        let x = Mat::randn(16, 64, 1.0, &mut rng);
+        let with_clip = Odyssey::default().quantize(&w, &x, BitWidth::W4A16, Granularity::PerChannel);
+        let no_clip = Odyssey { clip_grid: [1.0; 4] }.quantize(&w, &x, BitWidth::W4A16, Granularity::PerChannel);
+        let e1 = w.mse(&with_clip.qw.dequant());
+        let e0 = w.mse(&no_clip.qw.dequant());
+        assert!(e1 <= e0 + 1e-12);
+    }
+}

@@ -1,0 +1,182 @@
+//! Omniquant-lite [41] — learnable weight clipping + learnable smoothing.
+//!
+//! The paper's Omniquant trains per-channel clipping strengths and smoothing
+//! factors with gradient descent. We implement the same objective with a
+//! derivative-free coordinate grid search (the search space is tiny:
+//! one clip factor γ per output channel, one global smoothing α), which
+//! reaches the same optima at these scales without an autograd substrate.
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{Bits, BitWidth, Granularity, QuantizedWeight};
+use crate::tensor::{Mat, MatI8};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Omniquant {
+    /// Clipping grid: γ ∈ {1.0, 1−step, …, min_clip}.
+    pub min_clip: f32,
+    pub steps: usize,
+    /// Smoothing α grid (SmoothQuant-style migration, learned in Omniquant).
+    pub alphas: [f32; 3],
+}
+
+impl Default for Omniquant {
+    fn default() -> Self {
+        Omniquant { min_clip: 0.7, steps: 7, alphas: [0.0, 0.4, 0.6] }
+    }
+}
+
+/// Quantize one row-span with a clipped max: s = γ·amax/qmax.
+fn quant_row_clipped(
+    span: &[f32],
+    gamma: f32,
+    bits: Bits,
+) -> (Vec<i8>, f32, f32 /* sq err */) {
+    let qmax = bits.qmax() as f32;
+    let qmin = bits.qmin() as f32;
+    let amax = span.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let s = if amax > 0.0 { gamma * amax / qmax } else { 1.0 };
+    let mut codes = Vec::with_capacity(span.len());
+    let mut err = 0f32;
+    for &v in span {
+        let q = (v / s).round().clamp(qmin, qmax);
+        codes.push(q as i8);
+        let d = v - q * s;
+        err += d * d;
+    }
+    (codes, s, err)
+}
+
+impl PtqMethod for Omniquant {
+    fn name(&self) -> &'static str {
+        "Omniquant"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        let k = w.cols;
+        // --- learnable smoothing (grid over α, pick by weight+act range balance)
+        let mut xmax = vec![1e-6f32; k];
+        for r in 0..calib.rows {
+            for (c, &v) in calib.row(r).iter().enumerate() {
+                xmax[c] = xmax[c].max(v.abs());
+            }
+        }
+        let mut wmax = vec![1e-6f32; k];
+        for r in 0..w.rows {
+            for (c, &v) in w.row(r).iter().enumerate() {
+                wmax[c] = wmax[c].max(v.abs());
+            }
+        }
+        let ref_out = calib.matmul_t(w);
+        let mut best: Option<(f64, Vec<f32>, QuantizedWeight)> = None;
+        for &alpha in &self.alphas {
+            let s: Vec<f32> = if alpha == 0.0 {
+                vec![1.0; k]
+            } else {
+                xmax.iter()
+                    .zip(wmax.iter())
+                    .map(|(&xm, &wm)| (xm.powf(alpha) / wm.powf(1.0 - alpha)).max(1e-4))
+                    .collect()
+            };
+            let mut ws = w.clone();
+            for r in 0..ws.rows {
+                for (c, v) in ws.row_mut(r).iter_mut().enumerate() {
+                    *v *= s[c];
+                }
+            }
+            let qw = self.clip_quant(&ws, bw.weight, gran);
+            // output error with smoothing applied online
+            let mut xs = calib.clone();
+            for r in 0..xs.rows {
+                for (c, v) in xs.row_mut(r).iter_mut().enumerate() {
+                    *v /= s[c];
+                }
+            }
+            let out = crate::quant::fake_quant_act(&xs, bw.act).matmul_t(&qw.dequant());
+            let err = ref_out.mse(&out);
+            if best.as_ref().is_none_or(|(b, _, _)| err < *b) {
+                best = Some((err, s, qw));
+            }
+        }
+        let (_, s, qw) = best.unwrap();
+        let act_smooth = if s.iter().all(|&v| v == 1.0) { None } else { Some(s) };
+        QuantizedLinear { qw, act_smooth, rotate: false, bw }
+    }
+}
+
+impl Omniquant {
+    /// Learnable weight clipping: per (row, group) pick γ minimizing the
+    /// weight reconstruction error.
+    fn clip_quant(&self, w: &Mat, bits: Bits, gran: Granularity) -> QuantizedWeight {
+        let (n, k) = (w.rows, w.cols);
+        let g = gran.group_size(k);
+        let gpr = k / g;
+        let mut q = MatI8::zeros(n, k);
+        let mut scales = Mat::zeros(n, gpr);
+        for r in 0..n {
+            for gi in 0..gpr {
+                let span = &w.data[r * k + gi * g..r * k + (gi + 1) * g];
+                let mut best: Option<(f32, Vec<i8>, f32)> = None;
+                for step in 0..=self.steps {
+                    let gamma =
+                        1.0 - (1.0 - self.min_clip) * step as f32 / self.steps as f32;
+                    let (codes, s, err) = quant_row_clipped(span, gamma, bits);
+                    if best.as_ref().is_none_or(|(b, _, _)| err < *b) {
+                        best = Some((err, codes, s));
+                    }
+                }
+                let (_, codes, s) = best.unwrap();
+                scales.data[r * gpr + gi] = s;
+                q.data[r * k + gi * g..r * k + (gi + 1) * g].copy_from_slice(&codes);
+            }
+        }
+        QuantizedWeight { n, k, bits, gran, q, scales, zeros: None, int_scales: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::{recon_error, Rtn};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn clipping_helps_heavy_tailed_weights() {
+        let mut rng = Rng::new(51);
+        let mut w = Mat::randn(32, 128, 0.05, &mut rng);
+        // heavy tail: a few extreme weights stretch the RTN scale
+        for i in (0..w.data.len()).step_by(97) {
+            w.data[i] *= 8.0;
+        }
+        let x = Mat::randn(32, 128, 1.0, &mut rng);
+        let e_om = recon_error(
+            &Omniquant::default().quantize(&w, &x, BitWidth::W4A16, Granularity::PerChannel),
+            &w,
+            &x,
+            false,
+        );
+        let e_rtn = recon_error(
+            &Rtn.quantize(&w, &x, BitWidth::W4A16, Granularity::PerChannel),
+            &w,
+            &x,
+            false,
+        );
+        assert!(e_om < e_rtn, "omni={e_om:.4e} rtn={e_rtn:.4e}");
+    }
+
+    #[test]
+    fn clip_gamma_one_recovers_rtn() {
+        let mut rng = Rng::new(52);
+        let w = Mat::randn(8, 64, 0.05, &mut rng);
+        let om = Omniquant { min_clip: 1.0, steps: 1, alphas: [0.0, 0.0, 0.0] };
+        let x = Mat::randn(8, 64, 1.0, &mut rng);
+        let a = om.quantize(&w, &x, BitWidth::W4A16, Granularity::Group(32));
+        let b = Rtn.quantize(&w, &x, BitWidth::W4A16, Granularity::Group(32));
+        assert_eq!(a.qw.q.data, b.qw.q.data);
+    }
+}

@@ -1,0 +1,87 @@
+//! QuaRot [3] — rotation-based outlier suppression.
+//!
+//! Exploits computation invariance: for an orthonormal matrix Q,
+//! `x·Wᵀ = (x·Q)·(W·Q)ᵀ`. Rotating with a Hadamard matrix spreads activation
+//! outliers across all channels, making low-bit (down to W4A4) quantization
+//! viable. Weights are rotated offline; activations get an online fast
+//! Walsh–Hadamard transform (O(k·log k), the "nearly negligible" overhead the
+//! paper mentions).
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{quantize_weight_sym, BitWidth, Granularity};
+use crate::tensor::{fwht_rows, Mat};
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuaRot;
+
+impl PtqMethod for QuaRot {
+    fn name(&self) -> &'static str {
+        "QuaRot"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        _calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        assert!(
+            w.cols.is_power_of_two(),
+            "QuaRot Hadamard rotation needs power-of-two input dim, got {}",
+            w.cols
+        );
+        // rotate each weight row: W·H (H symmetric orthonormal ⇒ rows of W
+        // transformed by the same FWHT as activation rows)
+        let mut wr = w.clone();
+        fwht_rows(&mut wr);
+        QuantizedLinear {
+            qw: quantize_weight_sym(&wr, bw.weight, gran),
+            act_smooth: None,
+            rotate: true,
+            bw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::{recon_error, Rtn};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rotation_preserves_float_product() {
+        let mut rng = Rng::new(61);
+        let w = Mat::randn(16, 64, 0.05, &mut rng);
+        let x = Mat::randn(8, 64, 1.0, &mut rng);
+        let mut wr = w.clone();
+        fwht_rows(&mut wr);
+        let mut xr = x.clone();
+        fwht_rows(&mut xr);
+        assert!(xr.matmul_t(&wr).max_abs_diff(&x.matmul_t(&w)) < 1e-3);
+    }
+
+    #[test]
+    fn quarot_rescues_w4a4_with_outliers() {
+        let mut rng = Rng::new(62);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let mut x = Mat::randn(48, 128, 1.0, &mut rng);
+        for r in 0..x.rows {
+            x.data[r * 128 + 3] *= 50.0; // catastrophic outlier channel for A4
+        }
+        let e_rot = recon_error(
+            &QuaRot.quantize(&w, &x, BitWidth::W4A4, Granularity::Group(32)),
+            &w,
+            &x,
+            false,
+        );
+        let e_rtn = recon_error(
+            &Rtn.quantize(&w, &x, BitWidth::W4A4, Granularity::Group(32)),
+            &w,
+            &x,
+            false,
+        );
+        assert!(e_rot < e_rtn, "quarot={e_rot:.4e} rtn={e_rtn:.4e}");
+    }
+}

@@ -1,0 +1,49 @@
+//! Round-To-Nearest (RTN) — the no-calibration baseline (paper Table 1,
+//! attributed to ZeroQuant [49]). Symmetric uniform quantization of the
+//! weights at the requested granularity; activations per-token.
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{quantize_weight_sym, BitWidth, Granularity};
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Rtn;
+
+impl PtqMethod for Rtn {
+    fn name(&self) -> &'static str {
+        "RTN"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        _calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        QuantizedLinear {
+            qw: quantize_weight_sym(w, bw.weight, gran),
+            act_smooth: None,
+            rotate: false,
+            bw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::recon_error;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn rtn_reconstruction_reasonable() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let x = Mat::randn(16, 128, 1.0, &mut rng);
+        let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
+        let e = recon_error(&ql, &w, &x, false);
+        let out_scale = x.matmul_t(&w).frob() / ((16 * 32) as f64).sqrt();
+        assert!(e.sqrt() < out_scale * 0.2, "e={e}");
+    }
+}

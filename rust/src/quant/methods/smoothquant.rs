@@ -1,0 +1,115 @@
+//! SmoothQuant [48] — migrate activation outliers into the weights with the
+//! closed-form per-channel factor `s_c = max|X_c|^α / max|W_c|^{1−α}`
+//! (α = 0.5 by default). Activations are divided by `s_c` online; weights
+//! were pre-multiplied, so the product is unchanged in float but both sides
+//! become easier to quantize.
+
+use super::{PtqMethod, QuantizedLinear};
+use crate::quant::{quantize_weight_sym, BitWidth, Granularity};
+use crate::tensor::Mat;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SmoothQuant {
+    pub alpha: f32,
+}
+
+impl Default for SmoothQuant {
+    fn default() -> Self {
+        SmoothQuant { alpha: 0.5 }
+    }
+}
+
+impl PtqMethod for SmoothQuant {
+    fn name(&self) -> &'static str {
+        "SmoothQuant"
+    }
+
+    fn quantize(
+        &self,
+        w: &Mat,
+        calib: &Mat,
+        bw: BitWidth,
+        gran: Granularity,
+    ) -> QuantizedLinear {
+        let k = w.cols;
+        // per-input-channel max |X| and max |W|
+        let mut xmax = vec![1e-6f32; k];
+        for r in 0..calib.rows {
+            for (c, &v) in calib.row(r).iter().enumerate() {
+                xmax[c] = xmax[c].max(v.abs());
+            }
+        }
+        let mut wmax = vec![1e-6f32; k];
+        for r in 0..w.rows {
+            for (c, &v) in w.row(r).iter().enumerate() {
+                wmax[c] = wmax[c].max(v.abs());
+            }
+        }
+        let s: Vec<f32> = xmax
+            .iter()
+            .zip(wmax.iter())
+            .map(|(&xm, &wm)| (xm.powf(self.alpha) / wm.powf(1.0 - self.alpha)).max(1e-4))
+            .collect();
+
+        let mut ws = w.clone();
+        for r in 0..ws.rows {
+            for (c, v) in ws.row_mut(r).iter_mut().enumerate() {
+                *v *= s[c];
+            }
+        }
+        QuantizedLinear {
+            qw: quantize_weight_sym(&ws, bw.weight, gran),
+            act_smooth: Some(s),
+            rotate: false,
+            bw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::methods::{recon_error, Rtn};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn smoothing_helps_w8a8_with_outliers() {
+        let mut rng = Rng::new(41);
+        let w = Mat::randn(32, 128, 0.05, &mut rng);
+        let mut x = Mat::randn(48, 128, 1.0, &mut rng);
+        for r in 0..x.rows {
+            x.data[r * 128 + 5] *= 40.0; // single massive outlier channel
+        }
+        let e_sq = recon_error(
+            &SmoothQuant::default().quantize(&w, &x, BitWidth::W8A8, Granularity::PerChannel),
+            &w,
+            &x,
+            false,
+        );
+        let e_rtn = recon_error(
+            &Rtn.quantize(&w, &x, BitWidth::W8A8, Granularity::PerChannel),
+            &w,
+            &x,
+            false,
+        );
+        assert!(e_sq < e_rtn, "sq={e_sq:.4e} rtn={e_rtn:.4e}");
+    }
+
+    #[test]
+    fn float_product_preserved_by_migration() {
+        // W·s and x/s must reproduce the original output in float.
+        let mut rng = Rng::new(42);
+        let w = Mat::randn(8, 64, 0.05, &mut rng);
+        let x = Mat::randn(8, 64, 1.0, &mut rng);
+        let ql = SmoothQuant::default().quantize(&w, &x, BitWidth::W8A8, Granularity::PerChannel);
+        let s = ql.act_smooth.as_ref().unwrap();
+        let mut ws = w.clone();
+        for r in 0..ws.rows {
+            for (c, v) in ws.row_mut(r).iter_mut().enumerate() {
+                *v *= s[c];
+            }
+        }
+        let xs = ql.transform_act(&x);
+        assert!(xs.matmul_t(&ws).max_abs_diff(&x.matmul_t(&w)) < 1e-3);
+    }
+}

@@ -1,0 +1,308 @@
+//! Quantization core.
+//!
+//! Implements the paper's background machinery (§A): symmetric/asymmetric
+//! uniform quantization at per-tensor / per-channel / per-token / group-wise
+//! granularity, plus the paper's contribution — the **Integer Scale**
+//! transform with adaptive scale amplifier ([`integer_scale`]) — and every
+//! baseline PTQ method evaluated in the paper ([`methods`]).
+
+pub mod granularity;
+pub mod integer_scale;
+pub mod methods;
+pub mod pack;
+
+pub use granularity::Granularity;
+pub use integer_scale::{heuristic_amplifier, IntScales, OverflowReport};
+
+use crate::tensor::{Mat, MatI8};
+
+/// Number of quantization bits for a tensor (weights or activations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bits {
+    B4,
+    B8,
+    /// Unquantized (FP16 in the paper; f32 stand-in here).
+    F16,
+}
+
+impl Bits {
+    /// Largest positive symmetric level, `2^{n-1} - 1`.
+    pub fn qmax(self) -> i32 {
+        match self {
+            Bits::B4 => 7,
+            Bits::B8 => 127,
+            Bits::F16 => panic!("qmax of float"),
+        }
+    }
+    pub fn qmin(self) -> i32 {
+        match self {
+            Bits::B4 => -8,
+            Bits::B8 => -128,
+            Bits::F16 => panic!("qmin of float"),
+        }
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            Bits::B4 => "4",
+            Bits::B8 => "8",
+            Bits::F16 => "16",
+        }
+    }
+}
+
+/// A full weight+activation bit-width scheme, e.g. W4A8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitWidth {
+    pub weight: Bits,
+    pub act: Bits,
+}
+
+impl BitWidth {
+    pub const W16A16: BitWidth = BitWidth { weight: Bits::F16, act: Bits::F16 };
+    pub const W8A8: BitWidth = BitWidth { weight: Bits::B8, act: Bits::B8 };
+    pub const W4A16: BitWidth = BitWidth { weight: Bits::B4, act: Bits::F16 };
+    pub const W4A8: BitWidth = BitWidth { weight: Bits::B4, act: Bits::B8 };
+    pub const W4A4: BitWidth = BitWidth { weight: Bits::B4, act: Bits::B4 };
+
+    pub fn label(self) -> String {
+        format!("W{}A{}", self.weight.label(), self.act.label())
+    }
+}
+
+/// How the per-group scale is represented at inference time — the paper's
+/// central axis of comparison (Fig. 2 b vs c).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// Per-group float scales; each group's INT32 partial is converted to
+    /// f32 before the scale multiply (Fig. 2b — the bottleneck).
+    Float,
+    /// Integer Scale with amplifier α (Fig. 2c — the contribution). The
+    /// stored value is the α used (always a power of two).
+    Integer { amplifier: i64 },
+}
+
+/// A quantized linear layer's weights: `n` output channels × `k` inputs,
+/// quantized symmetrically at [`Granularity`], with both float scales and
+/// (when enabled) their Integer Scale counterparts.
+#[derive(Clone, Debug)]
+pub struct QuantizedWeight {
+    /// Output channels.
+    pub n: usize,
+    /// Input features.
+    pub k: usize,
+    pub bits: Bits,
+    pub gran: Granularity,
+    /// Quantized codes, row-major `n × k`, stored widened to i8 even for
+    /// 4-bit (the packed form lives in [`pack`] and inside the kernels).
+    pub q: MatI8,
+    /// Float scales, row-major `n × groups_per_row`.
+    pub scales: Mat,
+    /// Asymmetric zero points (same shape as `scales`); `None` ⇒ symmetric.
+    pub zeros: Option<Vec<i32>>,
+    /// Integer scales (paper Eq. 2), populated by
+    /// [`integer_scale::attach_integer_scales`].
+    pub int_scales: Option<IntScales>,
+}
+
+impl QuantizedWeight {
+    pub fn groups_per_row(&self) -> usize {
+        self.gran.groups_per_row(self.k)
+    }
+
+    /// Dequantize back to f32 using the **float** scales (reference path).
+    pub fn dequant(&self) -> Mat {
+        let g = self.gran.group_size(self.k);
+        let gpr = self.groups_per_row();
+        let mut w = Mat::zeros(self.n, self.k);
+        for r in 0..self.n {
+            for c in 0..self.k {
+                let gi = c / g;
+                let s = self.scales.data[r * gpr + gi];
+                let z = self.zeros.as_ref().map_or(0, |zs| zs[r * gpr + gi]);
+                w.data[r * self.k + c] = (self.q.data[r * self.k + c] as i32 - z) as f32 * s;
+            }
+        }
+        w
+    }
+
+    /// Dequantize using the **integer** scales: `q · int_scale / α`. This is
+    /// the arithmetic the IS kernel effectively performs, so comparing it to
+    /// [`Self::dequant`] measures the scale-rounding error (paper Fig. 4c).
+    pub fn dequant_int_scale(&self) -> Mat {
+        let is = self.int_scales.as_ref().expect("int scales not attached");
+        let g = self.gran.group_size(self.k);
+        let gpr = self.groups_per_row();
+        let mut w = Mat::zeros(self.n, self.k);
+        for r in 0..self.n {
+            for c in 0..self.k {
+                let gi = c / g;
+                let si = is.scales[r * gpr + gi] as f32 / is.amplifier as f32;
+                let z = self.zeros.as_ref().map_or(0, |zs| zs[r * gpr + gi]);
+                w.data[r * self.k + c] = (self.q.data[r * self.k + c] as i32 - z) as f32 * si;
+            }
+        }
+        w
+    }
+}
+
+/// Symmetric uniform quantization of a weight matrix (`n×k`, row-major,
+/// row = output channel) at the given granularity. Paper Eq. 3–4.
+pub fn quantize_weight_sym(w: &Mat, bits: Bits, gran: Granularity) -> QuantizedWeight {
+    let (n, k) = (w.rows, w.cols);
+    let g = gran.group_size(k);
+    assert!(k % g == 0, "k={k} not divisible by group size {g}");
+    let gpr = k / g;
+    let qmax = bits.qmax();
+    let mut q = MatI8::zeros(n, k);
+    let mut scales = Mat::zeros(n, gpr);
+    for r in 0..n {
+        for gi in 0..gpr {
+            let span = &w.data[r * k + gi * g..r * k + (gi + 1) * g];
+            let amax = span.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let s = if amax > 0.0 { amax / qmax as f32 } else { 1.0 };
+            scales.data[r * gpr + gi] = s;
+            for (j, &v) in span.iter().enumerate() {
+                let qv = (v / s).round().clamp(bits.qmin() as f32, qmax as f32) as i8;
+                q.data[r * k + gi * g + j] = qv;
+            }
+        }
+    }
+    QuantizedWeight { n, k, bits, gran, q, scales, zeros: None, int_scales: None }
+}
+
+/// Asymmetric uniform quantization (paper Eq. 5–6); used by the QServe/DGQ
+/// dual-grained baseline's second stage.
+pub fn quantize_weight_asym(w: &Mat, bits: Bits, gran: Granularity) -> QuantizedWeight {
+    let (n, k) = (w.rows, w.cols);
+    let g = gran.group_size(k);
+    let gpr = k / g;
+    let levels = match bits {
+        Bits::B4 => 15.0,
+        Bits::B8 => 255.0,
+        Bits::F16 => panic!("asym quant of float"),
+    };
+    let mut q = MatI8::zeros(n, k);
+    let mut scales = Mat::zeros(n, gpr);
+    let mut zeros = vec![0i32; n * gpr];
+    for r in 0..n {
+        for gi in 0..gpr {
+            let span = &w.data[r * k + gi * g..r * k + (gi + 1) * g];
+            let (mut lo, mut hi) = (f32::MAX, f32::MIN);
+            for &v in span {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let s = if hi > lo { (hi - lo) / levels } else { 1.0 };
+            let z = (-lo / s).floor() as i32;
+            scales.data[r * gpr + gi] = s;
+            zeros[r * gpr + gi] = z;
+            for (j, &v) in span.iter().enumerate() {
+                let qv = ((v / s).round() as i32 + z).clamp(0, levels as i32) as i8;
+                q.data[r * k + gi * g + j] = qv;
+            }
+        }
+    }
+    QuantizedWeight { n, k, bits, gran, q, scales, zeros: Some(zeros), int_scales: None }
+}
+
+/// Per-token symmetric activation quantization: each row of `x` gets one
+/// scale (the paper's default activation scheme).
+pub fn quantize_act_per_token(x: &Mat, bits: Bits) -> (MatI8, Vec<f32>) {
+    let qmax = bits.qmax();
+    let mut q = MatI8::zeros(x.rows, x.cols);
+    let mut scales = vec![0f32; x.rows];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let s = if amax > 0.0 { amax / qmax as f32 } else { 1.0 };
+        scales[r] = s;
+        for (c, &v) in row.iter().enumerate() {
+            q.data[r * x.cols + c] =
+                (v / s).round().clamp(bits.qmin() as f32, qmax as f32) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Fake-quantize a matrix (quantize then dequantize) — the standard way to
+/// measure accuracy impact without running integer kernels.
+pub fn fake_quant_weight(w: &Mat, bits: Bits, gran: Granularity) -> Mat {
+    quantize_weight_sym(w, bits, gran).dequant()
+}
+
+/// Fake per-token activation quantization.
+pub fn fake_quant_act(x: &Mat, bits: Bits) -> Mat {
+    if bits == Bits::F16 {
+        return x.clone();
+    }
+    let (q, scales) = quantize_act_per_token(x, bits);
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        for c in 0..x.cols {
+            out.data[r * x.cols + c] = q.data[r * x.cols + c] as f32 * scales[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn sym_quant_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(16, 128, 0.05, &mut rng);
+        for (bits, tol) in [(Bits::B8, 1e-3f32), (Bits::B4, 2e-2)] {
+            let qw = quantize_weight_sym(&w, bits, Granularity::Group(32));
+            let deq = qw.dequant();
+            // error per element bounded by s/2 = amax/qmax/2
+            assert!(w.max_abs_diff(&deq) < tol, "bits={bits:?}");
+        }
+    }
+
+    #[test]
+    fn finer_groups_reduce_error() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(8, 256, 0.1, &mut rng);
+        let coarse = fake_quant_weight(&w, Bits::B4, Granularity::PerChannel);
+        let fine = fake_quant_weight(&w, Bits::B4, Granularity::Group(32));
+        assert!(w.mse(&fine) <= w.mse(&coarse));
+    }
+
+    #[test]
+    fn asym_handles_shifted_range() {
+        let mut rng = Rng::new(3);
+        let mut w = Mat::randn(4, 64, 0.05, &mut rng);
+        for v in w.data.iter_mut() {
+            *v += 0.3; // all-positive range: symmetric wastes half the codes
+        }
+        let sym = fake_quant_weight(&w, Bits::B4, Granularity::Group(32));
+        let qa = quantize_weight_asym(&w, Bits::B4, Granularity::Group(32));
+        assert!(w.mse(&qa.dequant()) < w.mse(&sym));
+    }
+
+    #[test]
+    fn act_per_token_scales_each_row() {
+        let x = Mat::from_vec(2, 4, vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0]);
+        let (q, s) = quantize_act_per_token(&x, Bits::B8);
+        // second row has 10x scale; codes identical
+        assert!((s[1] / s[0] - 10.0).abs() < 1e-4);
+        assert_eq!(&q.data[0..4], &q.data[4..8]);
+    }
+
+    #[test]
+    fn zero_weight_group_safe() {
+        let w = Mat::zeros(2, 64);
+        let qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(32));
+        assert!(qw.q.data.iter().all(|&v| v == 0));
+        assert!(qw.dequant().data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bitwidth_labels() {
+        assert_eq!(BitWidth::W4A8.label(), "W4A8");
+        assert_eq!(BitWidth::W16A16.label(), "W16A16");
+    }
+}

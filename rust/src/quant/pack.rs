@@ -1,0 +1,80 @@
+//! 4-bit weight packing.
+//!
+//! Two int4 codes per byte, offset-binary (code + 8 ∈ [0, 15]) so unpacking
+//! is a mask + subtract — the same trick Marlin/FastGEMM use to keep the
+//! unpack on the fast path cheap. Packing is offline (quantization time);
+//! unpacking happens inside the W4Axx kernels.
+
+/// Pack a row-major i8 matrix of int4 codes (each in [-8, 7]) into bytes,
+/// two codes per byte, low nibble first. `k` must be even.
+pub fn pack_int4(codes: &[i8], k: usize) -> Vec<u8> {
+    assert!(k % 2 == 0, "k must be even to pack int4 pairs");
+    assert!(codes.len() % k == 0);
+    let mut out = Vec::with_capacity(codes.len() / 2);
+    for row in codes.chunks_exact(k) {
+        for pair in row.chunks_exact(2) {
+            let lo = (pair[0] + 8) as u8 & 0x0F;
+            let hi = (pair[1] + 8) as u8 & 0x0F;
+            out.push(lo | (hi << 4));
+        }
+    }
+    out
+}
+
+/// Unpack one packed byte into two int4 codes.
+#[inline(always)]
+pub fn unpack_pair(b: u8) -> (i8, i8) {
+    (((b & 0x0F) as i8) - 8, ((b >> 4) as i8) - 8)
+}
+
+/// Unpack a full packed buffer back to i8 codes (test/reference path; the
+/// kernels unpack inline).
+pub fn unpack_int4(packed: &[u8]) -> Vec<i8> {
+    let mut out = Vec::with_capacity(packed.len() * 2);
+    for &b in packed {
+        let (lo, hi) = unpack_pair(b);
+        out.push(lo);
+        out.push(hi);
+    }
+    out
+}
+
+/// Unpack one packed weight row into a caller-provided buffer
+/// (`out.len() == 2 * packed.len()`). This is the kernels' hot-path unpack:
+/// done once per weight row and amortized over the whole activation batch
+/// (the register-dequant trick Marlin/FastGEMM use), and written as two
+/// independent nibble streams so LLVM vectorizes it.
+#[inline]
+pub fn unpack_row_into(packed: &[u8], out: &mut [i8]) {
+    debug_assert_eq!(out.len(), packed.len() * 2);
+    for (o, &b) in out.chunks_exact_mut(2).zip(packed.iter()) {
+        o[0] = ((b & 0x0F) as i8) - 8;
+        o[1] = ((b >> 4) as i8) - 8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_codes() {
+        let codes: Vec<i8> = (-8..8).collect();
+        let packed = pack_int4(&codes, 16);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_int4(&packed), codes);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = crate::tensor::Rng::new(12);
+        let codes: Vec<i8> = (0..1024).map(|_| (rng.below(16) as i8) - 8).collect();
+        assert_eq!(unpack_int4(&pack_int4(&codes, 64)), codes);
+    }
+
+    #[test]
+    #[should_panic]
+    fn odd_k_rejected() {
+        pack_int4(&[0, 1, 2], 3);
+    }
+}

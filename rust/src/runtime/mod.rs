@@ -1,0 +1,131 @@
+//! PJRT runtime — load and execute AOT-compiled JAX/Pallas artifacts.
+//!
+//! `python/compile/aot.py` lowers the L2 JAX model (which calls the L1
+//! Pallas kernels) to **HLO text** (`artifacts/*.hlo.txt`). This module
+//! wraps the `xla` crate: parse the text (the text parser reassigns
+//! instruction ids, sidestepping the 64-bit-id proto incompatibility of
+//! jax ≥ 0.5 vs xla_extension 0.5.1), compile once on the PJRT CPU client,
+//! and execute from the Rust hot path with zero Python.
+
+use crate::tensor::Mat;
+use anyhow::{anyhow as eyre, Context, Result};
+use std::path::Path;
+
+/// A compiled HLO artifact ready to execute.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// The PJRT client plus every loaded artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
+        )
+        .map_err(|e| eyre!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| eyre!("compile {path:?}: {e:?}"))?;
+        Ok(Artifact {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+impl Artifact {
+    /// Execute with f32 matrix inputs; returns the tuple of f32 outputs.
+    /// (aot.py lowers with `return_tuple=True`.)
+    pub fn run_f32(&self, inputs: &[&Mat]) -> Result<Vec<Vec<f32>>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                xla::Literal::vec1(&m.data)
+                    .reshape(&[m.rows as i64, m.cols as i64])
+                    .map_err(|e| eyre!("reshape: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| eyre!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("to_literal: {e:?}"))?;
+        let tuple = result.decompose_tuple().map_err(|e| eyre!("tuple: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Execute with int32 token inputs + f32 outputs (the model forward:
+    /// tokens → logits).
+    pub fn run_tokens(&self, tokens: &[i32], shape: (usize, usize)) -> Result<Vec<Vec<f32>>> {
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[shape.0 as i64, shape.1 as i64])
+            .map_err(|e| eyre!("reshape: {e:?}"))?;
+        let mut result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| eyre!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| eyre!("to_literal: {e:?}"))?;
+        let tuple = result.decompose_tuple().map_err(|e| eyre!("tuple: {e:?}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Default artifact directory (`artifacts/` at the repo root), overridable
+/// via `IS_ARTIFACTS_DIR`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("IS_ARTIFACTS_DIR")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Load an artifact by stem name if it exists (None before `make artifacts`).
+pub fn try_load(rt: &PjrtRuntime, stem: &str) -> Option<Artifact> {
+    let path = artifacts_dir().join(format!("{stem}.hlo.txt"));
+    if !path.exists() {
+        return None;
+    }
+    rt.load(&path).context("artifact load").ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_starts() {
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu")
+            || rt.platform().to_lowercase().contains("host"));
+    }
+
+    #[test]
+    fn missing_artifact_is_none() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(try_load(&rt, "definitely_not_there").is_none());
+    }
+}

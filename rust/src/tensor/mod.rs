@@ -1,0 +1,395 @@
+//! Dense tensor substrate.
+//!
+//! Minimal, dependency-free row-major matrices over `f32`/`i8`/`i32`, a seeded
+//! PRNG, and the handful of linear-algebra routines the quantization methods
+//! need (matmul, transpose, Cholesky, Hadamard transform). All quantization
+//! kernels live in [`crate::gemm`]; this module only provides the float
+//! reference substrate.
+
+mod rng;
+
+pub use rng::Rng;
+
+use std::fmt;
+
+/// Row-major `f32` matrix. The universal currency of the quantizer and the
+/// float reference path.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Gaussian init (Box–Muller), seeded.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal() * std;
+        }
+        m
+    }
+
+    /// Uniform init in [lo, hi), seeded.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = lo + (hi - lo) * rng.uniform();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// `self (m×k) @ other (k×n)` — cache-blocked ikj loop, the float
+    /// reference GEMM (also the FP16-baseline stand-in, see `gemm::fp32`).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let arow = &self.data[i * k..(i + 1) * k];
+            for (p, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ otherᵀ` where `other` is n×k (row-major weights). The natural
+    /// layout for Linear layers: each weight row is one output channel.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&a, &b) in arow.iter().zip(brow.iter()) {
+                    acc += a * b;
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn scale_assign(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Mean squared error against another matrix.
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut acc = 0f64;
+        for (a, b) in self.data.iter().zip(other.data.iter()) {
+            let d = (*a - *b) as f64;
+            acc += d * d;
+        }
+        acc / self.data.len() as f64
+    }
+
+    /// Max |a-b|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Row-major `i8` matrix (quantized activations / 8-bit weights).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI8 { rows, cols, data: vec![0; rows * cols] }
+    }
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// Row-major `i32` matrix (integer accumulators).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 { rows, cols, data: vec![0; rows * cols] }
+    }
+}
+
+/// Cholesky decomposition of a symmetric positive-definite matrix
+/// (lower-triangular L with A = L·Lᵀ). Used by GPTQ for the inverse-Hessian
+/// ordering. Returns `None` if the matrix is not SPD (caller then damps).
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= l[(i, k)] as f64 * l[(j, k)] as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = (sum as f64).sqrt() as f32;
+            } else {
+                l[(i, j)] = (sum / l[(j, j)] as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Invert a lower-triangular matrix by forward substitution.
+pub fn invert_lower(l: &Mat) -> Mat {
+    let n = l.rows;
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        inv[(i, i)] = 1.0 / l[(i, i)];
+        for j in 0..i {
+            let mut sum = 0.0f64;
+            for k in j..i {
+                sum += l[(i, k)] as f64 * inv[(k, j)] as f64;
+            }
+            inv[(i, j)] = (-sum / l[(i, i)] as f64) as f32;
+        }
+    }
+    inv
+}
+
+/// In-place fast Walsh–Hadamard transform over the last axis of each row
+/// slice (length must be a power of two). Normalized by 1/sqrt(n) so the
+/// transform is orthonormal — the rotation primitive behind QuaRot.
+pub fn fwht_row(row: &mut [f32]) {
+    let n = row.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let x = row[j];
+                let y = row[j + h];
+                row[j] = x + y;
+                row[j + h] = x - y;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for v in row.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// Apply the orthonormal FWHT to every row of a matrix.
+pub fn fwht_rows(m: &mut Mat) {
+    let cols = m.cols;
+    for r in 0..m.rows {
+        fwht_row(&mut m.data[r * cols..(r + 1) * cols]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(7);
+        let a = Mat::randn(5, 9, 1.0, &mut rng);
+        let b = Mat::randn(9, 4, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        for i in 0..5 {
+            for j in 0..4 {
+                let mut acc = 0.0;
+                for k in 0..9 {
+                    acc += a[(i, k)] * b[(k, j)];
+                }
+                assert!((c[(i, j)] - acc).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(6, 8, 1.0, &mut rng);
+        let w = Mat::randn(5, 8, 1.0, &mut rng);
+        let via_t = a.matmul_t(&w);
+        let via_m = a.matmul(&w.transpose());
+        assert!(via_t.max_abs_diff(&via_m) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(4, 7, 1.0, &mut rng);
+        assert_eq!(a, a.transpose().transpose());
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let mut rng = Rng::new(5);
+        let x = Mat::randn(8, 8, 1.0, &mut rng);
+        // A = XᵀX + I is SPD.
+        let mut a = x.transpose().matmul(&x);
+        for i in 0..8 {
+            a[(i, i)] += 1.0;
+        }
+        let l = cholesky(&a).expect("SPD");
+        let re = l.matmul(&l.transpose());
+        assert!(re.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn invert_lower_is_inverse() {
+        let mut rng = Rng::new(6);
+        let x = Mat::randn(6, 6, 1.0, &mut rng);
+        let mut a = x.transpose().matmul(&x);
+        for i in 0..6 {
+            a[(i, i)] += 2.0;
+        }
+        let l = cholesky(&a).unwrap();
+        let li = invert_lower(&l);
+        let should_be_eye = li.matmul(&l);
+        assert!(should_be_eye.max_abs_diff(&Mat::eye(6)) < 1e-3);
+    }
+
+    #[test]
+    fn fwht_orthonormal() {
+        let mut rng = Rng::new(9);
+        let mut a = Mat::randn(3, 16, 1.0, &mut rng);
+        let orig = a.clone();
+        // Energy is preserved and the transform is an involution.
+        fwht_rows(&mut a);
+        for r in 0..3 {
+            let e0: f32 = orig.row(r).iter().map(|v| v * v).sum();
+            let e1: f32 = a.row(r).iter().map(|v| v * v).sum();
+            assert!((e0 - e1).abs() / e0 < 1e-4);
+        }
+        fwht_rows(&mut a);
+        assert!(a.max_abs_diff(&orig) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fwht_rejects_non_pow2() {
+        let mut v = vec![1.0; 6];
+        fwht_row(&mut v);
+    }
+
+    #[test]
+    fn mse_zero_for_identical() {
+        let a = Mat::filled(3, 3, 2.5);
+        assert_eq!(a.mse(&a), 0.0);
+    }
+}

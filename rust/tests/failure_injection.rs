@@ -1,0 +1,95 @@
+//! Failure injection: corrupt artifacts, degenerate requests, capacity
+//! pressure — the paths a production deployment actually hits.
+
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use std::io::Write;
+use std::sync::Arc;
+
+fn tiny_engine() -> Engine {
+    let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 32, n_experts: None };
+    let model = Transformer::from_weights(&ModelWeights::random(cfg, 1));
+    Engine::new(Arc::new(model), EngineConfig { max_batch: 4, kv_token_budget: 512, seed: 0 })
+}
+
+#[test]
+fn corrupt_weights_magic_rejected() {
+    let dir = std::env::temp_dir().join("is_failure_inj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad_magic.bin");
+    std::fs::File::create(&path).unwrap().write_all(b"NOPE0000").unwrap();
+    let err = ModelWeights::load(&path, ModelConfig::tiny());
+    assert!(err.is_err());
+    // load_or_random falls back instead of crashing
+    let w = ModelWeights::load_or_random(&path, ModelConfig::tiny(), 3);
+    assert_eq!(w.embed.rows, 512);
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    let dir = std::env::temp_dir().join("is_failure_inj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let good = dir.join("good.bin");
+    let cfg = ModelConfig { n_layers: 1, ..ModelConfig::tiny() };
+    ModelWeights::random(cfg, 5).save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    let trunc = dir.join("trunc.bin");
+    std::fs::write(&trunc, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(ModelWeights::load(&trunc, cfg).is_err());
+}
+
+#[test]
+fn missing_tensor_rejected() {
+    // wrong config (more layers than saved) must error, not panic
+    let dir = std::env::temp_dir().join("is_failure_inj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("one_layer.bin");
+    let one = ModelConfig { n_layers: 1, ..ModelConfig::tiny() };
+    ModelWeights::random(one, 5).save(&p).unwrap();
+    let four = ModelConfig::tiny();
+    assert!(ModelWeights::load(&p, four).is_err());
+}
+
+#[test]
+fn empty_prompt_completes_gracefully() {
+    let mut e = tiny_engine();
+    e.submit(Request::greedy(0, vec![], 4));
+    e.submit(Request::greedy(1, vec![5, 6], 3));
+    let res = e.run_to_completion();
+    assert_eq!(res.len(), 2);
+    assert!(res[0].tokens.is_empty());
+    assert!(!res[1].tokens.is_empty());
+}
+
+#[test]
+fn zero_max_new_tokens_completes() {
+    let mut e = tiny_engine();
+    e.submit(Request::greedy(0, vec![4, 5, 6], 0));
+    let res = e.run_to_completion();
+    assert_eq!(res.len(), 1);
+    assert!(res[0].tokens.is_empty());
+}
+
+#[test]
+fn prompt_near_cache_capacity_stops_cleanly() {
+    // prompt 28 of 32-capacity cache; generation must stop at capacity
+    // instead of overflowing
+    let mut e = tiny_engine();
+    let mut r = Request::greedy(0, vec![5; 28], 100);
+    r.stop_at_eos = false;
+    e.submit(r);
+    let res = e.run_to_completion();
+    assert_eq!(res.len(), 1);
+    assert!(res[0].tokens.len() < 100);
+    assert!(!res[0].tokens.is_empty());
+}
+
+#[test]
+fn many_tiny_requests_all_complete() {
+    let mut e = tiny_engine();
+    for i in 0..40 {
+        e.submit(Request::greedy(i, vec![(i % 60) as u32 + 4], 2));
+    }
+    let res = e.run_to_completion();
+    assert_eq!(res.len(), 40);
+}

@@ -1,0 +1,123 @@
+//! Integration: quantization pipeline → serving engine → responses, across
+//! schemes and model variants. These exercise the same path as
+//! `examples/serve_quantized.rs` but with assertions.
+
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::quant::{BitWidth, Granularity};
+use std::sync::Arc;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig { n_layers: 2, d_model: 64, n_heads: 2, d_ff: 128, vocab: 128, max_seq: 96, n_experts: None }
+}
+
+fn setup(spec: Option<QuantSpec>) -> Engine {
+    let cfg = tiny_cfg();
+    let weights = ModelWeights::random(cfg, 77);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(96, Split::C4, 11);
+    let model = match spec {
+        None => Transformer::from_weights(&weights),
+        Some(s) => quantize_model(&weights, &s, &calib),
+    };
+    Engine::new(Arc::new(model), EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: 5 })
+}
+
+fn workload(e: &mut Engine, n: usize) -> Vec<integer_scale::coordinator::Response> {
+    let gen = CorpusGen::new(128, 7);
+    let mut rng = integer_scale::tensor::Rng::new(3);
+    for i in 0..n {
+        let doc = gen.document(8, Split::C4, &mut rng);
+        let mut r = Request::greedy(i as u64, doc, 6);
+        r.stop_at_eos = false;
+        e.submit(r);
+    }
+    e.run_to_completion()
+}
+
+#[test]
+fn every_scheme_serves_end_to_end() {
+    let specs = [
+        None,
+        Some(QuantSpec::new(Method::SmoothQuant, BitWidth::W8A8, Granularity::Group(32))),
+        Some(QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(32))),
+        Some(QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel)),
+        Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(32))),
+        Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(32)).with_is(1024)),
+        Some(QuantSpec::new(Method::QuaRot, BitWidth::W4A4, Granularity::Group(32)).with_is(1024)),
+    ];
+    for spec in specs {
+        let label = spec.map(|s| s.label()).unwrap_or_else(|| "FP16".into());
+        let mut e = setup(spec);
+        let res = workload(&mut e, 6);
+        assert_eq!(res.len(), 6, "{label}");
+        for r in &res {
+            assert!(!r.tokens.is_empty(), "{label}");
+            assert!(r.tokens.len() <= 6, "{label}");
+            assert!(r.tokens.iter().all(|&t| t < 128), "{label}");
+        }
+    }
+}
+
+#[test]
+fn integer_scale_preserves_greedy_outputs_vs_float_scale() {
+    // the serving-level free lunch: FS and IS engines emit (mostly)
+    // identical greedy continuations.
+    let fs = QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(32));
+    let is = fs.with_is(1024);
+    let a = workload(&mut setup(Some(fs)), 8);
+    let b = workload(&mut setup(Some(is)), 8);
+    let same = a.iter().zip(b.iter()).filter(|(x, y)| x.tokens == y.tokens).count();
+    assert!(same >= 6, "only {same}/8 identical");
+}
+
+#[test]
+fn moe_model_serves() {
+    let cfg = ModelConfig {
+        n_layers: 1,
+        d_model: 64,
+        n_heads: 2,
+        d_ff: 128,
+        vocab: 128,
+        max_seq: 96,
+        n_experts: Some(4),
+    };
+    let weights = ModelWeights::random(cfg, 78);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(96, Split::C4, 11);
+    let spec = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(32)).with_is(1024);
+    let model = quantize_model(&weights, &spec, &calib);
+    let mut e = Engine::new(Arc::new(model), EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: 5 });
+    let res = workload(&mut e, 5);
+    assert_eq!(res.len(), 5);
+}
+
+#[test]
+fn metrics_are_consistent() {
+    let mut e = setup(None);
+    let res = workload(&mut e, 7);
+    assert_eq!(e.metrics.completed, 7);
+    assert_eq!(e.metrics.submitted, 7);
+    let total_generated: usize = res.iter().map(|r| r.tokens.len()).sum();
+    // every generated token after the prefill token came from a decode step
+    let decode_tokens: usize = total_generated - 7;
+    assert_eq!(e.metrics.decode_tokens as usize, decode_tokens);
+    assert!(e.metrics.mean_batch() >= 1.0);
+}
+
+#[test]
+fn kv_budget_limits_concurrency() {
+    // budget for ~2 sequences (8 prompt + 6 new = 14 tokens each)
+    let cfg = tiny_cfg();
+    let weights = ModelWeights::random(cfg, 79);
+    let model = Transformer::from_weights(&weights);
+    let mut e = Engine::new(
+        Arc::new(model),
+        EngineConfig { max_batch: 8, kv_token_budget: 30, seed: 1 },
+    );
+    let res = workload(&mut e, 6);
+    assert_eq!(res.len(), 6);
+    assert!(e.metrics.max_batch_seen <= 2, "batch {}", e.metrics.max_batch_seen);
+}

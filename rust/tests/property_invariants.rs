@@ -1,0 +1,193 @@
+//! Property-based tests over coordinator + quantization invariants.
+//!
+//! The proptest crate is unavailable in this offline environment, so these
+//! are hand-rolled property tests: seeded random case generators driving
+//! hundreds of scenarios per property, shrunk semantics replaced by printing
+//! the failing seed (re-run with that seed to reproduce).
+
+use integer_scale::coordinator::{Request, Scheduler};
+use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::quant::integer_scale::{heuristic_amplifier, to_int_scales};
+use integer_scale::quant::pack::{pack_int4, unpack_int4};
+use integer_scale::quant::{quantize_weight_sym, Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+
+// ------------------------------------------------------------- scheduler
+
+/// Drive a random admit/retire trace; the scheduler must never exceed its
+/// batch or KV budgets and must preserve FIFO order.
+#[test]
+fn prop_scheduler_budgets_never_violated() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let max_batch = 1 + rng.below(6);
+        let kv_budget = 16 + rng.below(256);
+        let mut s = Scheduler::new(max_batch, kv_budget);
+        let mut running: Vec<Request> = Vec::new();
+        let mut next_id = 0u64;
+        let mut admitted_order: Vec<u64> = Vec::new();
+        for _ in 0..120 {
+            match rng.below(3) {
+                0 => {
+                    let plen = 1 + rng.below(12);
+                    let mnew = 1 + rng.below(12);
+                    s.submit(Request::greedy(next_id, vec![1; plen], mnew));
+                    next_id += 1;
+                }
+                1 => {
+                    for t in s.admit() {
+                        admitted_order.push(t.req.id);
+                        running.push(t.req);
+                    }
+                }
+                _ => {
+                    if !running.is_empty() {
+                        let i = rng.below(running.len());
+                        let r = running.swap_remove(i);
+                        s.retire(&r);
+                    }
+                }
+            }
+            // invariants
+            assert!(s.state.running_count <= max_batch, "seed={seed}");
+            assert!(s.state.running_tokens <= kv_budget, "seed={seed}");
+            assert_eq!(s.state.running_count, running.len(), "seed={seed}");
+            let expected: usize =
+                running.iter().map(Scheduler::kv_need).sum();
+            assert_eq!(s.state.running_tokens, expected, "seed={seed}");
+        }
+        // FIFO: admitted ids are strictly increasing
+        assert!(admitted_order.windows(2).all(|w| w[0] < w[1]), "seed={seed}");
+    }
+}
+
+// ------------------------------------------------------------- packing
+
+#[test]
+fn prop_int4_pack_roundtrip() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let k = 2 * (1 + rng.below(64));
+        let n = 1 + rng.below(8);
+        let codes: Vec<i8> = (0..n * k).map(|_| rng.below(16) as i8 - 8).collect();
+        assert_eq!(unpack_int4(&pack_int4(&codes, k)), codes, "seed={seed}");
+    }
+}
+
+// ------------------------------------------------------------- quantization
+
+/// Dequantized weights always within half a scale step of the original.
+#[test]
+fn prop_sym_quant_error_bound() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let g = [16, 32, 64][rng.below(3)];
+        let k = g * (1 + rng.below(4));
+        let n = 1 + rng.below(12);
+        let std = [0.01f32, 0.05, 0.5][rng.below(3)];
+        let w = Mat::randn(n, k, std, &mut rng);
+        let qw = quantize_weight_sym(&w, Bits::B4, Granularity::Group(g));
+        let deq = qw.dequant();
+        let gpr = k / g;
+        for r in 0..n {
+            for c in 0..k {
+                let s = qw.scales.data[r * gpr + c / g];
+                let err = (w.data[r * k + c] - deq.data[r * k + c]).abs();
+                assert!(err <= 0.5 * s + 1e-6, "seed={seed} err={err} s={s}");
+            }
+        }
+    }
+}
+
+/// Listing-1 heuristic always returns a power of two that amplifies the
+/// minimum scale to ≥ 1 but not to ≥ 2 (minimality).
+#[test]
+fn prop_heuristic_amplifier_minimal() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed);
+        let scales: Vec<f32> =
+            (0..1 + rng.below(64)).map(|_| 0.0005 + rng.uniform() * 0.5).collect();
+        let a = heuristic_amplifier(&scales);
+        assert!((a as u64).is_power_of_two(), "seed={seed}");
+        let smin = scales.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(smin * a as f32 >= 1.0, "seed={seed} smin={smin} a={a}");
+        if a > 1 {
+            let half = (a / 2) as f32;
+            assert!(smin * half < 1.0, "seed={seed} not minimal");
+        }
+    }
+}
+
+/// Integer scales are within half a unit of the amplified float scales.
+#[test]
+fn prop_int_scale_rounding_bound() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let scales: Vec<f32> = (0..32).map(|_| rng.uniform() * 0.2 + 1e-4).collect();
+        let amp = [512i64, 1024, 4096][rng.below(3)];
+        let is = to_int_scales(&scales, amp);
+        for (s, i) in scales.iter().zip(is.scales.iter()) {
+            let diff = (s * amp as f32 - *i as f32).abs();
+            assert!(diff <= 0.5 + 1e-3 || *i == 1, "seed={seed}");
+        }
+    }
+}
+
+// ------------------------------------------------------------- kernels
+
+/// IS kernel == exact integer reference for random shapes (the kernel-level
+/// fundamental theorem: it computes Eq. 2 exactly).
+#[test]
+fn prop_is_kernel_exact() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let g = [16usize, 32][rng.below(2)];
+        let k = g * (1 + rng.below(4));
+        let n = 4 * (1 + rng.below(6));
+        let m = 1 + rng.below(6);
+        let x = Mat::randn(m, k, 1.0, &mut rng);
+        let w = Mat::randn(n, k, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(g), Some(1024));
+        let qa = QuantAct::quantize(&x, Bits::B8);
+        let got = gemm::w4a8_fg_int::gemm(&qa, &pw);
+        let is = pw.int_scales.as_ref().unwrap();
+        let codes = unpack_int4(&pw.packed);
+        let gpr = k / g;
+        for i in 0..m {
+            for jn in 0..n {
+                let mut acc: i64 = 0;
+                for gi in 0..gpr {
+                    let mut part: i64 = 0;
+                    for j in gi * g..(gi + 1) * g {
+                        part += qa.q[i * k + j] as i64 * codes[jn * k + j] as i64;
+                    }
+                    acc += part * is[jn * gpr + gi] as i64;
+                }
+                let expect = acc as f32 * (qa.scales[i] / 1024.0);
+                let gv = got[(i, jn)];
+                assert!(
+                    (gv - expect).abs() <= expect.abs() * 1e-5 + 1e-5,
+                    "seed={seed} ({i},{jn}) {gv} vs {expect}"
+                );
+            }
+        }
+    }
+}
+
+/// Quantized activations always reconstruct within half a scale.
+#[test]
+fn prop_act_quant_bound() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let m = 1 + rng.below(8);
+        let k = 8 * (1 + rng.below(16));
+        let x = Mat::randn(m, k, 0.1 + rng.uniform() * 3.0, &mut rng);
+        let qa = QuantAct::quantize(&x, Bits::B8);
+        for r in 0..m {
+            for c in 0..k {
+                let re = qa.q[r * k + c] as f32 * qa.scales[r];
+                assert!((re - x[(r, c)]).abs() <= 0.5 * qa.scales[r] + 1e-6, "seed={seed}");
+            }
+        }
+    }
+}
