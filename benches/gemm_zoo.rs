@@ -1,5 +1,5 @@
 //! Micro-benchmarks over the whole kernel zoo at one canonical shape — the
-//! raw data behind EXPERIMENTS.md §Perf. (criterion is unavailable offline;
+//! raw data behind the perf numbers indexed in DESIGN.md. (criterion is unavailable offline;
 //! `integer_scale::bench_harness` provides the same warmup/median protocol.)
 
 use integer_scale::bench_harness::{black_box, Bencher};

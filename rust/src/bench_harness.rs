@@ -1,8 +1,8 @@
 //! Minimal criterion-style benchmark harness (the real criterion crate is
 //! not available in this offline environment). Provides warmup, repeated
 //! sampling, median/min/mean statistics, and the same console layout, so
-//! `cargo bench` output stays comparable across the perf-pass iterations
-//! recorded in EXPERIMENTS.md §Perf.
+//! `cargo bench` output stays comparable across perf passes (see the
+//! experiment index in DESIGN.md).
 
 use std::time::{Duration, Instant};
 

@@ -1,14 +1,21 @@
-//! The serving engine: continuous batching over the quantized transformer.
+//! The serving engine: continuous batching over the quantized transformer,
+//! backed by one shared block-paged KV pool ([`crate::kvpool`]).
 //!
-//! Owns the model, per-sequence KV caches, the scheduler, and metrics. The
-//! synchronous [`Engine::run_to_completion`] drives a whole workload (used
-//! by benches and the table harness); [`Engine::step`] exposes the inner
-//! loop for the async server in `examples/serve_quantized.rs`.
+//! Owns the model, the block pool, the scheduler, and metrics. Admission is
+//! incremental (blocks for the *current* context, not the worst case);
+//! sequences whose prompt prefix is already cached skip that part of
+//! prefill entirely; and when the pool cannot supply a growth block the
+//! youngest running sequence is preempted back to the queue front instead
+//! of the engine refusing admission. The synchronous
+//! [`Engine::run_to_completion`] drives a whole workload (used by benches
+//! and the table harness); [`Engine::step`] exposes the inner loop for the
+//! async server in `examples/serve_quantized.rs`.
 
 use super::metrics::Metrics;
-use super::request::{Request, Response, Tracked};
+use super::request::{FinishReason, Request, Response, Tracked};
 use super::scheduler::Scheduler;
 use crate::data::tokenizer::EOS;
+use crate::kvpool::{BlockPool, PoolGauges, BLOCK_SIZE};
 use crate::model::sampler::{sample, Sampling};
 use crate::model::{KvCache, Transformer};
 use crate::tensor::Rng;
@@ -18,7 +25,8 @@ use std::time::Instant;
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     pub max_batch: usize,
-    /// KV budget in tokens (sum over running sequences).
+    /// KV budget in tokens across all running sequences; rounded down to
+    /// whole blocks of [`BLOCK_SIZE`] (minimum one block).
     pub kv_token_budget: usize,
     pub seed: u64,
 }
@@ -33,28 +41,37 @@ struct Running {
     tracked: Tracked,
     cache: KvCache,
     next_token: u32,
+    /// Monotone admission stamp — preemption targets the youngest.
+    admit_seq: u64,
 }
 
 pub struct Engine {
     pub model: Arc<Transformer>,
     pub cfg: EngineConfig,
     scheduler: Scheduler,
+    pool: Arc<BlockPool>,
     running: Vec<Running>,
     rng: Rng,
     pub metrics: Metrics,
     finished: Vec<Response>,
+    admit_counter: u64,
 }
 
 impl Engine {
     pub fn new(model: Arc<Transformer>, cfg: EngineConfig) -> Self {
+        let n_blocks = (cfg.kv_token_budget / BLOCK_SIZE).max(1);
+        let pool =
+            BlockPool::shared(model.config.n_layers, model.config.d_model, n_blocks, BLOCK_SIZE);
         Engine {
-            scheduler: Scheduler::new(cfg.max_batch, cfg.kv_token_budget),
+            scheduler: Scheduler::new(cfg.max_batch, n_blocks, BLOCK_SIZE),
+            pool,
             model,
             cfg,
             running: Vec::new(),
             rng: Rng::new(cfg.seed),
-            metrics: Metrics::default(),
+            metrics: Metrics { pool_blocks_total: n_blocks, ..Metrics::default() },
             finished: Vec::new(),
+            admit_counter: 0,
         }
     }
 
@@ -67,42 +84,50 @@ impl Engine {
         self.scheduler.queue_depth() + self.running.len()
     }
 
-    /// One engine iteration: admit + prefill newcomers, batched decode for
+    /// Live pool occupancy / prefix-cache snapshot.
+    pub fn pool_gauges(&self) -> PoolGauges {
+        self.pool.gauges()
+    }
+
+    /// One engine iteration: admit + prefill newcomers (prefix-cache hits
+    /// skip recompute), preempt on pool pressure, batched decode for
     /// everyone, retire finished sequences. Returns responses completed in
     /// this step.
     pub fn step(&mut self) -> Vec<Response> {
         // 1. admission + prefill
-        for tracked in self.scheduler.admit() {
-            // degenerate requests complete immediately with no tokens
-            if tracked.req.prompt.is_empty() || tracked.req.max_new_tokens == 0 {
-                self.scheduler.retire(&tracked.req);
-                self.metrics.completed += 1;
-                self.finished.push(Response {
-                    id: tracked.req.id,
-                    prompt_len: tracked.req.prompt.len(),
-                    tokens: Vec::new(),
-                    ttft: std::time::Duration::ZERO,
-                    total: tracked.arrived.elapsed(),
-                });
+        let admitted = self.scheduler.admit(self.pool.available_blocks());
+        if admitted.is_empty() && self.running.is_empty() {
+            // a front request too large to EVER fit is failed rather than
+            // wedging the queue forever
+            if let Some(t) = self.scheduler.pop_never_fits() {
+                self.finish(t, FinishReason::Failed);
+            }
+        }
+        for tracked in admitted {
+            // a context beyond the model's window can never prefill — fail
+            // it instead of overflowing the cache
+            if Scheduler::context_len(&tracked) > self.model.config.max_seq {
+                self.scheduler.retire();
+                self.finish(tracked, FinishReason::Failed);
                 continue;
             }
-            let t0 = Instant::now();
-            let mut cache = self.model.new_cache();
-            let logits = self.model.prefill(&tracked.req.prompt, &mut cache);
-            let last = logits.row(tracked.req.prompt.len() - 1);
-            let tok = sample(last, tracked.req.sampling, &mut self.rng);
-            let mut tr = tracked;
-            tr.first_token_at = Some(Instant::now());
-            tr.generated.push(tok);
-            self.metrics.prefill_tokens += tr.req.prompt.len() as u64;
-            self.metrics.prefill_time += t0.elapsed();
-            self.running.push(Running { tracked: tr, cache, next_token: tok });
+            // degenerate requests complete immediately with no tokens
+            if tracked.req.prompt.is_empty() || tracked.req.max_new_tokens == 0 {
+                self.scheduler.retire();
+                self.finish(tracked, FinishReason::Stop);
+                continue;
+            }
+            self.prefill_one(tracked);
         }
 
         // 2. retire sequences that completed on the prefill token
         self.retire_done();
 
-        // 3. batched decode step
+        // 3. every running sequence must be able to grow one token; on
+        //    pool exhaustion, preempt the youngest instead of crashing
+        self.ensure_decode_headroom();
+
+        // 4. batched decode step
         if !self.running.is_empty() {
             let t0 = Instant::now();
             let tokens: Vec<u32> = self.running.iter().map(|r| r.next_token).collect();
@@ -119,7 +144,89 @@ impl Engine {
             }
             self.retire_done();
         }
+
+        // 5. mirror pool gauges into the metrics snapshot
+        let g = self.pool.gauges();
+        self.metrics.peak_blocks_in_use = g.peak_blocks_in_use;
+        self.metrics.prefix_lookups = g.prefix_lookups;
+        self.metrics.prefix_hits = g.prefix_hits;
         std::mem::take(&mut self.finished)
+    }
+
+    /// Prefill one admitted request into a fresh pool-backed cache. A
+    /// sequence resuming after preemption re-prefills `prompt + generated`
+    /// (minus the newest token, which stays pending as `next_token`); its
+    /// still-cached full blocks make that re-prefill mostly free.
+    fn prefill_one(&mut self, tracked: Tracked) {
+        let t0 = Instant::now();
+        let mut tr = tracked;
+        let mut cache = KvCache::new_in_pool(self.pool.clone(), self.model.config.max_seq);
+        let resumed = !tr.generated.is_empty();
+        let ctx: Vec<u32> = if resumed {
+            let keep = tr.generated.len() - 1;
+            tr.req.prompt.iter().chain(tr.generated[..keep].iter()).copied().collect()
+        } else {
+            tr.req.prompt.clone()
+        };
+        let reused = cache.match_prefix(&ctx);
+        self.metrics.prefix_hit_tokens += reused as u64;
+        let logits = self.model.prefill(&ctx[reused..], &mut cache);
+        self.metrics.prefill_tokens += (ctx.len() - reused) as u64;
+        self.metrics.prefill_time += t0.elapsed();
+        let next = if resumed {
+            *tr.generated.last().unwrap()
+        } else {
+            let tok = sample(logits.row(ctx.len() - reused - 1), tr.req.sampling, &mut self.rng);
+            tr.first_token_at = Some(Instant::now());
+            tr.generated.push(tok);
+            tok
+        };
+        self.admit_counter += 1;
+        self.running.push(Running {
+            tracked: tr,
+            cache,
+            next_token: next,
+            admit_seq: self.admit_counter,
+        });
+    }
+
+    /// Preempt youngest-first until every running sequence that needs a
+    /// growth block can get one. A lone sequence that still cannot grow has
+    /// outgrown the pool itself and is finished with what it has.
+    fn ensure_decode_headroom(&mut self) {
+        loop {
+            let needed =
+                self.running.iter().filter(|r| r.cache.needs_block_for_next()).count();
+            if needed == 0 || needed <= self.pool.available_blocks() {
+                return;
+            }
+            if self.running.len() >= 2 {
+                let vi = (0..self.running.len())
+                    .max_by_key(|&i| self.running[i].admit_seq)
+                    .unwrap();
+                let Running { tracked, cache, .. } = self.running.remove(vi);
+                drop(cache); // returns its blocks to the pool
+                self.metrics.preemptions += 1;
+                self.scheduler.preempt_requeue(tracked);
+            } else {
+                let r = self.running.remove(0);
+                self.scheduler.retire();
+                self.finish(r.tracked, FinishReason::Capacity);
+                return;
+            }
+        }
+    }
+
+    fn finish(&mut self, t: Tracked, finish: FinishReason) {
+        self.metrics.completed += 1;
+        self.finished.push(Response {
+            id: t.req.id,
+            prompt_len: t.req.prompt.len(),
+            tokens: t.generated,
+            finish,
+            ttft: t.first_token_at.map(|at| at - t.arrived).unwrap_or_default(),
+            total: t.arrived.elapsed(),
+        });
     }
 
     fn retire_done(&mut self) {
@@ -132,21 +239,14 @@ impl Engine {
             // cache capacity guard: stop before overflow
             let done_cap = r.cache.seq_len + 1 >= r.cache.capacity;
             if done_len || done_eos || done_cap {
+                let reason = if done_len || done_eos {
+                    FinishReason::Stop
+                } else {
+                    FinishReason::Capacity
+                };
                 let r = self.running.swap_remove(i);
-                self.scheduler.retire(&r.tracked.req);
-                let now = Instant::now();
-                self.metrics.completed += 1;
-                self.finished.push(Response {
-                    id: r.tracked.req.id,
-                    prompt_len: r.tracked.req.prompt.len(),
-                    tokens: r.tracked.generated,
-                    ttft: r
-                        .tracked
-                        .first_token_at
-                        .map(|t| t - r.tracked.arrived)
-                        .unwrap_or_default(),
-                    total: now - r.tracked.arrived,
-                });
+                self.scheduler.retire();
+                self.finish(r.tracked, reason);
             } else {
                 i += 1;
             }
@@ -245,5 +345,65 @@ mod tests {
         e.submit(Request::greedy(0, vec![2, 3], 4));
         let r = &e.run_to_completion()[0];
         assert!(r.ttft <= r.total);
+    }
+
+    #[test]
+    fn preemption_under_pool_pressure_completes_everything() {
+        // 4-block pool (64 tokens), four sequences that each grow to 32
+        // tokens: the pool can only hold two finished sequences at once, so
+        // the engine must preempt and resume to finish all four.
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        let mut e = Engine::new(model, EngineConfig { max_batch: 8, kv_token_budget: 64, seed: 1 });
+        for i in 0..4 {
+            let mut r = Request::greedy(i, vec![(i % 20) as u32 + 4; 8], 24);
+            r.stop_at_eos = false;
+            e.submit(r);
+        }
+        let res = e.run_to_completion();
+        assert_eq!(res.len(), 4);
+        for r in &res {
+            assert_eq!(r.tokens.len(), 24, "req {} truncated", r.id);
+        }
+        assert!(e.metrics.preemptions > 0, "tight pool must preempt");
+        assert_eq!(e.metrics.completed, 4);
+    }
+
+    #[test]
+    fn preemption_preserves_greedy_output() {
+        // the same workload with an ample pool must produce identical
+        // greedy tokens — preemption/resume is semantically invisible
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let mk = |budget: usize| {
+            let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+            let mut e = Engine::new(model, EngineConfig { max_batch: 8, kv_token_budget: budget, seed: 1 });
+            for i in 0..4 {
+                let mut r = Request::greedy(i, vec![(i % 20) as u32 + 4; 8], 24);
+                r.stop_at_eos = false;
+                e.submit(r);
+            }
+            e.run_to_completion()
+        };
+        let tight = mk(64);
+        let ample = mk(4096);
+        for (a, b) in tight.iter().zip(ample.iter()) {
+            assert_eq!(a.tokens, b.tokens, "preemption changed tokens for req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn oversized_request_fails_instead_of_wedging() {
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        // one-block pool: a 40-token prompt (3 blocks) can never fit
+        let mut e = Engine::new(model, EngineConfig { max_batch: 4, kv_token_budget: 16, seed: 1 });
+        e.submit(Request::greedy(0, vec![5; 40], 4));
+        e.submit(Request::greedy(1, vec![6; 4], 3));
+        let res = e.run_to_completion();
+        assert_eq!(res.len(), 2);
+        assert!(res[0].tokens.is_empty(), "impossible request fails empty");
+        assert_eq!(res[0].finish, FinishReason::Failed);
+        assert!(!res[1].tokens.is_empty(), "small request still served");
+        assert_eq!(res[1].finish, FinishReason::Stop);
     }
 }

@@ -1,4 +1,5 @@
-//! Serving metrics: throughput, latency decomposition, batch occupancy.
+//! Serving metrics: throughput, latency decomposition, batch occupancy,
+//! and KV-pool gauges (blocks in use, prefix hit rate, preemptions).
 
 use std::time::Duration;
 
@@ -6,6 +7,8 @@ use std::time::Duration;
 pub struct Metrics {
     pub submitted: u64,
     pub completed: u64,
+    /// Prompt tokens actually computed at prefill (prefix-cache hits are
+    /// excluded — they are counted in `prefix_hit_tokens`).
     pub prefill_tokens: u64,
     pub decode_tokens: u64,
     pub prefill_time: Duration,
@@ -13,6 +16,16 @@ pub struct Metrics {
     /// Batch-size histogram over decode steps (index = batch size).
     pub batch_hist: Vec<u64>,
     pub max_batch_seen: usize,
+    /// Running sequences evicted back to the queue on pool exhaustion.
+    pub preemptions: u64,
+    /// Prompt tokens served from cached prefix blocks instead of prefill.
+    pub prefix_hit_tokens: u64,
+    /// Prefix-index probes / hits (block granularity, from the pool).
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    /// KV pool size and high-water occupancy, in blocks.
+    pub pool_blocks_total: usize,
+    pub peak_blocks_in_use: usize,
 }
 
 impl Metrics {
@@ -38,16 +51,30 @@ impl Metrics {
         }
     }
 
+    /// Fraction of prefix-index probes that hit (block granularity).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} prefill_tok={} decode_tok={} prefill={:?} decode={:?} mean_batch={:.2}",
+            "submitted={} completed={} prefill_tok={} decode_tok={} prefill={:?} decode={:?} mean_batch={:.2} peak_blocks={}/{} preempt={} prefix_hit_tok={} hit_rate={:.1}%",
             self.submitted,
             self.completed,
             self.prefill_tokens,
             self.decode_tokens,
             self.prefill_time,
             self.decode_time,
-            self.mean_batch()
+            self.mean_batch(),
+            self.peak_blocks_in_use,
+            self.pool_blocks_total,
+            self.preemptions,
+            self.prefix_hit_tokens,
+            100.0 * self.prefix_hit_rate(),
         )
     }
 }
@@ -70,5 +97,15 @@ mod tests {
     #[test]
     fn empty_mean_batch_zero() {
         assert_eq!(Metrics::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn prefix_hit_rate_handles_zero_lookups() {
+        let mut m = Metrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefix_lookups = 8;
+        m.prefix_hits = 6;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(m.summary().contains("hit_rate"));
     }
 }

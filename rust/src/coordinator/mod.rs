@@ -14,6 +14,6 @@ pub mod scheduler;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
-pub use request::{Request, RequestId, Response};
+pub use request::{FinishReason, Request, RequestId, Response};
 pub use router::Router;
 pub use scheduler::{Scheduler, SchedulerState};

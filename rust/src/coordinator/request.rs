@@ -22,12 +22,26 @@ impl Request {
     }
 }
 
+/// Why a response ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Normal completion: EOS, `max_new_tokens` reached, or an empty ask.
+    Stop,
+    /// Truncated by KV capacity (model window, or the pool could not grow
+    /// a lone running sequence).
+    Capacity,
+    /// Never servable: the context exceeds the model window or the whole
+    /// KV pool, so generation was not attempted.
+    Failed,
+}
+
 /// Completed generation with per-request latency accounting.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: RequestId,
     pub prompt_len: usize,
     pub tokens: Vec<u32>,
+    pub finish: FinishReason,
     /// Time to first token (prefill + queueing).
     pub ttft: Duration,
     /// Total time in the engine.
@@ -69,6 +83,7 @@ mod tests {
             id: 1,
             prompt_len: 4,
             tokens: vec![9],
+            finish: FinishReason::Stop,
             ttft: Duration::from_millis(5),
             total: Duration::from_millis(9),
         };
@@ -81,6 +96,7 @@ mod tests {
             id: 1,
             prompt_len: 4,
             tokens: vec![9, 9, 9],
+            finish: FinishReason::Stop,
             ttft: Duration::from_millis(10),
             total: Duration::from_millis(30),
         };

@@ -1,13 +1,19 @@
-//! Continuous-batching scheduler (vLLM-style).
+//! Continuous-batching scheduler (vLLM-style) over the paged KV pool.
 //!
-//! Maintains a FIFO waiting queue and a running set. Each engine step:
-//! 1. **admit**: move waiting requests into the running set while the batch
-//!    slot and KV-memory budgets allow (prefill happens on admission);
-//! 2. **decode**: one batched decode step over every running sequence;
-//! 3. **retire**: sequences hitting EOS / max_new leave and free their KV.
+//! Maintains a FIFO waiting queue and a running-set count. Each engine step:
+//! 1. **admit**: move waiting requests into the running set while batch
+//!    slots last and the pool has blocks for each request's *current*
+//!    context (incremental block accounting — no worst-case
+//!    `prompt + max_new` reservation);
+//! 2. **decode**: one batched decode step over every running sequence,
+//!    with the engine preempting the youngest running sequence back to the
+//!    queue front when the pool cannot supply a growth block;
+//! 3. **retire**: sequences hitting EOS / max_new leave and free their
+//!    blocks.
 //!
-//! The scheduler is pure state-machine logic (no model calls) so its
-//! invariants are directly proptest-able (`rust/tests/proptest_scheduler.rs`).
+//! The scheduler is pure state-machine logic (no model or pool calls — the
+//! engine passes in the pool's available-block count) so its invariants are
+//! directly proptest-able (`rust/tests/property_invariants.rs`).
 
 use super::request::{Request, RequestId, Tracked};
 use std::collections::VecDeque;
@@ -22,9 +28,10 @@ pub struct Admission {
 #[derive(Clone, Debug)]
 pub struct SchedulerState {
     pub max_batch: usize,
-    /// KV budget in tokens across all running sequences.
-    pub kv_token_budget: usize,
-    pub running_tokens: usize,
+    /// Total blocks in the engine's KV pool (the admission ceiling).
+    pub total_blocks: usize,
+    /// Tokens per block.
+    pub block_size: usize,
     pub running_count: usize,
 }
 
@@ -35,13 +42,13 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    pub fn new(max_batch: usize, kv_token_budget: usize) -> Self {
+    pub fn new(max_batch: usize, total_blocks: usize, block_size: usize) -> Self {
         Scheduler {
             waiting: VecDeque::new(),
             state: SchedulerState {
                 max_batch,
-                kv_token_budget,
-                running_tokens: 0,
+                total_blocks,
+                block_size: block_size.max(1),
                 running_count: 0,
             },
         }
@@ -55,36 +62,77 @@ impl Scheduler {
         self.waiting.len()
     }
 
-    /// Worst-case KV tokens a request will need (prompt + full generation).
-    pub fn kv_need(req: &Request) -> usize {
-        req.prompt.len() + req.max_new_tokens
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.state.block_size)
     }
 
-    /// Pop admissible requests (FIFO, no head-of-line skip — matches vLLM's
-    /// default policy so TTFT is fair).
-    pub fn admit(&mut self) -> Vec<Tracked> {
+    /// Current context of a request: prompt plus everything generated so
+    /// far (non-empty for sequences resuming after preemption).
+    pub fn context_len(t: &Tracked) -> usize {
+        t.req.prompt.len() + t.generated.len()
+    }
+
+    /// Blocks a request needs *now* to be admitted (its context, not its
+    /// worst case — growth is paid one block at a time during decode).
+    pub fn admission_need(&self, t: &Tracked) -> usize {
+        self.blocks_for(Self::context_len(t))
+    }
+
+    /// Pop admissible requests given `available` free-or-evictable blocks
+    /// in the pool (FIFO, no head-of-line skip — matches vLLM's default
+    /// policy so TTFT is fair). Normal admissions keep one spare block of
+    /// headroom against immediate decode growth; when nothing is running,
+    /// the front request is admitted as long as it can *ever* fit, which
+    /// guarantees forward progress on a drained pool.
+    pub fn admit(&mut self, mut available: usize) -> Vec<Tracked> {
         let mut out = Vec::new();
         while let Some(front) = self.waiting.front() {
-            let need = Self::kv_need(&front.req);
-            let fits_batch = self.state.running_count + out.len() < self.state.max_batch;
-            let fits_kv = self.state.running_tokens + need <= self.state.kv_token_budget;
-            if fits_batch && fits_kv {
-                self.state.running_tokens += need;
-                let t = self.waiting.pop_front().unwrap();
-                out.push(t);
-            } else {
+            if self.state.running_count + out.len() >= self.state.max_batch {
                 break;
             }
+            let need = self.admission_need(front);
+            let fits_now = need + 1 <= available;
+            let sole_survivor = self.state.running_count == 0
+                && out.is_empty()
+                && need <= self.state.total_blocks;
+            if !(fits_now || sole_survivor) {
+                break;
+            }
+            available = available.saturating_sub(need);
+            out.push(self.waiting.pop_front().unwrap());
         }
         self.state.running_count += out.len();
         out
     }
 
-    /// Release a retired sequence's budget.
-    pub fn retire(&mut self, req: &Request) {
-        self.state.running_tokens =
-            self.state.running_tokens.saturating_sub(Self::kv_need(req));
+    /// Release a retired sequence's running slot (its blocks return to the
+    /// pool when the engine drops its cache).
+    pub fn retire(&mut self) {
         self.state.running_count = self.state.running_count.saturating_sub(1);
+    }
+
+    /// Preempt a running sequence: it re-enters at the queue *front* so it
+    /// is the next admitted, resuming by re-prefilling its context
+    /// (recompute-style preemption; prefix caching usually makes the
+    /// re-prefill nearly free because its full blocks are still cached).
+    pub fn preempt_requeue(&mut self, t: Tracked) {
+        self.retire();
+        self.waiting.push_front(t);
+    }
+
+    /// If nothing is running and the front request could never fit even in
+    /// an empty pool, pop it so the engine can fail it instead of spinning.
+    pub fn pop_never_fits(&mut self) -> Option<Tracked> {
+        if self.state.running_count > 0 {
+            return None;
+        }
+        let front = self.waiting.front()?;
+        if self.admission_need(front) > self.state.total_blocks {
+            self.waiting.pop_front()
+        } else {
+            None
+        }
     }
 }
 
@@ -98,41 +146,81 @@ mod tests {
 
     #[test]
     fn admits_up_to_batch_limit() {
-        let mut s = Scheduler::new(2, 1000);
+        let mut s = Scheduler::new(2, 64, 16);
         for i in 0..5 {
             s.submit(req(i, 4, 4));
         }
-        let a = s.admit();
+        let a = s.admit(64);
         assert_eq!(a.len(), 2);
         assert_eq!(s.queue_depth(), 3);
         // no more slots
-        assert!(s.admit().is_empty());
+        assert!(s.admit(64).is_empty());
         // retire one → one more admitted
-        s.retire(&a[0].req);
-        assert_eq!(s.admit().len(), 1);
+        s.retire();
+        assert_eq!(s.admit(64).len(), 1);
     }
 
     #[test]
-    fn kv_budget_blocks_admission() {
-        let mut s = Scheduler::new(8, 20);
-        s.submit(req(0, 8, 8)); // needs 16
-        s.submit(req(1, 8, 8)); // would exceed 20
-        let a = s.admit();
+    fn block_budget_blocks_admission() {
+        // pool of 2 blocks; each request's context needs 2
+        let mut s = Scheduler::new(8, 2, 16);
+        s.submit(req(0, 20, 8));
+        s.submit(req(1, 20, 8));
+        // first admitted via the sole-survivor rule (2 + 1 headroom > 2)
+        let a = s.admit(2);
         assert_eq!(a.len(), 1);
-        assert_eq!(s.state.running_tokens, 16);
-        s.retire(&a[0].req);
-        assert_eq!(s.state.running_tokens, 0);
-        assert_eq!(s.admit().len(), 1);
+        assert_eq!(a[0].req.id, 0);
+        // pool drained: second waits while the first runs
+        assert!(s.admit(0).is_empty());
+        s.retire();
+        assert_eq!(s.admit(2).len(), 1);
     }
 
     #[test]
     fn fifo_no_skip() {
         // a huge request at the head must NOT be skipped in favour of a
-        // small one behind it (fairness invariant).
-        let mut s = Scheduler::new(8, 10);
-        s.submit(req(0, 50, 50)); // never fits
+        // small one behind it (fairness invariant)
+        let mut s = Scheduler::new(8, 4, 16);
+        s.submit(req(0, 200, 50)); // needs 13 blocks, can never fit
         s.submit(req(1, 2, 2));
-        assert!(s.admit().is_empty());
+        assert!(s.admit(4).is_empty());
         assert_eq!(s.queue_depth(), 2);
+        // the engine fails the impossible head, then the small one admits
+        let dead = s.pop_never_fits().expect("head can never fit");
+        assert_eq!(dead.req.id, 0);
+        let a = s.admit(4);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].req.id, 1);
+    }
+
+    #[test]
+    fn preempted_request_is_next_admitted() {
+        let mut s = Scheduler::new(4, 16, 16);
+        s.submit(req(0, 4, 4));
+        s.submit(req(1, 4, 4));
+        let mut a = s.admit(16);
+        assert_eq!(a.len(), 2);
+        let victim = a.pop().unwrap();
+        let victim_id = victim.req.id;
+        s.preempt_requeue(victim);
+        assert_eq!(s.state.running_count, 1);
+        // the preempted request outranks everything queued behind it
+        s.submit(req(2, 4, 4));
+        let b = s.admit(16);
+        assert_eq!(b[0].req.id, victim_id);
+    }
+
+    #[test]
+    fn headroom_spares_one_block() {
+        // 4 available: a 3-block context admits only via sole-survivor
+        let mut s = Scheduler::new(8, 8, 16);
+        s.submit(req(0, 40, 8)); // 3 blocks
+        s.submit(req(1, 40, 8)); // 3 blocks
+        let a = s.admit(8);
+        // 3+1 <= 8 admits the first; 3+1 <= 5 admits the second
+        assert_eq!(a.len(), 2);
+        s.submit(req(2, 40, 8));
+        // 2 running, 8 - 6 = 2 available: 3+1 > 2 and not sole survivor
+        assert!(s.admit(2).is_empty());
     }
 }

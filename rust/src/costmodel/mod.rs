@@ -7,7 +7,7 @@
 //! / expansion work each scheme performs (taken from [`crate::gemm::trace`]),
 //! with per-scheme tensor-core utilization factors calibrated once against
 //! the paper's published ratios (§DESIGN.md Substitutions). The *measured*
-//! counterpart on CPU is `benches/` — both views appear in EXPERIMENTS.md.
+//! counterpart on CPU is `benches/` — see the experiment index in DESIGN.md.
 
 use crate::gemm::trace::{trace, OpTrace};
 use crate::gemm::Kernel;

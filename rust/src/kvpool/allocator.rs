@@ -1,0 +1,524 @@
+//! The global block pool: allocation, refcounted sharing, copy-on-write,
+//! and LRU eviction of prefix-cached blocks.
+//!
+//! One `BlockPool` backs every sequence an engine serves. Sequences hold
+//! *block tables* (`Vec<BlockId>`) and every table entry owns one refcount
+//! on its block. Full blocks that are also registered in the prefix index
+//! are not freed when their last reference drops — they move to an LRU
+//! *evictable* list and keep their K/V resident so a later sequence with
+//! the same prompt prefix can resurrect them instead of recomputing
+//! prefill. Allocation takes free blocks first, then evicts the
+//! least-recently-released cached block, then (for growable private pools
+//! only) grows the slot array.
+//!
+//! All mutation goes through one mutex, taken once per high-level table
+//! operation (append a batch of rows, gather a layer, fork, drop), so the
+//! hot decode path pays two lock acquisitions per layer per sequence.
+
+use super::block::{block_bytes, BlockData, BlockId};
+use super::prefix::{chain_hash, PrefixIndex, HASH_SEED};
+use crate::tensor::Mat;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Pool shape + policy.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    pub n_layers: usize,
+    pub d_model: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+    /// Blocks in the pool (initial count for growable pools).
+    pub n_blocks: usize,
+    /// Keep a prefix index and an evictable list of cached blocks.
+    pub enable_prefix: bool,
+    /// Grow instead of failing on exhaustion (private per-sequence pools).
+    pub growable: bool,
+}
+
+impl PoolConfig {
+    pub fn block_bytes(&self) -> usize {
+        block_bytes(self.n_layers, self.block_size, self.d_model)
+    }
+}
+
+/// Occupancy and prefix-cache counters, snapshotted under one lock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolGauges {
+    pub total_blocks: usize,
+    pub free_blocks: usize,
+    /// Refcount-0 blocks kept resident for the prefix cache.
+    pub evictable_blocks: usize,
+    pub blocks_in_use: usize,
+    pub peak_blocks_in_use: usize,
+    /// Blocks whose K/V buffers have ever been materialized (high-water).
+    pub resident_blocks: usize,
+    pub block_bytes: usize,
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+    pub prefix_evictions: u64,
+}
+
+impl PoolGauges {
+    /// Blocks an allocation could obtain right now (free + evictable).
+    pub fn available(&self) -> usize {
+        self.free_blocks + self.evictable_blocks
+    }
+
+    pub fn in_use_bytes(&self) -> usize {
+        self.blocks_in_use * self.block_bytes
+    }
+
+    pub fn peak_in_use_bytes(&self) -> usize {
+        self.peak_blocks_in_use * self.block_bytes
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_blocks * self.block_bytes
+    }
+
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Slot {
+    /// K/V buffers, materialized on first allocation and then reused.
+    data: Option<BlockData>,
+    refcount: usize,
+    /// Chain hash this block is registered under in the prefix index.
+    hash: Option<u64>,
+}
+
+#[derive(Debug)]
+struct PoolInner {
+    cfg: PoolConfig,
+    slots: Vec<Slot>,
+    free: Vec<BlockId>,
+    /// Refcount-0 blocks still registered in the prefix index, LRU order
+    /// (front = least recently released = evicted first).
+    evictable: VecDeque<BlockId>,
+    prefix: PrefixIndex,
+    in_use: usize,
+    peak_in_use: usize,
+    prefix_lookups: u64,
+    prefix_hits: u64,
+    prefix_evictions: u64,
+}
+
+impl PoolInner {
+    fn alloc(&mut self) -> Option<BlockId> {
+        let id = if let Some(id) = self.free.pop() {
+            id
+        } else if let Some(id) = self.evict_lru() {
+            id
+        } else if self.cfg.growable {
+            self.slots.push(Slot { data: None, refcount: 0, hash: None });
+            self.slots.len() - 1
+        } else {
+            return None;
+        };
+        let cfg = self.cfg;
+        let slot = &mut self.slots[id];
+        debug_assert_eq!(slot.refcount, 0, "allocating a referenced block");
+        slot.refcount = 1;
+        slot.hash = None;
+        if slot.data.is_none() {
+            slot.data = Some(BlockData::zeroed(cfg.n_layers, cfg.block_size, cfg.d_model));
+        }
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Some(id)
+    }
+
+    /// Reclaim the least-recently-released cached block, unregistering it.
+    fn evict_lru(&mut self) -> Option<BlockId> {
+        let id = self.evictable.pop_front()?;
+        if let Some(h) = self.slots[id].hash.take() {
+            self.prefix.remove(h);
+        }
+        self.prefix_evictions += 1;
+        Some(id)
+    }
+
+    fn retain(&mut self, id: BlockId) {
+        if self.slots[id].refcount == 0 {
+            // resurrect a cached block from the evictable list
+            if let Some(p) = self.evictable.iter().position(|&b| b == id) {
+                self.evictable.remove(p);
+            }
+            self.in_use += 1;
+            self.peak_in_use = self.peak_in_use.max(self.in_use);
+        }
+        self.slots[id].refcount += 1;
+    }
+
+    fn release(&mut self, id: BlockId) {
+        let enable_prefix = self.cfg.enable_prefix;
+        let slot = &mut self.slots[id];
+        assert!(slot.refcount > 0, "KV block double-free: block {id} already at refcount 0");
+        slot.refcount -= 1;
+        if slot.refcount == 0 {
+            self.in_use -= 1;
+            if enable_prefix && slot.hash.is_some() {
+                self.evictable.push_back(id);
+            } else {
+                slot.hash = None;
+                self.free.push(id);
+            }
+        }
+    }
+
+    /// Private copy of a shared block for a writer (copy-on-write). The
+    /// writer's reference to the original is released.
+    fn cow_clone(&mut self, id: BlockId) -> BlockId {
+        debug_assert!(self.slots[id].refcount > 1, "copy-on-write of an exclusive block");
+        let nid = self.alloc().expect("KV block pool exhausted (copy-on-write)");
+        let src = self.slots[id].data.clone().expect("copy-on-write of unallocated block");
+        self.slots[nid].data = Some(src);
+        self.release(id);
+        nid
+    }
+}
+
+/// The shared block-paged KV store. Cheaply clonable via `Arc`; every
+/// [`crate::model::KvCache`] is a view (block table) over one of these.
+#[derive(Debug)]
+pub struct BlockPool {
+    cfg: PoolConfig,
+    inner: Mutex<PoolInner>,
+}
+
+impl BlockPool {
+    pub fn new(cfg: PoolConfig) -> Arc<Self> {
+        let slots = (0..cfg.n_blocks)
+            .map(|_| Slot { data: None, refcount: 0, hash: None })
+            .collect::<Vec<_>>();
+        // pop from the back → allocate low ids first
+        let free = (0..cfg.n_blocks).rev().collect::<Vec<_>>();
+        Arc::new(BlockPool {
+            cfg,
+            inner: Mutex::new(PoolInner {
+                cfg,
+                slots,
+                free,
+                evictable: VecDeque::new(),
+                prefix: PrefixIndex::new(),
+                in_use: 0,
+                peak_in_use: 0,
+                prefix_lookups: 0,
+                prefix_hits: 0,
+                prefix_evictions: 0,
+            }),
+        })
+    }
+
+    /// Fixed-size engine pool with prefix caching enabled.
+    pub fn shared(n_layers: usize, d_model: usize, n_blocks: usize, block_size: usize) -> Arc<Self> {
+        BlockPool::new(PoolConfig {
+            n_layers,
+            d_model,
+            block_size,
+            n_blocks: n_blocks.max(1),
+            enable_prefix: true,
+            growable: false,
+        })
+    }
+
+    /// Growable single-sequence pool (standalone caches outside an engine).
+    pub fn private(
+        n_layers: usize,
+        d_model: usize,
+        capacity_tokens: usize,
+        block_size: usize,
+    ) -> Arc<Self> {
+        let n_blocks = capacity_tokens.div_ceil(block_size);
+        BlockPool::new(PoolConfig {
+            n_layers,
+            d_model,
+            block_size,
+            n_blocks,
+            enable_prefix: false,
+            growable: true,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.cfg.d_model
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.cfg.block_bytes()
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.cfg.enable_prefix
+    }
+
+    pub fn gauges(&self) -> PoolGauges {
+        let inner = self.inner.lock().unwrap();
+        PoolGauges {
+            total_blocks: inner.slots.len(),
+            free_blocks: inner.free.len(),
+            evictable_blocks: inner.evictable.len(),
+            blocks_in_use: inner.in_use,
+            peak_blocks_in_use: inner.peak_in_use,
+            resident_blocks: inner.slots.iter().filter(|s| s.data.is_some()).count(),
+            block_bytes: self.cfg.block_bytes(),
+            prefix_lookups: inner.prefix_lookups,
+            prefix_hits: inner.prefix_hits,
+            prefix_evictions: inner.prefix_evictions,
+        }
+    }
+
+    /// Blocks an allocation could obtain right now (free + evictable).
+    pub fn available_blocks(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.free.len() + inner.evictable.len()
+    }
+
+    /// Current refcount of a block (test / introspection hook).
+    pub fn refcount(&self, id: BlockId) -> usize {
+        self.inner.lock().unwrap().slots[id].refcount
+    }
+
+    // ---------------------------------------------------------- raw ops
+
+    /// Allocate one block (refcount 1), or `None` if the pool is exhausted.
+    pub fn try_alloc(&self) -> Option<BlockId> {
+        self.inner.lock().unwrap().alloc()
+    }
+
+    /// Add one reference to a block (resurrects evictable blocks).
+    pub fn retain(&self, id: BlockId) {
+        self.inner.lock().unwrap().retain(id);
+    }
+
+    /// Drop one reference. Panics on double-free. At refcount zero the
+    /// block is freed, or kept resident as evictable if prefix-registered.
+    pub fn release(&self, id: BlockId) {
+        self.inner.lock().unwrap().release(id);
+    }
+
+    // -------------------------------------------------------- table ops
+
+    /// Write `k`/`v` rows for `layer` at positions `seq_len..seq_len + t`,
+    /// allocating blocks as the table grows and copy-on-writing any shared
+    /// block that is about to be written. Panics if a fixed pool runs dry —
+    /// the engine's admission/preemption logic guarantees headroom.
+    pub fn append_rows(&self, table: &mut Vec<BlockId>, seq_len: usize, layer: usize, k: &Mat, v: &Mat) {
+        let t = k.rows;
+        assert_eq!(v.rows, t, "K/V row count mismatch");
+        let (bs, d) = (self.cfg.block_size, self.cfg.d_model);
+        assert_eq!(k.cols, d, "K width != d_model");
+        assert_eq!(v.cols, d, "V width != d_model");
+        let mut inner = self.inner.lock().unwrap();
+        for r in 0..t {
+            let pos = seq_len + r;
+            let idx = pos / bs;
+            assert!(idx <= table.len(), "append beyond the end of the block table");
+            if idx == table.len() {
+                let id = inner.alloc().expect("KV block pool exhausted");
+                table.push(id);
+            } else if inner.slots[table[idx]].refcount > 1 {
+                let nid = inner.cow_clone(table[idx]);
+                table[idx] = nid;
+            }
+            let id = table[idx];
+            let off = BlockData::row_offset(bs, d, layer, pos % bs);
+            let data = inner.slots[id].data.as_mut().expect("write to unallocated block");
+            data.keys[off..off + d].copy_from_slice(k.row(r));
+            data.values[off..off + d].copy_from_slice(v.row(r));
+        }
+    }
+
+    /// Gather the first `upto` rows of `layer` into one contiguous matrix.
+    /// `keys` selects K (true) or V (false). Copies straight into an
+    /// uninitialized-capacity buffer (no redundant zero-fill — this runs
+    /// per layer per sequence on the decode path).
+    pub fn gather(&self, table: &[BlockId], layer: usize, upto: usize, keys: bool) -> Mat {
+        let (bs, d) = (self.cfg.block_size, self.cfg.d_model);
+        assert!(upto <= table.len() * bs, "gather beyond the block table");
+        let inner = self.inner.lock().unwrap();
+        let mut out = Vec::with_capacity(upto * d);
+        let mut pos = 0usize;
+        for &id in table {
+            if pos >= upto {
+                break;
+            }
+            let take = (upto - pos).min(bs);
+            let data = inner.slots[id].data.as_ref().expect("gather from unallocated block");
+            let src = if keys { &data.keys } else { &data.values };
+            let base = BlockData::row_offset(bs, d, layer, 0);
+            out.extend_from_slice(&src[base..base + take * d]);
+            pos += take;
+        }
+        debug_assert_eq!(out.len(), upto * d);
+        Mat::from_vec(upto, d, out)
+    }
+
+    /// Share every block of `table` with a new owner (fork / clone).
+    pub fn fork_table(&self, table: &[BlockId]) -> Vec<BlockId> {
+        let mut inner = self.inner.lock().unwrap();
+        for &id in table {
+            inner.retain(id);
+        }
+        table.to_vec()
+    }
+
+    /// Release every block of a dying table.
+    pub fn drop_table(&self, table: &[BlockId]) {
+        let mut inner = self.inner.lock().unwrap();
+        for &id in table {
+            inner.release(id);
+        }
+    }
+
+    /// Walk the prefix index over `tokens`, acquiring every cached full
+    /// block in chain order. Reuse is capped below `tokens.len()` so a
+    /// caller always has at least one position left to prefill (the last
+    /// position's logits seed generation). Returns the acquired table, the
+    /// number of reused tokens, and the chain-hash state after them.
+    pub fn match_prefix(&self, tokens: &[u32]) -> (Vec<BlockId>, usize, u64) {
+        let bs = self.cfg.block_size;
+        let mut inner = self.inner.lock().unwrap();
+        let mut table = Vec::new();
+        let mut state = HASH_SEED;
+        if !self.cfg.enable_prefix || tokens.is_empty() {
+            return (table, 0, state);
+        }
+        let max_blocks = (tokens.len() - 1) / bs;
+        for b in 0..max_blocks {
+            let h = chain_hash(state, &tokens[b * bs..(b + 1) * bs]);
+            inner.prefix_lookups += 1;
+            let hit = inner.prefix.get(h);
+            if let Some(id) = hit {
+                inner.retain(id);
+                inner.prefix_hits += 1;
+                table.push(id);
+                state = h;
+            } else {
+                break;
+            }
+        }
+        let reused = table.len() * bs;
+        (table, reused, state)
+    }
+
+    /// Register a just-filled block under its chain hash (first writer
+    /// wins). Returns the chain-hash state extended over `chunk`, which is
+    /// the parent state for the sequence's next block regardless of whether
+    /// registration stuck.
+    pub fn register_full_block(&self, state: u64, chunk: &[u32], id: BlockId) -> u64 {
+        let h = chain_hash(state, chunk);
+        if self.cfg.enable_prefix {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.prefix.insert_if_absent(h, id) {
+                inner.slots[id].hash = Some(h);
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_reuse_cycle() {
+        let pool = BlockPool::shared(1, 4, 2, 4);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(pool.try_alloc().is_none(), "fixed pool must not grow");
+        pool.release(a);
+        let c = pool.try_alloc().unwrap();
+        assert_eq!(c, a, "freed block is reused");
+        pool.release(b);
+        pool.release(c);
+        let g = pool.gauges();
+        assert_eq!(g.blocks_in_use, 0);
+        assert_eq!(g.free_blocks, 2);
+        assert_eq!(g.peak_blocks_in_use, 2);
+    }
+
+    #[test]
+    fn private_pool_grows_on_demand() {
+        let pool = BlockPool::private(1, 4, 8, 4); // 2 initial blocks
+        let ids: Vec<_> = (0..5).map(|_| pool.try_alloc().unwrap()).collect();
+        assert_eq!(pool.gauges().total_blocks, 5);
+        for id in ids {
+            pool.release(id);
+        }
+        assert_eq!(pool.gauges().blocks_in_use, 0);
+    }
+
+    #[test]
+    fn registered_block_survives_release_and_is_resurrected() {
+        let pool = BlockPool::shared(1, 4, 2, 2);
+        let id = pool.try_alloc().unwrap();
+        let h = pool.register_full_block(HASH_SEED, &[5, 6], id);
+        pool.release(id);
+        let g = pool.gauges();
+        assert_eq!(g.evictable_blocks, 1);
+        assert_eq!(g.free_blocks, 1);
+        // a lookup resurrects it with the same id
+        let (table, reused, state) = pool.match_prefix(&[5, 6, 7]);
+        assert_eq!(table, vec![id]);
+        assert_eq!(reused, 2);
+        assert_eq!(state, h);
+        assert_eq!(pool.refcount(id), 1);
+        pool.drop_table(&table);
+    }
+
+    #[test]
+    fn exhaustion_evicts_lru_cached_block() {
+        let pool = BlockPool::shared(1, 4, 2, 2);
+        let a = pool.try_alloc().unwrap();
+        let b = pool.try_alloc().unwrap();
+        pool.register_full_block(HASH_SEED, &[1, 2], a);
+        pool.release(a); // cached, evictable
+        pool.release(b); // plain free
+        // two allocations: first takes the free block, second evicts `a`
+        let c = pool.try_alloc().unwrap();
+        assert_eq!(c, b);
+        let d = pool.try_alloc().unwrap();
+        assert_eq!(d, a);
+        assert_eq!(pool.gauges().prefix_evictions, 1);
+        // the evicted prefix no longer matches
+        let (table, reused, _) = pool.match_prefix(&[1, 2, 3]);
+        assert!(table.is_empty());
+        assert_eq!(reused, 0);
+    }
+
+    #[test]
+    fn match_prefix_caps_below_full_context() {
+        let pool = BlockPool::shared(1, 4, 4, 2);
+        let a = pool.try_alloc().unwrap();
+        let h = pool.register_full_block(HASH_SEED, &[1, 2], a);
+        let b = pool.try_alloc().unwrap();
+        pool.register_full_block(h, &[3, 4], b);
+        // context exactly two full blocks: only the first may be reused so
+        // the last position still gets prefilled
+        let (table, reused, _) = pool.match_prefix(&[1, 2, 3, 4]);
+        assert_eq!(table, vec![a]);
+        assert_eq!(reused, 2);
+        pool.drop_table(&table);
+        pool.release(a);
+        pool.release(b);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fixed-size KV blocks — the unit of allocation in the paged pool.
+//!
+//! A block stores `block_size` token positions of K and V for **every**
+//! layer of one model, so a sequence's whole KV footprint is described by a
+//! single table of block ids (vLLM's layout, flattened for the CPU
+//! substrate). Layer-major layout keeps each layer's rows contiguous inside
+//! a block, which makes the per-layer gather in attention a handful of
+//! `copy_from_slice` calls.
+
+/// Index of a block inside its pool. Stable for the life of the pool.
+pub type BlockId = usize;
+
+/// K/V storage for `block_size` token positions across every layer.
+///
+/// Row `s` of layer `l` lives at `(l * block_size + s) * d_model ..` in both
+/// `keys` and `values`.
+#[derive(Clone, Debug)]
+pub struct BlockData {
+    pub keys: Vec<f32>,
+    pub values: Vec<f32>,
+}
+
+impl BlockData {
+    pub fn zeroed(n_layers: usize, block_size: usize, d_model: usize) -> Self {
+        let n = n_layers * block_size * d_model;
+        BlockData { keys: vec![0.0; n], values: vec![0.0; n] }
+    }
+
+    /// Offset of (layer, slot) row start within `keys` / `values`.
+    #[inline]
+    pub fn row_offset(block_size: usize, d_model: usize, layer: usize, slot: usize) -> usize {
+        (layer * block_size + slot) * d_model
+    }
+}
+
+/// Bytes of K+V storage one block holds.
+pub fn block_bytes(n_layers: usize, block_size: usize, d_model: usize) -> usize {
+    2 * n_layers * block_size * d_model * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_sizes() {
+        let b = BlockData::zeroed(2, 16, 8);
+        assert_eq!(b.keys.len(), 2 * 16 * 8);
+        assert_eq!(b.values.len(), 2 * 16 * 8);
+    }
+
+    #[test]
+    fn row_offsets_are_layer_major() {
+        // layer 1, slot 0 starts right after layer 0's block_size rows
+        assert_eq!(BlockData::row_offset(16, 8, 1, 0), 16 * 8);
+        assert_eq!(BlockData::row_offset(16, 8, 0, 3), 3 * 8);
+    }
+
+    #[test]
+    fn block_bytes_counts_k_and_v() {
+        assert_eq!(block_bytes(4, 16, 256), 2 * 4 * 16 * 256 * 4);
+    }
+}

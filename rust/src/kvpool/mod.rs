@@ -1,0 +1,30 @@
+//! Paged KV-cache pool — vLLM-style block paging for the serving engine.
+//!
+//! The seed implementation pre-allocated every sequence's worst-case KV
+//! (`max_seq × d_model` per layer) and admitted sequences against a
+//! worst-case token reservation, which collapses real batch sizes far below
+//! the memory budget. This subsystem replaces both:
+//!
+//! * [`block`] — fixed-size token blocks, the unit of allocation;
+//! * [`allocator`] — one global [`BlockPool`] with refcounted
+//!   copy-on-write blocks and LRU eviction of cached blocks;
+//! * [`prefix`] — chained block hashing so sequences sharing a prompt
+//!   prefix (a common system prompt, a preempted sequence resuming) reuse
+//!   K/V blocks instead of recomputing prefill.
+//!
+//! [`crate::model::KvCache`] is a view (block table) over a pool;
+//! [`crate::coordinator::Scheduler`] admits against incremental block
+//! accounting; [`crate::coordinator::Engine`] preempts the youngest
+//! running sequence when the pool runs dry instead of refusing admission.
+//! See `DESIGN.md` for the full walkthrough and invariants.
+
+pub mod allocator;
+pub mod block;
+pub mod prefix;
+
+pub use allocator::{BlockPool, PoolConfig, PoolGauges};
+pub use block::{block_bytes, BlockData, BlockId};
+pub use prefix::{chain_hash, PrefixIndex, HASH_SEED};
+
+/// Default tokens per KV block (vLLM's default block size).
+pub const BLOCK_SIZE: usize = 16;

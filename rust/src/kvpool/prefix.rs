@@ -1,0 +1,106 @@
+//! Hash-based prefix index: chain hashes of full token blocks → block ids.
+//!
+//! Two sequences that share a prompt prefix produce identical K/V for the
+//! shared positions (rope is a function of absolute position and token id
+//! only), so a full block can be reused verbatim by any sequence whose
+//! first `k * block_size` tokens match. The key is a **chained** FNV-1a
+//! hash: block `k`'s key folds block `k-1`'s key over block `k`'s token
+//! ids, so a hit on block `k` implies the entire prefix up to and including
+//! block `k` matches — a single map probe per block, no token comparison.
+//!
+//! 64-bit FNV collisions are accepted as negligible at this scale (the same
+//! trade vLLM makes with its Python hash()-based prefix table).
+
+use super::block::BlockId;
+use std::collections::HashMap;
+
+/// Chain-hash state for an empty prefix (FNV-1a 64 offset basis).
+pub const HASH_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `tokens` into the running chain-hash `state`.
+pub fn chain_hash(state: u64, tokens: &[u32]) -> u64 {
+    let mut h = state;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Map from chain hash of a full-block prefix to the block holding its K/V.
+#[derive(Debug, Default)]
+pub struct PrefixIndex {
+    map: HashMap<u64, BlockId>,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        PrefixIndex { map: HashMap::new() }
+    }
+
+    /// Register `id` under `hash` unless the hash is already mapped (first
+    /// writer wins; the later equivalent block simply stays unregistered).
+    /// Returns true if the entry was inserted.
+    pub fn insert_if_absent(&mut self, hash: u64, id: BlockId) -> bool {
+        if self.map.contains_key(&hash) {
+            return false;
+        }
+        self.map.insert(hash, id);
+        true
+    }
+
+    pub fn get(&self, hash: u64) -> Option<BlockId> {
+        self.map.get(&hash).copied()
+    }
+
+    pub fn remove(&mut self, hash: u64) {
+        self.map.remove(&hash);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_is_deterministic_and_order_sensitive() {
+        let a = chain_hash(HASH_SEED, &[1, 2, 3]);
+        let b = chain_hash(HASH_SEED, &[1, 2, 3]);
+        let c = chain_hash(HASH_SEED, &[3, 2, 1]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn chaining_distinguishes_prefixes() {
+        // same block tokens under different parent states hash differently
+        let p1 = chain_hash(HASH_SEED, &[7, 8]);
+        let p2 = chain_hash(HASH_SEED, &[9, 10]);
+        assert_ne!(chain_hash(p1, &[4, 4]), chain_hash(p2, &[4, 4]));
+        // and chaining in two steps equals hashing the concatenation
+        assert_eq!(chain_hash(p1, &[4, 4]), chain_hash(HASH_SEED, &[7, 8, 4, 4]));
+    }
+
+    #[test]
+    fn index_first_writer_wins() {
+        let mut idx = PrefixIndex::new();
+        assert!(idx.insert_if_absent(42, 1));
+        assert!(!idx.insert_if_absent(42, 2));
+        assert_eq!(idx.get(42), Some(1));
+        idx.remove(42);
+        assert_eq!(idx.get(42), None);
+        assert!(idx.is_empty());
+    }
+}

@@ -5,16 +5,18 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — serving coordinator (router, continuous batcher,
-//!   scheduler, KV-cache manager), the quantization toolkit with every
-//!   baseline PTQ method, the CPU kernel zoo, evaluation harnesses, and the
-//!   PJRT runtime that executes AOT-compiled JAX artifacts.
+//!   block-based scheduler, paged KV-cache pool with prefix sharing), the
+//!   quantization toolkit with every baseline PTQ method, the CPU kernel
+//!   zoo, evaluation harnesses, and the PJRT runtime that executes
+//!   AOT-compiled JAX artifacts.
 //! * **L2 (`python/compile/model.py`)** — the JAX transformer, lowered once
 //!   to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas GEMM kernels (float-scale
 //!   and Integer-Scale variants) checked against pure-jnp oracles.
 //!
-//! See `DESIGN.md` for the full system inventory and the experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the full system inventory — including the paged
+//! KV-cache pool in [`kvpool`] — and the experiment index (which bench or
+//! example reproduces which figure).
 
 pub mod bench_harness;
 pub mod coordinator;
@@ -22,6 +24,7 @@ pub mod costmodel;
 pub mod data;
 pub mod eval;
 pub mod gemm;
+pub mod kvpool;
 pub mod model;
 pub mod quant;
 pub mod runtime;

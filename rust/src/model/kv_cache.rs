@@ -1,75 +1,198 @@
-//! Per-sequence KV cache.
+//! Per-sequence KV cache — a view over a block table in the paged pool.
 //!
-//! Append-only key/value storage per layer, sized `max_seq × d_model` with
-//! rotary embedding already applied to keys. The coordinator owns one cache
-//! per live sequence and releases it on completion (the paper's serving
-//! substrate; block-paging is unnecessary at this scale but the manager in
-//! `coordinator::engine` enforces a capacity budget the same way vLLM does).
+//! Append-only key/value storage per layer with rotary embedding already
+//! applied to keys. Storage lives in a shared [`BlockPool`]
+//! ([`crate::kvpool`]): the cache itself holds only a table of block ids,
+//! so committed memory grows one fixed-size block at a time instead of
+//! reserving `max_seq × d_model` per layer up front. Cloning a cache forks
+//! the table (refcounted blocks, copy-on-write on the partially-filled
+//! tail), and caches created inside an engine share that engine's pool so
+//! common prompt prefixes are served from cached blocks.
 
+use crate::kvpool::{BlockId, BlockPool, HASH_SEED};
 use crate::tensor::Mat;
+use std::fmt;
+use std::sync::Arc;
 
-#[derive(Clone, Debug)]
 pub struct KvCache {
     pub n_layers: usize,
     pub d_model: usize,
-    /// keys[layer]: seq_len × d_model (rope-applied)
-    pub keys: Vec<Mat>,
-    /// values[layer]: seq_len × d_model
-    pub values: Vec<Mat>,
+    /// Committed positions (advanced; appended-but-unadvanced rows sit
+    /// beyond this in the tail block).
     pub seq_len: usize,
+    /// Maximum positions this sequence may ever hold (model `max_seq`).
     pub capacity: usize,
+    pool: Arc<BlockPool>,
+    table: Vec<BlockId>,
+    /// Committed token ids (drives prefix-block registration).
+    tokens: Vec<u32>,
+    /// Chain-hash state over all registered full blocks.
+    hash_state: u64,
+    registered_blocks: usize,
+    /// Set once `advance` is called without token ids; disables prefix
+    /// registration for this sequence (calibration-style manual use).
+    anonymous: bool,
 }
 
 impl KvCache {
+    /// Standalone cache over a private, growable pool (no prefix sharing).
     pub fn new(n_layers: usize, d_model: usize, capacity: usize) -> Self {
+        let pool = BlockPool::private(n_layers, d_model, capacity, crate::kvpool::BLOCK_SIZE);
+        Self::new_in_pool(pool, capacity)
+    }
+
+    /// Cache drawing blocks from a shared engine pool.
+    pub fn new_in_pool(pool: Arc<BlockPool>, capacity: usize) -> Self {
         KvCache {
-            n_layers,
-            d_model,
-            keys: (0..n_layers).map(|_| Mat::zeros(capacity, d_model)).collect(),
-            values: (0..n_layers).map(|_| Mat::zeros(capacity, d_model)).collect(),
+            n_layers: pool.n_layers(),
+            d_model: pool.d_model(),
             seq_len: 0,
             capacity,
+            table: Vec::new(),
+            tokens: Vec::new(),
+            hash_state: HASH_SEED,
+            registered_blocks: 0,
+            anonymous: false,
+            pool,
         }
+    }
+
+    pub fn pool(&self) -> &Arc<BlockPool> {
+        &self.pool
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.pool.block_size()
+    }
+
+    /// Blocks this sequence's table currently references.
+    pub fn blocks_held(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Will the next single-token append need a fresh block?
+    pub fn needs_block_for_next(&self) -> bool {
+        self.seq_len >= self.table.len() * self.pool.block_size()
     }
 
     /// Append `t` new K/V rows for `layer`. All layers must be appended the
-    /// same number of rows before `advance` is called.
+    /// same number of rows before `advance` / `advance_tokens` commits them.
     pub fn append(&mut self, layer: usize, k_rows: &Mat, v_rows: &Mat) {
         let t = k_rows.rows;
-        assert_eq!(v_rows.rows, t);
         assert!(self.seq_len + t <= self.capacity, "KV cache overflow");
-        let base = self.seq_len;
-        for r in 0..t {
-            self.keys[layer].row_mut(base + r).copy_from_slice(k_rows.row(r));
-            self.values[layer].row_mut(base + r).copy_from_slice(v_rows.row(r));
-        }
+        self.pool.append_rows(&mut self.table, self.seq_len, layer, k_rows, v_rows);
     }
 
-    /// Commit `t` appended positions (after all layers appended).
+    /// Commit `t` appended positions without token ids (disables prefix
+    /// registration for this sequence).
     pub fn advance(&mut self, t: usize) {
+        self.anonymous = true;
         self.seq_len += t;
         assert!(self.seq_len <= self.capacity);
     }
 
-    /// Key rows visible at this point (seq_len + pending rows for a layer is
-    /// handled by the caller passing `upto`).
-    pub fn key_rows(&self, layer: usize, upto: usize) -> &[f32] {
-        &self.keys[layer].data[..upto * self.d_model]
+    /// Commit appended positions together with their token ids; every block
+    /// this fills completely is registered in the pool's prefix index.
+    /// Token ids are only retained where the pool can use them.
+    pub fn advance_tokens(&mut self, toks: &[u32]) {
+        let track = !self.anonymous && self.pool.prefix_enabled();
+        if track {
+            self.tokens.extend_from_slice(toks);
+        }
+        self.seq_len += toks.len();
+        assert!(self.seq_len <= self.capacity);
+        if !track {
+            return;
+        }
+        let bs = self.pool.block_size();
+        while self.registered_blocks < self.seq_len / bs {
+            let b = self.registered_blocks;
+            let chunk = &self.tokens[b * bs..(b + 1) * bs];
+            self.hash_state = self.pool.register_full_block(self.hash_state, chunk, self.table[b]);
+            self.registered_blocks += 1;
+        }
     }
 
-    pub fn value_rows(&self, layer: usize, upto: usize) -> &[f32] {
-        &self.values[layer].data[..upto * self.d_model]
+    /// On an empty cache, acquire every cached full block matching the
+    /// front of `tokens`. Returns the number of reused positions (a
+    /// multiple of the block size, always `< tokens.len()` so the caller
+    /// still prefills at least the last position). The reused K/V is shared
+    /// — not copied — with whichever sequence produced it.
+    pub fn match_prefix(&mut self, tokens: &[u32]) -> usize {
+        assert_eq!(self.seq_len, 0, "match_prefix requires an empty cache");
+        assert!(self.table.is_empty());
+        let (table, reused, state) = self.pool.match_prefix(tokens);
+        self.registered_blocks = table.len();
+        self.table = table;
+        self.tokens = tokens[..reused].to_vec();
+        self.hash_state = state;
+        self.seq_len = reused;
+        reused
     }
 
-    /// Bytes held (for the coordinator's memory accounting).
+    /// First `upto` key rows of `layer`, gathered contiguously
+    /// (`upto × d_model`). `upto` may include appended-but-uncommitted rows.
+    pub fn gather_keys(&self, layer: usize, upto: usize) -> Mat {
+        self.pool.gather(&self.table, layer, upto, true)
+    }
+
+    /// First `upto` value rows of `layer`, gathered contiguously.
+    pub fn gather_values(&self, layer: usize, upto: usize) -> Mat {
+        self.pool.gather(&self.table, layer, upto, false)
+    }
+
+    /// Bytes of KV storage this sequence's table references — committed
+    /// blocks, not reserved capacity. Blocks shared via prefix hits or
+    /// clones are counted by every holder (this is the per-sequence view;
+    /// pool-level truth lives in [`BlockPool::gauges`]).
     pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.capacity * self.d_model * std::mem::size_of::<f32>()
+        self.table.len() * self.pool.block_bytes()
+    }
+}
+
+impl Clone for KvCache {
+    /// Fork: the clone shares every block (refcounted); whichever side
+    /// writes the shared tail block next pays one copy-on-write.
+    fn clone(&self) -> Self {
+        KvCache {
+            n_layers: self.n_layers,
+            d_model: self.d_model,
+            seq_len: self.seq_len,
+            capacity: self.capacity,
+            table: self.pool.fork_table(&self.table),
+            tokens: self.tokens.clone(),
+            hash_state: self.hash_state,
+            registered_blocks: self.registered_blocks,
+            anonymous: self.anonymous,
+            pool: self.pool.clone(),
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        self.pool.drop_table(&self.table);
+    }
+}
+
+impl fmt::Debug for KvCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "KvCache[layers={} d={} seq={}/{} blocks={}]",
+            self.n_layers,
+            self.d_model,
+            self.seq_len,
+            self.capacity,
+            self.table.len()
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvpool::BLOCK_SIZE;
     use crate::tensor::Rng;
 
     #[test]
@@ -82,8 +205,10 @@ mod tests {
         c.append(1, &k, &v);
         c.advance(3);
         assert_eq!(c.seq_len, 3);
-        assert_eq!(c.key_rows(0, 3).len(), 24);
-        assert_eq!(&c.key_rows(0, 3)[..8], k.row(0));
+        let keys = c.gather_keys(0, 3);
+        assert_eq!(keys.data.len(), 24);
+        assert_eq!(&keys.data[..8], k.row(0));
+        assert_eq!(c.gather_values(1, 3).row(2), v.row(2));
     }
 
     #[test]
@@ -95,8 +220,96 @@ mod tests {
     }
 
     #[test]
-    fn bytes_accounting() {
-        let c = KvCache::new(4, 256, 128);
-        assert_eq!(c.bytes(), 2 * 4 * 128 * 256 * 4);
+    fn bytes_reports_committed_blocks_not_capacity() {
+        let mut c = KvCache::new(4, 256, 128);
+        assert_eq!(c.bytes(), 0, "empty cache commits nothing");
+        let mut rng = Rng::new(1);
+        let k = Mat::randn(3, 256, 1.0, &mut rng);
+        let v = Mat::randn(3, 256, 1.0, &mut rng);
+        for layer in 0..4 {
+            c.append(layer, &k, &v);
+        }
+        c.advance(3);
+        // 3 tokens commit exactly one block
+        assert_eq!(c.bytes(), 2 * 4 * BLOCK_SIZE * 256 * 4);
+        // far below the seed's whole-capacity reservation
+        assert!(c.bytes() < 2 * 4 * 128 * 256 * 4);
+    }
+
+    #[test]
+    fn clone_shares_blocks_then_copies_on_write() {
+        let mut rng = Rng::new(7);
+        let mut a = KvCache::new(1, 8, 64);
+        let n = BLOCK_SIZE + 4; // one full block + a partial tail
+        let k = Mat::randn(n, 8, 1.0, &mut rng);
+        let v = Mat::randn(n, 8, 1.0, &mut rng);
+        a.append(0, &k, &v);
+        a.advance(n);
+        let mut b = a.clone();
+        assert_eq!(a.bytes(), b.bytes());
+
+        // divergent appends: each writer gets its own tail copy
+        let ka = Mat::filled(1, 8, 1.0);
+        let kb = Mat::filled(1, 8, -1.0);
+        b.append(0, &kb, &kb);
+        b.advance(1);
+        a.append(0, &ka, &ka);
+        a.advance(1);
+        let ra = a.gather_keys(0, n + 1);
+        let rb = b.gather_keys(0, n + 1);
+        // shared history identical...
+        assert_eq!(&ra.data[..n * 8], &rb.data[..n * 8]);
+        // ...divergent tails independent
+        assert_eq!(ra.row(n), ka.row(0));
+        assert_eq!(rb.row(n), kb.row(0));
+    }
+
+    #[test]
+    fn match_prefix_is_noop_on_private_pools() {
+        let mut c = KvCache::new(1, 8, 64);
+        let toks: Vec<u32> = (0..40).collect();
+        assert_eq!(c.match_prefix(&toks), 0);
+    }
+
+    #[test]
+    fn shared_pool_prefix_roundtrip_is_bit_identical() {
+        let pool = BlockPool::shared(1, 8, 8, BLOCK_SIZE);
+        let n = 2 * BLOCK_SIZE;
+        let toks: Vec<u32> = (0..n as u32).map(|i| i * 3 + 1).collect();
+        let mut rng = Rng::new(3);
+        let k = Mat::randn(n, 8, 1.0, &mut rng);
+        let v = Mat::randn(n, 8, 1.0, &mut rng);
+        let mut writer = KvCache::new_in_pool(pool.clone(), 64);
+        writer.append(0, &k, &v);
+        writer.advance_tokens(&toks);
+        assert_eq!(writer.blocks_held(), 2);
+
+        // a reader with a longer context reuses both full blocks, sharing
+        // (not copying) the writer's storage
+        let mut longer = toks.clone();
+        longer.push(999);
+        let mut reader = KvCache::new_in_pool(pool.clone(), 64);
+        let reused = reader.match_prefix(&longer);
+        assert_eq!(reused, n);
+        assert_eq!(reader.seq_len, n);
+        let (wk, rk) = (writer.gather_keys(0, n), reader.gather_keys(0, n));
+        for (a, b) in wk.data.iter().zip(rk.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(pool.gauges().prefix_hits, 2);
+    }
+
+    #[test]
+    fn needs_block_exactly_at_boundaries() {
+        let mut c = KvCache::new(1, 4, 64);
+        assert!(c.needs_block_for_next(), "empty cache needs its first block");
+        let k = Mat::zeros(BLOCK_SIZE, 4);
+        c.append(0, &k, &k);
+        c.advance(BLOCK_SIZE);
+        assert!(c.needs_block_for_next(), "full tail needs a fresh block");
+        let one = Mat::zeros(1, 4);
+        c.append(0, &one, &one);
+        c.advance(1);
+        assert!(!c.needs_block_for_next());
     }
 }

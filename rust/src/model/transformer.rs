@@ -142,8 +142,12 @@ impl Transformer {
         }
         cache.append(layer_idx, k, v);
         let total = past + t;
-        let keys = &cache.keys[layer_idx];
-        let values = &cache.values[layer_idx];
+        // Gather the (possibly block-scattered) K/V into contiguous views.
+        // The copy is the same order as the attention math below (which
+        // reads every gathered row per query), so this stays a constant
+        // factor on the CPU substrate in exchange for paged storage.
+        let keys = cache.gather_keys(layer_idx, total);
+        let values = cache.gather_values(layer_idx, total);
         let scale = 1.0 / (hd as f32).sqrt();
         let mut out = Mat::zeros(t, d);
         let mut scores = vec![0f32; total];
@@ -177,7 +181,6 @@ impl Transformer {
     /// (`t × vocab`). The cache must be empty or a continuation.
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Mat {
         let mut x = self.embed_tokens(tokens);
-        let t = tokens.len();
         for (li, layer) in self.layers.iter().enumerate() {
             let h = rms_norm(&x, &layer.attn_norm);
             let mut q = layer.wq.forward(&h);
@@ -190,7 +193,7 @@ impl Transformer {
             let m = self.mlp_forward(layer, &h);
             x.add_assign(&m);
         }
-        cache.advance(t);
+        cache.advance_tokens(tokens);
         let h = rms_norm(&x, &self.final_norm);
         self.lm_head.forward(&h)
     }
@@ -223,8 +226,8 @@ impl Transformer {
             let m = self.mlp_forward(layer, &h);
             x.add_assign(&m);
         }
-        for c in caches.iter_mut() {
-            c.advance(1);
+        for (c, &tok) in caches.iter_mut().zip(tokens.iter()) {
+            c.advance_tokens(&[tok]);
         }
         let h = rms_norm(&x, &self.final_norm);
         self.lm_head.forward(&h)

@@ -1,10 +1,10 @@
 //! Experiment harness — regenerates every table and figure of the paper
 //! (`repro <table1|table2|...|fig8>`). Each function returns the formatted
 //! block it prints, so integration tests can assert on structure and
-//! EXPERIMENTS.md records the exact output.
+//! DESIGN.md indexes which bench reproduces which figure.
 //!
 //! Accuracy experiments run on the trained tiny model (artifacts/weights.bin
-//! if present, seeded random otherwise — results in EXPERIMENTS.md use the
+//! if present, seeded random otherwise — published paper comparisons use the
 //! trained one). Latency figures have two columns: measured CPU-kernel time
 //! (criterion gives the precise version in `benches/`) and the calibrated
 //! A100 cost model (`costmodel`).

@@ -1,5 +1,5 @@
 //! Seeded PRNG (SplitMix64 core) — deterministic across runs and platforms so
-//! every experiment in EXPERIMENTS.md is exactly reproducible.
+//! every experiment in the benches and tables is exactly reproducible.
 
 /// SplitMix64-based PRNG with Box–Muller normal sampling.
 #[derive(Clone, Debug)]

@@ -1,7 +1,7 @@
 //! Failure injection: corrupt artifacts, degenerate requests, capacity
 //! pressure — the paths a production deployment actually hits.
 
-use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::coordinator::{Engine, EngineConfig, FinishReason, Request};
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
 use std::io::Write;
 use std::sync::Arc;
@@ -71,6 +71,22 @@ fn zero_max_new_tokens_completes() {
 }
 
 #[test]
+fn prompt_beyond_model_window_fails_gracefully() {
+    // max_seq-32 model with an ample 32-block pool: a 100-token prompt can
+    // never prefill, so it must fail with an empty response instead of
+    // panicking the engine and taking every other request down with it
+    let mut e = tiny_engine();
+    e.submit(Request::greedy(0, vec![5; 100], 4));
+    e.submit(Request::greedy(1, vec![5, 6], 3));
+    let res = e.run_to_completion();
+    assert_eq!(res.len(), 2);
+    assert!(res[0].tokens.is_empty(), "oversized prompt fails empty");
+    assert_eq!(res[0].finish, FinishReason::Failed);
+    assert!(!res[1].tokens.is_empty(), "later requests unaffected");
+    assert_eq!(res[1].finish, FinishReason::Stop);
+}
+
+#[test]
 fn prompt_near_cache_capacity_stops_cleanly() {
     // prompt 28 of 32-capacity cache; generation must stop at capacity
     // instead of overflowing
@@ -82,6 +98,7 @@ fn prompt_near_cache_capacity_stops_cleanly() {
     assert_eq!(res.len(), 1);
     assert!(res[0].tokens.len() < 100);
     assert!(!res[0].tokens.is_empty());
+    assert_eq!(res[0].finish, FinishReason::Capacity, "truncation must be reported");
 }
 
 #[test]

@@ -5,59 +5,185 @@
 //! hundreds of scenarios per property, shrunk semantics replaced by printing
 //! the failing seed (re-run with that seed to reproduce).
 
+use integer_scale::coordinator::request::Tracked;
 use integer_scale::coordinator::{Request, Scheduler};
 use integer_scale::gemm::{self, pack_for_test, QuantAct};
+use integer_scale::kvpool::{BlockId, BlockPool, BLOCK_SIZE};
+use integer_scale::model::{KvCache, ModelConfig, ModelWeights, Transformer};
 use integer_scale::quant::integer_scale::{heuristic_amplifier, to_int_scales};
 use integer_scale::quant::pack::{pack_int4, unpack_int4};
 use integer_scale::quant::{quantize_weight_sym, Bits, Granularity};
 use integer_scale::tensor::{Mat, Rng};
+use std::collections::VecDeque;
 
 // ------------------------------------------------------------- scheduler
 
-/// Drive a random admit/retire trace; the scheduler must never exceed its
-/// batch or KV budgets and must preserve FIFO order.
+/// Drive a random submit/admit/retire/preempt trace; the scheduler must
+/// never exceed its batch budget, must keep its running count consistent,
+/// and must admit in FIFO order (with preempted sequences re-entering at
+/// the front).
 #[test]
-fn prop_scheduler_budgets_never_violated() {
+fn prop_scheduler_block_accounting_never_violated() {
     for seed in 0..200u64 {
         let mut rng = Rng::new(seed);
         let max_batch = 1 + rng.below(6);
-        let kv_budget = 16 + rng.below(256);
-        let mut s = Scheduler::new(max_batch, kv_budget);
-        let mut running: Vec<Request> = Vec::new();
+        let total_blocks = 2 + rng.below(30);
+        let mut s = Scheduler::new(max_batch, total_blocks, BLOCK_SIZE);
+        let mut running: Vec<Tracked> = Vec::new();
+        // model of the queue: ids in the order they must be admitted
+        let mut queue_model: VecDeque<u64> = VecDeque::new();
         let mut next_id = 0u64;
-        let mut admitted_order: Vec<u64> = Vec::new();
         for _ in 0..120 {
-            match rng.below(3) {
+            match rng.below(4) {
                 0 => {
                     let plen = 1 + rng.below(12);
                     let mnew = 1 + rng.below(12);
                     s.submit(Request::greedy(next_id, vec![1; plen], mnew));
+                    queue_model.push_back(next_id);
                     next_id += 1;
                 }
                 1 => {
-                    for t in s.admit() {
-                        admitted_order.push(t.req.id);
-                        running.push(t.req);
+                    let available = rng.below(total_blocks + 1);
+                    for t in s.admit(available) {
+                        // admission follows queue order exactly
+                        assert_eq!(Some(t.req.id), queue_model.pop_front(), "seed={seed}");
+                        // never admit a context the pool could not hold
+                        assert!(s.admission_need(&t) <= total_blocks, "seed={seed}");
+                        running.push(t);
+                    }
+                }
+                2 => {
+                    if !running.is_empty() {
+                        let i = rng.below(running.len());
+                        running.swap_remove(i);
+                        s.retire();
                     }
                 }
                 _ => {
                     if !running.is_empty() {
                         let i = rng.below(running.len());
-                        let r = running.swap_remove(i);
-                        s.retire(&r);
+                        let t = running.swap_remove(i);
+                        queue_model.push_front(t.req.id);
+                        s.preempt_requeue(t);
                     }
                 }
             }
             // invariants
             assert!(s.state.running_count <= max_batch, "seed={seed}");
-            assert!(s.state.running_tokens <= kv_budget, "seed={seed}");
             assert_eq!(s.state.running_count, running.len(), "seed={seed}");
-            let expected: usize =
-                running.iter().map(Scheduler::kv_need).sum();
-            assert_eq!(s.state.running_tokens, expected, "seed={seed}");
+            assert_eq!(s.queue_depth(), queue_model.len(), "seed={seed}");
         }
-        // FIFO: admitted ids are strictly increasing
-        assert!(admitted_order.windows(2).all(|w| w[0] < w[1]), "seed={seed}");
+    }
+}
+
+// ------------------------------------------------------------- kv pool
+
+/// Random alloc/retain/release traces against a model of per-block
+/// refcounts: blocks-in-use never exceeds the pool size, gauges track the
+/// live set exactly, and every refcount the pool reports matches the model
+/// (so a refcount can hit zero exactly once per lifetime).
+#[test]
+fn prop_pool_refcounts_and_capacity() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed);
+        let n_blocks = 2 + rng.below(14);
+        let pool = BlockPool::shared(1, 8, n_blocks, 4);
+        let mut live: Vec<(BlockId, usize)> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    if let Some(id) = pool.try_alloc() {
+                        assert!(
+                            live.iter().all(|&(l, _)| l != id),
+                            "seed={seed}: allocator handed out a live block"
+                        );
+                        live.push((id, 1));
+                    } else {
+                        assert_eq!(live.len(), n_blocks, "seed={seed}: spurious exhaustion");
+                    }
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        live[i].1 += 1;
+                        pool.retain(live[i].0);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len());
+                        live[i].1 -= 1;
+                        pool.release(live[i].0);
+                        if live[i].1 == 0 {
+                            live.swap_remove(i);
+                        }
+                    }
+                }
+            }
+            let g = pool.gauges();
+            assert!(g.blocks_in_use <= g.total_blocks, "seed={seed}");
+            assert_eq!(g.total_blocks, n_blocks, "seed={seed}: fixed pool grew");
+            assert_eq!(g.blocks_in_use, live.len(), "seed={seed}");
+            assert_eq!(g.free_blocks + g.blocks_in_use, n_blocks, "seed={seed}");
+            for &(id, rc) in &live {
+                assert_eq!(pool.refcount(id), rc, "seed={seed}");
+            }
+        }
+    }
+}
+
+/// Releasing a block past refcount zero is a hard error, not silent
+/// corruption.
+#[test]
+#[should_panic(expected = "double-free")]
+fn pool_double_free_panics() {
+    let pool = BlockPool::shared(1, 8, 4, 4);
+    let id = pool.try_alloc().unwrap();
+    pool.release(id);
+    pool.release(id);
+}
+
+/// A prefix-cache hit must return byte-identical K/V to a cold prefill:
+/// the warm cache shares the cold sequence's blocks and its recomputed
+/// tail goes through exactly the same float ops.
+#[test]
+fn prop_prefix_hit_kv_bit_identical_to_cold_prefill() {
+    let cfg = ModelConfig {
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 64,
+        max_seq: 128,
+        n_experts: None,
+    };
+    let model = Transformer::from_weights(&ModelWeights::random(cfg, 21));
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let pool = BlockPool::shared(cfg.n_layers, cfg.d_model, 64, BLOCK_SIZE);
+        let n = 2 * BLOCK_SIZE + 1 + rng.below(BLOCK_SIZE);
+        let prompt: Vec<u32> = (0..n).map(|_| rng.below(cfg.vocab) as u32).collect();
+
+        let mut cold = KvCache::new_in_pool(pool.clone(), cfg.max_seq);
+        let _ = model.prefill(&prompt, &mut cold);
+
+        let mut warm = KvCache::new_in_pool(pool.clone(), cfg.max_seq);
+        let reused = warm.match_prefix(&prompt);
+        assert_eq!(reused, 2 * BLOCK_SIZE, "seed={seed}");
+        let _ = model.prefill(&prompt[reused..], &mut warm);
+        assert_eq!(warm.seq_len, cold.seq_len, "seed={seed}");
+
+        for layer in 0..cfg.n_layers {
+            let (ck, wk) = (cold.gather_keys(layer, n), warm.gather_keys(layer, n));
+            for (a, b) in ck.data.iter().zip(wk.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed={seed} layer={layer} keys differ");
+            }
+            let (cv, wv) = (cold.gather_values(layer, n), warm.gather_values(layer, n));
+            for (a, b) in cv.data.iter().zip(wv.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "seed={seed} layer={layer} values differ");
+            }
+        }
+        assert!(pool.gauges().prefix_hits >= 2, "seed={seed}");
     }
 }
 
