@@ -4,8 +4,9 @@
 use integer_scale::bench_harness::Bencher;
 use integer_scale::coordinator::{Engine, EngineConfig, Request};
 use integer_scale::data::{CorpusGen, Split};
-use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::{PlanBuilder, QuantPlan};
 use integer_scale::quant::{BitWidth, Granularity};
 use integer_scale::tensor::Rng;
 use std::sync::Arc;
@@ -32,20 +33,37 @@ fn main() {
     let gen = CorpusGen::new(cfg.vocab as u32, 7);
     let calib = gen.stream(128, Split::C4, 11);
 
-    let schemes: [(&str, Option<QuantSpec>); 4] = [
+    let plans: [(&str, Option<QuantPlan>); 4] = [
         ("fp16", None),
-        ("w4a16", Some(QuantSpec::new(Method::Rtn, BitWidth::W4A16, Granularity::Group(128)))),
-        ("w4a8_fs", Some(QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)))),
+        (
+            "w4a16",
+            Some(PlanBuilder::uniform(QuantSpec::new(
+                Method::Rtn,
+                BitWidth::W4A16,
+                Granularity::Group(128),
+            ))),
+        ),
+        (
+            "w4a8_fs",
+            Some(PlanBuilder::uniform(QuantSpec::new(
+                Method::Rtn,
+                BitWidth::W4A8,
+                Granularity::Group(128),
+            ))),
+        ),
         (
             "w4a8_is",
-            Some(QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024)),
+            Some(PlanBuilder::uniform(
+                QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128))
+                    .with_is(1024),
+            )),
         ),
     ];
     let mut b = Bencher::group("fig1_e2e_serving (8 reqs, 12 prompt + 8 new)").sample_size(6);
-    for (name, spec) in schemes {
-        let model = Arc::new(match &spec {
+    for (name, plan) in plans {
+        let model = Arc::new(match &plan {
             None => Transformer::from_weights(&weights),
-            Some(s) => quantize_model(&weights, s, &calib),
+            Some(p) => quantize_model_plan(&weights, p, &calib),
         });
         b.bench(name, || workload(&model, &gen));
     }

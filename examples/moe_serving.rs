@@ -9,9 +9,10 @@
 use integer_scale::coordinator::router::Policy;
 use integer_scale::coordinator::{Engine, EngineConfig, Request, Router};
 use integer_scale::data::{CorpusGen, Split};
-use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::quantize::{kernel_assignment, quantize_model_plan, Method, QuantSpec};
 use integer_scale::model::transformer::MlpOp;
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::PlanBuilder;
 use integer_scale::quant::{BitWidth, Granularity};
 use integer_scale::tensor::{Mat, Rng};
 use std::path::Path;
@@ -66,15 +67,32 @@ fn main() {
     }
 
     let gen_calib = CorpusGen::new(cfg.vocab as u32, 7).stream(160, Split::C4, 11);
-    let spec =
-        QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
-    let quant = Arc::new(quantize_model(&weights, &spec, &gen_calib));
-    let w16 = QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128));
-    let quant16 = Arc::new(quantize_model(&weights, &w16, &gen_calib));
+    // cost-model auto-selection picks a kernel per layer shape, with the
+    // §B.4 audit steering flagged layers to the overflow-safe IS kernel
+    let plan_auto = PlanBuilder::new(
+        QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+    )
+    .overflow_guard(true)
+    .auto_select(8)
+    .build();
+    let quant = Arc::new(quantize_model_plan(&weights, &plan_auto, &gen_calib));
+    {
+        let mut counts = std::collections::BTreeMap::new();
+        for (_, k) in kernel_assignment(&quant) {
+            *counts.entry(k).or_insert(0usize) += 1;
+        }
+        println!("auto-selected kernel assignment: {counts:?}");
+    }
+    let plan16 = PlanBuilder::uniform(QuantSpec::new(
+        Method::Gptq,
+        BitWidth::W4A16,
+        Granularity::Group(128),
+    ));
+    let quant16 = Arc::new(quantize_model_plan(&weights, &plan16, &gen_calib));
 
     let t_fp = run(Arc::new(fp), "FP16");
     let t_16 = run(quant16, "W4A16");
-    let t_is = run(quant, "W4A8 Integer Scale");
+    let t_is = run(quant, "W4A8 IS (auto plan)");
     println!(
         "\nspeedup over FP16: {:.2}x | over W4A16: {:.2}x (paper: 1.55x / 1.3x on Mixtral)",
         t_fp / t_is,

@@ -6,7 +6,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use integer_scale::gemm::{self, trace, Kernel, PackedWeight, QuantAct};
+use integer_scale::gemm::{self, registry, GemmKernel as _, PackedWeight, QuantAct};
 use integer_scale::quant::methods::{Gptq, PtqMethod};
 use integer_scale::quant::{BitWidth, Bits, Granularity};
 use integer_scale::tensor::{Mat, Rng};
@@ -41,9 +41,10 @@ fn main() {
     println!("Integer-Scale kernel vs FP32 reference: rel err {:.4}", rel(&out_is, &ref_out));
     println!("Integer-Scale vs float-scale kernel:   rel err {:.6}", rel(&out_is, &out_fs));
 
-    // 4. why it is faster: the conversion counts (paper Fig. 2)
-    let t_fs = trace::trace(Kernel::W4A8FgFloat, 64, 1024, 512, 128);
-    let t_is = trace::trace(Kernel::W4A8FgInt, 64, 1024, 512, 128);
+    // 4. why it is faster: the conversion counts from each kernel's
+    //    registry self-description (paper Fig. 2)
+    let t_fs = registry::get_or_panic("w4a8-fg-fs").trace(64, 1024, 512, 128);
+    let t_is = registry::get_or_panic("w4a8-fg-is").trace(64, 1024, 512, 128);
     println!(
         "I32→F32 conversions: float scale = {}, Integer Scale = {} ({}x fewer)",
         t_fs.i32_to_f32,

@@ -12,8 +12,9 @@
 
 use integer_scale::coordinator::{Engine, EngineConfig, Request, Response};
 use integer_scale::data::{CorpusGen, Split, Tokenizer};
-use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::PlanBuilder;
 use integer_scale::quant::{BitWidth, Granularity};
 use integer_scale::runtime::{try_load, PjrtRuntime};
 use integer_scale::tensor::Rng;
@@ -114,11 +115,20 @@ fn main() {
     let calib = gen.stream(192, Split::C4, 11);
 
     let fp16 = Arc::new(Transformer::from_weights(&weights));
-    let spec_is =
-        QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
-    let w4a8_is = Arc::new(quantize_model(&weights, &spec_is, &calib));
-    let spec_fs = QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128));
-    let w4a8_fs = Arc::new(quantize_model(&weights, &spec_fs, &calib));
+    // plans, not raw specs: the IS plan also turns on the §B.4 guard, so a
+    // layer the audit flags would transparently serve the safe IS kernel
+    let plan_is = PlanBuilder::new(
+        QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+    )
+    .overflow_guard(true)
+    .build();
+    let w4a8_is = Arc::new(quantize_model_plan(&weights, &plan_is, &calib));
+    let plan_fs = PlanBuilder::uniform(QuantSpec::new(
+        Method::Gptq,
+        BitWidth::W4A8,
+        Granularity::Group(128),
+    ));
+    let w4a8_fs = Arc::new(quantize_model_plan(&weights, &plan_fs, &calib));
 
     let r_fp = serve(fp16, 24, "FP16");
     let r_fs = serve(w4a8_fs, 24, "W4A8 float scale");

@@ -4,13 +4,19 @@
 //! A100 tensor-core kernels we cannot run here. This model regenerates their
 //! *shape* from first principles: a roofline over HBM traffic and
 //! tensor-core math, plus a CUDA-core epilogue term for the type-conversion
-//! / expansion work each scheme performs (taken from [`crate::gemm::trace`]),
-//! with per-scheme tensor-core utilization factors calibrated once against
-//! the paper's published ratios (§DESIGN.md Substitutions). The *measured*
-//! counterpart on CPU is `benches/` — see the experiment index in DESIGN.md.
+//! / expansion work each scheme performs, with per-scheme tensor-core
+//! utilization factors calibrated once against the paper's published ratios
+//! (§DESIGN.md Substitutions). Everything the model needs — op trace, math
+//! pipe, utilization, activation bit-width — comes from the kernel's own
+//! [`GemmKernel`] self-description, so any kernel added to
+//! [`crate::gemm::registry`] is priced without editing this module; plan
+//! auto-selection (`plan::auto_select_kernel`) builds directly on
+//! [`latency`]. The *measured* counterpart on CPU is `benches/` — see the
+//! experiment index in DESIGN.md.
 
-use crate::gemm::trace::{trace, OpTrace};
-use crate::gemm::Kernel;
+use crate::gemm::registry;
+use crate::gemm::trace::OpTrace;
+use crate::gemm::{GemmKernel, MathPipe};
 
 /// A100-SXM-80GB machine constants.
 #[derive(Clone, Copy, Debug)]
@@ -46,46 +52,25 @@ impl Default for Gpu {
     }
 }
 
-/// Tensor-core utilization a scheme sustains (calibrated to the paper's
-/// anchor ratios; fine-grained float scale cannot keep the MMA pipeline fed).
-fn utilization(kernel: Kernel) -> f64 {
-    match kernel {
-        Kernel::Fp16 => 0.90,
-        Kernel::W8A8 => 0.85,
-        Kernel::W4A16 => 0.80,
-        Kernel::W4A8Coarse => 0.88,
-        Kernel::W4A8FgFloat => 0.55,
-        Kernel::W4A8FgInt => 0.82,
-        Kernel::W4A4 => 0.55,
-        Kernel::QServe { fine: false } => 0.70,
-        Kernel::QServe { fine: true } => 0.45,
-    }
-}
-
-fn tc_rate(gpu: &Gpu, kernel: Kernel) -> f64 {
-    match kernel {
-        Kernel::Fp16 | Kernel::W4A16 => gpu.fp16_tc,
-        Kernel::W4A4 => gpu.int4_tc,
-        _ => gpu.int8_tc,
+fn tc_rate(gpu: &Gpu, pipe: MathPipe) -> f64 {
+    match pipe {
+        MathPipe::Fp16Tc => gpu.fp16_tc,
+        MathPipe::Int8Tc => gpu.int8_tc,
+        MathPipe::Int4Tc => gpu.int4_tc,
     }
 }
 
 /// Activation+output HBM traffic in bytes for shape (m, k, n).
-fn act_out_bytes(kernel: Kernel, m: u64, k: u64, n: u64) -> u64 {
-    let act = match kernel {
-        Kernel::Fp16 | Kernel::W4A16 => m * k * 2,
-        Kernel::W4A4 => m * k / 2,
-        _ => m * k,
-    };
-    act + m * n * 2 // fp16 output
+fn act_out_bytes(kernel: &dyn GemmKernel, m: u64, k: u64, n: u64) -> u64 {
+    registry::act_bytes(kernel.act_bits(), m * k) + m * n * 2 // fp16 output
 }
 
 /// Predicted kernel latency in seconds.
-pub fn latency(gpu: &Gpu, kernel: Kernel, m: u64, k: u64, n: u64, g: u64) -> f64 {
-    let t: OpTrace = trace(kernel, m, k, n, g);
+pub fn latency(gpu: &Gpu, kernel: &dyn GemmKernel, m: u64, k: u64, n: u64, g: u64) -> f64 {
+    let t: OpTrace = kernel.trace(m, k, n, g);
     // math pipe
     let macs = (t.int_mac + t.float_mac) as f64;
-    let t_math = macs / (tc_rate(gpu, kernel) * utilization(kernel));
+    let t_math = macs / (tc_rate(gpu, kernel.math_pipe()) * kernel.utilization());
     // CUDA-core epilogue / expansion pipe (serializes with MMA)
     let t_cuda = t.i32_to_f32 as f64 / gpu.convert
         + (t.int_scale_mac + t.expand_ops) as f64 / gpu.cuda_alu;
@@ -97,14 +82,23 @@ pub fn latency(gpu: &Gpu, kernel: Kernel, m: u64, k: u64, n: u64, g: u64) -> f64
 
 /// Acceleration ratio vs the FP16 kernel at the same shape (the y-axis of
 /// Figures 3, 5, 6, 7).
-pub fn accel_vs_fp16(gpu: &Gpu, kernel: Kernel, m: u64, k: u64, n: u64, g: u64) -> f64 {
-    latency(gpu, Kernel::Fp16, m, k, n, g) / latency(gpu, kernel, m, k, n, g)
+pub fn accel_vs_fp16(gpu: &Gpu, kernel: &dyn GemmKernel, m: u64, k: u64, n: u64, g: u64) -> f64 {
+    let fp16 = registry::get_or_panic("fp16");
+    latency(gpu, &*fp16, m, k, n, g) / latency(gpu, kernel, m, k, n, g)
 }
 
 /// End-to-end per-token decode latency estimate for a model with `layers`
 /// transformer blocks of hidden size `d` and FFN size `ff`, batch `m`
 /// (used by the Fig. 1 / Fig. 5(c) analytical columns).
-pub fn decode_latency(gpu: &Gpu, kernel: Kernel, m: u64, d: u64, ff: u64, layers: u64, g: u64) -> f64 {
+pub fn decode_latency(
+    gpu: &Gpu,
+    kernel: &dyn GemmKernel,
+    m: u64,
+    d: u64,
+    ff: u64,
+    layers: u64,
+    g: u64,
+) -> f64 {
     let attn = 4.0 * latency(gpu, kernel, m, d, d, g);
     let mlp = 2.0 * latency(gpu, kernel, m, d, ff, g) + latency(gpu, kernel, m, ff, d, g);
     (attn + mlp) * layers as f64
@@ -113,6 +107,7 @@ pub fn decode_latency(gpu: &Gpu, kernel: Kernel, m: u64, d: u64, ff: u64, layers
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemm::registry::get_or_panic;
 
     const K: u64 = 4096;
     const N: u64 = 22016;
@@ -123,9 +118,9 @@ mod tests {
         // Fig. 3 / Fig. 5a: at M=1 the 4-bit kernels ride the 4× weight-
         // traffic reduction.
         let gpu = Gpu::default();
-        let r = accel_vs_fp16(&gpu, Kernel::W4A8Coarse, 1, K, N, K);
+        let r = accel_vs_fp16(&gpu, &*get_or_panic("w4a8-coarse"), 1, K, N, K);
         assert!(r > 3.0 && r < 4.5, "r={r}");
-        let rf = accel_vs_fp16(&gpu, Kernel::W4A8FgFloat, 1, K, N, G);
+        let rf = accel_vs_fp16(&gpu, &*get_or_panic("w4a8-fg-fs"), 1, K, N, G);
         assert!(rf > 2.5, "rf={rf}"); // paper: 3.15× at M=1
     }
 
@@ -133,7 +128,7 @@ mod tests {
     fn float_scale_collapses_at_large_batch() {
         // Fig. 3: FS drops to ~0.5× (slower than FP16) when compute-bound.
         let gpu = Gpu::default();
-        let r = accel_vs_fp16(&gpu, Kernel::W4A8FgFloat, 512, K, N, G);
+        let r = accel_vs_fp16(&gpu, &*get_or_panic("w4a8-fg-fs"), 512, K, N, G);
         assert!(r < 0.8, "r={r}");
     }
 
@@ -141,10 +136,12 @@ mod tests {
     fn integer_scale_stays_fast_at_large_batch() {
         // Fig. 5a: IS keeps ≳1.5× over FP16 past the cliff; ≥1.5× over FS.
         let gpu = Gpu::default();
-        let ri = accel_vs_fp16(&gpu, Kernel::W4A8FgInt, 512, K, N, G);
+        let is = get_or_panic("w4a8-fg-is");
+        let fs = get_or_panic("w4a8-fg-fs");
+        let ri = accel_vs_fp16(&gpu, &*is, 512, K, N, G);
         assert!(ri > 1.3, "ri={ri}");
-        let speedup_over_fs = latency(&gpu, Kernel::W4A8FgFloat, 512, K, N, G)
-            / latency(&gpu, Kernel::W4A8FgInt, 512, K, N, G);
+        let speedup_over_fs =
+            latency(&gpu, &*fs, 512, K, N, G) / latency(&gpu, &*is, 512, K, N, G);
         assert!(speedup_over_fs > 1.5 && speedup_over_fs < 4.0, "x={speedup_over_fs}");
     }
 
@@ -152,8 +149,9 @@ mod tests {
     fn performance_cliff_exists() {
         // the accel ratio must drop sharply between memory- and compute-bound
         let gpu = Gpu::default();
-        let small = accel_vs_fp16(&gpu, Kernel::W4A8FgInt, 4, K, N, G);
-        let large = accel_vs_fp16(&gpu, Kernel::W4A8FgInt, 512, K, N, G);
+        let is = get_or_panic("w4a8-fg-is");
+        let small = accel_vs_fp16(&gpu, &*is, 4, K, N, G);
+        let large = accel_vs_fp16(&gpu, &*is, 512, K, N, G);
         assert!(small > large + 0.8, "small={small} large={large}");
     }
 
@@ -161,13 +159,15 @@ mod tests {
     fn ours_beats_qserve_everywhere() {
         // Fig. 6: ours faster at all batch sizes, up to ~1.5×.
         let gpu = Gpu::default();
+        let is = get_or_panic("w4a8-fg-is");
+        let qs = get_or_panic("qserve-fine");
         for m in [1u64, 8, 32, 128, 512] {
-            let ours = latency(&gpu, Kernel::W4A8FgInt, m, K, N, G);
-            let qs = latency(&gpu, Kernel::QServe { fine: true }, m, K, N, G);
-            assert!(qs >= ours, "m={m}");
+            let ours = latency(&gpu, &*is, m, K, N, G);
+            let theirs = latency(&gpu, &*qs, m, K, N, G);
+            assert!(theirs >= ours, "m={m}");
         }
-        let ratio = latency(&gpu, Kernel::QServe { fine: true }, 256, K, N, G)
-            / latency(&gpu, Kernel::W4A8FgInt, 256, K, N, G);
+        let ratio =
+            latency(&gpu, &*qs, 256, K, N, G) / latency(&gpu, &*is, 256, K, N, G);
         assert!(ratio > 1.2, "ratio={ratio}");
     }
 
@@ -176,18 +176,34 @@ mod tests {
         // Fig. 5a: Marlin W4A16 is great when memory-bound but the int8
         // tensor core wins once compute-bound (paper §5.7).
         let gpu = Gpu::default();
-        let small_16 = accel_vs_fp16(&gpu, Kernel::W4A16, 1, K, N, G);
+        let w4a16 = get_or_panic("w4a16");
+        let is = get_or_panic("w4a8-fg-is");
+        let small_16 = accel_vs_fp16(&gpu, &*w4a16, 1, K, N, G);
         assert!(small_16 > 2.5, "small={small_16}");
-        let large_is = accel_vs_fp16(&gpu, Kernel::W4A8FgInt, 256, K, N, G);
-        let large_16 = accel_vs_fp16(&gpu, Kernel::W4A16, 256, K, N, G);
+        let large_is = accel_vs_fp16(&gpu, &*is, 256, K, N, G);
+        let large_16 = accel_vs_fp16(&gpu, &*w4a16, 256, K, N, G);
         assert!(large_is > large_16, "is={large_is} w4a16={large_16}");
     }
 
     #[test]
     fn decode_latency_monotone_in_batch() {
         let gpu = Gpu::default();
-        let l1 = decode_latency(&gpu, Kernel::W4A8FgInt, 1, 4096, 11008, 32, 128);
-        let l64 = decode_latency(&gpu, Kernel::W4A8FgInt, 64, 4096, 11008, 32, 128);
+        let is = get_or_panic("w4a8-fg-is");
+        let l1 = decode_latency(&gpu, &*is, 1, 4096, 11008, 32, 128);
+        let l64 = decode_latency(&gpu, &*is, 64, 4096, 11008, 32, 128);
         assert!(l64 > l1);
+    }
+
+    #[test]
+    fn degraded_is_kernel_prices_between_fs_and_is() {
+        // the §B.4 fallback pays the per-group conversion again, so it must
+        // cost at least the fast IS kernel and no more than float scale
+        // plus its launch-noise margin at a compute-bound shape.
+        let gpu = Gpu::default();
+        let is = latency(&gpu, &*get_or_panic("w4a8-fg-is"), 256, K, N, G);
+        let safe = latency(&gpu, &*get_or_panic("w4a8-fg-is-safe"), 256, K, N, G);
+        let fs = latency(&gpu, &*get_or_panic("w4a8-fg-fs"), 256, K, N, G);
+        assert!(safe >= is, "safe={safe} is={is}");
+        assert!(safe <= fs * 1.05, "safe={safe} fs={fs}");
     }
 }

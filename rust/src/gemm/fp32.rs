@@ -6,7 +6,49 @@
 //! single-accumulator loop cannot be auto-vectorized) — the baseline is
 //! honest; an artificially slow FP16 baseline would inflate our speedups.
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
+use super::PackedWeight;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// FP16-baseline kernel descriptor. Registered for the cost model and as
+/// the denominator of every acceleration ratio; the executable float path
+/// is `Linear::Float` (float weights never pass through [`PackedWeight`]).
+pub struct Fp16Kernel;
+
+impl GemmKernel for Fp16Kernel {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+    fn label(&self) -> &'static str {
+        "FP16"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::F16
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::F16
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Native
+    }
+    fn fine_grained(&self) -> bool {
+        false
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Fp16Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.90
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, _g: u64) -> OpTrace {
+        OpTrace { float_mac: m * n * k, weight_bytes: n * k * 2, ..Default::default() }
+    }
+    fn forward(&self, _x: &Mat, _pw: &PackedWeight) -> Mat {
+        unreachable!("fp16 executes as Linear::Float; it has no packed-weight path")
+    }
+}
 
 /// Vectorizable f32 dot product: 8 independent accumulator lanes.
 #[inline(always)]

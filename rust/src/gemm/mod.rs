@@ -16,6 +16,7 @@
 
 pub mod fp32;
 pub mod qserve;
+pub mod registry;
 pub mod trace;
 pub mod w4a16;
 pub mod w4a4;
@@ -24,48 +25,12 @@ pub mod w4a8_fg_float;
 pub mod w4a8_fg_int;
 pub mod w8a8;
 
+pub use registry::{GemmKernel, MathPipe, ScaleMode};
+
 use crate::quant::methods::QuantizedLinear;
 use crate::quant::pack::pack_int4;
 use crate::quant::{Bits, Granularity};
 use crate::tensor::Mat;
-
-/// Which kernel scheme to run — the paper's comparison axis.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Kernel {
-    /// FP16 baseline (f32 stand-in).
-    Fp16,
-    /// Coarse W8A8 (SmoothQuant-style): per-channel/per-token scales.
-    W8A8,
-    /// Marlin-like weight-only W4A16: fused unpack+dequant into float GEMM.
-    W4A16,
-    /// Odyssey-like coarse W4A8 FastGEMM: per-channel scale, one conversion.
-    W4A8Coarse,
-    /// Fine-grained W4A8 with per-group FLOAT scales — Fig. 2(b), the
-    /// bottleneck baseline.
-    W4A8FgFloat,
-    /// Fine-grained W4A8 with INTEGER scales — Fig. 2(c), the contribution.
-    W4A8FgInt,
-    /// Atom-like fine-grained W4A4 (float scales).
-    W4A4,
-    /// QServe/DGQ dual-grained W4A8 (asymmetric 4-bit level-2).
-    QServe { fine: bool },
-}
-
-impl Kernel {
-    pub fn label(self) -> &'static str {
-        match self {
-            Kernel::Fp16 => "FP16",
-            Kernel::W8A8 => "W8A8",
-            Kernel::W4A16 => "W4A16 (Marlin)",
-            Kernel::W4A8Coarse => "W4A8 coarse (Odyssey)",
-            Kernel::W4A8FgFloat => "W4A8 FG float-scale",
-            Kernel::W4A8FgInt => "W4A8 FG Integer Scale",
-            Kernel::W4A4 => "W4A4 FG (Atom)",
-            Kernel::QServe { fine: false } => "QServe W4A8 coarse",
-            Kernel::QServe { fine: true } => "QServe W4A8 fine",
-        }
-    }
-}
 
 /// A weight tensor prepared (packed, scales laid out) for one kernel.
 /// Preparation happens offline at quantization time, exactly as the paper's

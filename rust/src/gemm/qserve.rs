@@ -8,9 +8,78 @@
 //! Integer-Scale kernel beats it (Fig. 6/7): IS has no per-element expansion
 //! at all.
 
-use super::QuantAct;
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
+use super::{PackedWeight, QuantAct};
 use crate::quant::methods::dual_grained::DualGrainedWeight;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// QServe/DGQ dual-grained kernel descriptor (cost-model + table rows).
+/// Executable forwards run on [`DualGrainedWeight`], not [`PackedWeight`],
+/// so the trait forward is unreachable by construction.
+pub struct QServeKernel {
+    pub fine: bool,
+}
+
+impl GemmKernel for QServeKernel {
+    fn name(&self) -> &'static str {
+        if self.fine {
+            "qserve-fine"
+        } else {
+            "qserve-coarse"
+        }
+    }
+    fn label(&self) -> &'static str {
+        if self.fine {
+            "QServe W4A8 fine"
+        } else {
+            "QServe W4A8 coarse"
+        }
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Float
+    }
+    fn fine_grained(&self) -> bool {
+        self.fine
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        if self.fine {
+            0.45
+        } else {
+            0.70
+        }
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let (mn, groups) = (m * n, k / g);
+        let conversions = if self.fine { mn * groups } else { mn };
+        OpTrace {
+            int_mac: mn * k,
+            // per-element (w4−z)·s2 expansion on CUDA cores, re-done by
+            // every 128-row M-tile (threadblocks cannot share registers)
+            expand_ops: n * k * m.div_ceil(128),
+            i32_to_f32: conversions,
+            float_mac: conversions,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn servable(&self) -> bool {
+        false
+    }
+    fn forward(&self, _x: &Mat, _pw: &PackedWeight) -> Mat {
+        unreachable!("QServe kernels run via DualGrainedWeight, not Linear")
+    }
+}
 
 /// Expand one dual-grained weight row into int8: the per-element
 /// `(w4 − z)·s2` multiply/subtract/clamp chain QServe's main loop pays

@@ -1,0 +1,196 @@
+//! The kernel registry — the dispatch spine of the quantize→pack→dispatch
+//! pipeline.
+//!
+//! Every GEMM scheme is a [`GemmKernel`]: a self-describing object that
+//! carries its stable name (used by plan files), its human label, its
+//! weight/activation bit-widths, its [`ScaleMode`], its analytical op trace
+//! (paper Table 2) and cost-model utilization, and its executable forward.
+//! `model::Linear` dispatches through the trait object, `costmodel` prices
+//! any kernel from its self-description, and `plan` auto-selection iterates
+//! the registry — so adding a kernel means writing one impl and calling
+//! [`register`]; no `match` in `gemm/mod.rs`, `model/linear.rs` or
+//! `costmodel/` needs editing.
+//!
+//! Built-in kernels register themselves lazily on first registry access;
+//! out-of-tree kernels (tests, downstream crates) call [`register`] at any
+//! time.
+
+use super::trace::OpTrace;
+use super::PackedWeight;
+use crate::quant::Bits;
+use crate::tensor::Mat;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// How a kernel represents per-group scales at inference time — the paper's
+/// central axis of comparison (Fig. 2 b vs c). This is a *kernel*
+/// self-description field: the same quantized weight can be executed under
+/// either mode by kernels that carry both scale sets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// No group-scale epilogue (FP16 / weight-only float math).
+    Native,
+    /// Per-group float scales; each group's INT32 partial is converted to
+    /// f32 before the scale multiply (Fig. 2b — the bottleneck).
+    Float,
+    /// Integer Scale with power-of-two amplifier α (Fig. 2c — the
+    /// contribution): the reduction stays in the integer domain.
+    Integer,
+}
+
+/// Which math pipe the kernel's inner loop occupies on the modeled GPU.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MathPipe {
+    Fp16Tc,
+    Int8Tc,
+    Int4Tc,
+}
+
+/// A GEMM scheme: self-description + executable forward. Implementations
+/// must be stateless value objects (`Send + Sync`); the registry hands out
+/// `Arc`s that `Linear` stores per layer.
+pub trait GemmKernel: Send + Sync {
+    /// Stable registry id, e.g. `"w4a8-fg-is"` — the name plan files use.
+    fn name(&self) -> &'static str;
+    /// Human label for tables/figures, e.g. `"W4A8 FG Integer Scale"`.
+    fn label(&self) -> &'static str;
+    fn weight_bits(&self) -> Bits;
+    fn act_bits(&self) -> Bits;
+    fn scale_mode(&self) -> ScaleMode;
+    /// Whether the kernel consumes per-group (fine-grained) weight scales;
+    /// coarse kernels expect one scale per output channel.
+    fn fine_grained(&self) -> bool;
+    /// Tensor-core pipe the inner MAC loop runs on (cost model).
+    fn math_pipe(&self) -> MathPipe;
+    /// Sustained tensor-core utilization (calibrated to the paper's anchor
+    /// ratios — fine-grained float scale cannot keep the MMA pipeline fed).
+    fn utilization(&self) -> f64;
+    /// Analytical op counts for shape (m, k, n) with group size g —
+    /// paper Table 2 made quantitative. Drives `costmodel::latency`.
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace;
+    /// Registry name of the degraded variant to fall back to when the
+    /// §B.4 overflow audit flags a layer; `None` if this kernel has no
+    /// overflow exposure.
+    fn overflow_fallback(&self) -> Option<&'static str> {
+        None
+    }
+    /// Whether this kernel executes through the [`PackedWeight`] dispatch
+    /// path (`Linear::forward`). Cost-model-only entries whose executable
+    /// lives elsewhere (QServe runs on `DualGrainedWeight`) return false,
+    /// and plan files refuse to bind them to layers.
+    fn servable(&self) -> bool {
+        true
+    }
+    /// Execute `x (M×k f32) @ wᵀ` → `M×n f32`. Activation quantization
+    /// (per [`Self::act_bits`]) happens inside, so `Linear::forward` needs
+    /// no per-kernel knowledge.
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat;
+}
+
+type Registry = Mutex<HashMap<&'static str, Arc<dyn GemmKernel>>>;
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: HashMap<&'static str, Arc<dyn GemmKernel>> = HashMap::new();
+        let builtins: Vec<Arc<dyn GemmKernel>> = vec![
+            Arc::new(super::fp32::Fp16Kernel),
+            Arc::new(super::w8a8::W8A8Kernel),
+            Arc::new(super::w4a16::W4A16Kernel),
+            Arc::new(super::w4a8_coarse::W4A8CoarseKernel),
+            Arc::new(super::w4a8_fg_float::W4A8FgFloatKernel),
+            Arc::new(super::w4a8_fg_int::W4A8FgIntKernel),
+            Arc::new(super::w4a8_fg_int::W4A8FgIntSafeKernel),
+            Arc::new(super::w4a4::W4A4Kernel),
+            Arc::new(super::qserve::QServeKernel { fine: false }),
+            Arc::new(super::qserve::QServeKernel { fine: true }),
+        ];
+        for k in builtins {
+            m.insert(k.name(), k);
+        }
+        Mutex::new(m)
+    })
+}
+
+/// Register a kernel (or replace one with the same name). This is the whole
+/// extension surface: a new kernel lives in one file and calls this once.
+pub fn register(kernel: Arc<dyn GemmKernel>) {
+    registry().lock().unwrap().insert(kernel.name(), kernel);
+}
+
+/// Look up a kernel by its stable name.
+pub fn get(name: &str) -> Option<Arc<dyn GemmKernel>> {
+    registry().lock().unwrap().get(name).cloned()
+}
+
+/// Look up a kernel, panicking with the available names on a miss — for
+/// call sites where a missing kernel is a programming error.
+pub fn get_or_panic(name: &str) -> Arc<dyn GemmKernel> {
+    get(name).unwrap_or_else(|| panic!("kernel '{name}' not registered (have: {:?})", names()))
+}
+
+/// Sorted list of registered kernel names.
+pub fn names() -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = registry().lock().unwrap().keys().copied().collect();
+    v.sort_unstable();
+    v
+}
+
+/// Bytes of activation traffic per element for the cost model, derived
+/// from the kernel's activation bit-width.
+pub fn act_bytes(bits: Bits, elems: u64) -> u64 {
+    match bits {
+        Bits::F16 => elems * 2,
+        Bits::B8 => elems,
+        Bits::B4 => elems / 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_registered_and_self_describe() {
+        for name in [
+            "fp16",
+            "w8a8",
+            "w4a16",
+            "w4a8-coarse",
+            "w4a8-fg-fs",
+            "w4a8-fg-is",
+            "w4a8-fg-is-safe",
+            "w4a4",
+            "qserve-coarse",
+            "qserve-fine",
+        ] {
+            let k = get(name).unwrap_or_else(|| panic!("missing builtin {name}"));
+            assert_eq!(k.name(), name);
+            assert!(!k.label().is_empty());
+            assert!(k.utilization() > 0.0 && k.utilization() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn is_kernel_declares_safe_fallback() {
+        let is = get("w4a8-fg-is").unwrap();
+        assert_eq!(is.overflow_fallback(), Some("w4a8-fg-is-safe"));
+        let safe = get(is.overflow_fallback().unwrap()).unwrap();
+        assert_eq!(safe.scale_mode(), ScaleMode::Integer);
+        assert!(safe.overflow_fallback().is_none(), "fallback must terminate");
+    }
+
+    #[test]
+    fn scale_modes_match_paper_axis() {
+        assert_eq!(get("w4a8-fg-fs").unwrap().scale_mode(), ScaleMode::Float);
+        assert_eq!(get("w4a8-fg-is").unwrap().scale_mode(), ScaleMode::Integer);
+        assert_eq!(get("fp16").unwrap().scale_mode(), ScaleMode::Native);
+    }
+
+    #[test]
+    fn names_sorted_and_contain_builtins() {
+        let n = names();
+        assert!(n.windows(2).all(|w| w[0] <= w[1]));
+        assert!(n.contains(&"w4a8-fg-is"));
+    }
+}

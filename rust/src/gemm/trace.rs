@@ -1,12 +1,12 @@
 //! Analytical operation-count traces — paper Table 2 made quantitative.
 //!
-//! For each kernel scheme, count the integer MACs, I32→F32 conversions,
-//! float FMAs, and per-element expansion ops a GEMM of shape (M, K, N, g)
-//! performs. These counts drive the `costmodel` and let tests assert the
-//! paper's core claim structurally: fine-grained float scale needs
-//! `M·N·K/g` conversions, Integer Scale exactly `M·N`.
-
-use super::Kernel;
+//! [`OpTrace`] counts the integer MACs, I32→F32 conversions, float FMAs,
+//! and per-element expansion ops a GEMM of shape (M, K, N, g) performs.
+//! Each kernel produces its own trace via [`super::GemmKernel::trace`]
+//! (part of its registry self-description); the counts drive the
+//! `costmodel` and let tests assert the paper's core claim structurally:
+//! fine-grained float scale needs `M·N·K/g` conversions, Integer Scale
+//! exactly `M·N`.
 
 /// Operation counts for one GEMM call.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -25,69 +25,10 @@ pub struct OpTrace {
     pub weight_bytes: u64,
 }
 
-/// Trace a kernel on problem size (m, k, n) with weight group size g.
-pub fn trace(kernel: Kernel, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
-    let groups = k / g;
-    let mn = m * n;
-    let macs = mn * k;
-    match kernel {
-        Kernel::Fp16 => OpTrace {
-            float_mac: macs,
-            weight_bytes: n * k * 2,
-            ..Default::default()
-        },
-        Kernel::W8A8 => OpTrace {
-            int_mac: macs,
-            i32_to_f32: mn * groups.max(1),
-            float_mac: mn * groups.max(1),
-            weight_bytes: n * k,
-            ..Default::default()
-        },
-        Kernel::W4A16 => OpTrace {
-            float_mac: macs + mn * groups, // dequant folded into fp MACs
-            weight_bytes: n * k / 2,
-            ..Default::default()
-        },
-        Kernel::W4A8Coarse => OpTrace {
-            int_mac: macs,
-            i32_to_f32: mn,
-            float_mac: mn,
-            weight_bytes: n * k / 2,
-            ..Default::default()
-        },
-        Kernel::W4A8FgFloat | Kernel::W4A4 => OpTrace {
-            int_mac: macs,
-            // one conversion + one float FMA per group partial — Fig. 2(b)
-            i32_to_f32: mn * groups,
-            float_mac: mn * groups,
-            weight_bytes: n * k / 2,
-            ..Default::default()
-        },
-        Kernel::W4A8FgInt => OpTrace {
-            int_mac: macs,
-            int_scale_mac: mn * groups,
-            // the single epilogue conversion — Fig. 2(c)
-            i32_to_f32: mn,
-            float_mac: mn,
-            weight_bytes: n * k / 2,
-            ..Default::default()
-        },
-        Kernel::QServe { fine } => OpTrace {
-            int_mac: macs,
-            // per-element (w4−z)·s2 expansion on CUDA cores, re-done by
-            // every 128-row M-tile (threadblocks cannot share registers)
-            expand_ops: n * k * m.div_ceil(128),
-            i32_to_f32: if fine { mn * groups } else { mn },
-            float_mac: if fine { mn * groups } else { mn },
-            weight_bytes: n * k / 2,
-            ..Default::default()
-        },
-    }
-}
-
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::gemm::registry;
+    use crate::gemm::GemmKernel as _;
 
     const M: u64 = 64;
     const K: u64 = 4096;
@@ -96,37 +37,37 @@ mod tests {
 
     #[test]
     fn float_scale_conversions_scale_with_groups() {
-        let fs = trace(Kernel::W4A8FgFloat, M, K, N, G);
-        let is = trace(Kernel::W4A8FgInt, M, K, N, G);
+        let fs = registry::get_or_panic("w4a8-fg-fs").trace(M, K, N, G);
+        let is = registry::get_or_panic("w4a8-fg-is").trace(M, K, N, G);
         assert_eq!(fs.i32_to_f32, M * N * (K / G));
         assert_eq!(is.i32_to_f32, M * N);
         // the paper's motivating number: a 4096×4096 layer with g=128 has
         // 131072 scales ⇒ that many per-tile conversion sites
-        let layer = trace(Kernel::W4A8FgFloat, 1, 4096, 4096, 128);
+        let layer = registry::get_or_panic("w4a8-fg-fs").trace(1, 4096, 4096, 128);
         assert_eq!(layer.i32_to_f32 / 1, 4096 * 32);
     }
 
     #[test]
     fn integer_scale_stays_integer_domain() {
-        let is = trace(Kernel::W4A8FgInt, M, K, N, G);
+        let is = registry::get_or_panic("w4a8-fg-is").trace(M, K, N, G);
         assert_eq!(is.int_scale_mac, M * N * (K / G));
         assert_eq!(is.float_mac, M * N);
     }
 
     #[test]
     fn qserve_expansion_per_weight_per_mtile() {
-        let q = trace(Kernel::QServe { fine: false }, M, K, N, G);
+        let q = registry::get_or_panic("qserve-coarse").trace(M, K, N, G);
         assert_eq!(q.expand_ops, N * K * M.div_ceil(128));
-        let ours = trace(Kernel::W4A8FgInt, M, K, N, G);
+        let ours = registry::get_or_panic("w4a8-fg-is").trace(M, K, N, G);
         assert_eq!(ours.expand_ops, 0);
     }
 
     #[test]
     fn weight_traffic_halves_at_4bit() {
-        let w8 = trace(Kernel::W8A8, M, K, N, K);
-        let w4 = trace(Kernel::W4A8Coarse, M, K, N, K);
+        let w8 = registry::get_or_panic("w8a8").trace(M, K, N, K);
+        let w4 = registry::get_or_panic("w4a8-coarse").trace(M, K, N, K);
         assert_eq!(w4.weight_bytes * 2, w8.weight_bytes);
-        let f16 = trace(Kernel::Fp16, M, K, N, K);
+        let f16 = registry::get_or_panic("fp16").trace(M, K, N, K);
         assert_eq!(w4.weight_bytes * 4, f16.weight_bytes);
     }
 }

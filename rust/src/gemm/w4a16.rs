@@ -6,9 +6,54 @@
 //! "dequantize in registers" design. This is the memory-bound-optimal
 //! baseline the paper compares against in Table 6 / Figures 1 and 5.
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
 use super::PackedWeight;
 use crate::quant::pack::unpack_row_into;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// Marlin-like weight-only W4A16 kernel descriptor.
+pub struct W4A16Kernel;
+
+impl GemmKernel for W4A16Kernel {
+    fn name(&self) -> &'static str {
+        "w4a16"
+    }
+    fn label(&self) -> &'static str {
+        "W4A16 (Marlin)"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::F16
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Native
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Fp16Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.80
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let groups = k / g;
+        // dequant folded into the fp MAC stream
+        OpTrace {
+            float_mac: m * n * k + m * n * groups,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        gemm(x, pw)
+    }
+}
 
 /// `x (M×K f32) @ wᵀ (N×K int4 packed + group scales)`
 ///

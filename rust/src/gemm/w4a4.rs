@@ -6,10 +6,63 @@
 //! the Integer-Scale variant to show the fix applies at W4A4 too (the paper
 //! lists W4A4 among the "various bandwidths" IS supports).
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
 use super::w4a8_fg_int::dot_i8;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// Atom-like fine-grained W4A4 kernel descriptor. Runs the Integer-Scale
+/// epilogue when the packed weight carries integer scales, the float-scale
+/// epilogue otherwise (data-driven, not a dispatch concern).
+pub struct W4A4Kernel;
+
+impl GemmKernel for W4A4Kernel {
+    fn name(&self) -> &'static str {
+        "w4a4"
+    }
+    fn label(&self) -> &'static str {
+        "W4A4 FG (Atom)"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Float
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int4Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.55
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let (mn, groups) = (m * n, k / g);
+        OpTrace {
+            int_mac: mn * k,
+            i32_to_f32: mn * groups,
+            float_mac: mn * groups,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        let qa = QuantAct::quantize(x, Bits::B4);
+        if pw.int_scales.is_some() {
+            gemm_int_scale(&qa, pw)
+        } else {
+            gemm_float_scale(&qa, pw)
+        }
+    }
+}
 
 /// Atom-style: per-group I32→F32 conversion (activations already quantized
 /// to 4-bit codes stored in i8, weights packed int4).

@@ -6,10 +6,56 @@
 //! scheme in Fig. 5(a); fine granularity gives up this efficiency unless
 //! Integer Scale restores it.
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
 use super::w4a8_fg_int::dot_i8;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// Odyssey-like coarse W4A8 kernel descriptor (per-channel scales).
+pub struct W4A8CoarseKernel;
+
+impl GemmKernel for W4A8CoarseKernel {
+    fn name(&self) -> &'static str {
+        "w4a8-coarse"
+    }
+    fn label(&self) -> &'static str {
+        "W4A8 coarse (Odyssey)"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Float
+    }
+    fn fine_grained(&self) -> bool {
+        false
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.88
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, _g: u64) -> OpTrace {
+        let mn = m * n;
+        OpTrace {
+            int_mac: mn * k,
+            i32_to_f32: mn,
+            float_mac: mn,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        gemm(&QuantAct::quantize(x, Bits::B8), pw)
+    }
+}
 
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
     assert_eq!(x.k, w.k);

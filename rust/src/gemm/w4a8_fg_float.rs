@@ -16,10 +16,58 @@
 //! here they are scalar converts between vectorized integer MAC loops — the
 //! same structural stall, measured by `benches/fig3_kernel.rs`.
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
 use super::w4a8_fg_int::dot_i8;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// Fine-grained W4A8 float-scale kernel descriptor — Fig. 2(b), the
+/// bottleneck baseline.
+pub struct W4A8FgFloatKernel;
+
+impl GemmKernel for W4A8FgFloatKernel {
+    fn name(&self) -> &'static str {
+        "w4a8-fg-fs"
+    }
+    fn label(&self) -> &'static str {
+        "W4A8 FG float-scale"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Float
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.55
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let (mn, groups) = (m * n, k / g);
+        // one conversion + one float FMA per group partial — Fig. 2(b)
+        OpTrace {
+            int_mac: mn * k,
+            i32_to_f32: mn * groups,
+            float_mac: mn * groups,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        gemm(&QuantAct::quantize(x, Bits::B8), pw)
+    }
+}
 
 /// `x (M×K int8, per-token scales) @ wᵀ (N×K int4 packed, n×k/g float scales)`
 ///

@@ -16,9 +16,115 @@
 //! (Fig. 8); we audit identically in `quant::integer_scale::overflow_audit`
 //! and additionally verify in debug builds that the i32 bound holds.
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// Fine-grained W4A8 Integer-Scale kernel descriptor — Fig. 2(c), the
+/// paper's contribution. Self-declares the §B.4 degraded variant as its
+/// overflow fallback, so plan resolution (and the overflow guard) can
+/// demote flagged layers without any kernel-specific logic elsewhere.
+pub struct W4A8FgIntKernel;
+
+impl GemmKernel for W4A8FgIntKernel {
+    fn name(&self) -> &'static str {
+        "w4a8-fg-is"
+    }
+    fn label(&self) -> &'static str {
+        "W4A8 FG Integer Scale"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Integer
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.82
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let (mn, groups) = (m * n, k / g);
+        // the single epilogue conversion — Fig. 2(c)
+        OpTrace {
+            int_mac: mn * k,
+            int_scale_mac: mn * groups,
+            i32_to_f32: mn,
+            float_mac: mn,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn overflow_fallback(&self) -> Option<&'static str> {
+        Some("w4a8-fg-is-safe")
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        let qa = QuantAct::quantize(x, Bits::B8);
+        if pw.overflow_risk {
+            // belt-and-braces: a flagged weight never runs the fast epilogue
+            // even if plan resolution did not swap the kernel (paper §B.4)
+            gemm_overflow_safe(&qa, pw)
+        } else {
+            gemm(&qa, pw)
+        }
+    }
+}
+
+/// The §B.4 overflow-safe degraded Integer-Scale kernel as a first-class
+/// registry entry, so plans can route audited layers to it explicitly.
+pub struct W4A8FgIntSafeKernel;
+
+impl GemmKernel for W4A8FgIntSafeKernel {
+    fn name(&self) -> &'static str {
+        "w4a8-fg-is-safe"
+    }
+    fn label(&self) -> &'static str {
+        "W4A8 FG IS overflow-safe"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Integer
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.55
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let (mn, groups) = (m * n, k / g);
+        // per-group conversion reintroduced (same cost shape as float scale)
+        OpTrace {
+            int_mac: mn * k,
+            i32_to_f32: mn * groups,
+            float_mac: mn * groups,
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        gemm_overflow_safe(&QuantAct::quantize(x, Bits::B8), pw)
+    }
+}
 
 /// Vectorizable int8 group dot product (LLVM lowers this to pmaddwd-style
 /// SIMD on AVX2 — the CPU stand-in for the int8 tensor-core MMA).
@@ -156,6 +262,42 @@ mod tests {
         let expect = xdq.matmul_t(&qw.dequant_int_scale());
         let rel = safe.mse(&expect).sqrt() / (expect.frob() / (expect.data.len() as f64).sqrt());
         assert!(rel < 1e-3, "rel={rel}");
+    }
+
+    #[test]
+    fn overflow_safe_matches_float_scale_reference() {
+        // §B.4: the degraded kernel changes only the epilogue order, so at
+        // the paper's α=2^10 it must agree with the float-scale reference
+        // (dequantized weights, float math) up to the scale-rounding error.
+        let mut rng = Rng::new(27);
+        let xf = Mat::randn(6, 256, 1.0, &mut rng);
+        let wf = Mat::randn(24, 256, 0.05, &mut rng);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let pw = pack_for_test(&wf, Bits::B4, Granularity::Group(64), Some(1024));
+        let safe = gemm_overflow_safe(&qa, &pw);
+
+        // float-scale reference: x_deq @ dequant(W)ᵀ with FLOAT scales
+        let mut qw = crate::quant::quantize_weight_sym(&wf, Bits::B4, Granularity::Group(64));
+        crate::quant::integer_scale::attach_integer_scales(&mut qw, Some(1024));
+        let xdq = {
+            let mut xm = Mat::zeros(6, 256);
+            for r in 0..6 {
+                for c in 0..256 {
+                    xm.data[r * 256 + c] = qa.q[r * 256 + c] as f32 * qa.scales[r];
+                }
+            }
+            xm
+        };
+        let float_ref = xdq.matmul_t(&qw.dequant());
+        let rel = safe.mse(&float_ref).sqrt()
+            / (float_ref.frob() / (float_ref.data.len() as f64).sqrt());
+        assert!(rel < 0.04, "rel={rel}");
+
+        // and via the registry descriptor it is the declared fallback of
+        // the fast IS kernel, producing the same numbers as direct calls
+        let safe_k = crate::gemm::registry::get_or_panic("w4a8-fg-is-safe");
+        let via_registry = safe_k.forward(&xf, &pw);
+        assert!(via_registry.max_abs_diff(&safe) < 1e-5);
     }
 
     #[test]

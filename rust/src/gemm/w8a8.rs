@@ -4,8 +4,57 @@
 //! scheme whose efficiency fine-grained float scales destroy and Integer
 //! Scale restores at lower bits.
 
+use super::registry::{GemmKernel, MathPipe, ScaleMode};
+use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
+use crate::quant::Bits;
 use crate::tensor::Mat;
+
+/// W8A8 kernel descriptor (coarse per-channel by default; the same GEMM
+/// also runs the fine-grained group path the LLaMA-3 recipe uses for
+/// down-projections).
+pub struct W8A8Kernel;
+
+impl GemmKernel for W8A8Kernel {
+    fn name(&self) -> &'static str {
+        "w8a8"
+    }
+    fn label(&self) -> &'static str {
+        "W8A8"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Float
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.85
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        let groups = (k / g).max(1);
+        let mn = m * n;
+        OpTrace {
+            int_mac: mn * k,
+            i32_to_f32: mn * groups,
+            float_mac: mn * groups,
+            weight_bytes: n * k,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        gemm(&QuantAct::quantize(x, Bits::B8), pw)
+    }
+}
 
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
     assert_eq!(w.bits, crate::quant::Bits::B8);

@@ -7,12 +7,22 @@
 //! * **L3 (this crate)** — serving coordinator (router, continuous batcher,
 //!   block-based scheduler, paged KV-cache pool with prefix sharing), the
 //!   quantization toolkit with every baseline PTQ method, the CPU kernel
-//!   zoo, evaluation harnesses, and the PJRT runtime that executes
-//!   AOT-compiled JAX artifacts.
+//!   zoo behind a self-describing kernel registry, evaluation harnesses,
+//!   and the PJRT runtime that executes AOT-compiled JAX artifacts.
 //! * **L2 (`python/compile/model.py`)** — the JAX transformer, lowered once
 //!   to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas GEMM kernels (float-scale
 //!   and Integer-Scale variants) checked against pure-jnp oracles.
+//!
+//! **Entry API:** quantization is driven by a [`plan::QuantPlan`] — a
+//! per-layer-role resolution (attn q/k/v/o, mlp gate/up/down, MoE experts,
+//! per-layer overrides) built from [`plan::PlanBuilder`], parsed from a
+//! plan file (`repro serve --plan recipes/llama3.plan`), or auto-selected
+//! per layer shape by the [`costmodel`]. Kernels live in
+//! [`gemm::registry`]: each one self-describes (label, bit-widths, scale
+//! mode, op trace, cost-model utilization), so adding a kernel is one impl
+//! plus one `register` call — no dispatch `match` anywhere. The seed's
+//! whole-model `QuantSpec` remains as uniform-plan sugar.
 //!
 //! See `DESIGN.md` for the full system inventory — including the paged
 //! KV-cache pool in [`kvpool`] — and the experiment index (which bench or
@@ -26,6 +36,7 @@ pub mod eval;
 pub mod gemm;
 pub mod kvpool;
 pub mod model;
+pub mod plan;
 pub mod quant;
 pub mod runtime;
 pub mod tables;

@@ -15,8 +15,11 @@
 
 use integer_scale::coordinator::{Engine, EngineConfig, Request};
 use integer_scale::data::{CorpusGen, Split};
-use integer_scale::model::quantize::{quantize_model, Method, QuantSpec};
+use integer_scale::model::quantize::{
+    kernel_assignment, quantize_model_plan, Method, QuantSpec,
+};
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::{PlanBuilder, QuantPlan};
 use integer_scale::quant::{BitWidth, Granularity};
 use integer_scale::runtime::{try_load, PjrtRuntime};
 use integer_scale::tables::{self, Ctx};
@@ -67,29 +70,46 @@ impl Args {
     }
 }
 
-fn scheme_spec(name: &str) -> Option<QuantSpec> {
+const SCHEMES: [&str; 8] =
+    ["fp16", "w8a8", "w4a16", "w4a8-coarse", "w4a8-fs", "w4a8-is", "w4a4", "auto"];
+
+/// Build the plan a `--scheme` string names. `None` = FP16 baseline.
+/// Unknown schemes are a hard error: exit listing the valid names and the
+/// `--plan <file>` alternative.
+fn scheme_plan(name: &str) -> Option<QuantPlan> {
+    let uniform = |spec| Some(PlanBuilder::uniform(spec));
     match name {
         "fp16" => None,
-        "w8a8" => Some(QuantSpec::new(Method::SmoothQuant, BitWidth::W8A8, Granularity::Group(128))),
-        "w4a16" => Some(QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128))),
+        "w8a8" => uniform(QuantSpec::new(Method::SmoothQuant, BitWidth::W8A8, Granularity::Group(128))),
+        "w4a16" => uniform(QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128))),
         "w4a8-coarse" => {
-            Some(QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel))
+            uniform(QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel))
         }
-        "w4a8-fs" => Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128))),
-        "w4a8-is" => Some(
+        "w4a8-fs" => uniform(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128))),
+        "w4a8-is" => uniform(
             QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
         ),
-        "w4a4" => Some(QuantSpec::new(Method::QuaRot, BitWidth::W4A4, Granularity::Group(128))),
+        "w4a4" => uniform(QuantSpec::new(Method::QuaRot, BitWidth::W4A4, Granularity::Group(128))),
+        "auto" => Some(
+            PlanBuilder::new(
+                QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+            )
+            .overflow_guard(true)
+            .auto_select(16)
+            .build(),
+        ),
         other => {
-            eprintln!("unknown scheme '{other}', using w4a8-is");
-            Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024))
+            eprintln!(
+                "unknown scheme '{other}'\nvalid schemes: {}\nor pass a plan file: --plan <file> (see recipes/)",
+                SCHEMES.join(" ")
+            );
+            std::process::exit(2);
         }
     }
 }
 
 fn serve(args: &Args) {
     let moe = args.get_bool("moe");
-    let scheme = args.get_str("scheme", "w4a8-is");
     let requests = args.get_usize("requests", 32);
     let max_batch = args.get_usize("max-batch", 16);
     let prompt_len = args.get_usize("prompt-len", 16);
@@ -100,13 +120,39 @@ fn serve(args: &Args) {
     let weights = ModelWeights::load_or_random(Path::new(wpath), cfg, 1234);
     let gen = CorpusGen::new(cfg.vocab as u32, 7);
     let calib = gen.stream(192, Split::C4, 11);
-    let spec = scheme_spec(&scheme);
-    let model = match &spec {
-        None => Transformer::from_weights(&weights),
-        Some(s) => quantize_model(&weights, s, &calib),
+    // `--plan <file>` takes precedence over `--scheme <name>`
+    let (label, plan) = match args.flags.get("plan") {
+        Some(path) => {
+            let plan = match QuantPlan::from_file(Path::new(path)) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
+            println!("--- plan {path} (canonical) ---\n{}---", plan.to_text());
+            (path.clone(), Some(plan))
+        }
+        None => {
+            let scheme = args.get_str("scheme", "w4a8-is");
+            (scheme.clone(), scheme_plan(&scheme))
+        }
     };
+    let model = match &plan {
+        None => Transformer::from_weights(&weights),
+        Some(p) => quantize_model_plan(&weights, p, &calib),
+    };
+    if plan.as_ref().is_some_and(|p| p.has_auto() || p.overflow_guard) {
+        // per-layer resolution is the interesting part: print it
+        let mut counts: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
+        for (_, k) in kernel_assignment(&model) {
+            *counts.entry(k).or_insert(0) += 1;
+        }
+        println!("kernel assignment: {counts:?}");
+    }
     println!(
-        "scheme={scheme} model={} params={} max_batch={max_batch}",
+        "scheme={label} model={} params={} max_batch={max_batch}",
         if moe { "moe" } else { "dense" },
         cfg.param_count()
     );

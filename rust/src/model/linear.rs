@@ -1,44 +1,63 @@
 //! Quantizable linear layers.
 //!
-//! A [`Linear`] either runs the float GEMM (FP16 baseline) or a real integer
-//! kernel from [`crate::gemm`] over packed weights — the same code path the
-//! paper's serving engine uses, so per-layer latency and accuracy are both
-//! exercised by every forward pass.
+//! A [`Linear`] either runs the float GEMM (FP16 baseline) or a kernel from
+//! the [`crate::gemm::registry`] over packed weights — the same code path
+//! the paper's serving engine uses, so per-layer latency and accuracy are
+//! both exercised by every forward pass. Dispatch is a trait-object call:
+//! `forward` contains no per-kernel `match`, so registering a new
+//! [`GemmKernel`] makes it servable without touching this file.
 
-use crate::gemm::{self, Kernel, PackedWeight, QuantAct};
-use crate::quant::methods::QuantizedLinear;
-use crate::quant::Bits;
-use crate::tensor::{fwht_rows, Mat};
+use crate::gemm::{self, GemmKernel, PackedWeight};
+use crate::quant::methods::{apply_act_transform, QuantizedLinear};
+use crate::tensor::Mat;
+use std::sync::Arc;
 
-/// How a quantized linear executes at inference time.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ExecPlan {
-    /// Kernel dispatch (the real serving path).
-    Kernel(Kernel),
-}
-
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub enum Linear {
     /// FP16 baseline (f32 stand-in), `n×k` row-major weights.
     Float(Mat),
     Quant {
         pw: PackedWeight,
-        kernel: Kernel,
+        /// The registered kernel this layer dispatches to.
+        kernel: Arc<dyn GemmKernel>,
         /// online activation transforms carried over from the PTQ method
         act_smooth: Option<Vec<f32>>,
         rotate: bool,
-        act_bits: Bits,
     },
 }
 
+impl std::fmt::Debug for Linear {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Linear::Float(w) => f.debug_tuple("Float").field(&(w.rows, w.cols)).finish(),
+            Linear::Quant { pw, kernel, act_smooth, rotate } => f
+                .debug_struct("Quant")
+                .field("n", &pw.n)
+                .field("k", &pw.k)
+                .field("kernel", &kernel.name())
+                .field("smooth", &act_smooth.is_some())
+                .field("rotate", rotate)
+                .finish(),
+        }
+    }
+}
+
 impl Linear {
-    pub fn from_quantized(ql: &QuantizedLinear, kernel: Kernel) -> Linear {
+    pub fn from_quantized(ql: &QuantizedLinear, kernel: Arc<dyn GemmKernel>) -> Linear {
         Linear::Quant {
             pw: PackedWeight::from_quantized(ql),
             kernel,
             act_smooth: ql.act_smooth.clone(),
             rotate: ql.rotate,
-            act_bits: ql.bw.act,
+        }
+    }
+
+    /// Registry name of the kernel this layer dispatches to (`"fp16"` for
+    /// the float path) — what plan reports and tests inspect.
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            Linear::Float(_) => "fp16",
+            Linear::Quant { kernel, .. } => kernel.name(),
         }
     }
 
@@ -60,60 +79,10 @@ impl Linear {
     pub fn forward(&self, x: &Mat) -> Mat {
         match self {
             Linear::Float(w) => gemm::fp32::gemm_f32(x, w),
-            Linear::Quant { pw, kernel, act_smooth, rotate, act_bits } => {
+            Linear::Quant { pw, kernel, act_smooth, rotate } => {
                 // online activation transforms (QuaRot FWHT / smoothing)
-                let xt = if *rotate || act_smooth.is_some() {
-                    let mut xt = x.clone();
-                    if *rotate {
-                        fwht_rows(&mut xt);
-                    }
-                    if let Some(s) = act_smooth {
-                        for r in 0..xt.rows {
-                            for (c, v) in xt.row_mut(r).iter_mut().enumerate() {
-                                *v /= s[c];
-                            }
-                        }
-                    }
-                    std::borrow::Cow::Owned(xt)
-                } else {
-                    std::borrow::Cow::Borrowed(x)
-                };
-                match kernel {
-                    Kernel::Fp16 => unreachable!("float path handled above"),
-                    Kernel::W4A16 => gemm::w4a16::gemm(&xt, pw),
-                    Kernel::W8A8 => {
-                        let qa = QuantAct::quantize(&xt, Bits::B8);
-                        gemm::w8a8::gemm(&qa, pw)
-                    }
-                    Kernel::W4A8Coarse => {
-                        let qa = QuantAct::quantize(&xt, Bits::B8);
-                        gemm::w4a8_coarse::gemm(&qa, pw)
-                    }
-                    Kernel::W4A8FgFloat => {
-                        let qa = QuantAct::quantize(&xt, Bits::B8);
-                        gemm::w4a8_fg_float::gemm(&qa, pw)
-                    }
-                    Kernel::W4A8FgInt => {
-                        let qa = QuantAct::quantize(&xt, Bits::B8);
-                        if pw.overflow_risk {
-                            // paper §B.4: degraded epilogue for flagged layers
-                            gemm::w4a8_fg_int::gemm_overflow_safe(&qa, pw)
-                        } else {
-                            gemm::w4a8_fg_int::gemm(&qa, pw)
-                        }
-                    }
-                    Kernel::W4A4 => {
-                        let qa = QuantAct::quantize(&xt, *act_bits);
-                        if pw.int_scales.is_some() {
-                            gemm::w4a4::gemm_int_scale(&qa, pw)
-                        } else {
-                            gemm::w4a4::gemm_float_scale(&qa, pw)
-                        }
-                    }
-                    Kernel::QServe { .. } => {
-                        unreachable!("QServe kernels run via DualGrainedWeight, not Linear")
-                    }
-                }
+                let xt = apply_act_transform(x, *rotate, act_smooth.as_deref());
+                kernel.forward(&xt, pw)
             }
         }
     }
@@ -122,6 +91,7 @@ impl Linear {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemm::registry;
     use crate::quant::methods::{PtqMethod, Rtn};
     use crate::quant::{BitWidth, Granularity};
     use crate::tensor::Rng;
@@ -136,7 +106,7 @@ mod tests {
 
         let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(64));
         let (ql, _) = ql.with_integer_scale(Some(1024));
-        let qlin = Linear::from_quantized(&ql, Kernel::W4A8FgInt);
+        let qlin = Linear::from_quantized(&ql, registry::get_or_panic("w4a8-fg-is"));
         let out = qlin.forward(&x);
         let rel = out.mse(&ref_out).sqrt() / (ref_out.frob() / (ref_out.data.len() as f64).sqrt());
         assert!(rel < 0.12, "rel={rel}");
@@ -149,8 +119,8 @@ mod tests {
         let x = Mat::randn(4, 128, 1.0, &mut rng);
         let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
         let (qli, _) = ql.clone().with_integer_scale(Some(1024));
-        let a = Linear::from_quantized(&ql, Kernel::W4A8FgFloat).forward(&x);
-        let b = Linear::from_quantized(&qli, Kernel::W4A8FgInt).forward(&x);
+        let a = Linear::from_quantized(&ql, registry::get_or_panic("w4a8-fg-fs")).forward(&x);
+        let b = Linear::from_quantized(&qli, registry::get_or_panic("w4a8-fg-is")).forward(&x);
         let rel = a.mse(&b).sqrt() / (a.frob() / (a.data.len() as f64).sqrt());
         assert!(rel < 0.04, "rel={rel}");
     }
@@ -161,7 +131,18 @@ mod tests {
         let w = Mat::randn(16, 128, 0.05, &mut rng);
         let x = Mat::randn(2, 128, 1.0, &mut rng);
         let ql = Rtn.quantize(&w, &x, BitWidth::W4A16, Granularity::Group(32));
-        let out = Linear::from_quantized(&ql, Kernel::W4A16).forward(&x);
+        let out = Linear::from_quantized(&ql, registry::get_or_panic("w4a16")).forward(&x);
         assert_eq!((out.rows, out.cols), (2, 16));
+    }
+
+    #[test]
+    fn kernel_name_reports_dispatch_target() {
+        let mut rng = Rng::new(83);
+        let w = Mat::randn(8, 64, 0.05, &mut rng);
+        assert_eq!(Linear::Float(w.clone()).kernel_name(), "fp16");
+        let x = Mat::randn(2, 64, 1.0, &mut rng);
+        let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(32));
+        let lin = Linear::from_quantized(&ql, registry::get_or_panic("w4a8-fg-fs"));
+        assert_eq!(lin.kernel_name(), "w4a8-fg-fs");
     }
 }

@@ -15,8 +15,8 @@ pub mod transformer;
 pub mod weights;
 
 pub use kv_cache::KvCache;
-pub use linear::{ExecPlan, Linear};
-pub use quantize::{quantize_model, QuantSpec};
+pub use linear::Linear;
+pub use quantize::{kernel_assignment, quantize_model, quantize_model_plan, QuantSpec};
 pub use transformer::Transformer;
 pub use weights::ModelWeights;
 

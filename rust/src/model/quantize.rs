@@ -1,18 +1,28 @@
-//! Model-level quantization: calibrate, quantize every linear with a PTQ
-//! method, attach Integer Scale, and pick the matching kernel — the paper's
-//! full recipe pipeline (§5.1 setup, §5.6 LLaMA-3 recipe).
+//! Model-level quantization: calibrate, quantize every linear per a
+//! [`QuantPlan`], attach Integer Scale, and bind each layer to a registry
+//! kernel — the paper's full recipe pipeline (§5.1 setup, §5.6 LLaMA-3
+//! recipe, §B.4 overflow demotion), at per-layer-role resolution.
+//!
+//! [`quantize_model`] keeps the seed's whole-model [`QuantSpec`] surface as
+//! sugar over [`quantize_model_plan`]; everything routes through the same
+//! plan resolution, so per-role overrides, explicit kernels and cost-model
+//! auto-selection compose with every PTQ method.
 
 use super::linear::Linear;
 use super::moe::MoeLayer;
 use super::transformer::{MlpOp, Transformer, TransformerLayer};
 use super::weights::ModelWeights;
 use super::{rms_norm, ModelConfig};
-use crate::gemm::Kernel;
+use crate::costmodel::Gpu;
+use crate::gemm::registry;
+use crate::gemm::{GemmKernel, ScaleMode};
+use crate::plan::{self, KernelChoice, QuantPlan, Role};
 use crate::quant::methods::{
-    Awq, Fptq, Gptq, Odyssey, Omniquant, PtqMethod, QuaRot, Rtn, SmoothQuant,
+    Awq, Fptq, Gptq, Odyssey, Omniquant, PtqMethod, QuaRot, QuantizedLinear, Rtn, SmoothQuant,
 };
 use crate::quant::{BitWidth, Granularity};
 use crate::tensor::Mat;
+use std::sync::Arc;
 
 /// Which PTQ method to apply (paper method axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,6 +64,24 @@ impl Method {
         }
     }
 
+    /// Stable lowercase key used by the textual plan format.
+    pub fn key(self) -> &'static str {
+        match self {
+            Method::Rtn => "rtn",
+            Method::Gptq => "gptq",
+            Method::Awq => "awq",
+            Method::SmoothQuant => "smoothquant",
+            Method::Omniquant => "omniquant",
+            Method::QuaRot => "quarot",
+            Method::Fptq => "fptq",
+            Method::Odyssey => "odyssey",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::all().into_iter().find(|m| m.key() == s)
+    }
+
     pub fn all() -> [Method; 8] {
         [
             Method::Rtn,
@@ -68,8 +96,9 @@ impl Method {
     }
 }
 
-/// Full quantization recipe for a model.
-#[derive(Clone, Copy, Debug)]
+/// A quantization *scheme*: the per-layer cell of a [`QuantPlan`] (and,
+/// uniformly applied, the seed's whole-model recipe).
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QuantSpec {
     pub method: Method,
     pub bw: BitWidth,
@@ -77,17 +106,11 @@ pub struct QuantSpec {
     /// `Some(α)` attaches Integer Scale with fixed amplifier, `Some(0)` uses
     /// the Listing-1 heuristic per tensor, `None` keeps float scales.
     pub int_scale: Option<i64>,
-    /// LLaMA-3 recipe (§5.6): keep down-projections at fine-grained W8A8.
-    pub down_proj_w8a8: bool,
-    /// Paper §B.4: audit each layer's INT32 accumulator on the calibration
-    /// activations; layers using more than 25% of the i32 headroom fall back
-    /// to the overflow-safe degraded IS kernel.
-    pub overflow_guard: bool,
 }
 
 impl QuantSpec {
     pub fn new(method: Method, bw: BitWidth, gran: Granularity) -> Self {
-        QuantSpec { method, bw, gran, int_scale: None, down_proj_w8a8: false, overflow_guard: false }
+        QuantSpec { method, bw, gran, int_scale: None }
     }
 
     pub fn with_is(mut self, amplifier: i64) -> Self {
@@ -95,18 +118,25 @@ impl QuantSpec {
         self
     }
 
-    /// Kernel for this spec's main linears.
-    pub fn kernel(&self) -> Kernel {
+    /// Registry name of the kernel this scheme derives — the seed's
+    /// `QuantSpec::kernel()` mapping, now in registry-name form. Uniform
+    /// plans are behavior-locked to this mapping.
+    pub fn kernel_name(&self) -> &'static str {
         match (self.bw, self.gran.is_fine_grained(), self.int_scale.is_some()) {
-            (BitWidth::W16A16, _, _) => Kernel::Fp16,
-            (BitWidth::W8A8, _, _) => Kernel::W8A8,
-            (BitWidth::W4A16, _, _) => Kernel::W4A16,
-            (BitWidth::W4A8, false, _) => Kernel::W4A8Coarse,
-            (BitWidth::W4A8, true, false) => Kernel::W4A8FgFloat,
-            (BitWidth::W4A8, true, true) => Kernel::W4A8FgInt,
-            (BitWidth::W4A4, _, _) => Kernel::W4A4,
-            _ => Kernel::W4A8FgFloat,
+            (BitWidth::W16A16, _, _) => "fp16",
+            (BitWidth::W8A8, _, _) => "w8a8",
+            (BitWidth::W4A16, _, _) => "w4a16",
+            (BitWidth::W4A8, false, _) => "w4a8-coarse",
+            (BitWidth::W4A8, true, false) => "w4a8-fg-fs",
+            (BitWidth::W4A8, true, true) => "w4a8-fg-is",
+            (BitWidth::W4A4, _, _) => "w4a4",
+            _ => "w4a8-fg-fs",
         }
+    }
+
+    /// The registered kernel this scheme derives.
+    pub fn kernel(&self) -> Arc<dyn GemmKernel> {
+        registry::get_or_panic(self.kernel_name())
     }
 
     pub fn label(&self) -> String {
@@ -129,6 +159,20 @@ pub struct CalibSet {
     pub mlp_in: Vec<Mat>,
     /// Input to down (SwiGLU product), per layer.
     pub down_in: Vec<Mat>,
+}
+
+impl CalibSet {
+    /// Calibration input for a given role (shared across experts for MoE).
+    pub fn for_role(&self, layer: usize, role: Role) -> &Mat {
+        match role {
+            Role::AttnQ | Role::AttnK | Role::AttnV => &self.attn_in[layer],
+            Role::AttnO => &self.wo_in[layer],
+            Role::MlpGate | Role::MlpUp | Role::ExpertGate | Role::ExpertUp => {
+                &self.mlp_in[layer]
+            }
+            Role::MlpDown | Role::ExpertDown => &self.down_in[layer],
+        }
+    }
 }
 
 /// Run the float model over calibration tokens recording every linear's
@@ -156,114 +200,185 @@ pub fn collect_calib(w: &ModelWeights, tokens: &[u32]) -> CalibSet {
         let mut q = layer.wq.forward(&h);
         let mut k = layer.wk.forward(&h);
         let v = layer.wv.forward(&h);
-        let att = model_attention(&model, li, &mut q, &mut k, &v, &mut cache);
+        let att = model.attention(li, &mut q, &mut k, &v, &mut cache);
         wo_in.push(att.clone());
         let att = layer.wo.forward(&att);
         x.add_assign(&att);
         let h = rms_norm(&x, &layer.mlp_norm);
         mlp_in.push(h.clone());
-        // SwiGLU intermediate for down-proj calibration
-        if let MlpOp::Dense { gate, up, down: _ } = &layer.mlp {
-            let g = gate.forward(&h);
-            let u = up.forward(&h);
-            let mut z = Mat::zeros(g.rows, g.cols);
-            for i in 0..z.data.len() {
-                z.data[i] = (g.data[i] / (1.0 + (-g.data[i]).exp())) * u.data[i];
+        // SwiGLU intermediate for down-proj calibration (expert 0 serves as
+        // the shared calibration for MoE experts)
+        let (gate, up) = match &layer.mlp {
+            MlpOp::Dense { gate, up, .. } => (gate, up),
+            MlpOp::Moe(moe) => {
+                let (g, u, _) = &moe.experts[0];
+                (g, u)
             }
-            down_in.push(z);
-        } else if let MlpOp::Moe(moe) = &layer.mlp {
-            // use expert-0 activations as shared down-proj calibration
-            let (gate, up, _) = &moe.experts[0];
-            let g = gate.forward(&h);
-            let u = up.forward(&h);
-            let mut z = Mat::zeros(g.rows, g.cols);
-            for i in 0..z.data.len() {
-                z.data[i] = (g.data[i] / (1.0 + (-g.data[i]).exp())) * u.data[i];
-            }
-            down_in.push(z);
+        };
+        let g = gate.forward(&h);
+        let u = up.forward(&h);
+        let mut z = Mat::zeros(g.rows, g.cols);
+        for i in 0..z.data.len() {
+            z.data[i] = (g.data[i] / (1.0 + (-g.data[i]).exp())) * u.data[i];
         }
-        let m = model_mlp(&model, layer, &h);
+        down_in.push(z);
+        let m = model.mlp_forward(layer, &h);
         x.add_assign(&m);
     }
     cache.advance(tokens.len());
     CalibSet { attn_in, wo_in, mlp_in, down_in }
 }
 
-// Reuse Transformer internals (pub(crate) attention / mlp_forward).
-fn model_attention(
-    model: &Transformer,
-    li: usize,
-    q: &mut Mat,
-    k: &mut Mat,
-    v: &Mat,
-    cache: &mut super::kv_cache::KvCache,
-) -> Mat {
-    model.attention(li, q, k, v, cache)
-}
+/// §B.4 demotion threshold: fraction of i32 accumulator headroom above
+/// which a layer falls back to its kernel's declared safe variant.
+pub const OVERFLOW_UTILIZATION_LIMIT: f64 = 0.25;
 
-fn model_mlp(model: &Transformer, layer: &TransformerLayer, h: &Mat) -> Mat {
-    model.mlp_forward(layer, h)
-}
-
-fn quantize_linear(
-    w: &Mat,
-    calib: &Mat,
-    spec: &QuantSpec,
-    is_down_proj: bool,
-) -> Linear {
-    let (bw, gran, kernel) = if is_down_proj && spec.down_proj_w8a8 {
-        // LLaMA-3 recipe: down-proj stays at fine-grained W8A8
-        (BitWidth::W8A8, Granularity::Group(spec.gran.group_size(w.cols).min(128)), Kernel::W8A8)
-    } else {
-        (spec.bw, spec.gran, spec.kernel())
-    };
-    if bw == BitWidth::W16A16 {
-        return Linear::Float(w.clone());
-    }
+/// Quantize one linear per an explicit scheme (method + IS attachment).
+fn quantize_spec_linear(w: &Mat, calib: &Mat, spec: &QuantSpec) -> QuantizedLinear {
     let method = spec.method.build();
-    let mut ql = method.quantize(w, calib, bw, gran);
+    let mut ql = method.quantize(w, calib, spec.bw, spec.gran);
     if let Some(a) = spec.int_scale {
         let amp = if a == 0 { None } else { Some(a) };
         let (q, _) = ql.with_integer_scale(amp);
         ql = q;
     }
-    let mut lin = Linear::from_quantized(&ql, kernel);
-    if spec.overflow_guard && ql.qw.int_scales.is_some() {
-        // audit on (a sample of) the calibration activations — §B.4
-        let sample_rows = calib.rows.min(16);
-        let sample = crate::tensor::Mat::from_vec(
-            sample_rows,
-            calib.cols,
-            calib.data[..sample_rows * calib.cols].to_vec(),
-        );
-        let xt = ql.transform_act(&sample);
-        let (xq, _) = crate::quant::quantize_act_per_token(&xt, crate::quant::Bits::B8);
-        let audit = crate::quant::integer_scale::overflow_audit(&xq, &ql.qw);
-        if audit.utilization > 0.25 {
-            if let Linear::Quant { pw, .. } = &mut lin {
-                pw.overflow_risk = true;
+    ql
+}
+
+/// §B.4 audit on (a sample of) the calibration activations: fraction of
+/// the INT32 accumulator headroom the IS kernel would use for this layer.
+/// Returns 0.0 when the layer carries no integer scales.
+fn audit_utilization(ql: &QuantizedLinear, calib: &Mat) -> f64 {
+    if ql.qw.int_scales.is_none() {
+        return 0.0;
+    }
+    let sample_rows = calib.rows.min(16);
+    let sample =
+        Mat::from_vec(sample_rows, calib.cols, calib.data[..sample_rows * calib.cols].to_vec());
+    let xt = ql.transform_act(&sample);
+    let (xq, _) = crate::quant::quantize_act_per_token(&xt, crate::quant::Bits::B8);
+    crate::quant::integer_scale::overflow_audit(&xq, &ql.qw).utilization
+}
+
+/// Resolve and quantize one linear under the plan: pick the kernel
+/// (scheme-derived, named, or cost-model auto-selected), adapt the scheme
+/// to it, quantize, run the §B.4 guard, and bind the registry kernel.
+fn quantize_linear_planned(
+    w: &Mat,
+    calib: &Mat,
+    plan: &QuantPlan,
+    gpu: &Gpu,
+    layer: usize,
+    role: Role,
+) -> Linear {
+    let entry = plan.entry(layer, role);
+    // probe cache so auto-selection does not quantize twice when it settles
+    // on the kernel it audited
+    let mut probe: Option<(QuantSpec, QuantizedLinear)> = None;
+    let mut audited_risky = false;
+    let (spec, mut kernel) = match &entry.kernel {
+        KernelChoice::Scheme => {
+            (entry.spec, registry::get_or_panic(entry.spec.kernel_name()))
+        }
+        KernelChoice::Named(name) => {
+            let k = registry::get_or_panic(name);
+            // enforce here, not only in the plan-file parser, so in-code
+            // plans fail at quantize time instead of mid-request
+            assert!(
+                k.servable(),
+                "kernel '{name}' cannot serve through Linear dispatch (cost-model-only entry)"
+            );
+            (plan::spec_for_kernel(&entry.spec, &*k), k)
+        }
+        KernelChoice::Auto => {
+            // Audit the Integer-Scale candidate at this layer first so a
+            // flagged layer never auto-selects the fast IS epilogue. The
+            // probe doubles as the final quantization whenever the IS spec
+            // wins — which it does at every shape class of the cost model
+            // (lowest weight+act bytes when memory-bound, int8 pipe with
+            // the single-conversion epilogue when compute-bound), so the
+            // duplicate-PTQ path is the exception, not the rule.
+            let is_kernel = registry::get_or_panic("w4a8-fg-is");
+            let is_spec = plan::spec_for_kernel(&entry.spec, &*is_kernel);
+            let is_ql = quantize_spec_linear(w, calib, &is_spec);
+            audited_risky = audit_utilization(&is_ql, calib) > OVERFLOW_UTILIZATION_LIMIT;
+            probe = Some((is_spec, is_ql));
+            let g = is_spec.gran.group_size(w.cols);
+            let k = plan::auto_select_kernel(
+                gpu,
+                plan.batch,
+                w.cols,
+                w.rows,
+                g,
+                audited_risky,
+            );
+            (plan::spec_for_kernel(&entry.spec, &*k), k)
+        }
+    };
+    if spec.bw == BitWidth::W16A16 {
+        return Linear::Float(w.clone());
+    }
+    let (ql, audit_known) = match probe {
+        // reusing the audited probe: its §B.4 verdict is already in
+        // `audited_risky`, no need to audit the same weights twice
+        Some((ps, pq)) if ps == spec => (pq, true),
+        _ => (quantize_spec_linear(w, calib, &spec), false),
+    };
+    // §B.4 overflow guard: demote to the kernel's declared safe fallback
+    let mut overflow_risk = audited_risky;
+    if plan.overflow_guard {
+        if let Some(fb) = kernel.overflow_fallback() {
+            let risky = if audit_known {
+                audited_risky
+            } else {
+                audit_utilization(&ql, calib) > OVERFLOW_UTILIZATION_LIMIT
+            };
+            if risky {
+                kernel = registry::get_or_panic(fb);
+                overflow_risk = true;
             }
+        }
+    }
+    // the flag records "this weight would overflow the fast IS epilogue";
+    // it is only meaningful on kernels that run an integer-scale epilogue
+    // (an auto-selected w8a8/w4a16 winner has no overflow exposure)
+    let flag_risk = overflow_risk && kernel.scale_mode() == ScaleMode::Integer;
+    let mut lin = Linear::from_quantized(&ql, kernel);
+    if flag_risk {
+        if let Linear::Quant { pw, .. } = &mut lin {
+            pw.overflow_risk = true;
         }
     }
     lin
 }
 
-/// Quantize a whole model per `spec`, calibrating on `calib_tokens`.
-pub fn quantize_model(w: &ModelWeights, spec: &QuantSpec, calib_tokens: &[u32]) -> Transformer {
-    if spec.bw == BitWidth::W16A16 {
+/// Quantize a whole model per a layer-resolution plan, calibrating on
+/// `calib_tokens`. The paper's recipes are all expressible here: uniform
+/// schemes, the §5.6 down-projection override, explicit per-layer kernels,
+/// the §B.4 guard, and cost-model auto-selection.
+pub fn quantize_model_plan(
+    w: &ModelWeights,
+    plan: &QuantPlan,
+    calib_tokens: &[u32],
+) -> Transformer {
+    if plan.is_fp16_only() {
         return Transformer::from_weights(w);
     }
+    let gpu = Gpu::default();
     let calib = collect_calib(w, calib_tokens);
+    let ql = |li: usize, role: Role, mat: &Mat| {
+        quantize_linear_planned(mat, calib.for_role(li, role), plan, &gpu, li, role)
+    };
     let layers = w
         .layers
         .iter()
         .enumerate()
         .map(|(li, l)| TransformerLayer {
             attn_norm: l.attn_norm.clone(),
-            wq: quantize_linear(&l.wq, &calib.attn_in[li], spec, false),
-            wk: quantize_linear(&l.wk, &calib.attn_in[li], spec, false),
-            wv: quantize_linear(&l.wv, &calib.attn_in[li], spec, false),
-            wo: quantize_linear(&l.wo, &calib.wo_in[li], spec, false),
+            wq: ql(li, Role::AttnQ, &l.wq),
+            wk: ql(li, Role::AttnK, &l.wk),
+            wv: ql(li, Role::AttnV, &l.wv),
+            wo: ql(li, Role::AttnO, &l.wo),
             mlp_norm: l.mlp_norm.clone(),
             mlp: match &l.router {
                 Some(r) => MlpOp::Moe(MoeLayer {
@@ -273,9 +388,9 @@ pub fn quantize_model(w: &ModelWeights, spec: &QuantSpec, calib_tokens: &[u32]) 
                         .iter()
                         .map(|(g, u, d)| {
                             (
-                                quantize_linear(g, &calib.mlp_in[li], spec, false),
-                                quantize_linear(u, &calib.mlp_in[li], spec, false),
-                                quantize_linear(d, &calib.down_in[li], spec, true),
+                                ql(li, Role::ExpertGate, g),
+                                ql(li, Role::ExpertUp, u),
+                                ql(li, Role::ExpertDown, d),
                             )
                         })
                         .collect(),
@@ -284,9 +399,9 @@ pub fn quantize_model(w: &ModelWeights, spec: &QuantSpec, calib_tokens: &[u32]) 
                 None => {
                     let (g, u, d) = &l.experts[0];
                     MlpOp::Dense {
-                        gate: quantize_linear(g, &calib.mlp_in[li], spec, false),
-                        up: quantize_linear(u, &calib.mlp_in[li], spec, false),
-                        down: quantize_linear(d, &calib.down_in[li], spec, true),
+                        gate: ql(li, Role::MlpGate, g),
+                        up: ql(li, Role::MlpUp, u),
+                        down: ql(li, Role::MlpDown, d),
                     }
                 }
             },
@@ -301,6 +416,41 @@ pub fn quantize_model(w: &ModelWeights, spec: &QuantSpec, calib_tokens: &[u32]) 
         // only the transformer linears)
         lm_head: Linear::Float(w.lm_head.clone()),
     }
+}
+
+/// Quantize a whole model with one uniform scheme — the seed API, now
+/// sugar over [`quantize_model_plan`] with a uniform plan.
+pub fn quantize_model(w: &ModelWeights, spec: &QuantSpec, calib_tokens: &[u32]) -> Transformer {
+    quantize_model_plan(w, &QuantPlan::uniform(*spec), calib_tokens)
+}
+
+/// The kernel assignment of a quantized model, one `(site, kernel-name)`
+/// row per linear — what `repro serve --plan` prints and what the
+/// auto-select acceptance tests diff against explicit plans.
+pub fn kernel_assignment(model: &Transformer) -> Vec<(String, &'static str)> {
+    let mut rows = Vec::new();
+    for (li, l) in model.layers.iter().enumerate() {
+        for (name, lin) in
+            [("attn_q", &l.wq), ("attn_k", &l.wk), ("attn_v", &l.wv), ("attn_o", &l.wo)]
+        {
+            rows.push((format!("L{li}.{name}"), lin.kernel_name()));
+        }
+        match &l.mlp {
+            MlpOp::Dense { gate, up, down } => {
+                rows.push((format!("L{li}.mlp_gate"), gate.kernel_name()));
+                rows.push((format!("L{li}.mlp_up"), up.kernel_name()));
+                rows.push((format!("L{li}.mlp_down"), down.kernel_name()));
+            }
+            MlpOp::Moe(moe) => {
+                for (ei, (g, u, d)) in moe.experts.iter().enumerate() {
+                    rows.push((format!("L{li}.expert{ei}_gate"), g.kernel_name()));
+                    rows.push((format!("L{li}.expert{ei}_up"), u.kernel_name()));
+                    rows.push((format!("L{li}.expert{ei}_down"), d.kernel_name()));
+                }
+            }
+        }
+    }
+    rows
 }
 
 /// Shared tiny config for experiments that need a config by name.
@@ -318,6 +468,7 @@ pub fn config_by_name(name: &str) -> ModelConfig {
 mod tests {
     use super::*;
     use crate::data::{CorpusGen, Split};
+    use crate::plan::PlanBuilder;
 
     #[test]
     fn quantized_model_runs_and_tracks_float() {
@@ -340,54 +491,66 @@ mod tests {
     }
 
     #[test]
-    fn down_proj_w8a8_recipe_applies() {
+    fn down_proj_role_override_applies() {
         let cfg = ModelConfig { n_layers: 1, ..ModelConfig::tiny() };
         let w = ModelWeights::random(cfg, 4);
         let gen = CorpusGen::new(cfg.vocab as u32, 7);
         let calib = gen.stream(48, Split::C4, 1);
-        let mut spec =
+        // LLaMA-3 recipe (§5.6): down-projections stay fine-grained W8A8
+        let base =
             QuantSpec::new(Method::QuaRot, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
-        spec.down_proj_w8a8 = true;
-        let qm = quantize_model(&w, &spec, &calib);
-        if let MlpOp::Dense { down, .. } = &qm.layers[0].mlp {
-            if let Linear::Quant { pw, kernel, .. } = down {
-                assert_eq!(*kernel, Kernel::W8A8);
+        let plan = PlanBuilder::new(base)
+            .role(
+                Role::MlpDown,
+                QuantSpec::new(Method::QuaRot, BitWidth::W8A8, Granularity::Group(128)),
+            )
+            .build();
+        let qm = quantize_model_plan(&w, &plan, &calib);
+        if let MlpOp::Dense { down, gate, .. } = &qm.layers[0].mlp {
+            assert_eq!(down.kernel_name(), "w8a8");
+            if let Linear::Quant { pw, .. } = down {
                 assert_eq!(pw.bits, crate::quant::Bits::B8);
             } else {
                 panic!("down-proj should be quantized");
             }
+            assert_eq!(gate.kernel_name(), "w4a8-fg-is");
         } else {
             panic!("dense expected");
         }
     }
 
     #[test]
-    fn overflow_guard_flags_risky_layers() {
-        use crate::model::linear::Linear;
+    fn overflow_guard_demotes_risky_layers_to_safe_kernel() {
         let cfg = ModelConfig { n_layers: 1, ..ModelConfig::tiny() };
         let mut w = ModelWeights::random(cfg, 5);
         // blow up one layer's norms so its IS accumulator uses real headroom
         w.inject_outliers(120.0);
         let gen = crate::data::CorpusGen::new(cfg.vocab as u32, 7);
         let calib = gen.stream(48, crate::data::Split::C4, 1);
-        let mut spec = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128))
+        let spec = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128))
             .with_is(1 << 22); // huge amplifier to force utilization up
-        spec.overflow_guard = true;
-        let qm = quantize_model(&w, &spec, &calib);
+        let plan = PlanBuilder::new(spec).overflow_guard(true).build();
+        let qm = quantize_model_plan(&w, &plan, &calib);
         let mut flagged = 0;
         let mut total = 0;
-        for l in &qm.layers {
-            for lin in [&l.wq, &l.wk, &l.wv, &l.wo] {
-                if let Linear::Quant { pw, .. } = lin {
-                    total += 1;
-                    if pw.overflow_risk {
-                        flagged += 1;
-                    }
+        for (site, kernel) in kernel_assignment(&qm) {
+            if site.contains("attn") {
+                total += 1;
+                if kernel == "w4a8-fg-is-safe" {
+                    flagged += 1;
                 }
             }
         }
         assert!(total > 0);
-        assert!(flagged > 0, "guard should flag at least one risky layer");
+        assert!(flagged > 0, "guard should route at least one risky layer to the safe kernel");
+        // the pw flag records the audit outcome too
+        let risk_flags = qm
+            .layers
+            .iter()
+            .flat_map(|l| [&l.wq, &l.wk, &l.wv, &l.wo])
+            .filter(|lin| matches!(lin, Linear::Quant { pw, .. } if pw.overflow_risk))
+            .count();
+        assert!(risk_flags > 0);
         // the model still runs (degraded kernel path)
         let mut c = qm.new_cache();
         let logits = qm.prefill(&[5, 6, 7], &mut c);
@@ -397,9 +560,18 @@ mod tests {
     #[test]
     fn spec_kernel_mapping() {
         let s = QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128));
-        assert_eq!(s.kernel(), Kernel::W4A8FgFloat);
-        assert_eq!(s.with_is(1024).kernel(), Kernel::W4A8FgInt);
+        assert_eq!(s.kernel_name(), "w4a8-fg-fs");
+        assert_eq!(s.with_is(1024).kernel_name(), "w4a8-fg-is");
         let c = QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel);
-        assert_eq!(c.kernel(), Kernel::W4A8Coarse);
+        assert_eq!(c.kernel_name(), "w4a8-coarse");
+        assert_eq!(c.kernel().name(), "w4a8-coarse");
+    }
+
+    #[test]
+    fn method_keys_roundtrip() {
+        for m in Method::all() {
+            assert_eq!(Method::parse(m.key()), Some(m));
+        }
+        assert_eq!(Method::parse("GPTQ"), None, "keys are lowercase");
     }
 }

@@ -1,0 +1,431 @@
+//! **Layer-resolution quantization plans** — the entry API of the
+//! quantize→pack→dispatch pipeline.
+//!
+//! The paper's headline recipes are *per-layer*: the LLaMA-3 recipe (§5.6)
+//! keeps down-projections at fine-grained W8A8 while everything else runs
+//! W4A8 + Integer Scale, and the §B.4 overflow audit demotes individual
+//! layers to the degraded IS kernel. A [`QuantPlan`] expresses exactly
+//! that: a base scheme, per-role overrides (attn q/k/v/o, mlp gate/up/down,
+//! MoE expert roles), per-layer-index overrides, an optional overflow
+//! guard, and **auto-select** — a cost-model-driven kernel choice per layer
+//! shape ([`auto_select_kernel`]).
+//!
+//! Plans are built three ways:
+//! * [`PlanBuilder::uniform`] — today's whole-model [`QuantSpec`] as sugar;
+//! * [`PlanBuilder`] — explicit per-role / per-layer overrides in code;
+//! * [`QuantPlan::parse`] / [`QuantPlan::from_file`] — the hand-rolled
+//!   textual format in [`text`] (`repro serve --plan recipes/llama3.plan`),
+//!   serialized back canonically by [`QuantPlan::to_text`] so plans are
+//!   printable and diffable.
+//!
+//! `model::quantize::quantize_model_plan` consumes a plan; kernels come
+//! from [`crate::gemm::registry`], so new kernels are automatically
+//! addressable from plan files and auto-selection.
+
+pub mod text;
+
+pub use text::PlanError;
+
+use crate::costmodel::{self, Gpu};
+use crate::gemm::registry::{self, ScaleMode};
+use crate::gemm::GemmKernel;
+use crate::model::quantize::QuantSpec;
+use crate::quant::integer_scale::DEFAULT_AMPLIFIER;
+use crate::quant::Granularity;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// The role a linear layer plays inside a transformer block — the
+/// resolution key of per-role plan overrides. MoE expert linears have their
+/// own roles that fall back to the dense MLP roles when unset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Role {
+    AttnQ,
+    AttnK,
+    AttnV,
+    AttnO,
+    MlpGate,
+    MlpUp,
+    MlpDown,
+    ExpertGate,
+    ExpertUp,
+    ExpertDown,
+}
+
+impl Role {
+    pub const ALL: [Role; 10] = [
+        Role::AttnQ,
+        Role::AttnK,
+        Role::AttnV,
+        Role::AttnO,
+        Role::MlpGate,
+        Role::MlpUp,
+        Role::MlpDown,
+        Role::ExpertGate,
+        Role::ExpertUp,
+        Role::ExpertDown,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::AttnQ => "attn_q",
+            Role::AttnK => "attn_k",
+            Role::AttnV => "attn_v",
+            Role::AttnO => "attn_o",
+            Role::MlpGate => "mlp_gate",
+            Role::MlpUp => "mlp_up",
+            Role::MlpDown => "mlp_down",
+            Role::ExpertGate => "expert_gate",
+            Role::ExpertUp => "expert_up",
+            Role::ExpertDown => "expert_down",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Role> {
+        Role::ALL.into_iter().find(|r| r.name() == s)
+    }
+
+    /// Expert roles resolve through their dense MLP counterpart when no
+    /// expert-specific override exists.
+    pub fn fallback(self) -> Option<Role> {
+        match self {
+            Role::ExpertGate => Some(Role::MlpGate),
+            Role::ExpertUp => Some(Role::MlpUp),
+            Role::ExpertDown => Some(Role::MlpDown),
+            _ => None,
+        }
+    }
+
+    /// Is this a down-projection (the role the LLaMA-3 recipe singles out)?
+    pub fn is_down_proj(self) -> bool {
+        matches!(self, Role::MlpDown | Role::ExpertDown)
+    }
+}
+
+/// How a plan entry picks its kernel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Derive from the entry's scheme, exactly as [`QuantSpec::kernel_name`]
+    /// always did — the seed behavior, and the uniform-plan default.
+    Scheme,
+    /// An explicit kernel by registry name.
+    Named(String),
+    /// Cost-model auto-selection at this layer's (k, n, batch) shape, with
+    /// §B.4-audited layers steered to safe kernels.
+    Auto,
+}
+
+/// One plan entry: a quantization scheme plus a kernel choice.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchemeEntry {
+    pub spec: QuantSpec,
+    pub kernel: KernelChoice,
+}
+
+impl SchemeEntry {
+    pub fn scheme(spec: QuantSpec) -> SchemeEntry {
+        SchemeEntry { spec, kernel: KernelChoice::Scheme }
+    }
+}
+
+/// Default expected decode batch for cost-model auto-selection.
+pub const DEFAULT_AUTO_BATCH: usize = 16;
+
+/// A layer-resolution quantization plan. See the module docs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPlan {
+    pub base: SchemeEntry,
+    pub roles: BTreeMap<Role, SchemeEntry>,
+    pub layers: BTreeMap<(usize, Role), SchemeEntry>,
+    /// §B.4: audit every Integer-Scale layer's INT32 accumulator on the
+    /// calibration activations; layers using more than 25% of the i32
+    /// headroom are demoted to their kernel's declared overflow fallback.
+    pub overflow_guard: bool,
+    /// Expected decode batch for the cost model (auto-select entries).
+    pub batch: usize,
+}
+
+impl QuantPlan {
+    /// Today's whole-model behavior as sugar: one scheme everywhere, kernel
+    /// derived from the scheme.
+    pub fn uniform(spec: QuantSpec) -> QuantPlan {
+        QuantPlan {
+            base: SchemeEntry::scheme(spec),
+            roles: BTreeMap::new(),
+            layers: BTreeMap::new(),
+            overflow_guard: false,
+            batch: DEFAULT_AUTO_BATCH,
+        }
+    }
+
+    /// Resolve the entry governing `(layer, role)`. The role dimension
+    /// resolves first: within the exact role, per-layer overrides beat the
+    /// role override; only when *nothing* addresses the exact role does
+    /// the expert role fall back to its dense MLP counterpart (so an
+    /// explicit `expert_*` override is never shadowed by a per-layer
+    /// override of the dense role). Precedence: layer+role → role →
+    /// layer+fallback → fallback → base.
+    pub fn entry(&self, layer: usize, role: Role) -> &SchemeEntry {
+        for r in std::iter::once(role).chain(role.fallback()) {
+            if let Some(e) = self.layers.get(&(layer, r)) {
+                return e;
+            }
+            if let Some(e) = self.roles.get(&r) {
+                return e;
+            }
+        }
+        &self.base
+    }
+
+    /// True when the whole plan is the float baseline (no quantization).
+    pub fn is_fp16_only(&self) -> bool {
+        self.roles.is_empty()
+            && self.layers.is_empty()
+            && self.base.kernel == KernelChoice::Scheme
+            && self.base.spec.bw == crate::quant::BitWidth::W16A16
+    }
+
+    /// Does any entry use cost-model auto-selection?
+    pub fn has_auto(&self) -> bool {
+        std::iter::once(&self.base)
+            .chain(self.roles.values())
+            .chain(self.layers.values())
+            .any(|e| e.kernel == KernelChoice::Auto)
+    }
+}
+
+/// Builder for [`QuantPlan`] — the in-code counterpart of the plan file.
+pub struct PlanBuilder {
+    plan: QuantPlan,
+}
+
+impl PlanBuilder {
+    pub fn new(base: QuantSpec) -> PlanBuilder {
+        PlanBuilder { plan: QuantPlan::uniform(base) }
+    }
+
+    /// Seed-equivalent uniform plan (sugar for `new(spec).build()`).
+    pub fn uniform(spec: QuantSpec) -> QuantPlan {
+        PlanBuilder::new(spec).build()
+    }
+
+    /// Override the scheme for a role (kernel still derived from it).
+    pub fn role(mut self, role: Role, spec: QuantSpec) -> Self {
+        self.plan.roles.insert(role, SchemeEntry::scheme(spec));
+        self
+    }
+
+    /// Pin a role to an explicit registry kernel; the quantization scheme
+    /// is adapted to the kernel's self-description at resolution time.
+    pub fn role_kernel(mut self, role: Role, kernel: &str) -> Self {
+        let spec = self.plan.base.spec;
+        self.plan
+            .roles
+            .insert(role, SchemeEntry { spec, kernel: KernelChoice::Named(kernel.to_string()) });
+        self
+    }
+
+    /// Override the scheme for one (layer, role).
+    pub fn layer(mut self, idx: usize, role: Role, spec: QuantSpec) -> Self {
+        self.plan.layers.insert((idx, role), SchemeEntry::scheme(spec));
+        self
+    }
+
+    /// Pin one (layer, role) to an explicit registry kernel.
+    pub fn layer_kernel(mut self, idx: usize, role: Role, kernel: &str) -> Self {
+        let spec = self.plan.base.spec;
+        self.plan.layers.insert(
+            (idx, role),
+            SchemeEntry { spec, kernel: KernelChoice::Named(kernel.to_string()) },
+        );
+        self
+    }
+
+    /// Enable the §B.4 overflow guard (audit + demotion to safe kernels).
+    pub fn overflow_guard(mut self, on: bool) -> Self {
+        self.plan.overflow_guard = on;
+        self
+    }
+
+    /// Switch the base entry to cost-model auto-selection at the given
+    /// expected decode batch.
+    pub fn auto_select(mut self, batch: usize) -> Self {
+        self.plan.base.kernel = KernelChoice::Auto;
+        self.plan.batch = batch.max(1);
+        self
+    }
+
+    pub fn build(self) -> QuantPlan {
+        self.plan
+    }
+}
+
+/// Candidate pool auto-selection prices with [`costmodel::latency`], in
+/// deterministic preference order (ties keep the earlier entry). Only
+/// fine-grained-capable kernels compete: coarse per-channel schemes are
+/// faster in the cost model but give up exactly the accuracy fine
+/// granularity buys (Table 1), so they are never auto-substituted.
+pub const AUTO_CANDIDATES: [&str; 4] = ["w4a8-fg-is", "w4a8-fg-fs", "w4a16", "w8a8"];
+
+/// Pick the fastest safe kernel for a linear of shape `k → n` at expected
+/// batch `m` and group size `g`. When `risky` (the §B.4 audit flagged the
+/// layer), every candidate that declares an overflow fallback is replaced
+/// by that fallback before pricing, so the winner is always safe to run.
+pub fn auto_select_kernel(
+    gpu: &Gpu,
+    m: usize,
+    k: usize,
+    n: usize,
+    g: usize,
+    risky: bool,
+) -> Arc<dyn GemmKernel> {
+    let mut best: Option<(f64, Arc<dyn GemmKernel>)> = None;
+    for name in AUTO_CANDIDATES {
+        let mut kern = registry::get_or_panic(name);
+        if risky {
+            if let Some(fb) = kern.overflow_fallback() {
+                kern = registry::get_or_panic(fb);
+            }
+        }
+        let geff = if kern.fine_grained() { g.min(k) } else { k };
+        let lat = costmodel::latency(gpu, &*kern, m as u64, k as u64, n as u64, geff as u64);
+        if best.as_ref().map_or(true, |(b, _)| lat < *b) {
+            best = Some((lat, kern));
+        }
+    }
+    best.expect("AUTO_CANDIDATES is non-empty").1
+}
+
+/// Adapt a base scheme to an explicitly-chosen kernel using only the
+/// kernel's self-description: bit-widths from the kernel, granularity kept
+/// fine-grained only if the kernel consumes group scales, Integer Scale
+/// guaranteed present for integer-scale kernels.
+pub fn spec_for_kernel(base: &QuantSpec, kernel: &dyn GemmKernel) -> QuantSpec {
+    let bw = crate::quant::BitWidth { weight: kernel.weight_bits(), act: kernel.act_bits() };
+    let gran = if kernel.fine_grained() {
+        if base.gran.is_fine_grained() {
+            base.gran
+        } else {
+            Granularity::Group(128)
+        }
+    } else {
+        Granularity::PerChannel
+    };
+    let int_scale = match kernel.scale_mode() {
+        ScaleMode::Integer => Some(base.int_scale.unwrap_or(DEFAULT_AMPLIFIER)),
+        // deliberately passed through, not cleared: kernels outside the
+        // Integer scale mode still consume attached integer scales when
+        // present (w4a4 dispatches its IS variant on them; w4a16 runs the
+        // Table-7 amplifier ablation through its eff_scale), at the cost of
+        // attaching unused scales for kernels like w8a8/fg-fs.
+        _ => base.int_scale,
+    };
+    QuantSpec { method: base.method, bw, gran, int_scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::quantize::Method;
+    use crate::quant::BitWidth;
+
+    fn base() -> QuantSpec {
+        QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024)
+    }
+
+    #[test]
+    fn role_names_roundtrip() {
+        for r in Role::ALL {
+            assert_eq!(Role::parse(r.name()), Some(r));
+        }
+        assert_eq!(Role::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn entry_precedence_layer_over_role_over_base() {
+        let w8 = QuantSpec::new(Method::QuaRot, BitWidth::W8A8, Granularity::Group(128));
+        let coarse = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::PerChannel);
+        let plan = PlanBuilder::new(base())
+            .role(Role::MlpDown, w8)
+            .layer(2, Role::MlpDown, coarse)
+            .build();
+        assert_eq!(plan.entry(0, Role::AttnQ).spec, base());
+        assert_eq!(plan.entry(0, Role::MlpDown).spec, w8);
+        assert_eq!(plan.entry(2, Role::MlpDown).spec, coarse);
+        // expert roles fall back to the mlp overrides
+        assert_eq!(plan.entry(0, Role::ExpertDown).spec, w8);
+        assert_eq!(plan.entry(2, Role::ExpertDown).spec, coarse);
+        assert_eq!(plan.entry(0, Role::ExpertGate).spec, base());
+    }
+
+    #[test]
+    fn expert_override_beats_mlp_fallback() {
+        let w8 = QuantSpec::new(Method::QuaRot, BitWidth::W8A8, Granularity::Group(128));
+        let w4a16 = QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128));
+        let plan = PlanBuilder::new(base())
+            .role(Role::MlpDown, w8)
+            .role(Role::ExpertDown, w4a16)
+            .build();
+        assert_eq!(plan.entry(0, Role::ExpertDown).spec, w4a16);
+        assert_eq!(plan.entry(0, Role::MlpDown).spec, w8);
+    }
+
+    #[test]
+    fn expert_role_override_not_shadowed_by_dense_layer_override() {
+        // the role dimension resolves first: pinning all expert
+        // down-projections must survive a per-layer override that
+        // addresses only the dense mlp_down role
+        let w8 = QuantSpec::new(Method::QuaRot, BitWidth::W8A8, Granularity::Group(128));
+        let w4a16 = QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128));
+        let plan = PlanBuilder::new(base())
+            .role(Role::ExpertDown, w4a16)
+            .layer(2, Role::MlpDown, w8)
+            .build();
+        assert_eq!(plan.entry(2, Role::ExpertDown).spec, w4a16);
+        assert_eq!(plan.entry(2, Role::MlpDown).spec, w8);
+        // a layer override addressing the expert role directly still wins
+        let plan = PlanBuilder::new(base())
+            .role(Role::ExpertDown, w4a16)
+            .layer(2, Role::ExpertDown, w8)
+            .build();
+        assert_eq!(plan.entry(2, Role::ExpertDown).spec, w8);
+    }
+
+    #[test]
+    fn auto_select_prefers_is_when_safe_and_demotes_when_risky() {
+        let gpu = Gpu::default();
+        // large compute-bound shape: the fast IS kernel must win
+        let k = auto_select_kernel(&gpu, 256, 4096, 22016, 128, false);
+        assert_eq!(k.name(), "w4a8-fg-is");
+        // flagged layer: the fast IS kernel is off the table; the winner
+        // must be audit-safe (no un-fallen-back integer-scale fast path)
+        let k = auto_select_kernel(&gpu, 256, 4096, 22016, 128, true);
+        assert_ne!(k.name(), "w4a8-fg-is");
+    }
+
+    #[test]
+    fn spec_for_kernel_respects_self_description() {
+        let b = base();
+        let w8 = spec_for_kernel(&b, &*registry::get_or_panic("w8a8"));
+        assert_eq!(w8.bw, BitWidth::W8A8);
+        assert_eq!(w8.gran, Granularity::Group(128));
+        let coarse = spec_for_kernel(&b, &*registry::get_or_panic("w4a8-coarse"));
+        assert_eq!(coarse.gran, Granularity::PerChannel);
+        let is = spec_for_kernel(
+            &QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(64)),
+            &*registry::get_or_panic("w4a8-fg-is"),
+        );
+        assert_eq!(is.int_scale, Some(DEFAULT_AMPLIFIER));
+    }
+
+    #[test]
+    fn uniform_plan_is_seed_sugar() {
+        let plan = PlanBuilder::uniform(base());
+        assert!(!plan.has_auto());
+        assert!(!plan.overflow_guard);
+        for r in Role::ALL {
+            assert_eq!(plan.entry(7, r).spec, base());
+            assert_eq!(plan.entry(7, r).kernel, KernelChoice::Scheme);
+        }
+    }
+}

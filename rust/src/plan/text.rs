@@ -1,0 +1,450 @@
+//! Hand-rolled textual plan format (no serde in this offline environment).
+//!
+//! ```text
+//! # comments and blank lines are ignored
+//! plan v1                                  # required header
+//! batch 16                                 # expected decode batch (auto)
+//! guard on                                 # §B.4 overflow guard
+//! base method=gptq bw=w4a8 gran=128 is=1024 kernel=scheme
+//! role mlp_down method=quarot bw=w8a8 gran=128 is=off kernel=scheme
+//! layer 3 attn_o kernel=w4a8-fg-is-safe
+//! ```
+//!
+//! Fields a `role`/`layer` line omits inherit from `base`; fields `base`
+//! omits take the documented defaults. `kernel=` accepts `scheme` (derive
+//! from the scheme — seed behavior), `auto` (cost-model selection), or any
+//! registered kernel name. Parsing is strict: unknown directives, roles,
+//! methods, kernels or field values fail with a **line-numbered**
+//! [`PlanError`]. [`QuantPlan::to_text`] emits the canonical form (every
+//! field explicit, overrides sorted), so parse→serialize→parse is identity
+//! and two plans diff cleanly as text.
+
+use super::{KernelChoice, QuantPlan, Role, SchemeEntry, DEFAULT_AUTO_BATCH};
+use crate::gemm::registry;
+use crate::gemm::GemmKernel as _;
+use crate::model::quantize::{Method, QuantSpec};
+use crate::quant::{BitWidth, Bits, Granularity};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A plan-file parse failure, pinned to a 1-based line number.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "plan parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+fn err(line: usize, msg: impl Into<String>) -> PlanError {
+    PlanError { line, msg: msg.into() }
+}
+
+fn bw_key(bw: BitWidth) -> String {
+    if bw == BitWidth::W16A16 {
+        "fp16".to_string()
+    } else {
+        // generic `w<bits>a<bits>` spelling, so any mix (including ones for
+        // custom-registered kernels) round-trips losslessly
+        format!("w{}a{}", bw.weight.label(), bw.act.label())
+    }
+}
+
+fn parse_bits(s: &str) -> Option<Bits> {
+    match s {
+        "4" => Some(Bits::B4),
+        "8" => Some(Bits::B8),
+        "16" => Some(Bits::F16),
+        _ => None,
+    }
+}
+
+fn parse_bw(s: &str) -> Option<BitWidth> {
+    if s == "fp16" || s == "w16a16" {
+        return Some(BitWidth::W16A16);
+    }
+    let (w, a) = s.strip_prefix('w')?.split_once('a')?;
+    Some(BitWidth { weight: parse_bits(w)?, act: parse_bits(a)? })
+}
+
+fn gran_key(g: Granularity) -> String {
+    match g {
+        Granularity::PerTensor => "tensor".to_string(),
+        Granularity::PerChannel => "channel".to_string(),
+        Granularity::Group(n) => n.to_string(),
+    }
+}
+
+fn parse_gran(s: &str) -> Option<Granularity> {
+    match s {
+        "tensor" => Some(Granularity::PerTensor),
+        "channel" | "-1" => Some(Granularity::PerChannel),
+        _ => s.parse::<usize>().ok().filter(|&g| g > 0).map(Granularity::Group),
+    }
+}
+
+fn is_key(is: Option<i64>) -> String {
+    match is {
+        None => "off".to_string(),
+        Some(0) => "heur".to_string(),
+        Some(a) => a.to_string(),
+    }
+}
+
+fn parse_is(s: &str) -> Option<Option<i64>> {
+    match s {
+        "off" | "-" => Some(None),
+        "heur" => Some(Some(0)),
+        _ => s.parse::<i64>().ok().filter(|&a| a > 0).map(Some),
+    }
+}
+
+fn kernel_key(k: &KernelChoice) -> String {
+    match k {
+        KernelChoice::Scheme => "scheme".to_string(),
+        KernelChoice::Auto => "auto".to_string(),
+        KernelChoice::Named(n) => n.clone(),
+    }
+}
+
+fn parse_kernel(s: &str, line: usize) -> Result<KernelChoice, PlanError> {
+    match s {
+        "scheme" => Ok(KernelChoice::Scheme),
+        "auto" => Ok(KernelChoice::Auto),
+        name => match registry::get(name) {
+            None => Err(err(
+                line,
+                format!("unknown kernel '{name}' (registered: {:?})", registry::names()),
+            )),
+            Some(k) if !k.servable() => Err(err(
+                line,
+                format!("kernel '{name}' cannot serve through Linear dispatch (cost-model-only entry)"),
+            )),
+            Some(_) => Ok(KernelChoice::Named(name.to_string())),
+        },
+    }
+}
+
+/// Bit-width combos `QuantSpec::kernel_name()` can derive a kernel for.
+fn scheme_mappable(bw: BitWidth) -> bool {
+    [BitWidth::W16A16, BitWidth::W8A8, BitWidth::W4A16, BitWidth::W4A8, BitWidth::W4A4]
+        .contains(&bw)
+}
+
+/// Parse `key=value` fields into an entry, starting from `inherit`.
+fn parse_entry(
+    fields: &[&str],
+    inherit: &SchemeEntry,
+    line: usize,
+) -> Result<SchemeEntry, PlanError> {
+    let mut e = inherit.clone();
+    for f in fields {
+        let (key, val) = f
+            .split_once('=')
+            .ok_or_else(|| err(line, format!("expected key=value, got '{f}'")))?;
+        match key {
+            "method" => {
+                e.spec.method = Method::parse(val)
+                    .ok_or_else(|| err(line, format!("unknown method '{val}'")))?;
+            }
+            "bw" => {
+                e.spec.bw =
+                    parse_bw(val).ok_or_else(|| err(line, format!("unknown bw '{val}'")))?;
+            }
+            "gran" => {
+                e.spec.gran = parse_gran(val)
+                    .ok_or_else(|| err(line, format!("bad gran '{val}' (tensor|channel|<g>)")))?;
+            }
+            "is" => {
+                e.spec.int_scale = parse_is(val)
+                    .ok_or_else(|| err(line, format!("bad is '{val}' (off|heur|<α>)")))?;
+            }
+            "kernel" => {
+                e.kernel = parse_kernel(val, line)?;
+            }
+            other => return Err(err(line, format!("unknown field '{other}'"))),
+        }
+    }
+    // generic bit-width spellings (e.g. w8a16) have no scheme-derived
+    // kernel — kernel_name()'s fallback would silently bind the wrong
+    // kernel to them, so they require an explicit kernel= or auto
+    if e.kernel == KernelChoice::Scheme && !scheme_mappable(e.spec.bw) {
+        return Err(err(
+            line,
+            format!(
+                "bw={} has no scheme-derived kernel; add kernel=<name> or kernel=auto",
+                bw_key(e.spec.bw)
+            ),
+        ));
+    }
+    Ok(e)
+}
+
+fn entry_fields(e: &SchemeEntry) -> String {
+    format!(
+        "method={} bw={} gran={} is={} kernel={}",
+        e.spec.method.key(),
+        bw_key(e.spec.bw),
+        gran_key(e.spec.gran),
+        is_key(e.spec.int_scale),
+        kernel_key(&e.kernel),
+    )
+}
+
+/// Parse the textual plan format. Errors carry the 1-based line number.
+pub fn parse(textual: &str) -> Result<QuantPlan, PlanError> {
+    let mut header_seen = false;
+    let mut base: Option<SchemeEntry> = None;
+    let mut roles: BTreeMap<Role, SchemeEntry> = BTreeMap::new();
+    let mut layers: BTreeMap<(usize, Role), SchemeEntry> = BTreeMap::new();
+    let mut overflow_guard = false;
+    let mut batch = DEFAULT_AUTO_BATCH;
+
+    // field defaults when `base` leaves them unspecified
+    let default_base = SchemeEntry::scheme(QuantSpec::new(
+        Method::Gptq,
+        BitWidth::W4A8,
+        Granularity::Group(128),
+    ));
+
+    for (i, raw) in textual.lines().enumerate() {
+        let lineno = i + 1;
+        let line = match raw.find('#') {
+            Some(p) => &raw[..p],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if !header_seen {
+            if toks != ["plan", "v1"] {
+                return Err(err(lineno, "plan file must start with 'plan v1'"));
+            }
+            header_seen = true;
+            continue;
+        }
+        match toks[0] {
+            "plan" => return Err(err(lineno, "duplicate 'plan' header")),
+            "batch" => {
+                if toks.len() != 2 {
+                    return Err(err(lineno, "usage: batch <n>"));
+                }
+                batch = toks[1]
+                    .parse::<usize>()
+                    .ok()
+                    .filter(|&b| b > 0)
+                    .ok_or_else(|| err(lineno, format!("bad batch '{}'", toks[1])))?;
+            }
+            "guard" => {
+                overflow_guard = match toks.get(1) {
+                    Some(&"on") => true,
+                    Some(&"off") => false,
+                    _ => return Err(err(lineno, "usage: guard on|off")),
+                };
+            }
+            "base" => {
+                if base.is_some() {
+                    return Err(err(lineno, "duplicate 'base' line"));
+                }
+                base = Some(parse_entry(&toks[1..], &default_base, lineno)?);
+            }
+            "role" => {
+                if toks.len() < 2 {
+                    return Err(err(lineno, "usage: role <role> key=value..."));
+                }
+                let role = Role::parse(toks[1])
+                    .ok_or_else(|| err(lineno, format!("unknown role '{}'", toks[1])))?;
+                let inherit = base
+                    .as_ref()
+                    .ok_or_else(|| err(lineno, "'role' must come after 'base'"))?;
+                let e = parse_entry(&toks[2..], inherit, lineno)?;
+                if roles.insert(role, e).is_some() {
+                    return Err(err(lineno, format!("duplicate role '{}'", toks[1])));
+                }
+            }
+            "layer" => {
+                if toks.len() < 3 {
+                    return Err(err(lineno, "usage: layer <idx> <role> key=value..."));
+                }
+                let idx = toks[1]
+                    .parse::<usize>()
+                    .map_err(|_| err(lineno, format!("bad layer index '{}'", toks[1])))?;
+                let role = Role::parse(toks[2])
+                    .ok_or_else(|| err(lineno, format!("unknown role '{}'", toks[2])))?;
+                let inherit = base
+                    .as_ref()
+                    .ok_or_else(|| err(lineno, "'layer' must come after 'base'"))?;
+                let e = parse_entry(&toks[3..], inherit, lineno)?;
+                if layers.insert((idx, role), e).is_some() {
+                    return Err(err(lineno, format!("duplicate layer {idx} {}", toks[2])));
+                }
+            }
+            other => {
+                return Err(err(
+                    lineno,
+                    format!("unknown directive '{other}' (plan|batch|guard|base|role|layer)"),
+                ))
+            }
+        }
+    }
+    if !header_seen {
+        return Err(err(1, "empty plan file (expected 'plan v1')"));
+    }
+    let base = base.ok_or_else(|| err(textual.lines().count().max(1), "missing 'base' line"))?;
+    Ok(QuantPlan { base, roles, layers, overflow_guard, batch })
+}
+
+impl QuantPlan {
+    /// Parse the textual format; see [`parse`].
+    pub fn parse(textual: &str) -> Result<QuantPlan, PlanError> {
+        parse(textual)
+    }
+
+    /// Load and parse a plan file; errors are prefixed with the path.
+    pub fn from_file(path: &std::path::Path) -> Result<QuantPlan, String> {
+        let textual = std::fs::read_to_string(path)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        parse(&textual).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Canonical serialization: every field explicit, overrides sorted.
+    /// `parse(to_text(p)) == p` for any parsed or built plan.
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("plan v1\n");
+        out.push_str(&format!("batch {}\n", self.batch));
+        out.push_str(&format!("guard {}\n", if self.overflow_guard { "on" } else { "off" }));
+        out.push_str(&format!("base {}\n", entry_fields(&self.base)));
+        for (role, e) in &self.roles {
+            out.push_str(&format!("role {} {}\n", role.name(), entry_fields(e)));
+        }
+        for ((idx, role), e) in &self.layers {
+            out.push_str(&format!("layer {idx} {} {}\n", role.name(), entry_fields(e)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::PlanBuilder;
+
+    fn sample() -> &'static str {
+        "\
+# LLaMA-3-ish recipe
+plan v1
+batch 32
+guard on
+base method=quarot bw=w4a8 gran=128 is=1024
+role mlp_down method=quarot bw=w8a8 gran=128 is=off
+layer 3 attn_o kernel=w4a8-fg-is-safe   # audited by hand
+"
+    }
+
+    #[test]
+    fn parse_sample_plan() {
+        let p = QuantPlan::parse(sample()).unwrap();
+        assert_eq!(p.batch, 32);
+        assert!(p.overflow_guard);
+        assert_eq!(p.base.spec.method, Method::QuaRot);
+        assert_eq!(p.base.spec.int_scale, Some(1024));
+        let down = &p.roles[&Role::MlpDown];
+        assert_eq!(down.spec.bw, BitWidth::W8A8);
+        assert_eq!(down.spec.int_scale, None);
+        let l3 = &p.layers[&(3, Role::AttnO)];
+        assert_eq!(l3.kernel, KernelChoice::Named("w4a8-fg-is-safe".into()));
+        // inherited from base, not the role override
+        assert_eq!(l3.spec.int_scale, Some(1024));
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let p = QuantPlan::parse(sample()).unwrap();
+        let text = p.to_text();
+        let p2 = QuantPlan::parse(&text).unwrap();
+        assert_eq!(p, p2);
+        assert_eq!(p2.to_text(), text, "canonical form must be a fixed point");
+    }
+
+    #[test]
+    fn builder_plans_roundtrip_too() {
+        let spec = QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(64)).with_is(0);
+        let p = PlanBuilder::new(spec)
+            .role(Role::MlpDown, QuantSpec::new(Method::QuaRot, BitWidth::W8A8, Granularity::Group(128)))
+            .layer_kernel(1, Role::AttnV, "w4a8-fg-fs")
+            .overflow_guard(true)
+            .auto_select(64)
+            .build();
+        let p2 = QuantPlan::parse(&p.to_text()).unwrap();
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        // missing header
+        let e = QuantPlan::parse("base method=rtn\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        // unknown directive on line 3
+        let e = QuantPlan::parse("plan v1\nbase method=rtn\nfrobnicate\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.to_string().contains("line 3"), "{e}");
+        // unknown kernel name on line 2
+        let e = QuantPlan::parse("plan v1\nbase kernel=warp9\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("warp9"));
+        // bad field value, line 4 (comments/blank lines still count)
+        let e = QuantPlan::parse("plan v1\n\n# hi\nbase gran=zero\n").unwrap_err();
+        assert_eq!(e.line, 4);
+        // role before base
+        let e = QuantPlan::parse("plan v1\nrole mlp_down bw=w8a8\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        // missing base
+        let e = QuantPlan::parse("plan v1\nbatch 4\n").unwrap_err();
+        assert!(e.msg.contains("base"));
+    }
+
+    #[test]
+    fn cost_model_only_kernels_rejected() {
+        // qserve entries exist for tables/cost model but cannot execute
+        // through Linear dispatch — binding one in a plan must fail loudly
+        let e = QuantPlan::parse("plan v1\nbase kernel=qserve-fine\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("cannot serve"), "{e}");
+    }
+
+    #[test]
+    fn generic_bitwidth_spellings_roundtrip() {
+        // exotic mixes are only meaningful with an explicit kernel choice
+        let p = QuantPlan::parse("plan v1\nbase bw=w8a16 kernel=auto\n").unwrap();
+        assert_eq!(p.base.spec.bw, BitWidth { weight: Bits::B8, act: Bits::F16 });
+        let p2 = QuantPlan::parse(&p.to_text()).unwrap();
+        assert_eq!(p, p2);
+        // with kernel=scheme they are rejected: no derived kernel exists
+        let e = QuantPlan::parse("plan v1\nbase bw=w8a16\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("scheme-derived"), "{e}");
+        // canonical names still preferred where they exist
+        assert!(QuantPlan::parse("plan v1\nbase bw=fp16\n")
+            .unwrap()
+            .to_text()
+            .contains("bw=fp16"));
+    }
+
+    #[test]
+    fn heuristic_and_off_amplifier_spellings() {
+        let p = QuantPlan::parse("plan v1\nbase is=heur\n").unwrap();
+        assert_eq!(p.base.spec.int_scale, Some(0));
+        let p = QuantPlan::parse("plan v1\nbase is=-\n").unwrap();
+        assert_eq!(p.base.spec.int_scale, None);
+        // '-' normalizes to 'off' in canonical text
+        assert!(p.to_text().contains("is=off"));
+    }
+}

@@ -26,6 +26,31 @@ pub use smoothquant::SmoothQuant;
 
 use crate::quant::{fake_quant_act, integer_scale, BitWidth, Granularity, QuantizedWeight};
 use crate::tensor::{fwht_rows, Mat};
+use std::borrow::Cow;
+
+/// Apply the online activation transform a PTQ method requires — QuaRot's
+/// FWHT rotation and/or SmoothQuant-style per-channel smoothing divisors.
+/// This is the single implementation shared by the fake-quant accuracy path
+/// ([`QuantizedLinear::transform_act`]) and the real kernel path
+/// (`model::Linear::forward`); it borrows when the transform is a no-op so
+/// the hot serving loop never copies untouched activations.
+pub fn apply_act_transform<'a>(x: &'a Mat, rotate: bool, smooth: Option<&[f32]>) -> Cow<'a, Mat> {
+    if !rotate && smooth.is_none() {
+        return Cow::Borrowed(x);
+    }
+    let mut xt = x.clone();
+    if rotate {
+        fwht_rows(&mut xt);
+    }
+    if let Some(s) = smooth {
+        for r in 0..xt.rows {
+            for (c, v) in xt.row_mut(r).iter_mut().enumerate() {
+                *v /= s[c];
+            }
+        }
+    }
+    Cow::Owned(xt)
+}
 
 /// A quantized linear layer plus the online activation transforms a method
 /// requires (smoothing divisors, rotation).
@@ -50,18 +75,7 @@ impl QuantizedLinear {
 
     /// Apply this layer's online activation transform (rotation/smoothing).
     pub fn transform_act(&self, x: &Mat) -> Mat {
-        let mut x = x.clone();
-        if self.rotate {
-            fwht_rows(&mut x);
-        }
-        if let Some(s) = &self.act_smooth {
-            for r in 0..x.rows {
-                for (c, v) in x.row_mut(r).iter_mut().enumerate() {
-                    *v /= s[c];
-                }
-            }
-        }
-        x
+        apply_act_transform(x, self.rotate, self.act_smooth.as_deref()).into_owned()
     }
 
     /// Fake-quantized forward pass `x @ Wᵀ` — the accuracy-evaluation path.

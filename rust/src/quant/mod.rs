@@ -69,17 +69,9 @@ impl BitWidth {
     }
 }
 
-/// How the per-group scale is represented at inference time — the paper's
-/// central axis of comparison (Fig. 2 b vs c).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ScaleMode {
-    /// Per-group float scales; each group's INT32 partial is converted to
-    /// f32 before the scale multiply (Fig. 2b — the bottleneck).
-    Float,
-    /// Integer Scale with amplifier α (Fig. 2c — the contribution). The
-    /// stored value is the α used (always a power of two).
-    Integer { amplifier: i64 },
-}
+// NOTE: the scale-mode axis (float vs integer per-group scales, Fig. 2 b/c)
+// lives in `gemm::registry::ScaleMode` as part of each kernel's
+// self-description — kernels, not weights, decide which epilogue runs.
 
 /// A quantized linear layer's weights: `n` output channels × `k` inputs,
 /// quantized symmetrically at [`Granularity`], with both float scales and

@@ -12,9 +12,11 @@
 use crate::costmodel::{accel_vs_fp16, Gpu};
 use crate::data::{CorpusGen, Split};
 use crate::eval;
-use crate::gemm::{self, Kernel, QuantAct};
-use crate::model::quantize::{quantize_model, Method, QuantSpec};
+use crate::gemm::registry;
+use crate::gemm::{self, GemmKernel, ScaleMode};
+use crate::model::quantize::{quantize_model, quantize_model_plan, Method, QuantSpec};
 use crate::model::{ModelConfig, ModelWeights, Transformer};
+use crate::plan::{PlanBuilder, QuantPlan, Role};
 use crate::quant::methods::dual_grained::dual_grain_quantize;
 use crate::quant::{integer_scale, quantize_weight_sym, BitWidth, Bits, Granularity};
 use crate::tensor::{Mat, Rng};
@@ -55,8 +57,14 @@ impl Ctx {
         }
     }
 
+    /// Quantize with a uniform scheme (sugar over a uniform plan).
     pub fn quantized(&self, spec: &QuantSpec) -> Transformer {
-        quantize_model(&self.weights, spec, &self.calib)
+        self.quantized_plan(&PlanBuilder::uniform(*spec))
+    }
+
+    /// Quantize with a full layer-resolution plan.
+    pub fn quantized_plan(&self, plan: &QuantPlan) -> Transformer {
+        quantize_model_plan(&self.weights, plan, &self.calib)
     }
 
     pub fn ppl(&self, model: &Transformer, split: Split) -> f64 {
@@ -127,14 +135,9 @@ pub fn table2() -> String {
         "{:<26} {:>14} {:>14} {:>14} {:>14}",
         "Kernel", "int MAC", "I32toF32", "int-scale MAC", "expand ops"
     );
-    for k in [
-        Kernel::Fp16,
-        Kernel::W4A8FgFloat,
-        Kernel::W4A4,
-        Kernel::W4A8FgInt,
-        Kernel::QServe { fine: false },
-    ] {
-        let t = gemm::trace::trace(k, 64, 4096, 22016, 128);
+    for name in ["fp16", "w4a8-fg-fs", "w4a4", "w4a8-fg-is", "qserve-coarse"] {
+        let k = registry::get_or_panic(name);
+        let t = k.trace(64, 4096, 22016, 128);
         let _ = writeln!(
             out,
             "{:<26} {:>14} {:>14} {:>14} {:>14}",
@@ -250,11 +253,17 @@ pub fn table5(ctx: &Ctx) -> String {
         eval::perplexity(&naive, &ctx.c4, 96),
         eval::perplexity(&naive, &ctx.wikitext, 96)
     );
-    // the paper's recipe
-    let mut spec =
-        QuantSpec::new(Method::QuaRot, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
-    spec.down_proj_w8a8 = true;
-    let recipe = quantize_model(&hard, &spec, &ctx.calib);
+    // the paper's recipe, expressed as a layer-resolution plan: base
+    // QuaRot W4A8 FG + IS, down-projections overridden to FG W8A8 (§5.6)
+    let plan = PlanBuilder::new(
+        QuantSpec::new(Method::QuaRot, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+    )
+    .role(
+        Role::MlpDown,
+        QuantSpec::new(Method::QuaRot, BitWidth::W8A8, Granularity::Group(128)),
+    )
+    .build();
+    let recipe = quantize_model_plan(&hard, &plan, &ctx.calib);
     let _ = writeln!(
         out,
         "{:<34} {:>9.3} {:>12.3}",
@@ -356,64 +365,25 @@ pub fn table8(ctx: &Ctx) -> String {
 
 // ---------------------------------------------------------------- figures
 
-fn measure_kernel(kernel: Kernel, m: usize, k: usize, n: usize, g: usize, reps: usize) -> f64 {
-    // one warmup execution happens implicitly: reps includes a discarded
-    // first run (see below)
+fn measure_kernel(name: &str, m: usize, k: usize, n: usize, g: usize, reps: usize) -> f64 {
     let reps = reps.max(3);
     let mut rng = Rng::new(5);
     let x = Mat::randn(m, k, 1.0, &mut rng);
     let w = Mat::randn(n, k, 0.05, &mut rng);
-    match kernel {
-        Kernel::Fp16 => {
+    // schemes that do not run through PackedWeight dispatch
+    match name {
+        "fp16" => {
             std::hint::black_box(gemm::fp32::gemm_f32(&x, &w)); // warmup
             let t0 = Instant::now();
             for _ in 0..reps {
                 std::hint::black_box(gemm::fp32::gemm_f32(&x, &w));
             }
-            t0.elapsed().as_secs_f64() / reps as f64
+            return t0.elapsed().as_secs_f64() / reps as f64;
         }
-        Kernel::W4A16 => {
-            let pw = gemm::pack_for_test(&w, Bits::B4, Granularity::Group(g), None);
-            std::hint::black_box(gemm::w4a16::gemm(&x, &pw)); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(gemm::w4a16::gemm(&x, &pw));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        }
-        Kernel::W4A8Coarse => {
-            let pw = gemm::pack_for_test(&w, Bits::B4, Granularity::PerChannel, None);
-            let qa = QuantAct::quantize(&x, Bits::B8);
-            std::hint::black_box(gemm::w4a8_coarse::gemm(&qa, &pw)); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(gemm::w4a8_coarse::gemm(&qa, &pw));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        }
-        Kernel::W4A8FgFloat => {
-            let pw = gemm::pack_for_test(&w, Bits::B4, Granularity::Group(g), None);
-            let qa = QuantAct::quantize(&x, Bits::B8);
-            std::hint::black_box(gemm::w4a8_fg_float::gemm(&qa, &pw)); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(gemm::w4a8_fg_float::gemm(&qa, &pw));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        }
-        Kernel::W4A8FgInt => {
-            let pw = gemm::pack_for_test(&w, Bits::B4, Granularity::Group(g), Some(1024));
-            let qa = QuantAct::quantize(&x, Bits::B8);
-            std::hint::black_box(gemm::w4a8_fg_int::gemm(&qa, &pw)); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(gemm::w4a8_fg_int::gemm(&qa, &pw));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        }
-        Kernel::QServe { fine } => {
+        "qserve-coarse" | "qserve-fine" => {
+            let fine = name == "qserve-fine";
             let dg = dual_grain_quantize(&w, g);
-            let qa = QuantAct::quantize(&x, Bits::B8);
+            let qa = gemm::QuantAct::quantize(&x, Bits::B8);
             let gs = gemm::qserve::unit_group_scales(&dg);
             let t0 = Instant::now();
             for _ in 0..reps {
@@ -423,29 +393,22 @@ fn measure_kernel(kernel: Kernel, m: usize, k: usize, n: usize, g: usize, reps: 
                     std::hint::black_box(gemm::qserve::gemm_coarse(&qa, &dg));
                 }
             }
-            t0.elapsed().as_secs_f64() / reps as f64
+            return t0.elapsed().as_secs_f64() / reps as f64;
         }
-        Kernel::W8A8 => {
-            let pw = gemm::pack_for_test(&w, Bits::B8, Granularity::PerChannel, None);
-            let qa = QuantAct::quantize(&x, Bits::B8);
-            std::hint::black_box(gemm::w8a8::gemm(&qa, &pw)); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(gemm::w8a8::gemm(&qa, &pw));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        }
-        Kernel::W4A4 => {
-            let pw = gemm::pack_for_test(&w, Bits::B4, Granularity::Group(g), None);
-            let qa = QuantAct::quantize(&x, Bits::B4);
-            std::hint::black_box(gemm::w4a4::gemm_float_scale(&qa, &pw)); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(gemm::w4a4::gemm_float_scale(&qa, &pw));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        }
+        _ => {}
     }
+    // any registry kernel: pack per its self-description, time its forward
+    // (activation quantization included — the serving-path cost)
+    let kern = registry::get_or_panic(name);
+    let gran = if kern.fine_grained() { Granularity::Group(g) } else { Granularity::PerChannel };
+    let amp = if kern.scale_mode() == ScaleMode::Integer { Some(1024) } else { None };
+    let pw = gemm::pack_for_test(&w, kern.weight_bits(), gran, amp);
+    std::hint::black_box(kern.forward(&x, &pw)); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(kern.forward(&x, &pw));
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
 }
 
 /// Figure 3 — W4A8 float-scale vs FP16 across batch sizes: measured CPU and
@@ -460,11 +423,12 @@ pub fn fig3() -> String {
         "{:>5} {:>14} {:>14} {:>12} {:>14}",
         "M", "FP16 cpu(ms)", "FS cpu(ms)", "cpu ratio", "A100-model x"
     );
+    let fs = registry::get_or_panic("w4a8-fg-fs");
     for m in [1usize, 4, 16, 64, 128] {
         let reps = if m <= 16 { 5 } else { 2 };
-        let t_fp = measure_kernel(Kernel::Fp16, m, k, n, g, reps);
-        let t_fs = measure_kernel(Kernel::W4A8FgFloat, m, k, n, g, reps);
-        let model_x = accel_vs_fp16(&gpu, Kernel::W4A8FgFloat, m as u64, 4096, 22016, 128);
+        let t_fp = measure_kernel("fp16", m, k, n, g, reps);
+        let t_fs = measure_kernel("w4a8-fg-fs", m, k, n, g, reps);
+        let model_x = accel_vs_fp16(&gpu, &*fs, m as u64, 4096, 22016, 128);
         let _ = writeln!(
             out,
             "{:>5} {:>14.3} {:>14.3} {:>12.2} {:>14.2}",
@@ -490,10 +454,16 @@ pub fn fig5a() -> String {
         "{:>5} {:>10} {:>10} {:>10} {:>10} {:>14}",
         "M", "W4A16", "coarse", "FS", "IS", "cpu IS/FS"
     );
+    let (w4a16, coarse, fs, is) = (
+        registry::get_or_panic("w4a16"),
+        registry::get_or_panic("w4a8-coarse"),
+        registry::get_or_panic("w4a8-fg-fs"),
+        registry::get_or_panic("w4a8-fg-is"),
+    );
     for m in [1u64, 4, 16, 64, 128, 256, 512] {
         let cpu_ratio = if m <= 128 {
-            let t_fs = measure_kernel(Kernel::W4A8FgFloat, m as usize, 1024, 2048, 128, 2);
-            let t_is = measure_kernel(Kernel::W4A8FgInt, m as usize, 1024, 2048, 128, 2);
+            let t_fs = measure_kernel("w4a8-fg-fs", m as usize, 1024, 2048, 128, 2);
+            let t_is = measure_kernel("w4a8-fg-is", m as usize, 1024, 2048, 128, 2);
             t_fs / t_is
         } else {
             f64::NAN
@@ -502,10 +472,10 @@ pub fn fig5a() -> String {
             out,
             "{:>5} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>14.2}",
             m,
-            accel_vs_fp16(&gpu, Kernel::W4A16, m, 4096, 22016, 128),
-            accel_vs_fp16(&gpu, Kernel::W4A8Coarse, m, 4096, 22016, 4096),
-            accel_vs_fp16(&gpu, Kernel::W4A8FgFloat, m, 4096, 22016, 128),
-            accel_vs_fp16(&gpu, Kernel::W4A8FgInt, m, 4096, 22016, 128),
+            accel_vs_fp16(&gpu, &*w4a16, m, 4096, 22016, 128),
+            accel_vs_fp16(&gpu, &*coarse, m, 4096, 22016, 4096),
+            accel_vs_fp16(&gpu, &*fs, m, 4096, 22016, 128),
+            accel_vs_fp16(&gpu, &*is, m, 4096, 22016, 128),
             cpu_ratio
         );
     }
@@ -523,11 +493,17 @@ pub fn fig67(k: u64, n: u64) -> String {
         "{:>5} {:>12} {:>12} {:>12} {:>12} {:>10}",
         "M", "ours-coarse", "ours-fine", "qs-coarse", "qs-fine", "max-x"
     );
+    let (coarse, is, qsc, qsf) = (
+        registry::get_or_panic("w4a8-coarse"),
+        registry::get_or_panic("w4a8-fg-is"),
+        registry::get_or_panic("qserve-coarse"),
+        registry::get_or_panic("qserve-fine"),
+    );
     for m in [1u64, 8, 32, 128, 256] {
-        let oc = accel_vs_fp16(&gpu, Kernel::W4A8Coarse, m, k, n, k);
-        let of = accel_vs_fp16(&gpu, Kernel::W4A8FgInt, m, k, n, 128);
-        let qc = accel_vs_fp16(&gpu, Kernel::QServe { fine: false }, m, k, n, 128);
-        let qf = accel_vs_fp16(&gpu, Kernel::QServe { fine: true }, m, k, n, 128);
+        let oc = accel_vs_fp16(&gpu, &*coarse, m, k, n, k);
+        let of = accel_vs_fp16(&gpu, &*is, m, k, n, 128);
+        let qc = accel_vs_fp16(&gpu, &*qsc, m, k, n, 128);
+        let qf = accel_vs_fp16(&gpu, &*qsf, m, k, n, 128);
         let _ = writeln!(
             out,
             "{:>5} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>10.2}",
@@ -609,17 +585,17 @@ pub fn fig8(ctx: &Ctx) -> String {
     out
 }
 
-/// Build an engine over a quantization spec (helper for fig1/fig5b).
+/// Build an engine over a quantization plan (helper for fig1/fig5b).
 fn engine_for(
     weights: &ModelWeights,
-    spec: Option<&QuantSpec>,
+    plan: Option<&QuantPlan>,
     calib: &[u32],
     max_batch: usize,
 ) -> crate::coordinator::Engine {
     use crate::coordinator::{Engine, EngineConfig};
-    let model = match spec {
+    let model = match plan {
         None => Transformer::from_weights(weights),
-        Some(s) => quantize_model(weights, s, calib),
+        Some(p) => quantize_model_plan(weights, p, calib),
     };
     Engine::new(
         std::sync::Arc::new(model),
@@ -656,26 +632,37 @@ fn run_workload(
 pub fn fig1(ctx: &Ctx) -> String {
     let mut out = String::new();
     hr(&mut out, "Fig 1: end-to-end serving latency (scaled d=512 model, 16 reqs, 16 prompt + 16 new)");
-    let specs: [(&str, Option<QuantSpec>); 4] = [
+    let plans: [(&str, Option<QuantPlan>); 4] = [
         ("FP16", None),
         (
             "W4A16 (Marlin)",
-            Some(QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128))),
+            Some(PlanBuilder::uniform(QuantSpec::new(
+                Method::Gptq,
+                BitWidth::W4A16,
+                Granularity::Group(128),
+            ))),
         ),
         (
             "W4A8 Float Scale",
-            Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128))),
+            Some(PlanBuilder::uniform(QuantSpec::new(
+                Method::Gptq,
+                BitWidth::W4A8,
+                Granularity::Group(128),
+            ))),
         ),
         (
             "W4A8 Integer Scale",
-            Some(QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024)),
+            Some(PlanBuilder::uniform(
+                QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128))
+                    .with_is(1024),
+            )),
         ),
     ];
     let big = ModelWeights::random(ModelConfig::scaled(2), 99);
     let mut fp16_wall = 0.0;
     let _ = writeln!(out, "{:<22} {:>10} {:>12} {:>10}", "Scheme", "wall (s)", "tok/s", "vs FP16");
-    for (name, spec) in &specs {
-        let mut e = engine_for(&big, spec.as_ref(), &ctx.calib, 16);
+    for (name, plan) in &plans {
+        let mut e = engine_for(&big, plan.as_ref(), &ctx.calib, 16);
         let (wall, tps) = run_workload(&mut e, &ctx.gen, 16, 16, 16);
         if *name == "FP16" {
             fp16_wall = wall;
@@ -703,12 +690,17 @@ pub fn fig5b(ctx: &Ctx) -> String {
         let n_req = batch * 2;
         let mut ef = engine_for(&ctx.moe_weights, None, &ctx.calib, batch);
         let (wf, _) = run_workload(&mut ef, &ctx.gen, n_req, 12, 12);
-        let spec =
-            QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
-        let mut ei = engine_for(&ctx.moe_weights, Some(&spec), &ctx.calib, batch);
+        let plan_is = PlanBuilder::uniform(
+            QuantSpec::new(Method::Gptq, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+        );
+        let mut ei = engine_for(&ctx.moe_weights, Some(&plan_is), &ctx.calib, batch);
         let (wi, _) = run_workload(&mut ei, &ctx.gen, n_req, 12, 12);
-        let s16 = QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(128));
-        let mut e16 = engine_for(&ctx.moe_weights, Some(&s16), &ctx.calib, batch);
+        let plan_16 = PlanBuilder::uniform(QuantSpec::new(
+            Method::Gptq,
+            BitWidth::W4A16,
+            Granularity::Group(128),
+        ));
+        let mut e16 = engine_for(&ctx.moe_weights, Some(&plan_16), &ctx.calib, batch);
         let (w16, _) = run_workload(&mut e16, &ctx.gen, n_req, 12, 12);
         let _ = writeln!(
             out,

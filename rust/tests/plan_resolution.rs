@@ -1,0 +1,199 @@
+//! Plan-resolution acceptance tests:
+//! 1. uniform plans are behavior-locked to the seed's `QuantSpec::kernel()`
+//!    mapping (`kernel_name()` today);
+//! 2. an auto-select plan on the MoE config produces a **non-uniform**
+//!    kernel assignment (overflow-audited down-projections demoted to the
+//!    safe IS kernel, W4A8FgInt elsewhere), and its end-to-end greedy
+//!    outputs are token-for-token identical to an explicit plan that pins
+//!    the very same kernels per (layer, role).
+
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::model::quantize::{
+    kernel_assignment, quantize_model, quantize_model_plan, Method, QuantSpec,
+};
+use integer_scale::model::transformer::MlpOp;
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::{KernelChoice, PlanBuilder, Role, SchemeEntry};
+use integer_scale::quant::{BitWidth, Granularity};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+fn tiny_cfg() -> ModelConfig {
+    ModelConfig {
+        n_layers: 1,
+        d_model: 64,
+        n_heads: 2,
+        d_ff: 128,
+        vocab: 128,
+        max_seq: 96,
+        n_experts: None,
+    }
+}
+
+#[test]
+fn uniform_plan_behavior_locked_to_quantspec_kernel() {
+    let cfg = tiny_cfg();
+    let weights = ModelWeights::random(cfg, 17);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(64, Split::C4, 11);
+    let specs = [
+        QuantSpec::new(Method::SmoothQuant, BitWidth::W8A8, Granularity::Group(32)),
+        QuantSpec::new(Method::Gptq, BitWidth::W4A16, Granularity::Group(32)),
+        QuantSpec::new(Method::Odyssey, BitWidth::W4A8, Granularity::PerChannel),
+        QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(32)),
+        QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(32)).with_is(1024),
+        QuantSpec::new(Method::QuaRot, BitWidth::W4A4, Granularity::Group(32)).with_is(1024),
+    ];
+    for spec in specs {
+        // `quantize_model` is sugar for a uniform plan; every linear must
+        // land on exactly the kernel the seed's QuantSpec mapping chose
+        let qm = quantize_model(&weights, &spec, &calib);
+        for (site, kernel) in kernel_assignment(&qm) {
+            assert_eq!(
+                kernel,
+                spec.kernel_name(),
+                "uniform plan must reproduce QuantSpec::kernel_name() at {site} for {}",
+                spec.label()
+            );
+        }
+    }
+}
+
+/// Greedy-decode a fixed workload; returns per-request token streams.
+fn greedy_tokens(model: Transformer) -> Vec<Vec<u32>> {
+    let mut e = Engine::new(
+        Arc::new(model),
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 5 },
+    );
+    let gen = CorpusGen::new(128, 7);
+    let mut rng = integer_scale::tensor::Rng::new(3);
+    for i in 0..6u64 {
+        let doc = gen.document(8, Split::C4, &mut rng);
+        let mut r = Request::greedy(i, doc, 8);
+        r.stop_at_eos = false;
+        e.submit(r);
+    }
+    let mut res = e.run_to_completion();
+    res.sort_by_key(|r| r.id);
+    res.into_iter().map(|r| r.tokens).collect()
+}
+
+/// The per-role kernel names of one layer of a quantized MoE model.
+fn layer_role_kernels(model: &Transformer, li: usize) -> Vec<(Role, &'static str)> {
+    let l = &model.layers[li];
+    let mut out = vec![
+        (Role::AttnQ, l.wq.kernel_name()),
+        (Role::AttnK, l.wk.kernel_name()),
+        (Role::AttnV, l.wv.kernel_name()),
+        (Role::AttnO, l.wo.kernel_name()),
+    ];
+    match &l.mlp {
+        MlpOp::Moe(moe) => {
+            // all experts share the role resolution — assert and collapse
+            let (g0, u0, d0) = &moe.experts[0];
+            for (g, u, d) in &moe.experts {
+                assert_eq!(g.kernel_name(), g0.kernel_name());
+                assert_eq!(u.kernel_name(), u0.kernel_name());
+                assert_eq!(d.kernel_name(), d0.kernel_name());
+            }
+            out.push((Role::ExpertGate, g0.kernel_name()));
+            out.push((Role::ExpertUp, u0.kernel_name()));
+            out.push((Role::ExpertDown, d0.kernel_name()));
+        }
+        MlpOp::Dense { gate, up, down } => {
+            out.push((Role::MlpGate, gate.kernel_name()));
+            out.push((Role::MlpUp, up.kernel_name()));
+            out.push((Role::MlpDown, down.kernel_name()));
+        }
+    }
+    out
+}
+
+#[test]
+fn moe_auto_select_is_non_uniform_and_matches_explicit_plan() {
+    let cfg = ModelConfig { n_layers: 2, ..ModelConfig::moe_tiny() };
+    let weights = ModelWeights::random(cfg, 9);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(96, Split::C4, 11);
+
+    // Base: RTN W4A8 FG + IS(1024) — audit-clean at every attention and
+    // gate/up shape. Down-projections run an amplifier so large their §B.4
+    // audit is guaranteed to blow the i32 headroom, which is exactly the
+    // situation the paper demotes to the degraded IS kernel for.
+    let base = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
+    let risky_down = base.with_is(1 << 28);
+    let mut auto_plan =
+        PlanBuilder::new(base).overflow_guard(true).auto_select(16).build();
+    auto_plan
+        .roles
+        .insert(Role::MlpDown, SchemeEntry { spec: risky_down, kernel: KernelChoice::Auto });
+
+    let qm_auto = quantize_model_plan(&weights, &auto_plan, &calib);
+
+    // 1. the assignment is non-uniform: audited down-projections demoted,
+    //    the rest on the fast IS kernel
+    let assigned: BTreeSet<&'static str> =
+        kernel_assignment(&qm_auto).into_iter().map(|(_, k)| k).collect();
+    let distinct: Vec<&&str> = assigned.iter().filter(|k| **k != "fp16").collect();
+    assert!(
+        distinct.len() > 1,
+        "auto plan should choose a non-uniform assignment, got {assigned:?}"
+    );
+    for li in 0..cfg.n_layers {
+        for (role, kernel) in layer_role_kernels(&qm_auto, li) {
+            if role == Role::ExpertDown {
+                assert_eq!(
+                    kernel, "w4a8-fg-is-safe",
+                    "audited down-projection must run the overflow-safe IS kernel (L{li})"
+                );
+            } else {
+                assert_eq!(kernel, "w4a8-fg-is", "clean layer must keep the fast IS kernel (L{li} {role:?})");
+            }
+        }
+    }
+
+    // 2. pin exactly the same kernels through an explicit plan: greedy
+    //    outputs must match token-for-token (same resolution ⇒ same model)
+    let mut explicit = PlanBuilder::new(base).build();
+    explicit
+        .roles
+        .insert(Role::MlpDown, SchemeEntry { spec: risky_down, kernel: KernelChoice::Scheme });
+    for li in 0..cfg.n_layers {
+        for (role, kernel) in layer_role_kernels(&qm_auto, li) {
+            let spec = if role == Role::ExpertDown { risky_down } else { base };
+            explicit.layers.insert(
+                (li, role),
+                SchemeEntry { spec, kernel: KernelChoice::Named(kernel.to_string()) },
+            );
+        }
+    }
+    let qm_explicit = quantize_model_plan(&weights, &explicit, &calib);
+    assert_eq!(kernel_assignment(&qm_auto), kernel_assignment(&qm_explicit));
+
+    let toks_auto = greedy_tokens(qm_auto);
+    let toks_explicit = greedy_tokens(qm_explicit);
+    assert_eq!(
+        toks_auto, toks_explicit,
+        "explicit plan with the same resolution must reproduce greedy outputs token-for-token"
+    );
+}
+
+#[test]
+fn guarded_uniform_plan_still_serves() {
+    // the guard on a clean model must not demote anything — and the plan
+    // path must serve end-to-end
+    let cfg = tiny_cfg();
+    let weights = ModelWeights::random(cfg, 21);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(64, Split::C4, 11);
+    let base = QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(32)).with_is(1024);
+    let plan = PlanBuilder::new(base).overflow_guard(true).build();
+    let qm = quantize_model_plan(&weights, &plan, &calib);
+    for (site, k) in kernel_assignment(&qm) {
+        assert_eq!(k, "w4a8-fg-is", "clean model must not be demoted at {site}");
+    }
+    let toks = greedy_tokens(qm);
+    assert_eq!(toks.len(), 6);
+    assert!(toks.iter().all(|t| t.len() == 8));
+}

@@ -1,0 +1,111 @@
+//! Acceptance test for the kernel registry: a brand-new GEMM kernel is
+//! defined, registered, priced by the cost model, and served through
+//! `Linear::forward` — entirely from this file, without editing
+//! `gemm/mod.rs`, `model/linear.rs` or anything under `costmodel/`.
+
+use integer_scale::costmodel::{latency, Gpu};
+use integer_scale::gemm::registry::{self, GemmKernel, MathPipe, ScaleMode};
+use integer_scale::gemm::trace::OpTrace;
+use integer_scale::gemm::{self, PackedWeight};
+use integer_scale::model::Linear;
+use integer_scale::quant::methods::{PtqMethod, Rtn};
+use integer_scale::quant::pack::unpack_int4;
+use integer_scale::quant::{BitWidth, Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+use std::sync::Arc;
+
+/// A toy out-of-tree scheme: dequantize the int4 codes to f32 with the
+/// per-group float scales, then run the float GEMM — the kind of kernel an
+/// experimenter would prototype before writing the fused version.
+struct DequantProbeKernel;
+
+impl GemmKernel for DequantProbeKernel {
+    fn name(&self) -> &'static str {
+        "w4a16-dequant-probe"
+    }
+    fn label(&self) -> &'static str {
+        "W4A16 dequant probe (test)"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::F16
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Native
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Fp16Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.5 // unfused: materializes the dequantized weight first
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        OpTrace {
+            float_mac: m * n * k,
+            // one dequant multiply per weight element, on the slow pipe
+            expand_ops: n * k,
+            i32_to_f32: n * (k / g),
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        let codes = unpack_int4(&pw.packed);
+        let gpr = pw.groups_per_row();
+        let mut w = Mat::zeros(pw.n, pw.k);
+        for r in 0..pw.n {
+            for c in 0..pw.k {
+                let s = pw.scales[r * gpr + c / pw.group];
+                w.data[r * pw.k + c] = codes[r * pw.k + c] as f32 * s;
+            }
+        }
+        gemm::fp32::gemm_f32(x, &w)
+    }
+}
+
+#[test]
+fn register_and_serve_a_new_kernel_from_one_file() {
+    registry::register(Arc::new(DequantProbeKernel));
+
+    // discoverable by name, self-description intact
+    let k = registry::get("w4a16-dequant-probe").expect("registered kernel must resolve");
+    assert_eq!(k.scale_mode(), ScaleMode::Native);
+    assert!(registry::names().contains(&"w4a16-dequant-probe"));
+
+    // the cost model prices it from its self-description alone
+    let gpu = Gpu::default();
+    let lat = latency(&gpu, &*k, 16, 4096, 4096, 128);
+    assert!(lat.is_finite() && lat > 0.0);
+    // unfused dequant must never beat the fused Marlin-like kernel
+    let marlin = registry::get("w4a16").unwrap();
+    assert!(lat >= latency(&gpu, &*marlin, 16, 4096, 4096, 128));
+
+    // and Linear dispatches to it with no per-kernel match anywhere
+    let mut rng = Rng::new(4);
+    let w = Mat::randn(24, 128, 0.05, &mut rng);
+    let x = Mat::randn(3, 128, 1.0, &mut rng);
+    let ql = Rtn.quantize(&w, &x, BitWidth::W4A16, Granularity::Group(32));
+    let lin = Linear::from_quantized(&ql, k);
+    assert_eq!(lin.kernel_name(), "w4a16-dequant-probe");
+    let got = lin.forward(&x);
+
+    // numerically identical to the in-tree fused W4A16 kernel: same codes,
+    // same scales, same math up to f32 association
+    let fused = Linear::from_quantized(&ql, registry::get("w4a16").unwrap()).forward(&x);
+    assert_eq!((got.rows, got.cols), (3, 24));
+    assert!(got.max_abs_diff(&fused) < 1e-3);
+}
+
+#[test]
+fn replacing_a_kernel_is_explicit_and_scoped_to_register() {
+    // `register` with a fresh name never perturbs the builtins
+    registry::register(Arc::new(DequantProbeKernel));
+    for name in ["w4a8-fg-is", "w4a8-fg-fs", "fp16"] {
+        assert!(registry::get(name).is_some(), "builtin '{name}' must survive extension");
+    }
+}
