@@ -8,6 +8,7 @@ use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
 use integer_scale::plan::{PlanBuilder, QuantPlan};
 use integer_scale::quant::{BitWidth, Granularity};
+use integer_scale::runtime::Runtime;
 use integer_scale::tensor::Rng;
 use std::sync::Arc;
 
@@ -60,13 +61,25 @@ fn main() {
         ),
     ];
     let mut b = Bencher::group("fig1_e2e_serving (8 reqs, 12 prompt + 8 new)").sample_size(6);
+    let mut is_model = None;
     for (name, plan) in plans {
         let model = Arc::new(match &plan {
             None => Transformer::from_weights(&weights),
             Some(p) => quantize_model_plan(&weights, p, &calib),
         });
         b.bench(name, || workload(&model, &gen));
+        if name == "w4a8_is" {
+            is_model = Some(model);
+        }
     }
+    // the same IS model on the 4-lane threaded runtime: token-identical
+    // outputs, intra-op parallel GEMM tiles. The Arc is unique again after
+    // the serial bench, so swap the runtime in place of copying the model.
+    let mut is_w4 = is_model.expect("IS model benched");
+    Arc::get_mut(&mut is_w4)
+        .expect("no engine holds the model between benches")
+        .set_runtime(Runtime::threaded(4));
+    b.bench("w4a8_is_workers4", || workload(&is_w4, &gen));
     if let Some(r) = b.ratio("fp16", "w4a8_is") {
         println!("\n>> W4A8 Integer Scale end-to-end speedup over FP16: {r:.2}x (paper: up to 1.85x)");
     }
@@ -75,5 +88,8 @@ fn main() {
     }
     if let Some(r) = b.ratio("w4a16", "w4a8_is") {
         println!(">> over Marlin-like W4A16: {r:.2}x (paper: up to 1.17x)");
+    }
+    if let Some(r) = b.ratio("w4a8_is", "w4a8_is_workers4") {
+        println!(">> 4-worker runtime over serial (same IS model): {r:.2}x");
     }
 }

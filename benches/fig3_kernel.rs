@@ -4,6 +4,7 @@
 use integer_scale::bench_harness::{black_box, Bencher};
 use integer_scale::gemm::{self, pack_for_test, QuantAct};
 use integer_scale::quant::{Bits, Granularity};
+use integer_scale::runtime::{parallel_columns, Runtime};
 use integer_scale::tensor::{Mat, Rng};
 
 const K: usize = 1024;
@@ -29,5 +30,28 @@ fn main() {
             ">> M={m}: FS acceleration over FP16 = {:.2}x",
             s_fp.median.as_secs_f64() / s_fs.median.as_secs_f64()
         );
+    }
+
+    // worker sweep: the same float-scale kernel, N split into column tiles
+    // over the threaded runtime — bit-identical output, lower latency
+    println!("\nparallel tiles (M=16):");
+    let x = Mat::randn(16, K, 1.0, &mut rng);
+    let qa = QuantAct::quantize(&x, Bits::B8);
+    let mut b = Bencher::group("fig3 parallel M=16").sample_size(10);
+    let mut serial = None;
+    for workers in [1usize, 2, 4] {
+        let rt = Runtime::threaded(workers);
+        let s = b.bench(&format!("w4a8_fg_float_workers{workers}"), || {
+            black_box(parallel_columns(&rt, 16, N, &|j0, j1| {
+                gemm::w4a8_fg_float::gemm_tile(&qa, &pw, j0, j1)
+            }));
+        });
+        match serial {
+            None => serial = Some(s),
+            Some(s1) => println!(
+                ">> workers={workers}: {:.2}x over 1 worker",
+                s1.median.as_secs_f64() / s.median.as_secs_f64()
+            ),
+        }
     }
 }

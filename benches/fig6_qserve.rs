@@ -6,6 +6,7 @@ use integer_scale::bench_harness::{black_box, Bencher};
 use integer_scale::gemm::{self, pack_for_test, QuantAct};
 use integer_scale::quant::methods::dual_grained::dual_grain_quantize;
 use integer_scale::quant::{Bits, Granularity};
+use integer_scale::runtime::Runtime;
 use integer_scale::tensor::{Mat, Rng};
 
 const K: usize = 1024;
@@ -41,5 +42,27 @@ fn main() {
                 qf.median.as_secs_f64() / is.median.as_secs_f64()
             );
         }
+    }
+
+    // the dual-grained kernels tile over the threaded runtime too
+    // (bit-identical column tiles — see gemm::qserve::gemm_coarse_rt)
+    let rt = Runtime::threaded(4);
+    let w = Mat::randn(2048, K, 0.05, &mut rng);
+    let dg = dual_grain_quantize(&w, G);
+    let gs = gemm::qserve::unit_group_scales(&dg);
+    let x = Mat::randn(16, K, 1.0, &mut rng);
+    let qa = QuantAct::quantize(&x, Bits::B8);
+    let mut b = Bencher::group("fig6 parallel N=2048 M=16").sample_size(10);
+    b.bench("qserve_coarse_workers1", || {
+        black_box(gemm::qserve::gemm_coarse(&qa, &dg));
+    });
+    b.bench("qserve_coarse_workers4", || {
+        black_box(gemm::qserve::gemm_coarse_rt(&qa, &dg, &rt));
+    });
+    b.bench("qserve_fine_workers4", || {
+        black_box(gemm::qserve::gemm_fine_rt(&qa, &dg, &gs, &rt));
+    });
+    if let Some(r) = b.ratio("qserve_coarse_workers1", "qserve_coarse_workers4") {
+        println!(">> QServe coarse, 4 workers over 1: {r:.2}x");
     }
 }

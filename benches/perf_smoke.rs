@@ -1,0 +1,137 @@
+//! CI perf gate (`perf-smoke` job): a quick, machine-readable benchmark
+//! pass that writes `BENCH_pr.json` (see `bench_harness::write_json`) and
+//! enforces two invariants on every PR:
+//!
+//! 1. **parallel GEMM pays**: the 4-worker tiled w4a8-fg-is forward is at
+//!    least 1.3x faster than the 1-worker (serial) path at a serving-sized
+//!    shape (gated only when the host has ≥ 4 CPUs, e.g. the 4-vCPU CI
+//!    runner);
+//! 2. **the free lunch holds**: the Integer-Scale kernel's median is no
+//!    slower than the float-scale kernel's at group size 128 (2% jitter
+//!    grace).
+//!
+//! Also asserts — before timing anything — that parallel tiles are
+//! bit-identical to serial execution, and records end-to-end serve
+//! tokens/sec at 1 and 4 workers.
+//!
+//! Output path: `BENCH_pr.json` in the working directory, overridable via
+//! `BENCH_JSON_OUT`.
+
+use integer_scale::bench_harness::{black_box, write_json, Bencher};
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::gemm::{pack_for_test, registry};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::PlanBuilder;
+use integer_scale::quant::{BitWidth, Bits, Granularity};
+use integer_scale::runtime::Runtime;
+use integer_scale::tensor::{Mat, Rng};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const M: usize = 8;
+const K: usize = 1024;
+const N: usize = 4096;
+const G: usize = 128;
+
+fn serve_once(model: &Arc<Transformer>, gen: &CorpusGen) -> usize {
+    let mut e = Engine::new(
+        model.clone(),
+        EngineConfig { max_batch: 8, kv_token_budget: 8 * 256, seed: 1 },
+    );
+    let mut rng = Rng::new(9);
+    for i in 0..8u64 {
+        let mut r = Request::greedy(i, gen.document(12, Split::C4, &mut rng), 8);
+        r.stop_at_eos = false;
+        e.submit(r);
+    }
+    let res = e.run_to_completion();
+    res.iter().map(|r| r.tokens.len()).sum()
+}
+
+fn main() {
+    let host_cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut rng = Rng::new(7);
+    let w = Mat::randn(N, K, 0.05, &mut rng);
+    let x = Mat::randn(M, K, 1.0, &mut rng);
+    let pw_is = pack_for_test(&w, Bits::B4, Granularity::Group(G), Some(1024));
+    let pw_fs = pack_for_test(&w, Bits::B4, Granularity::Group(G), None);
+    let is_k = registry::get_or_panic("w4a8-fg-is");
+    let fs_k = registry::get_or_panic("w4a8-fg-fs");
+    let rt1 = Runtime::serial();
+    let rt4 = Runtime::threaded(4);
+
+    // correctness first: tiled execution must be bit-identical to serial
+    let serial = is_k.forward(&x, &pw_is);
+    let par = is_k.forward_rt(&x, &pw_is, &rt4);
+    assert_eq!(serial.data, par.data, "parallel tiles diverged from serial execution");
+    println!("bit-identity: 4-worker tiled w4a8-fg-is == serial (M={M} K={K} N={N})");
+
+    let mut b = Bencher::group(&format!("perf_smoke M={M} K={K} N={N} g={G}")).sample_size(9);
+    let s_w1 = b.bench("gemm_is_workers1", || {
+        black_box(is_k.forward_rt(&x, &pw_is, &rt1));
+    });
+    let s_w4 = b.bench("gemm_is_workers4", || {
+        black_box(is_k.forward_rt(&x, &pw_is, &rt4));
+    });
+    let s_fs = b.bench("gemm_fs_g128", || {
+        black_box(fs_k.forward(&x, &pw_fs));
+    });
+    let s_is = b.bench("gemm_is_g128", || {
+        black_box(is_k.forward(&x, &pw_is));
+    });
+
+    // end-to-end serve throughput at 1 vs 4 workers (tokens/sec records)
+    let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
+    let weights = ModelWeights::random(cfg, 42);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(128, Split::C4, 11);
+    let plan = PlanBuilder::uniform(
+        QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+    );
+    let model = quantize_model_plan(&weights, &plan, &calib);
+    let toks = serve_once(&Arc::new(model.clone()), &gen) as u64;
+    for workers in [1usize, 4] {
+        let m = Arc::new(model.clone().with_runtime(Runtime::threaded(workers)));
+        b.bench_tokens(&format!("serve_is_workers{workers}"), toks, || {
+            black_box(serve_once(&m, &gen));
+        });
+    }
+
+    let out = std::env::var("BENCH_JSON_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("BENCH_pr.json"));
+    write_json(&out, b.records()).expect("write BENCH json");
+    println!("\nwrote {} ({} records)", out.display(), b.records().len());
+
+    // --- gates (fail the job AFTER the artifact is on disk) ---
+    let mut failed = false;
+
+    let speedup = s_w1.median.as_secs_f64() / s_w4.median.as_secs_f64();
+    if host_cpus >= 4 {
+        println!("gate 1: 4-worker speedup {speedup:.2}x (require >= 1.30x)");
+        if speedup < 1.30 {
+            eprintln!("FAIL: parallel GEMM speedup {speedup:.2}x < 1.30x");
+            failed = true;
+        }
+    } else {
+        println!("gate 1 SKIPPED: host has {host_cpus} CPUs (<4); speedup was {speedup:.2}x");
+    }
+
+    let (is_med, fs_med) = (s_is.median.as_secs_f64(), s_fs.median.as_secs_f64());
+    println!(
+        "gate 2: w4a8-fg-is median {:.3}ms vs w4a8-fg-fs {:.3}ms at g={G}",
+        is_med * 1e3,
+        fs_med * 1e3
+    );
+    if is_med > fs_med * 1.02 {
+        eprintln!("FAIL: Integer-Scale kernel slower than float-scale at g={G}");
+        failed = true;
+    }
+
+    if failed {
+        std::process::exit(1);
+    }
+    println!("perf-smoke gates passed");
+}

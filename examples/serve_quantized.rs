@@ -2,9 +2,9 @@
 //! tiny-LLaMA (artifacts/weights.bin), quantize it GPTQ W4A8 + Integer
 //! Scale, and serve a batched workload through the full coordinator stack —
 //! a producer thread streams staggered arrivals into the engine loop
-//! (continuous batching) — reporting throughput, TTFT and TPOT vs the FP16
-//! baseline. Also exercises the PJRT runtime artifact if present, proving
-//! L1 + L2 + L3 compose.
+//! (continuous batching), and every GEMM fans out over the threaded
+//! execution runtime — reporting throughput, TTFT and TPOT vs the FP16
+//! baseline.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_quantized
@@ -16,7 +16,7 @@ use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
 use integer_scale::plan::PlanBuilder;
 use integer_scale::quant::{BitWidth, Granularity};
-use integer_scale::runtime::{try_load, PjrtRuntime};
+use integer_scale::runtime::Runtime;
 use integer_scale::tensor::Rng;
 use std::path::Path;
 use std::sync::mpsc;
@@ -93,28 +93,16 @@ fn main() {
         if trained { "trained weights" } else { "RANDOM weights — run `make artifacts`" }
     );
 
-    // PJRT artifact smoke (L2/L1 integration): run the AOT-compiled forward
-    if let Ok(rt) = PjrtRuntime::cpu() {
-        if let Some(art) = try_load(&rt, "model_fwd") {
-            let tokens: Vec<i32> = (0..16).map(|i| (i % 100) + 4).collect();
-            match art.run_tokens(&tokens, (1, 16)) {
-                Ok(outs) => println!(
-                    "PJRT artifact '{}' executed on {}: logits len {}",
-                    art.name,
-                    rt.platform(),
-                    outs[0].len()
-                ),
-                Err(e) => println!("PJRT artifact present but failed: {e}"),
-            }
-        } else {
-            println!("PJRT model_fwd artifact not present (make artifacts)");
-        }
-    }
+    // one shared worker pool: GEMM tiles fan out across up to 4 lanes
+    // (bit-identical to serial — a pure throughput knob)
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+    let rt = Runtime::threaded(workers);
+    println!("execution runtime: {rt:?}");
 
     let gen = CorpusGen::new(cfg.vocab as u32, 7);
     let calib = gen.stream(192, Split::C4, 11);
 
-    let fp16 = Arc::new(Transformer::from_weights(&weights));
+    let fp16 = Arc::new(Transformer::from_weights(&weights).with_runtime(rt.clone()));
     // plans, not raw specs: the IS plan also turns on the §B.4 guard, so a
     // layer the audit flags would transparently serve the safe IS kernel
     let plan_is = PlanBuilder::new(
@@ -122,13 +110,15 @@ fn main() {
     )
     .overflow_guard(true)
     .build();
-    let w4a8_is = Arc::new(quantize_model_plan(&weights, &plan_is, &calib));
+    let w4a8_is =
+        Arc::new(quantize_model_plan(&weights, &plan_is, &calib).with_runtime(rt.clone()));
     let plan_fs = PlanBuilder::uniform(QuantSpec::new(
         Method::Gptq,
         BitWidth::W4A8,
         Granularity::Group(128),
     ));
-    let w4a8_fs = Arc::new(quantize_model_plan(&weights, &plan_fs, &calib));
+    let w4a8_fs =
+        Arc::new(quantize_model_plan(&weights, &plan_fs, &calib).with_runtime(rt.clone()));
 
     let r_fp = serve(fp16, 24, "FP16");
     let r_fs = serve(w4a8_fs, 24, "W4A8 float scale");

@@ -3,14 +3,75 @@
 //! sampling, median/min/mean statistics, and the same console layout, so
 //! `cargo bench` output stays comparable across perf passes (see the
 //! experiment index in DESIGN.md).
+//!
+//! For CI, every completed benchmark is also captured as a [`BenchRecord`]
+//! and can be emitted as machine-readable JSON via [`write_json`] — the
+//! `perf-smoke` job writes `BENCH_pr.json` this way and uploads it as an
+//! artifact on every PR, so perf trajectories are diffable across commits.
 
+use std::io::Write;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// One benchmark result in machine-readable form (the JSON schema of
+/// `BENCH_*.json`): identification, latency quartiles in nanoseconds, and
+/// an optional throughput figure for serving-shaped benchmarks.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub group: String,
+    pub name: String,
+    pub min_ns: u128,
+    pub median_ns: u128,
+    pub max_ns: u128,
+    pub tokens_per_sec: Option<f64>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write records as a JSON array (hand-rolled — no serde offline).
+pub fn write_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "[")?;
+    for (i, r) in records.iter().enumerate() {
+        let tps = match r.tokens_per_sec {
+            Some(v) => format!("{v:.3}"),
+            None => "null".to_string(),
+        };
+        writeln!(
+            f,
+            "  {{\"group\": \"{}\", \"name\": \"{}\", \"min_ns\": {}, \"median_ns\": {}, \"max_ns\": {}, \"tokens_per_sec\": {}}}{}",
+            json_escape(&r.group),
+            json_escape(&r.name),
+            r.min_ns,
+            r.median_ns,
+            r.max_ns,
+            tps,
+            if i + 1 < records.len() { "," } else { "" }
+        )?;
+    }
+    writeln!(f, "]")?;
+    Ok(())
+}
 
 pub struct Bencher {
     pub group: String,
     pub sample_size: usize,
     pub warmup: usize,
     results: Vec<(String, Stats)>,
+    records: Vec<BenchRecord>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -24,7 +85,13 @@ pub struct Stats {
 impl Bencher {
     pub fn group(name: &str) -> Self {
         println!("\n== bench group: {name} ==");
-        Bencher { group: name.to_string(), sample_size: 12, warmup: 2, results: Vec::new() }
+        Bencher {
+            group: name.to_string(),
+            sample_size: 12,
+            warmup: 2,
+            results: Vec::new(),
+            records: Vec::new(),
+        }
     }
 
     pub fn sample_size(mut self, n: usize) -> Self {
@@ -55,6 +122,28 @@ impl Bencher {
             stats.min
         );
         self.results.push((name.to_string(), stats));
+        self.records.push(BenchRecord {
+            group: self.group.clone(),
+            name: name.to_string(),
+            min_ns: stats.min.as_nanos(),
+            median_ns: stats.median.as_nanos(),
+            max_ns: stats.max.as_nanos(),
+            tokens_per_sec: None,
+        });
+        stats
+    }
+
+    /// [`Self::bench`] for serving-shaped closures that generate
+    /// `tokens_per_iter` tokens per call: the record additionally carries
+    /// median-derived tokens/sec for the JSON emitter.
+    pub fn bench_tokens<F: FnMut()>(&mut self, name: &str, tokens_per_iter: u64, f: F) -> Stats {
+        let stats = self.bench(name, f);
+        if let Some(r) = self.records.last_mut() {
+            let secs = stats.median.as_secs_f64();
+            if secs > 0.0 {
+                r.tokens_per_sec = Some(tokens_per_iter as f64 / secs);
+            }
+        }
         stats
     }
 
@@ -63,6 +152,16 @@ impl Bencher {
         let fa = self.results.iter().find(|(n, _)| n == a)?.1;
         let fb = self.results.iter().find(|(n, _)| n == b)?.1;
         Some(fa.median.as_secs_f64() / fb.median.as_secs_f64())
+    }
+
+    /// Machine-readable records of every completed benchmark, in run order.
+    pub fn records(&self) -> &[BenchRecord] {
+        &self.records
+    }
+
+    /// Consume the bencher, returning the records (for [`write_json`]).
+    pub fn into_records(self) -> Vec<BenchRecord> {
+        self.records
     }
 
     pub fn finish(self) -> Vec<(String, Stats)> {
@@ -89,6 +188,34 @@ mod tests {
         });
         assert!(s.min <= s.median && s.median <= s.max);
         assert!(acc >= 3);
+    }
+
+    #[test]
+    fn records_and_json_emitter() {
+        let mut b = Bencher::group("json").sample_size(3);
+        b.bench("plain", || {
+            black_box(2 + 2);
+        });
+        b.bench_tokens("served \"quoted\"", 128, || {
+            std::thread::sleep(Duration::from_micros(50));
+        });
+        let recs = b.records().to_vec();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].name, "plain");
+        assert!(recs[0].tokens_per_sec.is_none());
+        assert!(recs[1].tokens_per_sec.unwrap() > 0.0);
+        assert!(recs[1].min_ns <= recs[1].median_ns && recs[1].median_ns <= recs[1].max_ns);
+
+        let dir = std::env::temp_dir().join("is_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_json(&path, &recs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(text.trim_start().starts_with('['), "must be a JSON array");
+        assert!(text.contains("\"median_ns\""));
+        assert!(text.contains("\\\"quoted\\\""), "names must be escaped: {text}");
+        assert!(text.contains("\"tokens_per_sec\": null"));
     }
 
     #[test]

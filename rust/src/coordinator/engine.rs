@@ -9,7 +9,11 @@
 //! of the engine refusing admission. The synchronous
 //! [`Engine::run_to_completion`] drives a whole workload (used by benches
 //! and the table harness); [`Engine::step`] exposes the inner loop for the
-//! async server in `examples/serve_quantized.rs`.
+//! async server in `examples/serve_quantized.rs` and for the per-replica
+//! threads of [`super::Router::run_threaded`]. An engine is `Send`: the
+//! router moves each one onto its own OS thread, and the model's GEMMs
+//! additionally fan out over the shared worker pool when its
+//! [`crate::runtime::Runtime`] is threaded.
 
 use super::metrics::Metrics;
 use super::request::{FinishReason, Request, Response, Tracked};

@@ -51,6 +51,33 @@ impl Metrics {
         }
     }
 
+    /// Fold another engine's metrics into this one — the merged snapshot a
+    /// multi-replica [`crate::coordinator::Router`] reports. Counters and
+    /// durations add; the batch histogram adds element-wise;
+    /// `max_batch_seen` takes the max. Pool gauges add too: each replica
+    /// owns a disjoint pool, so totals and peaks are fleet-wide sums.
+    pub fn merge(&mut self, o: &Metrics) {
+        self.submitted += o.submitted;
+        self.completed += o.completed;
+        self.prefill_tokens += o.prefill_tokens;
+        self.decode_tokens += o.decode_tokens;
+        self.prefill_time += o.prefill_time;
+        self.decode_time += o.decode_time;
+        if self.batch_hist.len() < o.batch_hist.len() {
+            self.batch_hist.resize(o.batch_hist.len(), 0);
+        }
+        for (i, &c) in o.batch_hist.iter().enumerate() {
+            self.batch_hist[i] += c;
+        }
+        self.max_batch_seen = self.max_batch_seen.max(o.max_batch_seen);
+        self.preemptions += o.preemptions;
+        self.prefix_hit_tokens += o.prefix_hit_tokens;
+        self.prefix_lookups += o.prefix_lookups;
+        self.prefix_hits += o.prefix_hits;
+        self.pool_blocks_total += o.pool_blocks_total;
+        self.peak_blocks_in_use += o.peak_blocks_in_use;
+    }
+
     /// Fraction of prefix-index probes that hit (block granularity).
     pub fn prefix_hit_rate(&self) -> f64 {
         if self.prefix_lookups == 0 {
@@ -97,6 +124,33 @@ mod tests {
     #[test]
     fn empty_mean_batch_zero() {
         assert_eq!(Metrics::default().mean_batch(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_counters_and_histograms() {
+        let mut a = Metrics::default();
+        a.record_batch(2);
+        a.submitted = 3;
+        a.completed = 3;
+        a.decode_tokens = 10;
+        a.pool_blocks_total = 8;
+        let mut b = Metrics::default();
+        b.record_batch(2);
+        b.record_batch(5);
+        b.submitted = 2;
+        b.completed = 2;
+        b.decode_tokens = 7;
+        b.pool_blocks_total = 8;
+        b.peak_blocks_in_use = 4;
+        a.merge(&b);
+        assert_eq!(a.submitted, 5);
+        assert_eq!(a.completed, 5);
+        assert_eq!(a.decode_tokens, 17);
+        assert_eq!(a.batch_hist[2], 2);
+        assert_eq!(a.batch_hist[5], 1);
+        assert_eq!(a.max_batch_seen, 5);
+        assert_eq!(a.pool_blocks_total, 16);
+        assert_eq!(a.peak_blocks_in_use, 4);
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! model into a service: request queue, continuous batcher, prefill/decode
 //! scheduler, KV-cache budget manager, multi-engine router, and metrics.
 //!
-//! Python never appears here: the engine calls the Rust kernels (or the
-//! PJRT-compiled artifact via [`crate::runtime`]) directly. The end-to-end
-//! Fig. 1 / Fig. 5(b,c) experiments run through this module.
+//! Python never appears here: the engine calls the Rust kernels directly,
+//! tiled over the threaded execution runtime in [`crate::runtime`] when one
+//! is attached to the model, and [`Router::run_threaded`] drives replicas
+//! on real OS threads. The end-to-end Fig. 1 / Fig. 5(b,c) experiments run
+//! through this module.
 
 pub mod engine;
 pub mod metrics;
@@ -15,5 +17,5 @@ pub mod scheduler;
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
 pub use request::{FinishReason, Request, RequestId, Response};
-pub use router::Router;
+pub use router::{Policy, Router};
 pub use scheduler::{Scheduler, SchedulerState};

@@ -1,15 +1,93 @@
-//! Multi-engine request router — least-loaded dispatch across replicas
-//! (the multi-GPU topology of the paper's 70B / Mixtral setups, where four
+//! Multi-engine request router — policy dispatch across replicas (the
+//! multi-GPU topology of the paper's 70B / Mixtral setups, where four
 //! A100s serve one model; here each replica is an [`Engine`]).
+//!
+//! Two driving modes share one routing policy:
+//!
+//! * the synchronous loop ([`Router::step_all`] /
+//!   [`Router::run_to_completion`]) steps every replica on the caller's
+//!   thread — deterministic and convenient for tests and tables;
+//! * [`Router::run_threaded`] drives each replica on its own OS thread
+//!   behind a request channel, which is what `serve --replicas M` uses:
+//!   the router thread dispatches against live load gauges, replicas
+//!   continuously batch independently, and responses merge at the end.
+//!   Greedy outputs are token-identical to the synchronous mode because a
+//!   sequence's tokens depend only on the shared model weights, never on
+//!   which replica serves it or on arrival interleaving.
 
 use super::engine::Engine;
+use super::metrics::Metrics;
 use super::request::{Request, Response};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+}
+
+/// Pick a replica given per-replica loads. Least-loaded ties break
+/// round-robin from the rotating cursor — always taking the lowest index
+/// would starve later replicas under uniform load.
+fn pick_index(policy: Policy, rr_next: &mut usize, loads: &[usize]) -> usize {
+    let n = loads.len();
+    match policy {
+        Policy::RoundRobin => {
+            let i = *rr_next;
+            *rr_next = (i + 1) % n;
+            i
+        }
+        Policy::LeastLoaded => {
+            let min = *loads.iter().min().expect("at least one replica");
+            for off in 0..n {
+                let i = (*rr_next + off) % n;
+                if loads[i] == min {
+                    *rr_next = (i + 1) % n;
+                    return i;
+                }
+            }
+            unreachable!("a minimum always exists")
+        }
+    }
+}
+
+/// One replica's thread body: drain arrivals, step while work remains,
+/// block for the next request when idle, exit when the channel closes and
+/// the backlog is done. `load` is the router's live gauge for this
+/// replica (incremented at dispatch, decremented here on completion).
+fn replica_loop(
+    engine: &mut Engine,
+    rx: mpsc::Receiver<Request>,
+    load: &AtomicUsize,
+) -> Vec<Response> {
+    let mut responses = Vec::new();
+    let mut open = true;
+    while open || engine.pending() > 0 {
+        loop {
+            match rx.try_recv() {
+                Ok(r) => engine.submit(r),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if engine.pending() > 0 {
+            let done = engine.step();
+            load.fetch_sub(done.len(), Ordering::Relaxed);
+            responses.extend(done);
+        } else if open {
+            // idle: park on the channel instead of spinning
+            match rx.recv() {
+                Ok(r) => engine.submit(r),
+                Err(_) => open = false,
+            }
+        }
+    }
+    responses
 }
 
 pub struct Router {
@@ -26,24 +104,11 @@ impl Router {
         Router { engines, policy, rr_next: 0, routed: vec![0; n] }
     }
 
-    /// Pick a replica for the next request.
+    /// Pick a replica for the next request (synchronous mode: loads are
+    /// the engines' current pending counts).
     pub fn pick(&mut self) -> usize {
-        match self.policy {
-            Policy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.engines.len();
-                i
-            }
-            Policy::LeastLoaded => {
-                let mut best = 0;
-                for i in 1..self.engines.len() {
-                    if self.engines[i].pending() < self.engines[best].pending() {
-                        best = i;
-                    }
-                }
-                best
-            }
-        }
+        let loads: Vec<usize> = self.engines.iter().map(|e| e.pending()).collect();
+        pick_index(self.policy, &mut self.rr_next, &loads)
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -72,6 +137,55 @@ impl Router {
         }
         out.sort_by_key(|r| r.id);
         out
+    }
+
+    /// Serve `requests` with every replica on its own OS thread.
+    ///
+    /// Protocol: one mpsc channel per replica. The router (calling) thread
+    /// dispatches each request by policy against live load gauges
+    /// (dispatched minus completed, maintained with atomics), then closes
+    /// the channels; replica threads drain their queues to completion and
+    /// return their responses, which are merged and sorted by request id.
+    /// Replicas sharing a threaded model runtime also share its worker
+    /// pool — inter-replica and intra-op parallelism compose.
+    pub fn run_threaded(&mut self, requests: Vec<Request>) -> Vec<Response> {
+        let n = self.engines.len();
+        let policy = self.policy;
+        let loads: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let (engines, rr_next, routed) = (&mut self.engines, &mut self.rr_next, &mut self.routed);
+        let mut out: Vec<Response> = Vec::new();
+        std::thread::scope(|s| {
+            let mut txs = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
+            for (engine, load) in engines.iter_mut().zip(loads.iter()) {
+                let (tx, rx) = mpsc::channel::<Request>();
+                handles.push(s.spawn(move || replica_loop(engine, rx, load)));
+                txs.push(tx);
+            }
+            for req in requests {
+                let snapshot: Vec<usize> =
+                    loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+                let i = pick_index(policy, rr_next, &snapshot);
+                routed[i] += 1;
+                loads[i].fetch_add(1, Ordering::Relaxed);
+                txs[i].send(req).expect("replica thread hung up early");
+            }
+            drop(txs); // closing the channels tells replicas to finish up
+            for h in handles {
+                out.extend(h.join().expect("replica thread panicked"));
+            }
+        });
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Fleet-wide metrics snapshot: every replica's [`Metrics`] merged.
+    pub fn merged_metrics(&self) -> Metrics {
+        let mut m = Metrics::default();
+        for e in &self.engines {
+            m.merge(&e.metrics);
+        }
+        m
     }
 }
 
@@ -118,6 +232,15 @@ mod tests {
     }
 
     #[test]
+    fn least_loaded_ties_rotate_round_robin() {
+        // regression: with all loads equal, the old tie-break always
+        // returned index 0, starving every later replica
+        let mut r = router(3, Policy::LeastLoaded);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2], "equal-load ties must rotate");
+    }
+
+    #[test]
     fn all_complete_across_replicas() {
         let mut r = router(2, Policy::LeastLoaded);
         for i in 0..12 {
@@ -127,5 +250,45 @@ mod tests {
         assert_eq!(res.len(), 12);
         let ids: Vec<u64> = res.iter().map(|x| x.id).collect();
         assert_eq!(ids, (0..12).collect::<Vec<u64>>());
+    }
+
+    fn workload(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let mut req = Request::greedy(i as u64, vec![(i % 20) as u32 + 4, 6, 9], 5);
+                req.stop_at_eos = false;
+                req
+            })
+            .collect()
+    }
+
+    #[test]
+    fn threaded_replicas_complete_everything() {
+        let mut r = router(3, Policy::LeastLoaded);
+        let res = r.run_threaded(workload(14));
+        assert_eq!(res.len(), 14);
+        let ids: Vec<u64> = res.iter().map(|x| x.id).collect();
+        assert_eq!(ids, (0..14).collect::<Vec<u64>>());
+        assert_eq!(r.routed.iter().sum::<u64>(), 14);
+        let m = r.merged_metrics();
+        assert_eq!(m.submitted, 14);
+        assert_eq!(m.completed, 14);
+    }
+
+    #[test]
+    fn threaded_tokens_match_synchronous_mode() {
+        // replica threads + channel dispatch must not change greedy tokens
+        let mut sync_r = router(2, Policy::RoundRobin);
+        for req in workload(8) {
+            sync_r.submit(req);
+        }
+        let sync_res = sync_r.run_to_completion();
+        let mut thr_r = router(2, Policy::RoundRobin);
+        let thr_res = thr_r.run_threaded(workload(8));
+        assert_eq!(sync_res.len(), thr_res.len());
+        for (a, b) in sync_res.iter().zip(thr_res.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "threading changed tokens for req {}", a.id);
+        }
     }
 }

@@ -10,6 +10,7 @@ use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::PackedWeight;
 use crate::quant::Bits;
+use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 
 /// FP16-baseline kernel descriptor. Registered for the cost model and as
@@ -71,16 +72,33 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
 
 /// `out[m][n] = Σ_k x[m][k] · w[n][k]`
 pub fn gemm_f32(x: &Mat, w: &Mat) -> Mat {
+    gemm_f32_tile(x, w, 0, w.rows)
+}
+
+/// Output columns `j0..j1` of [`gemm_f32`] — the unit of parallel work for
+/// the float baseline path (`Linear::Float` never goes through
+/// [`PackedWeight`], so it tiles here instead of in the registry).
+pub fn gemm_f32_tile(x: &Mat, w: &Mat, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.cols, w.cols, "K mismatch");
-    let (m, k, n) = (x.rows, x.cols, w.rows);
-    let mut out = Mat::zeros(m, n);
-    for j in 0..n {
+    assert!(j0 <= j1 && j1 <= w.rows, "tile {j0}..{j1} out of 0..{}", w.rows);
+    let (m, k, nw) = (x.rows, x.cols, j1 - j0);
+    let mut out = Mat::zeros(m, nw);
+    for j in j0..j1 {
         let wrow = &w.data[j * k..(j + 1) * k];
         for i in 0..m {
-            out.data[i * n + j] = dot_f32(x.row(i), wrow);
+            out.data[i * nw + (j - j0)] = dot_f32(x.row(i), wrow);
         }
     }
     out
+}
+
+/// [`gemm_f32`] with the N dimension tiled over the runtime's worker pool
+/// — bit-identical to serial for every worker count.
+pub fn gemm_f32_rt(x: &Mat, w: &Mat, rt: &Runtime) -> Mat {
+    if !rt.is_parallel() || x.rows * w.rows * w.cols < PARALLEL_MIN_MACS {
+        return gemm_f32(x, w);
+    }
+    parallel_columns(rt, x.rows, w.rows, &|j0, j1| gemm_f32_tile(x, w, j0, j1))
 }
 
 #[cfg(test)]
@@ -104,5 +122,19 @@ mod tests {
         let x = Mat::randn(2, 16, 1.0, &mut rng);
         let w = Mat::randn(5, 16, 1.0, &mut rng); // n=5 exercises the tail
         assert!(gemm_f32(&x, &w).max_abs_diff(&x.matmul_t(&w)) < 1e-5);
+    }
+
+    #[test]
+    fn parallel_f32_bit_identical() {
+        let mut rng = Rng::new(5);
+        // large enough to clear the PARALLEL_MIN_MACS serial gate
+        let x = Mat::randn(8, 128, 1.0, &mut rng);
+        let w = Mat::randn(96, 128, 1.0, &mut rng);
+        let serial = gemm_f32(&x, &w);
+        for workers in [2, 3, 4] {
+            let rt = Runtime::threaded(workers);
+            let par = gemm_f32_rt(&x, &w, &rt);
+            assert_eq!(serial.data, par.data, "workers={workers}");
+        }
     }
 }

@@ -30,7 +30,31 @@ pub use registry::{GemmKernel, MathPipe, ScaleMode};
 use crate::quant::methods::QuantizedLinear;
 use crate::quant::pack::pack_int4;
 use crate::quant::{Bits, Granularity};
+use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
+
+/// Shared parallel driver for the integer-activation kernels: quantize the
+/// activations **once**, then tile the integer GEMM over the runtime. The
+/// built-in kernels' `forward_rt` overrides delegate here so a T-tile
+/// parallel forward does not redo the M×K quantization pass per tile
+/// (the generic `forward_tile` path, used as the out-of-tree fallback,
+/// quantizes inside and so would).
+pub(crate) fn quantized_forward_rt<T>(
+    x: &Mat,
+    pw: &PackedWeight,
+    rt: &Runtime,
+    bits: Bits,
+    tile: T,
+) -> Mat
+where
+    T: Fn(&QuantAct, &PackedWeight, usize, usize) -> Mat + Sync,
+{
+    let qa = QuantAct::quantize(x, bits);
+    if !rt.is_parallel() || x.rows * pw.n * pw.k < PARALLEL_MIN_MACS {
+        return tile(&qa, pw, 0, pw.n);
+    }
+    parallel_columns(rt, x.rows, pw.n, &|j0, j1| tile(&qa, pw, j0, j1))
+}
 
 /// A weight tensor prepared (packed, scales laid out) for one kernel.
 /// Preparation happens offline at quantization time, exactly as the paper's
@@ -78,6 +102,38 @@ impl PackedWeight {
 
     pub fn groups_per_row(&self) -> usize {
         self.k / self.group
+    }
+
+    /// Packed bytes per weight row.
+    fn row_bytes(&self) -> usize {
+        match self.bits {
+            Bits::B4 => self.k / 2,
+            Bits::B8 => self.k,
+            Bits::F16 => unreachable!("float weights are never packed"),
+        }
+    }
+
+    /// A standalone copy of output-channel rows `j0..j1` (with their
+    /// scales). This is the generic column-tile fallback behind
+    /// [`GemmKernel::forward_tile`]: any weight-stationary kernel run over
+    /// the slice produces exactly the columns `j0..j1` of the full
+    /// forward. Built-in kernels override the tile path with in-place
+    /// loops that skip this copy.
+    pub fn slice_rows(&self, j0: usize, j1: usize) -> PackedWeight {
+        assert!(j0 <= j1 && j1 <= self.n, "row slice {j0}..{j1} out of 0..{}", self.n);
+        let rb = self.row_bytes();
+        let gpr = self.groups_per_row();
+        PackedWeight {
+            n: j1 - j0,
+            k: self.k,
+            group: self.group,
+            packed: self.packed[j0 * rb..j1 * rb].to_vec(),
+            bits: self.bits,
+            scales: self.scales[j0 * gpr..j1 * gpr].to_vec(),
+            int_scales: self.int_scales.as_ref().map(|is| is[j0 * gpr..j1 * gpr].to_vec()),
+            amplifier: self.amplifier,
+            overflow_risk: self.overflow_risk,
+        }
     }
 }
 
@@ -137,6 +193,22 @@ mod tests {
         assert_eq!(pw.scales.len(), 16 * 4);
         assert_eq!(pw.int_scales.as_ref().unwrap().len(), 16 * 4);
         assert_eq!(pw.amplifier, 1024);
+    }
+
+    #[test]
+    fn slice_rows_matches_full_forward_columns() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(24, 128, 0.05, &mut rng);
+        let x = Mat::randn(4, 128, 1.0, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(32), Some(1024));
+        let full = registry::get_or_panic("w4a8-fg-is").forward(&x, &pw);
+        let (j0, j1) = (5usize, 17usize);
+        let part = registry::get_or_panic("w4a8-fg-is").forward(&x, &pw.slice_rows(j0, j1));
+        for i in 0..4 {
+            for j in j0..j1 {
+                assert_eq!(part[(i, j - j0)], full[(i, j)], "({i},{j})");
+            }
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
 use crate::quant::methods::dual_grained::DualGrainedWeight;
 use crate::quant::Bits;
+use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 
 /// QServe/DGQ dual-grained kernel descriptor (cost-model + table rows).
@@ -101,12 +102,19 @@ fn expand_row(q4row: &[i8], s2: &[i16], z2: &[i16], group: usize, out: &mut [i8]
 /// Coarse dual-grained W4A8: level-2 expansion, single INT32 reduction over
 /// K, per-channel epilogue.
 pub fn gemm_coarse(x: &QuantAct, w: &DualGrainedWeight) -> Mat {
+    gemm_coarse_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm_coarse`] — the unit of parallel work.
+pub fn gemm_coarse_tile(x: &QuantAct, w: &DualGrainedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.k, w.k);
-    let (m, k, n) = (x.m, x.k, w.n);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k) = (x.m, x.k);
     let gpr = w.groups_per_row();
-    let mut out = Mat::zeros(m, n);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         expand_row(
             &w.q4.data[jn * k..(jn + 1) * k],
             &w.s2[jn * gpr..(jn + 1) * gpr],
@@ -117,24 +125,48 @@ pub fn gemm_coarse(x: &QuantAct, w: &DualGrainedWeight) -> Mat {
         let s1 = w.s1[jn];
         for i in 0..m {
             let acc = crate::gemm::w4a8_fg_int::dot_i8(x.row(i), &wbuf);
-            out.data[i * n + jn] = acc as f32 * x.scales[i] * s1;
+            out.data[i * nw + (jn - j0)] = acc as f32 * x.scales[i] * s1;
         }
     }
     out
+}
+
+/// [`gemm_coarse`] tiled over the runtime's worker pool (bit-identical).
+/// The dual-grained kernels execute on [`DualGrainedWeight`] rather than
+/// [`PackedWeight`], so their parallel entry lives here instead of the
+/// registry's `forward_rt`.
+pub fn gemm_coarse_rt(x: &QuantAct, w: &DualGrainedWeight, rt: &Runtime) -> Mat {
+    if !rt.is_parallel() || x.m * w.n * w.k < PARALLEL_MIN_MACS {
+        return gemm_coarse(x, w);
+    }
+    parallel_columns(rt, x.m, w.n, &|j0, j1| gemm_coarse_tile(x, w, j0, j1))
 }
 
 /// Fine-grained dual-grained W4A8: additionally converts each group partial
 /// to float for a per-group float scale (the worst of both worlds — QServe's
 /// fine-grained configuration in Fig. 6).
 pub fn gemm_fine(x: &QuantAct, w: &DualGrainedWeight, group_scales: &[f32]) -> Mat {
+    gemm_fine_tile(x, w, group_scales, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm_fine`] — the unit of parallel work.
+pub fn gemm_fine_tile(
+    x: &QuantAct,
+    w: &DualGrainedWeight,
+    group_scales: &[f32],
+    j0: usize,
+    j1: usize,
+) -> Mat {
     assert_eq!(x.k, w.k);
-    let (m, k, n) = (x.m, x.k, w.n);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k) = (x.m, x.k);
     let gpr = w.groups_per_row();
     let g = w.group;
-    assert_eq!(group_scales.len(), n * gpr);
-    let mut out = Mat::zeros(m, n);
+    assert_eq!(group_scales.len(), w.n * gpr);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         expand_row(
             &w.q4.data[jn * k..(jn + 1) * k],
             &w.s2[jn * gpr..(jn + 1) * gpr],
@@ -152,10 +184,23 @@ pub fn gemm_fine(x: &QuantAct, w: &DualGrainedWeight, group_scales: &[f32]) -> M
                     crate::gemm::w4a8_fg_int::dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
                 accf += part as f32 * srow[gi];
             }
-            out.data[i * n + jn] = accf * x.scales[i] * s1;
+            out.data[i * nw + (jn - j0)] = accf * x.scales[i] * s1;
         }
     }
     out
+}
+
+/// [`gemm_fine`] tiled over the runtime's worker pool (bit-identical).
+pub fn gemm_fine_rt(
+    x: &QuantAct,
+    w: &DualGrainedWeight,
+    group_scales: &[f32],
+    rt: &Runtime,
+) -> Mat {
+    if !rt.is_parallel() || x.m * w.n * w.k < PARALLEL_MIN_MACS {
+        return gemm_fine(x, w, group_scales);
+    }
+    parallel_columns(rt, x.m, w.n, &|j0, j1| gemm_fine_tile(x, w, group_scales, j0, j1))
 }
 
 /// Uniform per-group scales of 1.0 for the fine variant when the level-1
@@ -210,6 +255,19 @@ mod tests {
         let a = gemm_coarse(&qa, &dg);
         let b = gemm_fine(&qa, &dg, &unit_group_scales(&dg));
         assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn parallel_dual_grained_bit_identical() {
+        let mut rng = Rng::new(73);
+        let xf = Mat::randn(6, 128, 1.0, &mut rng);
+        let wf = Mat::randn(64, 128, 0.05, &mut rng);
+        let dg = dual_grain_quantize(&wf, 32);
+        let qa = QuantAct::quantize(&xf, Bits::B8);
+        let rt = Runtime::threaded(4);
+        assert_eq!(gemm_coarse(&qa, &dg).data, gemm_coarse_rt(&qa, &dg, &rt).data);
+        let gs = unit_group_scales(&dg);
+        assert_eq!(gemm_fine(&qa, &dg, &gs).data, gemm_fine_rt(&qa, &dg, &gs, &rt).data);
     }
 
     #[test]

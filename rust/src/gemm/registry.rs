@@ -18,6 +18,7 @@
 use super::trace::OpTrace;
 use super::PackedWeight;
 use crate::quant::Bits;
+use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -85,6 +86,34 @@ pub trait GemmKernel: Send + Sync {
     /// (per [`Self::act_bits`]) happens inside, so `Linear::forward` needs
     /// no per-kernel knowledge.
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat;
+
+    /// Compute only output columns `j0..j1` — the `M×(j1-j0)` tile of
+    /// [`Self::forward`]'s result. Implementations must produce each
+    /// column by exactly the arithmetic the full forward uses (every
+    /// kernel here is weight-stationary, so columns are independent);
+    /// the parallel path depends on that bit-identity. The default slices
+    /// the packed weight rows and reruns the forward on the sub-weight —
+    /// always correct, one weight copy per call; built-ins override with
+    /// in-place tile loops.
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        if j0 == 0 && j1 == pw.n {
+            self.forward(x, pw)
+        } else {
+            self.forward(x, &pw.slice_rows(j0, j1))
+        }
+    }
+
+    /// [`Self::forward`] on an execution [`Runtime`]: the N dimension is
+    /// split into contiguous tiles (deterministic ownership, disjoint
+    /// output slices) executed on the runtime's worker pool. Results are
+    /// bit-identical to serial execution for every worker count. GEMMs
+    /// too small to amortize dispatch run serially.
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        if !rt.is_parallel() || x.rows * pw.n * pw.k < PARALLEL_MIN_MACS {
+            return self.forward(x, pw);
+        }
+        parallel_columns(rt, x.rows, pw.n, &|j0, j1| self.forward_tile(x, pw, j0, j1))
+    }
 }
 
 type Registry = Mutex<HashMap<&'static str, Arc<dyn GemmKernel>>>;

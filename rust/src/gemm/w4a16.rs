@@ -53,6 +53,9 @@ impl GemmKernel for W4A16Kernel {
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
         gemm(x, pw)
     }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        gemm_tile(x, pw, j0, j1)
+    }
 }
 
 /// `x (M×K f32) @ wᵀ (N×K int4 packed + group scales)`
@@ -63,20 +66,27 @@ impl GemmKernel for W4A16Kernel {
 /// float scale so W4A16 evaluation reflects the amplifier (paper Table 7
 /// runs the ablation on the W4A16 path).
 pub fn gemm(x: &Mat, w: &PackedWeight) -> Mat {
+    gemm_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+pub fn gemm_tile(x: &Mat, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.cols, w.k);
-    let (m, k, n, g) = (x.rows, x.cols, w.n, w.group);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k, g) = (x.rows, x.cols, w.group);
     let gpr = w.groups_per_row();
     let kb = k / 2;
+    let nw = j1 - j0;
     let eff_scale = |jn: usize, gi: usize| -> f32 {
         match &w.int_scales {
             Some(is) => is[jn * gpr + gi] as f32 / w.amplifier as f32,
             None => w.scales[jn * gpr + gi],
         }
     };
-    let mut out = Mat::zeros(m, n);
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
     let mut wdeq = vec![0f32; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         for gi in 0..gpr {
             let s = eff_scale(jn, gi);
@@ -85,7 +95,7 @@ pub fn gemm(x: &Mat, w: &PackedWeight) -> Mat {
             }
         }
         for i in 0..m {
-            out.data[i * n + jn] = super::fp32::dot_f32(x.row(i), &wdeq);
+            out.data[i * nw + (jn - j0)] = super::fp32::dot_f32(x.row(i), &wdeq);
         }
     }
     out

@@ -12,6 +12,7 @@ use super::w4a8_fg_int::dot_i8;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 /// Atom-like fine-grained W4A4 kernel descriptor. Runs the Integer-Scale
@@ -55,11 +56,21 @@ impl GemmKernel for W4A4Kernel {
         }
     }
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        self.forward_tile(x, pw, 0, pw.n)
+    }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
         let qa = QuantAct::quantize(x, Bits::B4);
         if pw.int_scales.is_some() {
-            gemm_int_scale(&qa, pw)
+            gemm_int_scale_tile(&qa, pw, j0, j1)
         } else {
-            gemm_float_scale(&qa, pw)
+            gemm_float_scale_tile(&qa, pw, j0, j1)
+        }
+    }
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        if pw.int_scales.is_some() {
+            super::quantized_forward_rt(x, pw, rt, Bits::B4, gemm_int_scale_tile)
+        } else {
+            super::quantized_forward_rt(x, pw, rt, Bits::B4, gemm_float_scale_tile)
         }
     }
 }
@@ -67,13 +78,20 @@ impl GemmKernel for W4A4Kernel {
 /// Atom-style: per-group I32→F32 conversion (activations already quantized
 /// to 4-bit codes stored in i8, weights packed int4).
 pub fn gemm_float_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_float_scale_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm_float_scale`].
+pub fn gemm_float_scale_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.k, w.k);
-    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
     let kb = k / 2;
-    let mut out = Mat::zeros(m, n);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
         for i in 0..m {
@@ -83,7 +101,7 @@ pub fn gemm_float_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
                 let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
                 accf += part as f32 * srow[gi];
             }
-            out.data[i * n + jn] = accf * x.scales[i];
+            out.data[i * nw + (jn - j0)] = accf * x.scales[i];
         }
     }
     out
@@ -91,14 +109,21 @@ pub fn gemm_float_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
 
 /// Integer-Scale W4A4.
 pub fn gemm_int_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_int_scale_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm_int_scale`].
+pub fn gemm_int_scale_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     let is = w.int_scales.as_ref().expect("int scales required");
-    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
     let kb = k / 2;
+    let nw = j1 - j0;
     let inv_amp = 1.0f32 / w.amplifier as f32;
-    let mut out = Mat::zeros(m, n);
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         let srow = &is[jn * gpr..(jn + 1) * gpr];
         for i in 0..m {
@@ -108,7 +133,7 @@ pub fn gemm_int_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
                 let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
                 acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
             }
-            out.data[i * n + jn] = acc as f32 * (x.scales[i] * inv_amp);
+            out.data[i * nw + (jn - j0)] = acc as f32 * (x.scales[i] * inv_amp);
         }
     }
     out

@@ -12,6 +12,7 @@ use super::w4a8_fg_int::dot_i8;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 /// Odyssey-like coarse W4A8 kernel descriptor (per-channel scales).
@@ -55,23 +56,36 @@ impl GemmKernel for W4A8CoarseKernel {
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
         gemm(&QuantAct::quantize(x, Bits::B8), pw)
     }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
+    }
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
+    }
 }
 
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.k, w.k);
-    let (m, k, n) = (x.m, x.k, w.n);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k) = (x.m, x.k);
     let gpr = w.groups_per_row();
     assert_eq!(gpr, 1, "coarse kernel requires per-channel scales");
     let kb = k / 2;
-    let mut out = Mat::zeros(m, n);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         let sw = w.scales[jn];
         for i in 0..m {
             // full-K integer reduction, single conversion + scale epilogue
             let acc = dot_i8(x.row(i), &wbuf);
-            out.data[i * n + jn] = acc as f32 * x.scales[i] * sw;
+            out.data[i * nw + (jn - j0)] = acc as f32 * x.scales[i] * sw;
         }
     }
     out

@@ -22,6 +22,7 @@ use super::w4a8_fg_int::dot_i8;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 /// Fine-grained W4A8 float-scale kernel descriptor — Fig. 2(b), the
@@ -67,6 +68,12 @@ impl GemmKernel for W4A8FgFloatKernel {
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
         gemm(&QuantAct::quantize(x, Bits::B8), pw)
     }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
+    }
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
+    }
 }
 
 /// `x (M×K int8, per-token scales) @ wᵀ (N×K int4 packed, n×k/g float scales)`
@@ -75,14 +82,21 @@ impl GemmKernel for W4A8FgFloatKernel {
 /// epilogue: I32→F32 convert + float FMA (Fig. 2b) instead of an integer
 /// multiply-accumulate.
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.k, w.k, "K mismatch");
     assert!(w.group % 2 == 0);
-    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
     let kb = k / 2;
-    let mut out = Mat::zeros(m, n);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
         for i in 0..m {
@@ -95,7 +109,7 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
                 //     once per group — the cost Integer Scale removes.
                 accf += part as f32 * srow[gi];
             }
-            out.data[i * n + jn] = accf * x.scales[i];
+            out.data[i * nw + (jn - j0)] = accf * x.scales[i];
         }
     }
     out

@@ -21,6 +21,7 @@ use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 /// Fine-grained W4A8 Integer-Scale kernel descriptor — Fig. 2(c), the
@@ -70,13 +71,26 @@ impl GemmKernel for W4A8FgIntKernel {
         Some("w4a8-fg-is-safe")
     }
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        self.forward_tile(x, pw, 0, pw.n)
+    }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        // per-tile quantization depends only on `x`, so every tile sees
+        // identical codes and bit-identity holds; the parallel path
+        // (forward_rt below) hoists the quantization out of the tiles
         let qa = QuantAct::quantize(x, Bits::B8);
         if pw.overflow_risk {
             // belt-and-braces: a flagged weight never runs the fast epilogue
             // even if plan resolution did not swap the kernel (paper §B.4)
-            gemm_overflow_safe(&qa, pw)
+            gemm_overflow_safe_tile(&qa, pw, j0, j1)
         } else {
-            gemm(&qa, pw)
+            gemm_tile(&qa, pw, j0, j1)
+        }
+    }
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        if pw.overflow_risk {
+            super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_overflow_safe_tile)
+        } else {
+            super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
         }
     }
 }
@@ -124,6 +138,12 @@ impl GemmKernel for W4A8FgIntSafeKernel {
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
         gemm_overflow_safe(&QuantAct::quantize(x, Bits::B8), pw)
     }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        gemm_overflow_safe_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
+    }
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_overflow_safe_tile)
+    }
 }
 
 /// Vectorizable int8 group dot product (LLVM lowers this to pmaddwd-style
@@ -144,18 +164,27 @@ pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 /// trick), so the measured cost difference vs the float-scale kernel is
 /// exactly the per-group epilogue.
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm`] — the unit of parallel work. The
+/// serial path is `gemm_tile(x, w, 0, n)`, so tiled and serial execution
+/// share one arithmetic sequence per output element (bit-identical).
+pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     let is = w
         .int_scales
         .as_ref()
         .expect("integer scales required — call attach_integer_scales first");
     assert_eq!(x.k, w.k, "K mismatch");
-    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
     let kb = k / 2;
+    let nw = j1 - j0;
     let inv_amp = 1.0f32 / w.amplifier as f32;
-    let mut out = Mat::zeros(m, n);
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         let srow = &is[jn * gpr..(jn + 1) * gpr];
         for i in 0..m {
@@ -176,7 +205,7 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
                 acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
             }
             // --- the single conversion of the whole reduction
-            out.data[i * n + jn] = acc as f32 * (x.scales[i] * inv_amp);
+            out.data[i * nw + (jn - j0)] = acc as f32 * (x.scales[i] * inv_amp);
         }
     }
     out
@@ -192,15 +221,22 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
 /// so the quantized weights and scales are unchanged — only the epilogue
 /// degrades.
 pub fn gemm_overflow_safe(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_overflow_safe_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm_overflow_safe`].
+pub fn gemm_overflow_safe_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     let is = w.int_scales.as_ref().expect("integer scales required");
     assert_eq!(x.k, w.k, "K mismatch");
-    let (m, k, n, g) = (x.m, x.k, w.n, w.group);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
     let kb = k / 2;
+    let nw = j1 - j0;
     let inv_amp = 1.0f32 / w.amplifier as f32;
-    let mut out = Mat::zeros(m, n);
+    let mut out = Mat::zeros(m, nw);
     let mut wbuf = vec![0i8; k];
-    for jn in 0..n {
+    for jn in j0..j1 {
         unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
         let srow = &is[jn * gpr..(jn + 1) * gpr];
         for i in 0..m {
@@ -212,7 +248,7 @@ pub fn gemm_overflow_safe(x: &QuantAct, w: &PackedWeight) -> Mat {
                 // the accumulator can never overflow
                 accf += part as f64 * srow[gi] as f64;
             }
-            out.data[i * n + jn] = (accf as f32) * (x.scales[i] * inv_amp);
+            out.data[i * nw + (jn - j0)] = (accf as f32) * (x.scales[i] * inv_amp);
         }
     }
     out

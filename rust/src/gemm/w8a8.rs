@@ -8,6 +8,7 @@ use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
 use crate::quant::Bits;
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 /// W8A8 kernel descriptor (coarse per-channel by default; the same GEMM
@@ -54,25 +55,38 @@ impl GemmKernel for W8A8Kernel {
     fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
         gemm(&QuantAct::quantize(x, Bits::B8), pw)
     }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
+    }
+    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
+        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
+    }
 }
 
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
+    gemm_tile(x, w, 0, w.n)
+}
+
+/// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(w.bits, crate::quant::Bits::B8);
     assert_eq!(x.k, w.k);
-    let (m, k, n) = (x.m, x.k, w.n);
+    assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
+    let (m, k) = (x.m, x.k);
     let gpr = w.groups_per_row();
-    let mut out = Mat::zeros(m, n);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
     for i in 0..m {
         let xrow = x.row(i);
         let sa = x.scales[i];
-        for jn in 0..n {
+        for jn in j0..j1 {
             let wrow = &w.packed[jn * k..(jn + 1) * k];
             if gpr == 1 {
                 let mut acc: i32 = 0;
                 for (xv, wv) in xrow.iter().zip(wrow.iter()) {
                     acc += *xv as i32 * (*wv as i8) as i32;
                 }
-                out.data[i * n + jn] = acc as f32 * sa * w.scales[jn];
+                out.data[i * nw + (jn - j0)] = acc as f32 * sa * w.scales[jn];
             } else {
                 // fine-grained W8A8 (float scale): per-group epilogue
                 let g = w.group;
@@ -84,7 +98,7 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
                     }
                     accf += part as f32 * w.scales[jn * gpr + gi];
                 }
-                out.data[i * n + jn] = accf * sa;
+                out.data[i * nw + (jn - j0)] = accf * sa;
             }
         }
     }

@@ -4,11 +4,13 @@
 //! Faster Fine-grained Quantization of LLMs”* (Li et al., 2024) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — serving coordinator (router, continuous batcher,
-//!   block-based scheduler, paged KV-cache pool with prefix sharing), the
-//!   quantization toolkit with every baseline PTQ method, the CPU kernel
-//!   zoo behind a self-describing kernel registry, evaluation harnesses,
-//!   and the PJRT runtime that executes AOT-compiled JAX artifacts.
+//! * **L3 (this crate)** — serving coordinator (multi-replica router on OS
+//!   threads, continuous batcher, block-based scheduler, paged KV-cache
+//!   pool with prefix sharing), the quantization toolkit with every
+//!   baseline PTQ method, the CPU kernel zoo behind a self-describing
+//!   kernel registry, evaluation harnesses, and the deterministic threaded
+//!   execution runtime ([`runtime`]) that tiles every GEMM across a
+//!   worker pool with bit-identical results.
 //! * **L2 (`python/compile/model.py`)** — the JAX transformer, lowered once
 //!   to HLO text at build time.
 //! * **L1 (`python/compile/kernels/`)** — Pallas GEMM kernels (float-scale
@@ -24,9 +26,16 @@
 //! plus one `register` call — no dispatch `match` anywhere. The seed's
 //! whole-model `QuantSpec` remains as uniform-plan sugar.
 //!
+//! **Execution:** a model carries a [`runtime::Runtime`] (serial by
+//! default). `serve --workers N` attaches an N-lane worker pool that
+//! splits each GEMM's output columns into deterministic tiles, and
+//! `--replicas M` drives M engines on real OS threads through
+//! [`coordinator::Router::run_threaded`] — greedy outputs are
+//! token-identical for every worker/replica count.
+//!
 //! See `DESIGN.md` for the full system inventory — including the paged
-//! KV-cache pool in [`kvpool`] — and the experiment index (which bench or
-//! example reproduces which figure).
+//! KV-cache pool in [`kvpool`] and the threading model — and the
+//! experiment index (which bench or example reproduces which figure).
 
 pub mod bench_harness;
 pub mod coordinator;

@@ -6,22 +6,24 @@
 //! repro figs | fig1 fig3 fig4 …    # figures
 //! repro serve [--scheme w4a8-is] [--requests 32] [--max-batch 16]
 //!             [--prompt-len 16] [--new-tokens 32] [--moe]
-//! repro runtime-check              # load + execute the PJRT artifacts
+//!             [--workers N]    # GEMM tiles across N pool lanes
+//!             [--replicas M]   # M engines on real OS threads
+//! repro runtime-check [--workers N]  # parallel == serial + speedup
 //! repro info                       # model / config / artifact inventory
 //! repro --eval-tokens 1536 tables  # steadier PPL estimates
 //! ```
 //!
 //! (CLI is hand-rolled: clap is not available in this offline environment.)
 
-use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::coordinator::{Engine, EngineConfig, Policy, Request, Router};
 use integer_scale::data::{CorpusGen, Split};
 use integer_scale::model::quantize::{
     kernel_assignment, quantize_model_plan, Method, QuantSpec,
 };
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
 use integer_scale::plan::{PlanBuilder, QuantPlan};
-use integer_scale::quant::{BitWidth, Granularity};
-use integer_scale::runtime::{try_load, PjrtRuntime};
+use integer_scale::quant::{BitWidth, Bits, Granularity};
+use integer_scale::runtime::Runtime;
 use integer_scale::tables::{self, Ctx};
 use integer_scale::tensor::Mat;
 use std::path::Path;
@@ -114,6 +116,8 @@ fn serve(args: &Args) {
     let max_batch = args.get_usize("max-batch", 16);
     let prompt_len = args.get_usize("prompt-len", 16);
     let new_tokens = args.get_usize("new-tokens", 32);
+    let workers = args.get_usize("workers", 1);
+    let replicas = args.get_usize("replicas", 1).max(1);
 
     let cfg = if moe { ModelConfig::moe_tiny() } else { ModelConfig::tiny() };
     let wpath = if moe { "artifacts/weights_moe.bin" } else { "artifacts/weights.bin" };
@@ -138,10 +142,12 @@ fn serve(args: &Args) {
             (scheme.clone(), scheme_plan(&scheme))
         }
     };
-    let model = match &plan {
+    let mut model = match &plan {
         None => Transformer::from_weights(&weights),
         Some(p) => quantize_model_plan(&weights, p, &calib),
     };
+    // one pool serves every layer and every replica; workers=1 is serial
+    model.set_runtime(Runtime::threaded(workers));
     if plan.as_ref().is_some_and(|p| p.has_auto() || p.overflow_guard) {
         // per-layer resolution is the interesting part: print it
         let mut counts: std::collections::BTreeMap<&'static str, usize> =
@@ -152,24 +158,42 @@ fn serve(args: &Args) {
         println!("kernel assignment: {counts:?}");
     }
     println!(
-        "scheme={label} model={} params={} max_batch={max_batch}",
+        "scheme={label} model={} params={} max_batch={max_batch} workers={workers} replicas={replicas}",
         if moe { "moe" } else { "dense" },
         cfg.param_count()
     );
-    let mut engine = Engine::new(
-        Arc::new(model),
-        EngineConfig { max_batch, kv_token_budget: 128 * 256, seed: 3 },
-    );
+    let model = Arc::new(model);
     let mut rng = integer_scale::tensor::Rng::new(77);
-    for i in 0..requests {
-        let doc = gen.document(prompt_len, Split::C4, &mut rng);
-        let mut req = Request::greedy(i as u64, doc, new_tokens);
-        req.stop_at_eos = false;
-        engine.submit(req);
-    }
-    let t0 = Instant::now();
-    let res = engine.run_to_completion();
-    let wall = t0.elapsed();
+    let reqs: Vec<Request> = (0..requests)
+        .map(|i| {
+            let doc = gen.document(prompt_len, Split::C4, &mut rng);
+            let mut req = Request::greedy(i as u64, doc, new_tokens);
+            req.stop_at_eos = false;
+            req
+        })
+        .collect();
+    let engine_cfg = |seed: u64| EngineConfig { max_batch, kv_token_budget: 128 * 256, seed };
+    let (res, wall, metrics) = if replicas > 1 {
+        // true multi-replica serving: one engine per OS thread behind a
+        // request channel, least-loaded dispatch with round-robin ties
+        let engines = (0..replicas)
+            .map(|i| Engine::new(model.clone(), engine_cfg(i as u64)))
+            .collect();
+        let mut router = Router::new(engines, Policy::LeastLoaded);
+        let t0 = Instant::now();
+        let res = router.run_threaded(reqs);
+        let wall = t0.elapsed();
+        println!("routed per replica: {:?}", router.routed);
+        (res, wall, router.merged_metrics())
+    } else {
+        let mut engine = Engine::new(model, engine_cfg(3));
+        for req in reqs {
+            engine.submit(req);
+        }
+        let t0 = Instant::now();
+        let res = engine.run_to_completion();
+        (res, t0.elapsed(), engine.metrics.clone())
+    };
     let gen_toks: usize = res.iter().map(|r| r.tokens.len()).sum();
     let mean_ttft: f64 =
         res.iter().map(|r| r.ttft.as_secs_f64()).sum::<f64>() / res.len() as f64;
@@ -181,55 +205,42 @@ fn serve(args: &Args) {
         gen_toks as f64 / wall.as_secs_f64(),
         mean_ttft * 1e3,
         mean_tpot * 1e3,
-        engine.metrics.mean_batch()
+        metrics.mean_batch()
     );
-    println!("{}", engine.metrics.summary());
+    println!("{}", metrics.summary());
 }
 
-fn runtime_check() {
-    let rt = match PjrtRuntime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("PJRT client failed: {e}");
-            std::process::exit(1);
-        }
-    };
-    println!("PJRT platform: {}", rt.platform());
+/// Verify the threaded execution runtime on this machine: parallel GEMM
+/// tiles must be bit-identical to serial execution, and the measured
+/// speedup is reported (exits 1 on any mismatch).
+fn runtime_check(args: &Args) {
+    let workers = args.get_usize("workers", 4);
+    let (m, k, n) = (8usize, 1024usize, 2048usize);
+    let mut rng = integer_scale::tensor::Rng::new(1);
+    let x = Mat::randn(m, k, 1.0, &mut rng);
+    let w = Mat::randn(n, k, 0.05, &mut rng);
+    let rt = Runtime::threaded(workers);
+    let host = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    println!("runtime: {rt:?} (host parallelism: {host})");
     let mut ok = true;
-    for stem in ["gemm_is_probe", "gemm_fs_probe", "model_fwd"] {
-        match try_load(&rt, stem) {
-            Some(art) => {
-                println!("loaded artifact '{}'", art.name);
-                if stem.starts_with("gemm") {
-                    // probe shape baked by aot.py: x 4×256
-                    let mut rng = integer_scale::tensor::Rng::new(1);
-                    let x = Mat::randn(4, 256, 1.0, &mut rng);
-                    match art.run_f32(&[&x]) {
-                        Ok(outs) => println!(
-                            "  executed: {} outputs, out[0] len={}",
-                            outs.len(),
-                            outs[0].len()
-                        ),
-                        Err(e) => {
-                            ok = false;
-                            eprintln!("  execute failed: {e}");
-                        }
-                    }
-                } else {
-                    let tokens: Vec<i32> = (0..16).map(|i| (i % 100) + 4).collect();
-                    match art.run_tokens(&tokens, (1, 16)) {
-                        Ok(outs) => println!("  executed: logits len={}", outs[0].len()),
-                        Err(e) => {
-                            ok = false;
-                            eprintln!("  execute failed: {e}");
-                        }
-                    }
-                }
-            }
-            None => println!("artifact '{stem}' not present (run `make artifacts`)"),
-        }
+    for (name, amp) in [("w4a8-fg-fs", None), ("w4a8-fg-is", Some(1024i64)), ("w4a16", None)] {
+        let pw = integer_scale::gemm::pack_for_test(&w, Bits::B4, Granularity::Group(128), amp);
+        let kernel = integer_scale::gemm::registry::get_or_panic(name);
+        let t0 = Instant::now();
+        let serial = kernel.forward(&x, &pw);
+        let t_serial = t0.elapsed();
+        let t1 = Instant::now();
+        let par = kernel.forward_rt(&x, &pw, &rt);
+        let t_par = t1.elapsed();
+        let identical = serial.data == par.data;
+        ok &= identical;
+        println!(
+            "{name:<12} M={m} K={k} N={n}: serial {t_serial:>10?}  {workers}-worker {t_par:>10?}  speedup {:.2}x  bit-identical: {identical}",
+            t_serial.as_secs_f64() / t_par.as_secs_f64()
+        );
     }
     if !ok {
+        eprintln!("FAIL: parallel tiles diverged from serial execution");
         std::process::exit(1);
     }
 }
@@ -331,7 +342,7 @@ fn main() {
             println!("{}", toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","));
         }
         "serve" => serve(&args),
-        "runtime-check" => runtime_check(),
+        "runtime-check" => runtime_check(&args),
         "info" => info(),
         other => {
             eprintln!(

@@ -9,6 +9,7 @@
 
 use crate::gemm::{self, GemmKernel, PackedWeight};
 use crate::quant::methods::{apply_act_transform, QuantizedLinear};
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 use std::sync::Arc;
 
@@ -75,14 +76,22 @@ impl Linear {
         }
     }
 
-    /// `x (M×k) → M×n`.
+    /// `x (M×k) → M×n`, serial (sugar for [`Self::forward_rt`]).
     pub fn forward(&self, x: &Mat) -> Mat {
+        self.forward_rt(x, &Runtime::serial())
+    }
+
+    /// `x (M×k) → M×n` on an execution [`Runtime`]: the float path tiles
+    /// [`gemm::fp32::gemm_f32`] and quantized paths tile the kernel's
+    /// forward over the pool's lanes — both bit-identical to serial, so a
+    /// model produces the same outputs for every worker count.
+    pub fn forward_rt(&self, x: &Mat, rt: &Runtime) -> Mat {
         match self {
-            Linear::Float(w) => gemm::fp32::gemm_f32(x, w),
+            Linear::Float(w) => gemm::fp32::gemm_f32_rt(x, w, rt),
             Linear::Quant { pw, kernel, act_smooth, rotate } => {
                 // online activation transforms (QuaRot FWHT / smoothing)
                 let xt = apply_act_transform(x, *rotate, act_smooth.as_deref());
-                kernel.forward(&xt, pw)
+                kernel.forward_rt(&xt, pw, rt)
             }
         }
     }
@@ -133,6 +142,22 @@ mod tests {
         let ql = Rtn.quantize(&w, &x, BitWidth::W4A16, Granularity::Group(32));
         let out = Linear::from_quantized(&ql, registry::get_or_panic("w4a16")).forward(&x);
         assert_eq!((out.rows, out.cols), (2, 16));
+    }
+
+    #[test]
+    fn forward_rt_bit_identical_to_forward() {
+        let mut rng = Rng::new(84);
+        let w = Mat::randn(96, 256, 0.05, &mut rng);
+        let x = Mat::randn(8, 256, 1.0, &mut rng);
+        let rt = Runtime::threaded(4);
+        let fl = Linear::Float(w.clone());
+        assert_eq!(fl.forward(&x).data, fl.forward_rt(&x, &rt).data);
+        let ql = Rtn.quantize(&w, &x, BitWidth::W4A8, Granularity::Group(64));
+        let (qli, _) = ql.clone().with_integer_scale(Some(1024));
+        for (ql, name) in [(&ql, "w4a8-fg-fs"), (&qli, "w4a8-fg-is")] {
+            let lin = Linear::from_quantized(ql, registry::get_or_panic(name));
+            assert_eq!(lin.forward(&x).data, lin.forward_rt(&x, &rt).data, "{name}");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 use super::linear::Linear;
 use super::softmax;
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 #[derive(Clone, Debug)]
@@ -24,8 +25,16 @@ fn silu(v: f32) -> f32 {
 
 impl MoeLayer {
     /// Routed forward: each row goes through its top-k experts, outputs
-    /// combined with renormalized router weights.
+    /// combined with renormalized router weights (serial sugar for
+    /// [`Self::forward_rt`]).
     pub fn forward(&self, x: &Mat) -> Mat {
+        self.forward_rt(x, &Runtime::serial())
+    }
+
+    /// [`Self::forward`] with each expert's linears executing on `rt`.
+    /// Routing (tiny float matmul + top-k) stays serial — it is
+    /// precision-sensitive and far off the hot path.
+    pub fn forward_rt(&self, x: &Mat, rt: &Runtime) -> Mat {
         let ne = self.experts.len();
         let logits = x.matmul_t(&self.router); // m × ne
         let mut out = Mat::zeros(x.rows, self.experts[0].2.out_features());
@@ -54,13 +63,13 @@ impl MoeLayer {
                 xe.row_mut(i).copy_from_slice(x.row(r));
             }
             let (gate, up, down) = &self.experts[e];
-            let g = gate.forward(&xe);
-            let u = up.forward(&xe);
+            let g = gate.forward_rt(&xe, rt);
+            let u = up.forward_rt(&xe, rt);
             let mut h = Mat::zeros(g.rows, g.cols);
             for i in 0..h.data.len() {
                 h.data[i] = silu(g.data[i]) * u.data[i];
             }
-            let o = down.forward(&h);
+            let o = down.forward_rt(&h, rt);
             for (i, &(r, w)) in rows.iter().enumerate() {
                 for (ov, &nv) in out.row_mut(r).iter_mut().zip(o.row(i)) {
                     *ov += w * nv;

@@ -415,6 +415,7 @@ pub fn quantize_model_plan(
         // lm_head kept in float (standard practice; the paper quantizes
         // only the transformer linears)
         lm_head: Linear::Float(w.lm_head.clone()),
+        rt: crate::runtime::Runtime::serial(),
     }
 }
 

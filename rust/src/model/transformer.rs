@@ -10,6 +10,7 @@ use super::linear::Linear;
 use super::moe::MoeLayer;
 use super::weights::ModelWeights;
 use super::{rms_norm, rope_row, softmax, ModelConfig};
+use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 #[derive(Clone, Debug)]
@@ -36,6 +37,11 @@ pub struct Transformer {
     pub layers: Vec<TransformerLayer>,
     pub final_norm: Vec<f32>,
     pub lm_head: Linear,
+    /// Execution runtime every linear in this model computes on (serial by
+    /// default). Cloning the model shares the pool; outputs are
+    /// bit-identical for every worker count, so swapping runtimes is a
+    /// pure performance knob.
+    pub rt: Runtime,
 }
 
 fn silu(v: f32) -> f32 {
@@ -88,7 +94,19 @@ impl Transformer {
             layers,
             final_norm: w.final_norm.clone(),
             lm_head: Linear::Float(w.lm_head.clone()),
+            rt: Runtime::serial(),
         }
+    }
+
+    /// This model with its linears executing on `rt` (builder form).
+    pub fn with_runtime(mut self, rt: Runtime) -> Self {
+        self.rt = rt;
+        self
+    }
+
+    /// Swap the execution runtime in place.
+    pub fn set_runtime(&mut self, rt: Runtime) {
+        self.rt = rt;
     }
 
     pub fn new_cache(&self) -> KvCache {
@@ -107,15 +125,15 @@ impl Transformer {
     pub(crate) fn mlp_forward(&self, layer: &TransformerLayer, h: &Mat) -> Mat {
         match &layer.mlp {
             MlpOp::Dense { gate, up, down } => {
-                let g = gate.forward(h);
-                let u = up.forward(h);
+                let g = gate.forward_rt(h, &self.rt);
+                let u = up.forward_rt(h, &self.rt);
                 let mut z = Mat::zeros(g.rows, g.cols);
                 for i in 0..z.data.len() {
                     z.data[i] = silu(g.data[i]) * u.data[i];
                 }
-                down.forward(&z)
+                down.forward_rt(&z, &self.rt)
             }
-            MlpOp::Moe(moe) => moe.forward(h),
+            MlpOp::Moe(moe) => moe.forward_rt(h, &self.rt),
         }
     }
 
@@ -183,11 +201,11 @@ impl Transformer {
         let mut x = self.embed_tokens(tokens);
         for (li, layer) in self.layers.iter().enumerate() {
             let h = rms_norm(&x, &layer.attn_norm);
-            let mut q = layer.wq.forward(&h);
-            let mut k = layer.wk.forward(&h);
-            let v = layer.wv.forward(&h);
+            let mut q = layer.wq.forward_rt(&h, &self.rt);
+            let mut k = layer.wk.forward_rt(&h, &self.rt);
+            let v = layer.wv.forward_rt(&h, &self.rt);
             let att = self.attention(li, &mut q, &mut k, &v, cache);
-            let att = layer.wo.forward(&att);
+            let att = layer.wo.forward_rt(&att, &self.rt);
             x.add_assign(&att);
             let h = rms_norm(&x, &layer.mlp_norm);
             let m = self.mlp_forward(layer, &h);
@@ -195,7 +213,7 @@ impl Transformer {
         }
         cache.advance_tokens(tokens);
         let h = rms_norm(&x, &self.final_norm);
-        self.lm_head.forward(&h)
+        self.lm_head.forward_rt(&h, &self.rt)
     }
 
     /// Decode one token for each of `b` sequences in a single batched pass.
@@ -209,9 +227,9 @@ impl Transformer {
         for (li, layer) in self.layers.iter().enumerate() {
             let h = rms_norm(&x, &layer.attn_norm);
             // ONE batched GEMM per projection across all sequences
-            let q_all = layer.wq.forward(&h);
-            let k_all = layer.wk.forward(&h);
-            let v_all = layer.wv.forward(&h);
+            let q_all = layer.wq.forward_rt(&h, &self.rt);
+            let k_all = layer.wk.forward_rt(&h, &self.rt);
+            let v_all = layer.wv.forward_rt(&h, &self.rt);
             let mut att_all = Mat::zeros(b, d);
             for i in 0..b {
                 let mut q = Mat::from_vec(1, d, q_all.row(i).to_vec());
@@ -220,7 +238,7 @@ impl Transformer {
                 let o = self.attention(li, &mut q, &mut k, &v, caches[i]);
                 att_all.row_mut(i).copy_from_slice(o.row(0));
             }
-            let att = layer.wo.forward(&att_all);
+            let att = layer.wo.forward_rt(&att_all, &self.rt);
             x.add_assign(&att);
             let h = rms_norm(&x, &layer.mlp_norm);
             let m = self.mlp_forward(layer, &h);
@@ -230,7 +248,7 @@ impl Transformer {
             c.advance_tokens(&[tok]);
         }
         let h = rms_norm(&x, &self.final_norm);
-        self.lm_head.forward(&h)
+        self.lm_head.forward_rt(&h, &self.rt)
     }
 
     /// Log-softmax probability of `target` under `logits_row`.
@@ -301,6 +319,20 @@ mod tests {
         for (a, b) in batched.row(1).iter().zip(ind2.row(0)) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn threaded_runtime_is_bit_identical() {
+        // the same prefill on serial vs 3-worker runtimes must agree to
+        // the last bit — the tiling determinism contract, end to end
+        let serial = tiny();
+        let threaded = serial.clone().with_runtime(Runtime::threaded(3));
+        let toks = [3u32, 7, 11, 2, 9, 4];
+        let mut c1 = serial.new_cache();
+        let mut c2 = threaded.new_cache();
+        let a = serial.prefill(&toks, &mut c1);
+        let b = threaded.prefill(&toks, &mut c2);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

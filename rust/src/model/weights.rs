@@ -8,10 +8,37 @@
 
 use super::ModelConfig;
 use crate::tensor::{Mat, Rng};
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::Path;
+
+/// Error from the ISWB reader/writer (std-only — the crate carries no
+/// error-handling dependency; callers either propagate or fall back via
+/// [`ModelWeights::load_or_random`]).
+#[derive(Debug)]
+pub struct WeightsError(String);
+
+impl std::fmt::Display for WeightsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for WeightsError {}
+
+impl From<std::io::Error> for WeightsError {
+    fn from(e: std::io::Error) -> Self {
+        WeightsError(format!("io: {e}"))
+    }
+}
+
+impl From<std::string::FromUtf8Error> for WeightsError {
+    fn from(e: std::string::FromUtf8Error) -> Self {
+        WeightsError(format!("tensor name not utf-8: {e}"))
+    }
+}
+
+type Result<T> = std::result::Result<T, WeightsError>;
 
 /// Per-layer weights. Row-major `out × in` (each row an output channel),
 /// matching `Mat::matmul_t` / the packed kernels.
@@ -141,12 +168,13 @@ impl ModelWeights {
     /// Load from the ISWB format, validating against `config`.
     pub fn load(path: &Path, config: ModelConfig) -> Result<Self> {
         let mut f = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+            std::fs::File::open(path)
+                .map_err(|e| WeightsError(format!("open {path:?}: {e}")))?,
         );
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != b"ISWB" {
-            bail!("bad magic in {path:?}");
+            return Err(WeightsError(format!("bad magic in {path:?}")));
         }
         let mut u32buf = [0u8; 4];
         f.read_exact(&mut u32buf)?; // version
@@ -172,7 +200,9 @@ impl ModelWeights {
             tensors.insert(name, Mat::from_vec(rows, cols, data));
         }
         let take = |tensors: &mut BTreeMap<String, Mat>, name: &str| -> Result<Mat> {
-            tensors.remove(name).ok_or_else(|| anyhow!("missing tensor {name}"))
+            tensors
+                .remove(name)
+                .ok_or_else(|| WeightsError(format!("missing tensor {name}")))
         };
         let mut mw = ModelWeights::random(config, 0);
         mw.embed = take(&mut tensors, "embed")?;

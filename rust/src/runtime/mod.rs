@@ -1,131 +1,246 @@
-//! PJRT runtime — load and execute AOT-compiled JAX/Pallas artifacts.
+//! Deterministic threaded execution runtime.
 //!
-//! `python/compile/aot.py` lowers the L2 JAX model (which calls the L1
-//! Pallas kernels) to **HLO text** (`artifacts/*.hlo.txt`). This module
-//! wraps the `xla` crate: parse the text (the text parser reassigns
-//! instruction ids, sidestepping the 64-bit-id proto incompatibility of
-//! jax ≥ 0.5 vs xla_extension 0.5.1), compile once on the PJRT CPU client,
-//! and execute from the Rust hot path with zero Python.
+//! A dependency-free (std-only) scoped worker pool plus the column-tiling
+//! helpers that parallelize every GEMM in [`crate::gemm`] and the float
+//! baseline path — with results **bit-identical** to serial execution.
+//! (This module replaced the seed's PJRT artifact loader, which depended on
+//! crates unavailable in the offline reproduction environment; the
+//! AOT-compiled L2 artifacts are exercised by the Python side instead.)
+//!
+//! ## Execution model
+//!
+//! * [`WorkerPool`] — a fixed number of lanes chosen at construction
+//!   (`workers - 1` spawned OS threads; the caller of
+//!   [`WorkerPool::run_tiles`] participates as the remaining lane).
+//! * [`partition`] — splits `0..n` into at most `tiles` contiguous,
+//!   non-overlapping ranges that cover `0..n` exactly once, sizes differing
+//!   by at most one. The mapping is a pure function of `(n, tiles)` — tile
+//!   ownership is deterministic, never scheduling-dependent.
+//! * [`parallel_columns`] — the intra-op hot path: the N (output-column)
+//!   dimension of a GEMM is partitioned into tiles, each tile computed by
+//!   exactly one task into its own `M×width` matrix, and the tiles are
+//!   stitched into disjoint column ranges of the output.
+//!
+//! ## Determinism argument
+//!
+//! Every kernel in [`crate::gemm`] is weight-stationary: output column `j`
+//! is a function of the activations and weight row `j` alone, and the
+//! per-column arithmetic (quantize, unpack, MAC order, epilogue) does not
+//! depend on which other columns share its tile. Tiling therefore computes
+//! each output element by *the same arithmetic sequence* as the serial
+//! loop, so parallel results are bit-identical to serial ones for every
+//! worker count — the property `rust/tests/parallel_determinism.rs` locks
+//! for all registry kernels and for end-to-end greedy serving.
+
+mod pool;
+
+pub use pool::WorkerPool;
 
 use crate::tensor::Mat;
-use anyhow::{anyhow as eyre, Context, Result};
-use std::path::Path;
+use std::fmt;
+use std::sync::{Arc, Mutex};
 
-/// A compiled HLO artifact ready to execute.
-pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
+/// Below roughly this many MACs a GEMM is not worth dispatching to the
+/// pool: tile bookkeeping would rival the compute itself. Purely a
+/// performance gate — serial and parallel results are identical either way.
+pub const PARALLEL_MIN_MACS: usize = 1 << 15;
+
+/// Tile-count cap: [`parallel_columns`] spawns at most one tile per this
+/// many output columns, so a narrow N fans out to fewer tiles than workers
+/// instead of paying dispatch/stitch overhead on slivers. (Tiles can still
+/// be narrower than this when the cap, not the worker count, binds.)
+pub const MIN_TILE_COLS: usize = 8;
+
+/// Handle to the execution runtime a model (or bench) computes on: either
+/// serial (no pool — the default everywhere) or a shared [`WorkerPool`].
+/// Cloning shares the pool, so one pool serves every layer of a model and
+/// every replica of a router.
+#[derive(Clone, Default)]
+pub struct Runtime {
+    pool: Option<Arc<WorkerPool>>,
 }
 
-/// The PJRT client plus every loaded artifact.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| eyre!("PJRT cpu client: {e:?}"))?;
-        Ok(PjrtRuntime { client })
+impl Runtime {
+    /// Single-lane runtime: every forward runs inline on the caller.
+    pub fn serial() -> Runtime {
+        Runtime { pool: None }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Runtime backed by a `workers`-lane pool; `workers <= 1` is serial.
+    pub fn threaded(workers: usize) -> Runtime {
+        if workers <= 1 {
+            Runtime::serial()
+        } else {
+            Runtime { pool: Some(Arc::new(WorkerPool::new(workers))) }
+        }
     }
 
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, path: &Path) -> Result<Artifact> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| eyre!("non-utf8 path"))?,
-        )
-        .map_err(|e| eyre!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| eyre!("compile {path:?}: {e:?}"))?;
-        Ok(Artifact {
-            exe,
-            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
-        })
-    }
-}
-
-impl Artifact {
-    /// Execute with f32 matrix inputs; returns the tuple of f32 outputs.
-    /// (aot.py lowers with `return_tuple=True`.)
-    pub fn run_f32(&self, inputs: &[&Mat]) -> Result<Vec<Vec<f32>>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|m| {
-                xla::Literal::vec1(&m.data)
-                    .reshape(&[m.rows as i64, m.cols as i64])
-                    .map_err(|e| eyre!("reshape: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| eyre!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("to_literal: {e:?}"))?;
-        let tuple = result.decompose_tuple().map_err(|e| eyre!("tuple: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}")))
-            .collect()
+    /// One lane per available hardware thread.
+    pub fn host_parallel() -> Runtime {
+        Runtime::threaded(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
     }
 
-    /// Execute with int32 token inputs + f32 outputs (the model forward:
-    /// tokens → logits).
-    pub fn run_tokens(&self, tokens: &[i32], shape: (usize, usize)) -> Result<Vec<Vec<f32>>> {
-        let lit = xla::Literal::vec1(tokens)
-            .reshape(&[shape.0 as i64, shape.1 as i64])
-            .map_err(|e| eyre!("reshape: {e:?}"))?;
-        let mut result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(|e| eyre!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| eyre!("to_literal: {e:?}"))?;
-        let tuple = result.decompose_tuple().map_err(|e| eyre!("tuple: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| eyre!("to_vec: {e:?}")))
-            .collect()
+    pub fn workers(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.workers())
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Run `f(t)` once per tile `t in 0..tiles` (inline when serial).
+    pub fn run_tiles(&self, tiles: usize, f: &(dyn Fn(usize) + Sync)) {
+        match &self.pool {
+            Some(p) => p.run_tiles(tiles, f),
+            None => {
+                for t in 0..tiles {
+                    f(t);
+                }
+            }
+        }
     }
 }
 
-/// Default artifact directory (`artifacts/` at the repo root), overridable
-/// via `IS_ARTIFACTS_DIR`.
-pub fn artifacts_dir() -> std::path::PathBuf {
-    std::env::var("IS_ARTIFACTS_DIR")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+impl fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.pool {
+            None => write!(f, "Runtime(serial)"),
+            Some(p) => write!(f, "Runtime({} workers)", p.workers()),
+        }
+    }
 }
 
-/// Load an artifact by stem name if it exists (None before `make artifacts`).
-pub fn try_load(rt: &PjrtRuntime, stem: &str) -> Option<Artifact> {
-    let path = artifacts_dir().join(format!("{stem}.hlo.txt"));
-    if !path.exists() {
-        return None;
+/// Split `0..n` into at most `tiles` contiguous ranges covering `0..n`
+/// exactly once (empty tiles are never emitted; for `n > 0` the result has
+/// `min(tiles, n)` entries whose sizes differ by at most one). Pure in
+/// `(n, tiles)`: the same inputs always produce the same ownership map.
+pub fn partition(n: usize, tiles: usize) -> Vec<(usize, usize)> {
+    if n == 0 || tiles == 0 {
+        return Vec::new();
     }
-    rt.load(&path).context("artifact load").ok()
+    let t = tiles.min(n);
+    let base = n / t;
+    let extra = n % t; // the first `extra` tiles get one more column
+    let mut bounds = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let width = base + usize::from(i < extra);
+        bounds.push((start, start + width));
+        start += width;
+    }
+    debug_assert_eq!(start, n);
+    bounds
+}
+
+/// Column-parallel map: computes an `m × n` matrix from column tiles.
+/// `f(j0, j1)` must return the `m × (j1-j0)` sub-matrix of columns
+/// `j0..j1`; tiles are computed by exactly one task each (disjoint writers)
+/// and stitched into the output. Serial runtimes (or single-tile splits)
+/// collapse to one `f(0, n)` call, so parallel output is bit-identical to
+/// serial output whenever `f` computes columns independently.
+pub fn parallel_columns(
+    rt: &Runtime,
+    m: usize,
+    n: usize,
+    f: &(dyn Fn(usize, usize) -> Mat + Sync),
+) -> Mat {
+    let tiles = rt.workers().min(n.div_ceil(MIN_TILE_COLS));
+    if !rt.is_parallel() || tiles <= 1 || n == 0 {
+        return f(0, n);
+    }
+    let bounds = partition(n, tiles);
+    let slots: Vec<Mutex<Option<Mat>>> = (0..bounds.len()).map(|_| Mutex::new(None)).collect();
+    rt.run_tiles(bounds.len(), &|t| {
+        let (j0, j1) = bounds[t];
+        *slots[t].lock().unwrap() = Some(f(j0, j1));
+    });
+    let mut out = Mat::zeros(m, n);
+    for (slot, &(j0, j1)) in slots.iter().zip(bounds.iter()) {
+        let tile = slot.lock().unwrap().take().expect("tile task ran");
+        assert_eq!((tile.rows, tile.cols), (m, j1 - j0), "tile shape mismatch");
+        out.paste_cols(j0, &tile);
+    }
+    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Rng;
 
     #[test]
-    fn cpu_client_starts() {
-        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
-        assert!(rt.platform().to_lowercase().contains("cpu")
-            || rt.platform().to_lowercase().contains("host"));
+    fn partition_covers_exactly_once() {
+        for n in 0..=97 {
+            for tiles in 1..=9 {
+                let bounds = partition(n, tiles);
+                if n == 0 {
+                    assert!(bounds.is_empty());
+                    continue;
+                }
+                assert_eq!(bounds.len(), tiles.min(n));
+                let mut expected = 0;
+                for &(a, b) in &bounds {
+                    assert_eq!(a, expected, "tiles must be contiguous");
+                    assert!(b > a, "tiles must be non-empty");
+                    expected = b;
+                }
+                assert_eq!(expected, n, "tiles must cover 0..n");
+                let min = bounds.iter().map(|&(a, b)| b - a).min().unwrap();
+                let max = bounds.iter().map(|&(a, b)| b - a).max().unwrap();
+                assert!(max - min <= 1, "tile sizes must differ by at most one");
+            }
+        }
     }
 
     #[test]
-    fn missing_artifact_is_none() {
-        let rt = PjrtRuntime::cpu().unwrap();
-        assert!(try_load(&rt, "definitely_not_there").is_none());
+    fn partition_is_deterministic() {
+        assert_eq!(partition(10, 4), vec![(0, 3), (3, 6), (6, 8), (8, 10)]);
+        assert_eq!(partition(10, 4), partition(10, 4));
+    }
+
+    #[test]
+    fn threaded_one_worker_is_serial() {
+        let rt = Runtime::threaded(1);
+        assert!(!rt.is_parallel());
+        assert_eq!(rt.workers(), 1);
+        assert_eq!(format!("{rt:?}"), "Runtime(serial)");
+    }
+
+    #[test]
+    fn parallel_columns_matches_serial_bitwise() {
+        // a deterministic column-independent f: column j holds j*m + i
+        let (m, n) = (5, 67);
+        let f = |j0: usize, j1: usize| {
+            let mut t = Mat::zeros(m, j1 - j0);
+            for i in 0..m {
+                for j in j0..j1 {
+                    t.data[i * (j1 - j0) + (j - j0)] = (j * m + i) as f32;
+                }
+            }
+            t
+        };
+        let serial = parallel_columns(&Runtime::serial(), m, n, &f);
+        for workers in [2, 3, 4] {
+            let par = parallel_columns(&Runtime::threaded(workers), m, n, &f);
+            assert_eq!(serial.data, par.data, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn parallel_columns_random_matches() {
+        let mut rng = Rng::new(5);
+        let src = Mat::randn(4, 123, 1.0, &mut rng);
+        let f = |j0: usize, j1: usize| {
+            let mut t = Mat::zeros(src.rows, j1 - j0);
+            for i in 0..src.rows {
+                for j in j0..j1 {
+                    t.data[i * (j1 - j0) + (j - j0)] = src[(i, j)] * 2.0;
+                }
+            }
+            t
+        };
+        let a = parallel_columns(&Runtime::serial(), 4, 123, &f);
+        let b = parallel_columns(&Runtime::threaded(4), 4, 123, &f);
+        assert_eq!(a.data, b.data);
     }
 }

@@ -1,0 +1,277 @@
+//! A std-only scoped worker pool with a fixed lane count.
+//!
+//! The pool is the execution substrate of the runtime: `workers - 1` OS
+//! threads are spawned once at construction and the caller of
+//! [`WorkerPool::run_tiles`] participates as the remaining lane, so a
+//! single caller computes with exactly `W` lanes and no per-call thread
+//! spawns. (With `M` threads calling into one shared pool concurrently —
+//! e.g. router replicas — the active lanes are `(W - 1) + M`; size `W`
+//! accordingly when replicas share a pool.) Tasks may borrow
+//! stack data: `run_tiles` does not return until every task it enqueued has
+//! completed, which is the entire safety argument for the internal lifetime
+//! erasure (the same contract as `std::thread::scope`, amortized over a
+//! persistent pool).
+//!
+//! Multiple threads (e.g. several engine replicas) may call `run_tiles`
+//! concurrently on one shared pool; their tasks interleave in the queue and
+//! each caller waits only on its own completion latch.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one `run_tiles` scope: counts outstanding enqueued
+/// tasks and records whether any of them panicked.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(remaining: usize) -> Latch {
+        Latch { state: Mutex::new(LatchState { remaining, panicked: false }), done: Condvar::new() }
+    }
+
+    fn count_down(&self, ok: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if !ok {
+            s.panicked = true;
+        }
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every task completed; `false` if any panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        !s.panicked
+    }
+
+    /// Non-blocking: whether tasks are still outstanding.
+    fn pending(&self) -> bool {
+        self.state.lock().unwrap().remaining > 0
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break Some(t);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match task {
+            Some(t) => t(), // panics are caught inside the task closure
+            None => return,
+        }
+    }
+}
+
+/// Fixed-size worker pool. See the module docs for the lane model.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `workers` total lanes (clamped to ≥ 1): `workers - 1`
+    /// background threads plus the calling thread of each `run_tiles`.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..workers)
+            .map(|i| {
+                let sh = shared.clone();
+                thread::Builder::new()
+                    .name(format!("is-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        WorkerPool { shared, handles, workers }
+    }
+
+    /// Total lanes (spawned threads + the participating caller).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute `f(t)` exactly once for every tile `t in 0..tiles`, spread
+    /// across the pool's lanes; tile 0 always runs on the calling thread,
+    /// which then helps drain the queue until its scope completes. Blocks
+    /// until every tile has finished, so `f` may borrow stack data.
+    ///
+    /// Which lane executes a tile is scheduling-dependent; the *result* of
+    /// a tile never is — callers hand each tile a disjoint slice of the
+    /// output, so outputs are identical for any lane assignment.
+    pub fn run_tiles(&self, tiles: usize, f: &(dyn Fn(usize) + Sync)) {
+        if tiles <= 1 || self.workers == 1 {
+            for t in 0..tiles {
+                f(t);
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(tiles - 1));
+        // SAFETY: this frame blocks on `latch.wait()` (below) until every
+        // task enqueued here has run to completion or been recorded as
+        // panicked — even when `f(0)` itself panics — so the erased borrow
+        // of `f` strictly outlives every use of `f_static`.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in 1..tiles {
+                let latch = latch.clone();
+                q.push_back(Box::new(move || {
+                    let ok = catch_unwind(AssertUnwindSafe(|| f_static(t))).is_ok();
+                    latch.count_down(ok);
+                }));
+            }
+        }
+        self.shared.available.notify_all();
+        let caller_result = catch_unwind(AssertUnwindSafe(|| f(0)));
+        // Help drain the queue (this scope's tiles or a concurrent one's)
+        // rather than idling — but only while this scope's own tiles are
+        // outstanding, so a finished caller is never conscripted into
+        // unbounded amounts of other scopes' work.
+        while latch.pending() {
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t(),
+                None => break,
+            }
+        }
+        let workers_ok = latch.wait();
+        if let Err(p) = caller_result {
+            resume_unwind(p);
+        }
+        if !workers_ok {
+            panic!("worker pool: a tile task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_tile_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..37).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tiles(37, &|t| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "tile {t}");
+        }
+    }
+
+    #[test]
+    fn single_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run_tiles(5, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_scopes() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run_tiles(6, &|t| {
+                total.fetch_add(t + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * 21);
+    }
+
+    #[test]
+    fn concurrent_scopes_share_one_pool() {
+        let pool = Arc::new(WorkerPool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(thread::spawn(move || {
+                for _ in 0..20 {
+                    pool.run_tiles(8, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 8);
+    }
+
+    #[test]
+    fn tile_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tiles(4, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic in a worker tile must reach the caller");
+        // and the pool must remain usable afterwards
+        let hits = AtomicUsize::new(0);
+        pool.run_tiles(4, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+}

@@ -131,6 +131,17 @@ impl Mat {
         out
     }
 
+    /// Copy `tile` (`rows × w`) into columns `j0..j0+w` of `self` — the
+    /// stitch step of column-tiled parallel GEMM ([`crate::runtime`]).
+    pub fn paste_cols(&mut self, j0: usize, tile: &Mat) {
+        assert_eq!(self.rows, tile.rows, "paste_cols row mismatch");
+        assert!(j0 + tile.cols <= self.cols, "paste_cols out of range");
+        let (n, w) = (self.cols, tile.cols);
+        for i in 0..self.rows {
+            self.data[i * n + j0..i * n + j0 + w].copy_from_slice(&tile.data[i * w..(i + 1) * w]);
+        }
+    }
+
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
@@ -385,6 +396,23 @@ mod tests {
     fn fwht_rejects_non_pow2() {
         let mut v = vec![1.0; 6];
         fwht_row(&mut v);
+    }
+
+    #[test]
+    fn paste_cols_reassembles() {
+        let mut rng = Rng::new(12);
+        let src = Mat::randn(3, 11, 1.0, &mut rng);
+        let mut out = Mat::zeros(3, 11);
+        for (j0, j1) in [(0usize, 4usize), (4, 9), (9, 11)] {
+            let mut tile = Mat::zeros(3, j1 - j0);
+            for i in 0..3 {
+                for j in j0..j1 {
+                    tile.data[i * (j1 - j0) + (j - j0)] = src[(i, j)];
+                }
+            }
+            out.paste_cols(j0, &tile);
+        }
+        assert_eq!(out, src);
     }
 
     #[test]

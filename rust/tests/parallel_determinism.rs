@@ -1,0 +1,195 @@
+//! Determinism under parallelism — the acceptance tests of the threaded
+//! execution runtime:
+//!
+//! * N-tile partitions cover `0..n` exactly once for arbitrary
+//!   `(n, workers)` (property test);
+//! * every servable registry kernel's parallel forward is bit-identical to
+//!   its serial forward;
+//! * `workers ∈ {1, 2, 4}` produce token-identical greedy outputs for the
+//!   uniform schemes and for the committed `recipes/llama3.plan`.
+
+use integer_scale::coordinator::{Engine, EngineConfig, Request};
+use integer_scale::gemm::{pack_for_test, registry};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::{PlanBuilder, QuantPlan};
+use integer_scale::quant::{BitWidth, Bits, Granularity};
+use integer_scale::runtime::{partition, Runtime};
+use integer_scale::tensor::{Mat, Rng};
+use std::path::Path;
+use std::sync::Arc;
+
+#[test]
+fn partition_boundaries_cover_exactly_once() {
+    // arbitrary (n, workers), including n < workers, primes, and empties
+    for n in (0..=64).chain([97, 100, 127, 128, 1000, 4096]) {
+        for workers in 1..=11 {
+            let bounds = partition(n, workers);
+            if n == 0 {
+                assert!(bounds.is_empty());
+                continue;
+            }
+            assert_eq!(bounds.len(), workers.min(n), "n={n} workers={workers}");
+            // contiguity + exhaustiveness: each index owned exactly once
+            let mut next = 0;
+            for &(a, b) in &bounds {
+                assert_eq!(a, next, "gap/overlap at {a} (n={n} workers={workers})");
+                assert!(b > a, "empty tile (n={n} workers={workers})");
+                next = b;
+            }
+            assert_eq!(next, n, "coverage (n={n} workers={workers})");
+            // balance: ownership is even to within one column
+            let widths: Vec<usize> = bounds.iter().map(|&(a, b)| b - a).collect();
+            let (wmin, wmax) =
+                (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+            assert!(wmax - wmin <= 1, "imbalance (n={n} workers={workers})");
+        }
+    }
+}
+
+#[test]
+fn every_servable_kernel_parallel_bit_identical() {
+    let mut rng = Rng::new(31);
+    let x = Mat::randn(6, 256, 1.0, &mut rng);
+    let wf = Mat::randn(96, 256, 0.05, &mut rng);
+    for name in registry::names() {
+        let kernel = registry::get_or_panic(name);
+        if !kernel.servable() || kernel.weight_bits() == Bits::F16 {
+            continue; // fp16 executes as Linear::Float; qserve via DualGrainedWeight
+        }
+        // pack to match the kernel's self-description
+        let gran = if kernel.fine_grained() {
+            Granularity::Group(64)
+        } else {
+            Granularity::PerChannel
+        };
+        let amp = if kernel.scale_mode() == registry::ScaleMode::Integer {
+            Some(1024)
+        } else {
+            None
+        };
+        let pw = pack_for_test(&wf, kernel.weight_bits(), gran, amp);
+        let serial = kernel.forward(&x, &pw);
+        for workers in [2usize, 3, 4] {
+            let rt = Runtime::threaded(workers);
+            let par = kernel.forward_rt(&x, &pw, &rt);
+            assert_eq!(
+                serial.data, par.data,
+                "kernel {name} diverged at workers={workers}"
+            );
+        }
+    }
+}
+
+fn small_cfg() -> ModelConfig {
+    // Group(128) plans need d_model/d_ff divisible by 128; tiny() is the
+    // smallest committed config that satisfies every recipe
+    ModelConfig { n_layers: 2, ..ModelConfig::tiny() }
+}
+
+fn greedy_tokens(model: Transformer, workers: usize) -> Vec<Vec<u32>> {
+    let model = Arc::new(model.with_runtime(Runtime::threaded(workers)));
+    let mut e = Engine::new(
+        model,
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+    );
+    for i in 0..6u64 {
+        let mut r = Request::greedy(i, vec![(i % 30) as u32 + 4, 7, 9, 2, 15], 8);
+        r.stop_at_eos = false;
+        e.submit(r);
+    }
+    e.run_to_completion().into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn uniform_schemes_token_identical_across_workers() {
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 77);
+    let gen = integer_scale::data::CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(128, integer_scale::data::Split::C4, 11);
+    let schemes: [(&str, Option<QuantSpec>); 4] = [
+        ("fp16", None),
+        ("w8a8", Some(QuantSpec::new(Method::Rtn, BitWidth::W8A8, Granularity::Group(128)))),
+        ("w4a8-fs", Some(QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)))),
+        (
+            "w4a8-is",
+            Some(
+                QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128))
+                    .with_is(1024),
+            ),
+        ),
+    ];
+    for (label, spec) in schemes {
+        let model = match spec {
+            None => Transformer::from_weights(&weights),
+            Some(s) => quantize_model_plan(&weights, &PlanBuilder::uniform(s), &calib),
+        };
+        let baseline = greedy_tokens(model.clone(), 1);
+        assert!(baseline.iter().all(|t| t.len() == 8), "{label}: truncated outputs");
+        for workers in [2usize, 4] {
+            let got = greedy_tokens(model.clone(), workers);
+            assert_eq!(
+                baseline, got,
+                "{label}: workers={workers} changed greedy tokens"
+            );
+        }
+    }
+}
+
+#[test]
+fn llama3_plan_token_identical_across_workers() {
+    let plan = QuantPlan::from_file(Path::new("recipes/llama3.plan")).expect("committed plan");
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 78);
+    let gen = integer_scale::data::CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(128, integer_scale::data::Split::C4, 11);
+    let model = quantize_model_plan(&weights, &plan, &calib);
+    let baseline = greedy_tokens(model.clone(), 1);
+    for workers in [2usize, 4] {
+        let got = greedy_tokens(model.clone(), workers);
+        assert_eq!(baseline, got, "llama3.plan: workers={workers} changed greedy tokens");
+    }
+}
+
+#[test]
+fn multi_replica_threaded_tokens_match_single_engine() {
+    // inter-replica parallelism composes with intra-op tiles: a 2-replica
+    // threaded router on a 2-worker runtime reproduces the single serial
+    // engine's tokens exactly
+    use integer_scale::coordinator::{Policy, Router};
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 79);
+    let model = Transformer::from_weights(&weights);
+    let reqs = |n: u64| -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let mut r = Request::greedy(i, vec![(i % 20) as u32 + 4, 6, 9], 6);
+                r.stop_at_eos = false;
+                r
+            })
+            .collect()
+    };
+    let mut single = Engine::new(
+        Arc::new(model.clone()),
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+    );
+    for r in reqs(8) {
+        single.submit(r);
+    }
+    let want: Vec<Vec<u32>> =
+        single.run_to_completion().into_iter().map(|r| r.tokens).collect();
+
+    let threaded = Arc::new(model.with_runtime(Runtime::threaded(2)));
+    let engines = (0..2)
+        .map(|i| {
+            Engine::new(
+                threaded.clone(),
+                EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: i },
+            )
+        })
+        .collect();
+    let mut router = Router::new(engines, Policy::LeastLoaded);
+    let got: Vec<Vec<u32>> =
+        router.run_threaded(reqs(8)).into_iter().map(|r| r.tokens).collect();
+    assert_eq!(want, got, "replica threading changed greedy tokens");
+}
