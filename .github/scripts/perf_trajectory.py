@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Append a BENCH_*.json run to the rolling perf trajectory and gate on
+regressions.
+
+Usage: perf_trajectory.py BENCH_nightly.json perf_trajectory.jsonl
+
+Each trajectory line is one JSON object: {"utc", "sha", "records"} where
+"records" is the BENCH array written by rust's bench_harness (min / median /
+max / p50 / p99 nanoseconds per benchmark, optional tokens_per_sec).
+
+The gate compares tonight's serving benchmarks against the median of the
+last WINDOW prior runs (shared-runner noise makes single-run baselines
+useless). It fails when either:
+  * p99_ns grows beyond REGRESSION_RATIO on any serve_* benchmark, or
+  * tokens_per_sec falls below 1/REGRESSION_RATIO on any serve_* benchmark.
+
+With fewer than MIN_HISTORY prior runs it appends without gating (the
+trajectory has to grow before trends mean anything).
+"""
+
+import json
+import os
+import subprocess
+import sys
+from datetime import datetime, timezone
+from statistics import median
+
+WINDOW = 7
+MIN_HISTORY = 2
+REGRESSION_RATIO = 1.5
+
+
+def git_sha():
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha[:12]
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        return out.stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def load_history(path):
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except json.JSONDecodeError:
+                print(f"warning: skipping malformed trajectory line: {line[:80]}")
+    return entries
+
+
+def serve_stats(records):
+    """name -> (p99_ns, tokens_per_sec) for serving-shaped benchmarks."""
+    out = {}
+    for r in records:
+        if r.get("name", "").startswith("serve_") and r.get("tokens_per_sec"):
+            out[r["name"]] = (r.get("p99_ns", 0), r["tokens_per_sec"])
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    bench_path, traj_path = sys.argv[1], sys.argv[2]
+    with open(bench_path) as f:
+        records = json.load(f)
+
+    history = load_history(traj_path)
+    entry = {
+        "utc": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "sha": git_sha(),
+        "records": records,
+    }
+    with open(traj_path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    print(f"appended run {entry['sha']} ({len(records)} records); "
+          f"trajectory now has {len(history) + 1} runs")
+
+    if len(history) < MIN_HISTORY:
+        print(f"only {len(history)} prior runs (< {MIN_HISTORY}): skipping the gate")
+        return
+
+    tonight = serve_stats(records)
+    failures = []
+    for name, (p99, tps) in sorted(tonight.items()):
+        prior_p99 = [
+            serve_stats(h.get("records", [])).get(name, (0, 0))[0]
+            for h in history[-WINDOW:]
+        ]
+        prior_tps = [
+            serve_stats(h.get("records", [])).get(name, (0, 0))[1]
+            for h in history[-WINDOW:]
+        ]
+        prior_p99 = [v for v in prior_p99 if v > 0]
+        prior_tps = [v for v in prior_tps if v > 0]
+        if not prior_p99 or not prior_tps:
+            print(f"{name}: no prior data, skipping")
+            continue
+        base_p99, base_tps = median(prior_p99), median(prior_tps)
+        print(f"{name}: p99 {p99/1e6:.2f}ms vs baseline {base_p99/1e6:.2f}ms, "
+              f"{tps:.1f} tok/s vs baseline {base_tps:.1f}")
+        if base_p99 > 0 and p99 > base_p99 * REGRESSION_RATIO:
+            failures.append(
+                f"{name}: p99 {p99/1e6:.2f}ms > {REGRESSION_RATIO}x baseline "
+                f"{base_p99/1e6:.2f}ms"
+            )
+        if base_tps > 0 and tps < base_tps / REGRESSION_RATIO:
+            failures.append(
+                f"{name}: {tps:.1f} tok/s < baseline {base_tps:.1f} / {REGRESSION_RATIO}"
+            )
+
+    if failures:
+        for f_ in failures:
+            print(f"REGRESSION: {f_}", file=sys.stderr)
+        sys.exit(1)
+    print("perf trajectory gate passed")
+
+
+if __name__ == "__main__":
+    main()

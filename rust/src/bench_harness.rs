@@ -16,13 +16,18 @@ use std::time::{Duration, Instant};
 /// One benchmark result in machine-readable form (the JSON schema of
 /// `BENCH_*.json`): identification, latency quartiles in nanoseconds, and
 /// an optional throughput figure for serving-shaped benchmarks.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct BenchRecord {
     pub group: String,
     pub name: String,
     pub min_ns: u128,
     pub median_ns: u128,
     pub max_ns: u128,
+    /// Latency percentiles over the sample set (p50 == median for records
+    /// produced by [`Bencher::bench`]; records pushed from serving runs
+    /// carry histogram-derived quantiles instead).
+    pub p50_ns: u128,
+    pub p99_ns: u128,
     pub tokens_per_sec: Option<f64>,
 }
 
@@ -52,12 +57,14 @@ pub fn write_json(path: &Path, records: &[BenchRecord]) -> std::io::Result<()> {
         };
         writeln!(
             f,
-            "  {{\"group\": \"{}\", \"name\": \"{}\", \"min_ns\": {}, \"median_ns\": {}, \"max_ns\": {}, \"tokens_per_sec\": {}}}{}",
+            "  {{\"group\": \"{}\", \"name\": \"{}\", \"min_ns\": {}, \"median_ns\": {}, \"max_ns\": {}, \"p50_ns\": {}, \"p99_ns\": {}, \"tokens_per_sec\": {}}}{}",
             json_escape(&r.group),
             json_escape(&r.name),
             r.min_ns,
             r.median_ns,
             r.max_ns,
+            r.p50_ns,
+            r.p99_ns,
             tps,
             if i + 1 < records.len() { "," } else { "" }
         )?;
@@ -113,6 +120,8 @@ impl Bencher {
         samples.sort();
         let median = samples[samples.len() / 2];
         let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        // nearest-rank p99 over the sorted samples (== max for small n)
+        let p99 = samples[(0.99 * (samples.len() - 1) as f64).ceil() as usize];
         let stats = Stats { median, mean, min: samples[0], max: *samples.last().unwrap() };
         println!(
             "{:<44} median {:>12?}  mean {:>12?}  min {:>12?}",
@@ -128,9 +137,21 @@ impl Bencher {
             min_ns: stats.min.as_nanos(),
             median_ns: stats.median.as_nanos(),
             max_ns: stats.max.as_nanos(),
+            p50_ns: stats.median.as_nanos(),
+            p99_ns: p99.as_nanos(),
             tokens_per_sec: None,
         });
         stats
+    }
+
+    /// Append an externally-built record (e.g. per-kernel profile rows or
+    /// histogram-derived serving percentiles) to the JSON output, tagged
+    /// with this bencher's group.
+    pub fn push_record(&mut self, mut rec: BenchRecord) {
+        if rec.group.is_empty() {
+            rec.group = self.group.clone();
+        }
+        self.records.push(rec);
     }
 
     /// [`Self::bench`] for serving-shaped closures that generate
@@ -205,6 +226,8 @@ mod tests {
         assert!(recs[0].tokens_per_sec.is_none());
         assert!(recs[1].tokens_per_sec.unwrap() > 0.0);
         assert!(recs[1].min_ns <= recs[1].median_ns && recs[1].median_ns <= recs[1].max_ns);
+        assert_eq!(recs[1].p50_ns, recs[1].median_ns);
+        assert!(recs[1].p50_ns <= recs[1].p99_ns && recs[1].p99_ns <= recs[1].max_ns);
 
         let dir = std::env::temp_dir().join("is_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -214,8 +237,25 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert!(text.trim_start().starts_with('['), "must be a JSON array");
         assert!(text.contains("\"median_ns\""));
+        assert!(text.contains("\"p50_ns\""));
+        assert!(text.contains("\"p99_ns\""));
         assert!(text.contains("\\\"quoted\\\""), "names must be escaped: {text}");
         assert!(text.contains("\"tokens_per_sec\": null"));
+    }
+
+    #[test]
+    fn push_record_inherits_group_and_serializes() {
+        let mut b = Bencher::group("serve");
+        b.push_record(BenchRecord {
+            name: "ttft".to_string(),
+            p50_ns: 1_000_000,
+            p99_ns: 5_000_000,
+            ..BenchRecord::default()
+        });
+        let recs = b.into_records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].group, "serve");
+        assert_eq!(recs[0].p99_ns, 5_000_000);
     }
 
     #[test]

@@ -22,7 +22,9 @@ use crate::data::tokenizer::EOS;
 use crate::kvpool::{BlockPool, PoolGauges, BLOCK_SIZE};
 use crate::model::sampler::{sample, Sampling};
 use crate::model::{KvCache, Transformer};
+use crate::obs::{Obs, SpanKind};
 use crate::tensor::Rng;
+use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -79,8 +81,17 @@ impl Engine {
         }
     }
 
+    /// The observability hub attached to this engine's model runtime (if
+    /// any, and only while enabled).
+    fn obs(&self) -> Option<&Arc<Obs>> {
+        self.model.rt.obs().filter(|o| o.is_enabled())
+    }
+
     pub fn submit(&mut self, req: Request) {
         self.metrics.submitted += 1;
+        if let Some(o) = self.obs() {
+            o.submitted.fetch_add(1, Relaxed);
+        }
         self.scheduler.submit(req);
     }
 
@@ -98,6 +109,9 @@ impl Engine {
     /// everyone, retire finished sequences. Returns responses completed in
     /// this step.
     pub fn step(&mut self) -> Vec<Response> {
+        // the guard stays open for the whole iteration, so prefill/decode/
+        // layer/kernel spans recorded below parent to this Step span
+        let _step_span = self.obs().cloned().and_then(|o| o.span(SpanKind::Step, "step"));
         // 1. admission + prefill
         let admitted = self.scheduler.admit(self.pool.available_blocks());
         if admitted.is_empty() && self.running.is_empty() {
@@ -138,9 +152,16 @@ impl Engine {
             let mut caches: Vec<&mut KvCache> =
                 self.running.iter_mut().map(|r| &mut r.cache).collect();
             let logits = self.model.decode_batch(&tokens, &mut caches);
+            let dt = t0.elapsed();
             self.metrics.record_batch(tokens.len());
-            self.metrics.decode_time += t0.elapsed();
+            self.metrics.decode_time += dt;
             self.metrics.decode_tokens += tokens.len() as u64;
+            // every token in the batch waited this step's duration
+            self.metrics.tpot_hist.record_n(dt, tokens.len() as u64);
+            if let Some(o) = self.obs() {
+                o.tpot.record_n(dt, tokens.len() as u64);
+                o.decode_tokens.fetch_add(tokens.len() as u64, Relaxed);
+            }
             for (i, r) in self.running.iter_mut().enumerate() {
                 let tok = sample(logits.row(i), r.tracked.req.sampling, &mut self.rng);
                 r.tracked.generated.push(tok);
@@ -166,6 +187,15 @@ impl Engine {
         let mut tr = tracked;
         let mut cache = KvCache::new_in_pool(self.pool.clone(), self.model.config.max_seq);
         let resumed = !tr.generated.is_empty();
+        if !resumed {
+            // queue wait = arrival to first prefill compute (fresh
+            // admissions only — resumes already waited once)
+            let wait = t0.saturating_duration_since(tr.arrived);
+            self.metrics.queue_wait_hist.record(wait);
+            if let Some(o) = self.obs() {
+                o.queue_wait.record(wait);
+            }
+        }
         let ctx: Vec<u32> = if resumed {
             let keep = tr.generated.len() - 1;
             tr.req.prompt.iter().chain(tr.generated[..keep].iter()).copied().collect()
@@ -223,13 +253,31 @@ impl Engine {
 
     fn finish(&mut self, t: Tracked, finish: FinishReason) {
         self.metrics.completed += 1;
+        let ttft = t.first_token_at.map(|at| at - t.arrived);
+        let total = t.arrived.elapsed();
+        if let Some(ttft) = ttft {
+            self.metrics.ttft_hist.record(ttft);
+        }
+        self.metrics.e2e_hist.record(total);
+        if let Some(o) = self.obs() {
+            if let Some(ttft) = ttft {
+                o.ttft.record(ttft);
+            }
+            o.e2e.record(total);
+            o.completed.fetch_add(1, Relaxed);
+            // retrospective whole-request timeline span (roots the request
+            // on the trace timeline; one batched step serves many requests)
+            let total_ns = total.as_nanos().min(u64::MAX as u128) as u64;
+            let start_ns = o.now_ns().saturating_sub(total_ns);
+            o.record_span(SpanKind::Request, "request", 0, start_ns, total_ns, t.req.id);
+        }
         self.finished.push(Response {
             id: t.req.id,
             prompt_len: t.req.prompt.len(),
             tokens: t.generated,
             finish,
-            ttft: t.first_token_at.map(|at| at - t.arrived).unwrap_or_default(),
-            total: t.arrived.elapsed(),
+            ttft: ttft.unwrap_or_default(),
+            total,
         });
     }
 
@@ -349,6 +397,65 @@ mod tests {
         e.submit(Request::greedy(0, vec![2, 3], 4));
         let r = &e.run_to_completion()[0];
         assert!(r.ttft <= r.total);
+    }
+
+    #[test]
+    fn latency_histograms_populate() {
+        let mut e = engine(4);
+        for i in 0..6 {
+            e.submit(Request::greedy(i, vec![5, 6, 7], 5));
+        }
+        let res = e.run_to_completion();
+        assert_eq!(res.len(), 6);
+        assert_eq!(e.metrics.ttft_hist.count(), 6);
+        assert_eq!(e.metrics.e2e_hist.count(), 6);
+        assert_eq!(e.metrics.queue_wait_hist.count(), 6);
+        // one TPOT sample per generated decode token
+        assert_eq!(e.metrics.tpot_hist.count(), e.metrics.decode_tokens);
+        // end-to-end dominates time-to-first-token for every request
+        assert!(e.metrics.e2e_hist.max_ns() >= e.metrics.ttft_hist.max_ns());
+    }
+
+    #[test]
+    fn obs_hub_records_spans_and_mirrors() {
+        use crate::runtime::Runtime;
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let obs = Obs::new(4096);
+        let model = Transformer::from_weights(&ModelWeights::random(cfg, 9))
+            .with_runtime(Runtime::serial().with_obs(obs.clone()));
+        let mut e = Engine::new(
+            Arc::new(model),
+            EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+        );
+        for i in 0..3 {
+            e.submit(Request::greedy(i, vec![5, 6, 7], 4));
+        }
+        let res = e.run_to_completion();
+        assert_eq!(res.len(), 3);
+        assert_eq!(obs.submitted.load(Relaxed), 3);
+        assert_eq!(obs.completed.load(Relaxed), 3);
+        assert_eq!(obs.ttft.count(), 3);
+        assert_eq!(obs.e2e.count(), 3);
+        assert!(!obs.profiles.is_empty(), "fp16 GEMMs must be profiled");
+        let spans = obs.spans.snapshot();
+        for kind in [
+            SpanKind::Request,
+            SpanKind::Step,
+            SpanKind::Prefill,
+            SpanKind::Decode,
+            SpanKind::Layer,
+            SpanKind::Kernel,
+        ] {
+            assert!(spans.iter().any(|s| s.kind == kind), "missing {kind:?} span");
+        }
+        // hierarchy: every Prefill and Decode span parents to a Step span
+        let step_ids: Vec<u64> =
+            spans.iter().filter(|s| s.kind == SpanKind::Step).map(|s| s.id).collect();
+        for s in spans.iter().filter(|s| {
+            s.kind == SpanKind::Prefill || s.kind == SpanKind::Decode
+        }) {
+            assert!(step_ids.contains(&s.parent), "span {:?} orphaned", s.kind);
+        }
     }
 
     #[test]

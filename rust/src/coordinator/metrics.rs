@@ -1,6 +1,9 @@
 //! Serving metrics: throughput, latency decomposition, batch occupancy,
-//! and KV-pool gauges (blocks in use, prefix hit rate, preemptions).
+//! KV-pool gauges (blocks in use, prefix hit rate, preemptions), and
+//! log-bucketed latency histograms (TTFT, per-output-token, queue wait,
+//! end-to-end) with p50/p90/p99 quantiles.
 
+use crate::obs::LatencyHist;
 use std::time::Duration;
 
 #[derive(Clone, Debug, Default)]
@@ -26,6 +29,15 @@ pub struct Metrics {
     /// KV pool size and high-water occupancy, in blocks.
     pub pool_blocks_total: usize,
     pub peak_blocks_in_use: usize,
+    /// Time to first token per completed request (submit → first decode).
+    pub ttft_hist: LatencyHist,
+    /// Per-output-token latency (each decode step's duration, weighted by
+    /// tokens produced in that step).
+    pub tpot_hist: LatencyHist,
+    /// Arrival → first prefill compute (fresh admissions only).
+    pub queue_wait_hist: LatencyHist,
+    /// Submit → completion per request.
+    pub e2e_hist: LatencyHist,
 }
 
 impl Metrics {
@@ -76,6 +88,10 @@ impl Metrics {
         self.prefix_hits += o.prefix_hits;
         self.pool_blocks_total += o.pool_blocks_total;
         self.peak_blocks_in_use += o.peak_blocks_in_use;
+        self.ttft_hist.merge(&o.ttft_hist);
+        self.tpot_hist.merge(&o.tpot_hist);
+        self.queue_wait_hist.merge(&o.queue_wait_hist);
+        self.e2e_hist.merge(&o.e2e_hist);
     }
 
     /// Fraction of prefix-index probes that hit (block granularity).
@@ -87,15 +103,22 @@ impl Metrics {
         }
     }
 
+    /// One-line summary in fixed units (milliseconds) so logs and CI can
+    /// parse it — `Duration`'s `{:?}` switches units with magnitude.
     pub fn summary(&self) -> String {
+        let ms = |d: Duration| d.as_secs_f64() * 1e3;
         format!(
-            "submitted={} completed={} prefill_tok={} decode_tok={} prefill={:?} decode={:?} mean_batch={:.2} peak_blocks={}/{} preempt={} prefix_hit_tok={} hit_rate={:.1}%",
+            "submitted={} completed={} prefill_tok={} decode_tok={} prefill_ms={:.1} decode_ms={:.1} ttft_p50_ms={:.2} ttft_p99_ms={:.2} tpot_p50_ms={:.3} tpot_p99_ms={:.3} mean_batch={:.2} peak_blocks={}/{} preempt={} prefix_hit_tok={} hit_rate={:.1}%",
             self.submitted,
             self.completed,
             self.prefill_tokens,
             self.decode_tokens,
-            self.prefill_time,
-            self.decode_time,
+            ms(self.prefill_time),
+            ms(self.decode_time),
+            self.ttft_hist.quantile_ms(0.5),
+            self.ttft_hist.quantile_ms(0.99),
+            self.tpot_hist.quantile_ms(0.5),
+            self.tpot_hist.quantile_ms(0.99),
             self.mean_batch(),
             self.peak_blocks_in_use,
             self.pool_blocks_total,
@@ -151,6 +174,38 @@ mod tests {
         assert_eq!(a.max_batch_seen, 5);
         assert_eq!(a.pool_blocks_total, 16);
         assert_eq!(a.peak_blocks_in_use, 4);
+    }
+
+    #[test]
+    fn merge_folds_latency_histograms_across_replicas() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.ttft_hist.record(Duration::from_millis(10));
+        b.ttft_hist.record(Duration::from_millis(30));
+        b.tpot_hist.record_n(Duration::from_micros(800), 5);
+        a.merge(&b);
+        assert_eq!(a.ttft_hist.count(), 2);
+        assert_eq!(a.tpot_hist.count(), 5);
+        // p99 of the merged hist reflects the slower replica
+        assert!(a.ttft_hist.quantile_ms(0.99) > 25.0);
+    }
+
+    #[test]
+    fn summary_uses_fixed_millisecond_units() {
+        let mut m = Metrics {
+            prefill_time: Duration::from_micros(1500),
+            decode_time: Duration::from_secs(2),
+            ..Metrics::default()
+        };
+        m.ttft_hist.record(Duration::from_millis(12));
+        m.tpot_hist.record(Duration::from_micros(900));
+        let s = m.summary();
+        assert!(s.contains("prefill_ms=1.5"), "{s}");
+        assert!(s.contains("decode_ms=2000.0"), "{s}");
+        assert!(s.contains("ttft_p50_ms="), "{s}");
+        assert!(s.contains("tpot_p99_ms="), "{s}");
+        // no magnitude-dependent Duration debug formatting
+        assert!(!s.contains("µs") && !s.contains("ms ") && !s.contains('?'), "{s}");
     }
 
     #[test]

@@ -276,6 +276,24 @@ mod tests {
     }
 
     #[test]
+    fn threaded_replicas_merge_latency_histograms() {
+        // per-replica engines record into their own Metrics on their own
+        // OS threads; merged_metrics must fold the latency histograms so
+        // fleet-wide p50/p99 cover every request
+        let mut r = router(3, Policy::LeastLoaded);
+        let res = r.run_threaded(workload(12));
+        assert_eq!(res.len(), 12);
+        let m = r.merged_metrics();
+        assert_eq!(m.ttft_hist.count(), 12);
+        assert_eq!(m.e2e_hist.count(), 12);
+        assert_eq!(m.queue_wait_hist.count(), 12);
+        assert_eq!(m.tpot_hist.count(), m.decode_tokens);
+        let per_replica: u64 = r.engines.iter().map(|e| e.metrics.e2e_hist.count()).sum();
+        assert_eq!(per_replica, 12);
+        assert!(m.summary().contains("ttft_p50_ms="));
+    }
+
+    #[test]
     fn threaded_tokens_match_synchronous_mode() {
         // replica threads + channel dispatch must not change greedy tokens
         let mut sync_r = router(2, Policy::RoundRobin);

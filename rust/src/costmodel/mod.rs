@@ -87,6 +87,37 @@ pub fn accel_vs_fp16(gpu: &Gpu, kernel: &dyn GemmKernel, m: u64, k: u64, n: u64,
     latency(gpu, &*fp16, m, k, n, g) / latency(gpu, kernel, m, k, n, g)
 }
 
+/// Derive per-kernel utilization multipliers from measured runtime
+/// profiles — the `costmodel`-validation loop the observability layer
+/// closes. `samples` holds per-kernel `(name, measured_s, predicted_s)`
+/// aggregates (see `obs::KernelProfiles::calibration_samples`); the
+/// returned multiplier for each kernel is the factor its
+/// [`GemmKernel::utilization`] would need so that *relative* predictions
+/// match *relative* measurements, normalized against `reference` (whose
+/// multiplier is 1.0 by construction).
+///
+/// The model prices an A100 while measurements come from the CPU
+/// substrate, so absolute ratios are meaningless — but if measurements are
+/// exactly proportional to predictions, every multiplier is 1.0, and a
+/// kernel measuring 2× slower than the model claims (relative to the
+/// reference) gets multiplier 0.5. Kernels with no usable measurement are
+/// omitted; an unusable reference yields an empty result.
+pub fn recalibrate_utilization(
+    samples: &[(String, f64, f64)],
+    reference: &str,
+) -> Vec<(String, f64)> {
+    let ratio = |m: f64, p: f64| if m > 0.0 && p > 0.0 { Some(m / p) } else { None };
+    let Some(ref_ratio) =
+        samples.iter().find(|(n, _, _)| n == reference).and_then(|(_, m, p)| ratio(*m, *p))
+    else {
+        return Vec::new();
+    };
+    samples
+        .iter()
+        .filter_map(|(n, m, p)| ratio(*m, *p).map(|r| (n.clone(), ref_ratio / r)))
+        .collect()
+}
+
 /// End-to-end per-token decode latency estimate for a model with `layers`
 /// transformer blocks of hidden size `d` and FFN size `ff`, batch `m`
 /// (used by the Fig. 1 / Fig. 5(c) analytical columns).
@@ -183,6 +214,35 @@ mod tests {
         let large_is = accel_vs_fp16(&gpu, &*is, 256, K, N, G);
         let large_16 = accel_vs_fp16(&gpu, &*w4a16, 256, K, N, G);
         assert!(large_is > large_16, "is={large_is} w4a16={large_16}");
+    }
+
+    #[test]
+    fn recalibration_is_identity_for_proportional_measurements() {
+        let samples = vec![
+            ("w4a8-fg-is".to_string(), 2.0, 1.0),
+            ("w4a8-fg-fs".to_string(), 6.0, 3.0),
+        ];
+        let mult = recalibrate_utilization(&samples, "w4a8-fg-is");
+        assert_eq!(mult.len(), 2);
+        for (_, f) in &mult {
+            assert!((f - 1.0).abs() < 1e-12, "proportional measurements → 1.0, got {f}");
+        }
+    }
+
+    #[test]
+    fn recalibration_flags_relatively_slow_kernels() {
+        // FS measured 2× slower than the model claims relative to IS
+        let samples = vec![
+            ("w4a8-fg-is".to_string(), 1.0, 1.0),
+            ("w4a8-fg-fs".to_string(), 4.0, 2.0),
+        ];
+        let mult = recalibrate_utilization(&samples, "w4a8-fg-is");
+        let fs = mult.iter().find(|(n, _)| n == "w4a8-fg-fs").unwrap().1;
+        assert!((fs - 0.5).abs() < 1e-12, "fs={fs}");
+        // unusable reference → empty
+        assert!(recalibrate_utilization(&samples, "missing").is_empty());
+        let zeroed = vec![("a".to_string(), 0.0, 1.0)];
+        assert!(recalibrate_utilization(&zeroed, "a").is_empty());
     }
 
     #[test]

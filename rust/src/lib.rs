@@ -33,6 +33,14 @@
 //! [`coordinator::Router::run_threaded`] — greedy outputs are
 //! token-identical for every worker/replica count.
 //!
+//! **Observability:** attaching an [`obs::Obs`] hub to the runtime
+//! (`serve --metrics-out`, or the `profile` subcommand) records
+//! hierarchical spans (request → step → prefill/decode → layer → kernel →
+//! tile), log-bucketed latency histograms (TTFT, per-output-token, queue
+//! wait, end-to-end), and per-kernel runtime profiles that sit measured
+//! nanoseconds next to the analytical [`gemm::trace::OpTrace`] counts —
+//! exported as Prometheus text or JSON snapshots.
+//!
 //! See `DESIGN.md` for the full system inventory — including the paged
 //! KV-cache pool in [`kvpool`] and the threading model — and the
 //! experiment index (which bench or example reproduces which figure).
@@ -45,6 +53,7 @@ pub mod eval;
 pub mod gemm;
 pub mod kvpool;
 pub mod model;
+pub mod obs;
 pub mod plan;
 pub mod quant;
 pub mod runtime;

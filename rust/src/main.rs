@@ -8,6 +8,14 @@
 //!             [--prompt-len 16] [--new-tokens 32] [--moe]
 //!             [--workers N]    # GEMM tiles across N pool lanes
 //!             [--replicas M]   # M engines on real OS threads
+//!             [--metrics-out serve.json]      # snapshot at exit
+//!                                             # (.json → JSON, else Prometheus text)
+//!             [--metrics-interval-ms 500]     # also dump periodically while serving
+//!             [--trace-spans 4096]            # span ring capacity (0 disables spans)
+//! repro profile [--schemes w4a8-fs,w4a8-is] [--requests 8]
+//!             [--prompt-len 16] [--new-tokens 16] [--workers N]
+//!                                  # run a workload per scheme, print per-kernel
+//!                                  # measured ns next to OpTrace-predicted costs
 //! repro runtime-check [--workers N]  # parallel == serial + speedup
 //! repro info                       # model / config / artifact inventory
 //! repro --eval-tokens 1536 tables  # steadier PPL estimates
@@ -16,19 +24,22 @@
 //! (CLI is hand-rolled: clap is not available in this offline environment.)
 
 use integer_scale::coordinator::{Engine, EngineConfig, Policy, Request, Router};
+use integer_scale::costmodel::recalibrate_utilization;
 use integer_scale::data::{CorpusGen, Split};
 use integer_scale::model::quantize::{
     kernel_assignment, quantize_model_plan, Method, QuantSpec,
 };
 use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::obs::{format_table, MetricsSnapshot, Obs};
 use integer_scale::plan::{PlanBuilder, QuantPlan};
 use integer_scale::quant::{BitWidth, Bits, Granularity};
 use integer_scale::runtime::Runtime;
 use integer_scale::tables::{self, Ctx};
 use integer_scale::tensor::Mat;
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 struct Args {
     cmd: String,
@@ -118,6 +129,9 @@ fn serve(args: &Args) {
     let new_tokens = args.get_usize("new-tokens", 32);
     let workers = args.get_usize("workers", 1);
     let replicas = args.get_usize("replicas", 1).max(1);
+    let metrics_out = args.flags.get("metrics-out").cloned();
+    let metrics_interval_ms = args.get_usize("metrics-interval-ms", 500);
+    let trace_spans = args.get_usize("trace-spans", 4096);
 
     let cfg = if moe { ModelConfig::moe_tiny() } else { ModelConfig::tiny() };
     let wpath = if moe { "artifacts/weights_moe.bin" } else { "artifacts/weights.bin" };
@@ -146,8 +160,11 @@ fn serve(args: &Args) {
         None => Transformer::from_weights(&weights),
         Some(p) => quantize_model_plan(&weights, p, &calib),
     };
-    // one pool serves every layer and every replica; workers=1 is serial
-    model.set_runtime(Runtime::threaded(workers));
+    // one pool serves every layer and every replica; workers=1 is serial.
+    // The observability hub (span ring + live histograms + kernel
+    // profiles) rides on the runtime so every replica shares it.
+    let obs = Obs::new(trace_spans);
+    model.set_runtime(Runtime::threaded(workers).with_obs(obs.clone()));
     if plan.as_ref().is_some_and(|p| p.has_auto() || p.overflow_guard) {
         // per-layer resolution is the interesting part: print it
         let mut counts: std::collections::BTreeMap<&'static str, usize> =
@@ -163,6 +180,8 @@ fn serve(args: &Args) {
         cfg.param_count()
     );
     let model = Arc::new(model);
+    // runtime handle for exporters: carries the obs hub + pool lane gauges
+    let rt_handle = model.rt.clone();
     let mut rng = integer_scale::tensor::Rng::new(77);
     let reqs: Vec<Request> = (0..requests)
         .map(|i| {
@@ -173,7 +192,26 @@ fn serve(args: &Args) {
         })
         .collect();
     let engine_cfg = |seed: u64| EngineConfig { max_batch, kv_token_budget: 128 * 256, seed };
-    let (res, wall, metrics) = if replicas > 1 {
+    // periodic dumper: while serving, write a live snapshot (synthesized
+    // from the obs hub's mirrors) to --metrics-out every interval
+    let stop_dumper = Arc::new(AtomicBool::new(false));
+    let dumper = match (&metrics_out, metrics_interval_ms) {
+        (Some(path), ms) if ms > 0 => {
+            let path = std::path::PathBuf::from(path);
+            let (obs, rt, stop) = (obs.clone(), rt_handle.clone(), stop_dumper.clone());
+            let t_start = Instant::now();
+            Some(std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(ms as u64));
+                    let snap =
+                        MetricsSnapshot::live(&obs, Some(&rt), t_start.elapsed().as_secs_f64());
+                    let _ = snap.write(&path);
+                }
+            }))
+        }
+        _ => None,
+    };
+    let (res, wall, metrics, routed) = if replicas > 1 {
         // true multi-replica serving: one engine per OS thread behind a
         // request channel, least-loaded dispatch with round-robin ties
         let engines = (0..replicas)
@@ -184,7 +222,8 @@ fn serve(args: &Args) {
         let res = router.run_threaded(reqs);
         let wall = t0.elapsed();
         println!("routed per replica: {:?}", router.routed);
-        (res, wall, router.merged_metrics())
+        let routed = router.routed.clone();
+        (res, wall, router.merged_metrics(), routed)
     } else {
         let mut engine = Engine::new(model, engine_cfg(3));
         for req in reqs {
@@ -192,7 +231,7 @@ fn serve(args: &Args) {
         }
         let t0 = Instant::now();
         let res = engine.run_to_completion();
-        (res, t0.elapsed(), engine.metrics.clone())
+        (res, t0.elapsed(), engine.metrics.clone(), Vec::new())
     };
     let gen_toks: usize = res.iter().map(|r| r.tokens.len()).sum();
     let mean_ttft: f64 =
@@ -208,6 +247,85 @@ fn serve(args: &Args) {
         metrics.mean_batch()
     );
     println!("{}", metrics.summary());
+    if let Some(h) = dumper {
+        stop_dumper.store(true, Ordering::Relaxed);
+        let _ = h.join();
+    }
+    if let Some(path) = &metrics_out {
+        // final authoritative snapshot: merged engine Metrics + kernel
+        // profiles, lane gauges, and span counters from the obs hub
+        let snap = MetricsSnapshot::build(&metrics, Some(&rt_handle), wall.as_secs_f64())
+            .with_routed(&routed);
+        match snap.write(Path::new(path)) {
+            Ok(()) => println!(
+                "metrics written to {path} (spans recorded={} dropped={})",
+                obs.spans.recorded(),
+                obs.spans.dropped()
+            ),
+            Err(e) => eprintln!("failed to write metrics to {path}: {e}"),
+        }
+    }
+}
+
+/// `repro profile` — run a short serving workload per scheme with the
+/// observability hub attached, then print the per-kernel runtime profile
+/// table: measured ns per call next to the analytical `OpTrace`-derived
+/// cost-model prediction, plus suggested utilization multipliers that
+/// would bring the A100 roofline model in line with this host's measured
+/// kernel ratios (reference: the integer-scale kernel).
+fn profile(args: &Args) {
+    let schemes_arg = args.get_str("schemes", "w4a8-fs,w4a8-is");
+    let requests = args.get_usize("requests", 8);
+    let prompt_len = args.get_usize("prompt-len", 16);
+    let new_tokens = args.get_usize("new-tokens", 16);
+    let workers = args.get_usize("workers", 1);
+    let cfg = ModelConfig::tiny();
+    let weights = ModelWeights::load_or_random(Path::new("artifacts/weights.bin"), cfg, 1234);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(192, Split::C4, 11);
+    // per-kernel (measured_s, predicted_s) aggregates pooled across schemes
+    let mut samples: Vec<(String, f64, f64)> = Vec::new();
+    for scheme in schemes_arg.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let plan = scheme_plan(scheme);
+        let mut model = match &plan {
+            None => Transformer::from_weights(&weights),
+            Some(p) => quantize_model_plan(&weights, p, &calib),
+        };
+        // profiles only — span retention is not needed here
+        let obs = Obs::new(0);
+        model.set_runtime(Runtime::threaded(workers).with_obs(obs.clone()));
+        let mut engine = Engine::new(
+            Arc::new(model),
+            EngineConfig { max_batch: 8, kv_token_budget: 128 * 256, seed: 3 },
+        );
+        let mut rng = integer_scale::tensor::Rng::new(77);
+        for i in 0..requests {
+            let doc = gen.document(prompt_len, Split::C4, &mut rng);
+            let mut req = Request::greedy(i as u64, doc, new_tokens);
+            req.stop_at_eos = false;
+            engine.submit(req);
+        }
+        let res = engine.run_to_completion();
+        println!("--- scheme {scheme}: {} requests, per-kernel profile ---", res.len());
+        print!("{}", format_table(&obs.profiles.rows()));
+        for (name, meas, pred) in obs.profiles.calibration_samples() {
+            match samples.iter_mut().find(|(n, _, _)| *n == name) {
+                Some(s) => {
+                    s.1 += meas;
+                    s.2 += pred;
+                }
+                None => samples.push((name, meas, pred)),
+            }
+        }
+    }
+    let reference = "w4a8-fg-is";
+    let multipliers = recalibrate_utilization(&samples, reference);
+    if !multipliers.is_empty() {
+        println!("--- suggested utilization multipliers (reference {reference}) ---");
+        for (name, f) in multipliers {
+            println!("{name:<16} x{f:.3}");
+        }
+    }
 }
 
 /// Verify the threaded execution runtime on this machine: parallel GEMM
@@ -342,11 +460,12 @@ fn main() {
             println!("{}", toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","));
         }
         "serve" => serve(&args),
+        "profile" => profile(&args),
         "runtime-check" => runtime_check(&args),
         "info" => info(),
         other => {
             eprintln!(
-                "unknown command '{other}'\ncommands: tables table1..table8 figs fig1 fig3 fig4 fig5a fig5b fig6 fig7 fig8 serve runtime-check info"
+                "unknown command '{other}'\ncommands: tables table1..table8 figs fig1 fig3 fig4 fig5a fig5b fig6 fig7 fig8 serve profile runtime-check info"
             );
             std::process::exit(2);
         }

@@ -8,10 +8,12 @@
 //! [`GemmKernel`] makes it servable without touching this file.
 
 use crate::gemm::{self, GemmKernel, PackedWeight};
+use crate::obs::SpanKind;
 use crate::quant::methods::{apply_act_transform, QuantizedLinear};
 use crate::runtime::Runtime;
 use crate::tensor::Mat;
 use std::sync::Arc;
+use std::time::Instant;
 
 #[derive(Clone)]
 pub enum Linear {
@@ -86,14 +88,30 @@ impl Linear {
     /// forward over the pool's lanes — both bit-identical to serial, so a
     /// model produces the same outputs for every worker count.
     pub fn forward_rt(&self, x: &Mat, rt: &Runtime) -> Mat {
-        match self {
+        let obs = rt.obs().filter(|o| o.is_enabled());
+        let name = self.kernel_name();
+        // the Kernel span stays open across the GEMM so pool tile spans
+        // parent to it; the profile row keys on (kernel, M, K, N, g)
+        let _kernel_span = obs.and_then(|o| o.span_tagged(SpanKind::Kernel, name, x.rows as u64));
+        let t0 = obs.map(|_| Instant::now());
+        let out = match self {
             Linear::Float(w) => gemm::fp32::gemm_f32_rt(x, w, rt),
             Linear::Quant { pw, kernel, act_smooth, rotate } => {
                 // online activation transforms (QuaRot FWHT / smoothing)
                 let xt = apply_act_transform(x, *rotate, act_smooth.as_deref());
                 kernel.forward_rt(&xt, pw, rt)
             }
+        };
+        if let (Some(o), Some(t0)) = (obs, t0) {
+            // measured time includes the online activation transform —
+            // that is the layer's true serving cost for this kernel
+            let (k, n, g) = match self {
+                Linear::Float(w) => (w.cols, w.rows, w.cols),
+                Linear::Quant { pw, .. } => (pw.k, pw.n, pw.group),
+            };
+            o.profiles.record(name, x.rows, k, n, g, t0.elapsed());
         }
+        out
     }
 }
 

@@ -10,6 +10,7 @@ use super::linear::Linear;
 use super::moe::MoeLayer;
 use super::weights::ModelWeights;
 use super::{rms_norm, rope_row, softmax, ModelConfig};
+use crate::obs::SpanKind;
 use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
@@ -198,8 +199,12 @@ impl Transformer {
     /// Prefill `tokens` for one sequence; returns logits for every position
     /// (`t × vocab`). The cache must be empty or a continuation.
     pub fn prefill(&self, tokens: &[u32], cache: &mut KvCache) -> Mat {
+        let obs = self.rt.obs().filter(|o| o.is_enabled());
+        let _prefill_span =
+            obs.and_then(|o| o.span_tagged(SpanKind::Prefill, "prefill", tokens.len() as u64));
         let mut x = self.embed_tokens(tokens);
         for (li, layer) in self.layers.iter().enumerate() {
+            let _layer_span = obs.and_then(|o| o.span_tagged(SpanKind::Layer, "layer", li as u64));
             let h = rms_norm(&x, &layer.attn_norm);
             let mut q = layer.wq.forward_rt(&h, &self.rt);
             let mut k = layer.wk.forward_rt(&h, &self.rt);
@@ -221,10 +226,14 @@ impl Transformer {
     /// cache. Returns `b × vocab` logits.
     pub fn decode_batch(&self, tokens: &[u32], caches: &mut [&mut KvCache]) -> Mat {
         assert_eq!(tokens.len(), caches.len());
+        let obs = self.rt.obs().filter(|o| o.is_enabled());
+        let _decode_span =
+            obs.and_then(|o| o.span_tagged(SpanKind::Decode, "decode", tokens.len() as u64));
         let b = tokens.len();
         let d = self.config.d_model;
         let mut x = self.embed_tokens(tokens);
         for (li, layer) in self.layers.iter().enumerate() {
+            let _layer_span = obs.and_then(|o| o.span_tagged(SpanKind::Layer, "layer", li as u64));
             let h = rms_norm(&x, &layer.attn_norm);
             // ONE batched GEMM per projection across all sequences
             let q_all = layer.wq.forward_rt(&h, &self.rt);

@@ -1,0 +1,607 @@
+//! Metric exporters: Prometheus text exposition format and a JSON
+//! snapshot, plus the dependency-free JSON reader tests use to assert the
+//! snapshot parses back correctly.
+//!
+//! A [`MetricsSnapshot`] is a point-in-time copy of everything observable:
+//! the (possibly replica-merged) [`Metrics`], the kernel profile table,
+//! worker-lane gauges, and span-ring counters. `serve --metrics-out`
+//! writes one periodically and once at exit; the file extension picks the
+//! format (`.json` → JSON, anything else → Prometheus text).
+
+use super::profile::ProfileRow;
+use super::Obs;
+use crate::coordinator::Metrics;
+use crate::runtime::{LaneStats, Runtime};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Point-in-time export bundle.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// Wall-clock seconds the workload has been running.
+    pub wall_s: f64,
+    pub metrics: Metrics,
+    pub kernels: Vec<ProfileRow>,
+    pub lanes: Vec<LaneStats>,
+    /// Requests routed per replica (empty for single-engine runs).
+    pub routed: Vec<u64>,
+    pub spans_recorded: u64,
+    pub spans_dropped: u64,
+}
+
+impl MetricsSnapshot {
+    /// Final snapshot from the authoritative (merged) [`Metrics`], plus
+    /// whatever the runtime's obs hub and pool gauges have accumulated.
+    pub fn build(metrics: &Metrics, rt: Option<&Runtime>, wall_s: f64) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot {
+            wall_s,
+            metrics: metrics.clone(),
+            ..MetricsSnapshot::default()
+        };
+        if let Some(rt) = rt {
+            snap.lanes = rt.lane_stats();
+            if let Some(obs) = rt.obs() {
+                snap.kernels = obs.profiles.rows();
+                snap.spans_recorded = obs.spans.recorded();
+                snap.spans_dropped = obs.spans.dropped();
+            }
+        }
+        snap
+    }
+
+    /// Mid-run snapshot from the obs hub's live mirrors — what the periodic
+    /// `--metrics-out` dumper exports while engines still own their
+    /// per-replica [`Metrics`].
+    pub fn live(obs: &Obs, rt: Option<&Runtime>, wall_s: f64) -> MetricsSnapshot {
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = Metrics {
+            submitted: obs.submitted.load(Relaxed),
+            completed: obs.completed.load(Relaxed),
+            decode_tokens: obs.decode_tokens.load(Relaxed),
+            ttft_hist: obs.ttft.clone(),
+            tpot_hist: obs.tpot.clone(),
+            queue_wait_hist: obs.queue_wait.clone(),
+            e2e_hist: obs.e2e.clone(),
+            ..Metrics::default()
+        };
+        MetricsSnapshot {
+            wall_s,
+            metrics: m,
+            kernels: obs.profiles.rows(),
+            lanes: rt.map(|rt| rt.lane_stats()).unwrap_or_default(),
+            routed: Vec::new(),
+            spans_recorded: obs.spans.recorded(),
+            spans_dropped: obs.spans.dropped(),
+        }
+    }
+
+    /// Attach per-replica routing counts (router runs).
+    pub fn with_routed(mut self, routed: &[u64]) -> MetricsSnapshot {
+        self.routed = routed.to_vec();
+        self
+    }
+
+    /// Decode tokens per wall-clock second.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.metrics.decode_tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Prometheus text exposition format (`is_` metric prefix).
+    pub fn prometheus(&self) -> String {
+        let m = &self.metrics;
+        let mut s = String::new();
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            out.push_str(&format!(
+                "# HELP is_{name} {help}\n# TYPE is_{name} counter\nis_{name} {v}\n"
+            ));
+        };
+        counter(&mut s, "requests_submitted", "Requests accepted into the queue.", m.submitted);
+        counter(&mut s, "requests_completed", "Requests fully generated.", m.completed);
+        counter(&mut s, "prefill_tokens", "Prompt tokens computed at prefill.", m.prefill_tokens);
+        counter(&mut s, "decode_tokens", "Output tokens generated.", m.decode_tokens);
+        counter(&mut s, "preemptions", "Sequences evicted on pool exhaustion.", m.preemptions);
+        counter(&mut s, "prefix_hit_tokens", "Prompt tokens served from cache.", m.prefix_hit_tokens);
+        counter(&mut s, "spans_recorded", "Spans pushed to the trace ring.", self.spans_recorded);
+        counter(&mut s, "spans_dropped", "Spans lost to ring wraparound.", self.spans_dropped);
+        s.push_str(&format!(
+            "# HELP is_pool_blocks_total KV pool capacity in blocks.\n# TYPE is_pool_blocks_total gauge\nis_pool_blocks_total {}\n",
+            m.pool_blocks_total
+        ));
+        s.push_str(&format!(
+            "# HELP is_mean_decode_batch Mean decode batch occupancy.\n# TYPE is_mean_decode_batch gauge\nis_mean_decode_batch {}\n",
+            fnum(m.mean_batch())
+        ));
+        s.push_str(&format!(
+            "# HELP is_tokens_per_sec Decode tokens per wall-clock second.\n# TYPE is_tokens_per_sec gauge\nis_tokens_per_sec {}\n",
+            fnum(self.tokens_per_sec())
+        ));
+        for (name, help, h) in [
+            ("ttft_seconds", "Time to first token.", &m.ttft_hist),
+            ("tpot_seconds", "Per-output-token latency.", &m.tpot_hist),
+            ("queue_wait_seconds", "Arrival to first prefill.", &m.queue_wait_hist),
+            ("e2e_seconds", "End-to-end request latency.", &m.e2e_hist),
+        ] {
+            s.push_str(&format!("# HELP is_{name} {help}\n# TYPE is_{name} summary\n"));
+            for q in [0.5, 0.9, 0.99] {
+                s.push_str(&format!(
+                    "is_{name}{{quantile=\"{q}\"}} {}\n",
+                    fnum(h.quantile(q) / 1e9)
+                ));
+            }
+            s.push_str(&format!("is_{name}_sum {}\n", fnum(h.sum_ns() as f64 / 1e9)));
+            s.push_str(&format!("is_{name}_count {}\n", h.count()));
+        }
+        for l in &self.lanes {
+            s.push_str(&format!(
+                "is_lane_busy_seconds{{lane=\"{}\"}} {}\n",
+                l.lane,
+                fnum(l.busy_ns as f64 / 1e9)
+            ));
+            s.push_str(&format!("is_lane_tasks{{lane=\"{}\"}} {}\n", l.lane, l.tasks));
+        }
+        for (i, r) in self.routed.iter().enumerate() {
+            s.push_str(&format!("is_routed_requests{{replica=\"{i}\"}} {r}\n"));
+        }
+        for k in &self.kernels {
+            let labels = format!(
+                "kernel=\"{}\",m=\"{}\",k=\"{}\",n=\"{}\",g=\"{}\"",
+                k.kernel, k.m, k.k, k.n, k.g
+            );
+            s.push_str(&format!("is_kernel_calls{{{labels}}} {}\n", k.calls));
+            s.push_str(&format!("is_kernel_mean_ns{{{labels}}} {}\n", fnum(k.mean_ns)));
+            s.push_str(&format!("is_kernel_predicted_ns{{{labels}}} {}\n", fnum(k.predicted_ns)));
+        }
+        s
+    }
+
+    /// JSON snapshot (hand-rolled — the crate is dependency-free).
+    pub fn json(&self) -> String {
+        let m = &self.metrics;
+        let hist = |h: &super::LatencyHist| {
+            format!(
+                "{{\"count\":{},\"mean_ms\":{},\"p50_ms\":{},\"p90_ms\":{},\"p99_ms\":{},\"max_ms\":{}}}",
+                h.count(),
+                fnum(h.mean_ns() / 1e6),
+                fnum(h.quantile_ms(0.5)),
+                fnum(h.quantile_ms(0.9)),
+                fnum(h.quantile_ms(0.99)),
+                fnum(h.max_ns() as f64 / 1e6),
+            )
+        };
+        let lanes: Vec<String> = self
+            .lanes
+            .iter()
+            .map(|l| {
+                format!(
+                    "{{\"lane\":{},\"busy_ms\":{},\"tasks\":{}}}",
+                    l.lane,
+                    fnum(l.busy_ns as f64 / 1e6),
+                    l.tasks
+                )
+            })
+            .collect();
+        let kernels: Vec<String> = self
+            .kernels
+            .iter()
+            .map(|k| {
+                format!(
+                    "{{\"kernel\":{},\"m\":{},\"k\":{},\"n\":{},\"g\":{},\"calls\":{},\"mean_ns\":{},\"min_ns\":{},\"predicted_ns\":{},\"measured_vs_predicted\":{},\"i32_to_f32\":{},\"int_scale_mac\":{}}}",
+                    jstr(k.kernel),
+                    k.m,
+                    k.k,
+                    k.n,
+                    k.g,
+                    k.calls,
+                    fnum(k.mean_ns),
+                    k.min_ns,
+                    fnum(k.predicted_ns),
+                    fnum(k.measured_vs_predicted()),
+                    k.trace.i32_to_f32,
+                    k.trace.int_scale_mac,
+                )
+            })
+            .collect();
+        let routed: Vec<String> = self.routed.iter().map(|r| r.to_string()).collect();
+        format!(
+            "{{\n\
+             \"wall_s\":{},\n\
+             \"requests\":{{\"submitted\":{},\"completed\":{},\"preemptions\":{}}},\n\
+             \"tokens\":{{\"prefill\":{},\"decode\":{},\"prefix_hit\":{},\"tokens_per_sec\":{}}},\n\
+             \"batch\":{{\"mean\":{},\"max\":{}}},\n\
+             \"pool\":{{\"blocks_total\":{},\"peak_blocks_in_use\":{},\"prefix_hit_rate\":{}}},\n\
+             \"latency\":{{\"ttft\":{},\"tpot\":{},\"queue_wait\":{},\"e2e\":{}}},\n\
+             \"lanes\":[{}],\n\
+             \"kernels\":[{}],\n\
+             \"spans\":{{\"recorded\":{},\"dropped\":{}}},\n\
+             \"routed\":[{}]\n\
+             }}\n",
+            fnum(self.wall_s),
+            m.submitted,
+            m.completed,
+            m.preemptions,
+            m.prefill_tokens,
+            m.decode_tokens,
+            m.prefix_hit_tokens,
+            fnum(self.tokens_per_sec()),
+            fnum(m.mean_batch()),
+            m.max_batch_seen,
+            m.pool_blocks_total,
+            m.peak_blocks_in_use,
+            fnum(m.prefix_hit_rate()),
+            hist(&m.ttft_hist),
+            hist(&m.tpot_hist),
+            hist(&m.queue_wait_hist),
+            hist(&m.e2e_hist),
+            lanes.join(","),
+            kernels.join(","),
+            self.spans_recorded,
+            self.spans_dropped,
+            routed.join(","),
+        )
+    }
+
+    /// Write to `path`: `.json` extension → JSON, anything else →
+    /// Prometheus text format. Writes to a temp file then renames, so a
+    /// scraper never reads a half-written snapshot.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        let body = if path.extension().is_some_and(|e| e == "json") {
+            self.json()
+        } else {
+            self.prometheus()
+        };
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(body.as_bytes())?;
+        }
+        std::fs::rename(&tmp, path)
+    }
+}
+
+/// Finite-or-zero float formatting (NaN/inf are not valid JSON).
+fn fnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// JSON string literal with escaping.
+fn jstr(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Minimal parsed-JSON value — enough for tests (and tooling) to read a
+/// snapshot back without a serde dependency.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup, e.g. `path("latency.ttft.p50_ms")`.
+    pub fn path(&self, dotted: &str) -> Option<&JsonValue> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document (strict enough for snapshots; rejects trailing
+/// garbage).
+pub fn parse_json(src: &str) -> Result<JsonValue, String> {
+    let b = src.as_bytes();
+    let mut pos = 0usize;
+    let v = parse_value(b, &mut pos)?;
+    skip_ws(b, &mut pos);
+    if pos != b.len() {
+        return Err(format!("trailing data at byte {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", c as char, pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'{') => parse_obj(b, pos),
+        Some(b'[') => parse_arr(b, pos),
+        Some(b'"') => parse_str(b, pos).map(JsonValue::Str),
+        Some(b't') => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", JsonValue::Null),
+        Some(_) => parse_num(b, pos),
+        None => Err("unexpected end of input".to_string()),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: JsonValue) -> Result<JsonValue, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}"))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *pos += 1;
+    }
+    std::str::from_utf8(&b[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(JsonValue::Num)
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_str(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .and_then(|h| u32::from_str_radix(h, 16).ok())
+                            .ok_or_else(|| format!("bad \\u escape at byte {pos}"))?;
+                        out.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {pos}")),
+                }
+                *pos += 1;
+            }
+            Some(&c) => {
+                // copy the full UTF-8 sequence starting at c
+                let len = match c {
+                    0x00..=0x7f => 1,
+                    0xc0..=0xdf => 2,
+                    0xe0..=0xef => 3,
+                    _ => 4,
+                };
+                let chunk = b
+                    .get(*pos..*pos + len)
+                    .and_then(|s| std::str::from_utf8(s).ok())
+                    .ok_or_else(|| format!("bad utf8 at byte {pos}"))?;
+                out.push_str(chunk);
+                *pos += len;
+            }
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    expect(b, pos, b'{')?;
+    let mut fields = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(JsonValue::Obj(fields));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_str(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        fields.push((key, val));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(JsonValue::Obj(fields));
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<JsonValue, String> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(JsonValue::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(JsonValue::Arr(items));
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let mut m = Metrics {
+            submitted: 5,
+            completed: 5,
+            prefill_tokens: 40,
+            decode_tokens: 100,
+            pool_blocks_total: 64,
+            peak_blocks_in_use: 12,
+            ..Metrics::default()
+        };
+        m.record_batch(4);
+        for ms in [2u64, 4, 8] {
+            m.ttft_hist.record(Duration::from_millis(ms));
+            m.e2e_hist.record(Duration::from_millis(ms * 10));
+        }
+        m.tpot_hist.record_n(Duration::from_micros(500), 100);
+        MetricsSnapshot {
+            wall_s: 2.0,
+            metrics: m,
+            ..MetricsSnapshot::default()
+        }
+    }
+
+    #[test]
+    fn json_snapshot_parses_back() {
+        let snap = sample_snapshot();
+        let doc = parse_json(&snap.json()).expect("snapshot must be valid JSON");
+        assert_eq!(doc.path("requests.submitted").unwrap().as_f64(), Some(5.0));
+        assert_eq!(doc.path("tokens.decode").unwrap().as_f64(), Some(100.0));
+        assert_eq!(doc.path("tokens.tokens_per_sec").unwrap().as_f64(), Some(50.0));
+        let p50 = doc.path("latency.ttft.p50_ms").unwrap().as_f64().unwrap();
+        assert!((p50 - snap.metrics.ttft_hist.quantile_ms(0.5)).abs() < 1e-9);
+        let tpot_count = doc.path("latency.tpot.count").unwrap().as_f64().unwrap();
+        assert_eq!(tpot_count, 100.0);
+        assert!(doc.path("latency.queue_wait.p99_ms").is_some());
+        assert!(doc.path("spans.recorded").is_some());
+    }
+
+    #[test]
+    fn prometheus_contains_quantile_series() {
+        let snap = sample_snapshot();
+        let text = snap.prometheus();
+        assert!(text.contains("is_ttft_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("is_ttft_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("is_ttft_seconds_count 3"));
+        assert!(text.contains("is_tpot_seconds_count 100"));
+        assert!(text.contains("is_decode_tokens 100"));
+        assert!(text.contains("# TYPE is_ttft_seconds summary"));
+        // every non-comment line is "name{labels} value" with a finite value
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(val.parse::<f64>().unwrap().is_finite(), "line: {line}");
+        }
+    }
+
+    #[test]
+    fn write_picks_format_by_extension() {
+        let dir = std::env::temp_dir();
+        let json_path = dir.join("is_obs_test_snapshot.json");
+        let prom_path = dir.join("is_obs_test_snapshot.prom");
+        let snap = sample_snapshot();
+        snap.write(&json_path).unwrap();
+        snap.write(&prom_path).unwrap();
+        let j = std::fs::read_to_string(&json_path).unwrap();
+        assert!(parse_json(&j).is_ok());
+        let p = std::fs::read_to_string(&prom_path).unwrap();
+        assert!(p.starts_with("# HELP"));
+        let _ = std::fs::remove_file(json_path);
+        let _ = std::fs::remove_file(prom_path);
+    }
+
+    #[test]
+    fn parser_handles_nesting_escapes_and_errors() {
+        let doc = parse_json(r#"{"a":[1,2.5,-3e2],"b":{"c":"x\"y\\z\nw"},"t":true,"n":null}"#)
+            .unwrap();
+        assert_eq!(doc.path("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.path("a").unwrap().as_arr().unwrap()[2].as_f64(), Some(-300.0));
+        assert_eq!(doc.path("b.c").unwrap().as_str(), Some("x\"y\\z\nw"));
+        assert_eq!(doc.get("t"), Some(&JsonValue::Bool(true)));
+        assert_eq!(doc.get("n"), Some(&JsonValue::Null));
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{} trailing").is_err());
+        assert!(parse_json("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn jstr_escapes_controls() {
+        assert_eq!(jstr("plain"), "\"plain\"");
+        assert_eq!(jstr("a\"b"), "\"a\\\"b\"");
+        let round = parse_json(&jstr("tab\there\nline")).unwrap();
+        assert_eq!(round.as_str(), Some("tab\there\nline"));
+    }
+}

@@ -1,0 +1,331 @@
+//! Log-linear latency histograms with quantile estimation.
+//!
+//! The bucket scheme is HdrHistogram-flavored: values below 16 ns get one
+//! bucket per nanosecond (exact), and every power-of-two octave above that
+//! is split into 16 linear sub-buckets, so the relative width of any bucket
+//! is at most 1/16 ≈ 6.25% and the midpoint estimator is within ~3.2% of
+//! any sample in the bucket. 976 buckets cover the full `u64` nanosecond
+//! range (≈ 584 years), so no latency is ever out of range.
+//!
+//! Recording is one `fetch_add` per sample (plus min/max maintenance) on
+//! relaxed atomics — no locks, safe to share across engine replicas and
+//! pool lanes via `&self`. Quantiles are computed from a bucket snapshot,
+//! and clamped to the observed `[min, max]` so degenerate histograms are
+//! exact: a single recorded sample is returned verbatim for every `q`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-buckets per octave (must be a power of two).
+const SUB: usize = 16;
+const SUB_BITS: usize = 4;
+
+/// Total bucket count: 16 exact low buckets + 60 octaves × 16 sub-buckets.
+pub const BUCKETS: usize = SUB + (64 - SUB_BITS) * SUB;
+
+/// Bucket index for a nanosecond value.
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros() as usize; // floor(log2 v), >= SUB_BITS
+    let sub = ((v >> (octave - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    SUB + (octave - SUB_BITS) * SUB + sub
+}
+
+/// Half-open nanosecond range `[lo, hi)` a bucket covers.
+fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < SUB {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let octave = (idx - SUB) / SUB + SUB_BITS;
+    let sub = ((idx - SUB) % SUB) as u64;
+    let width = 1u64 << (octave - SUB_BITS);
+    let lo = (SUB as u64 + sub) << (octave - SUB_BITS);
+    (lo, lo.saturating_add(width))
+}
+
+/// A mergeable, lock-free latency histogram over nanoseconds.
+pub struct LatencyHist {
+    buckets: Box<[AtomicU64]>,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Clone for LatencyHist {
+    fn clone(&self) -> Self {
+        let h = LatencyHist::default();
+        for (d, s) in h.buckets.iter().zip(self.buckets.iter()) {
+            d.store(s.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        h.sum_ns.store(self.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        h.min_ns.store(self.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        h.max_ns.store(self.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        h
+    }
+}
+
+impl std::fmt::Debug for LatencyHist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "LatencyHist(count={}, p50={:.0}ns, p99={:.0}ns)",
+            self.count(),
+            self.quantile(0.5),
+            self.quantile(0.99)
+        )
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    /// Record one sample of `v` nanoseconds.
+    pub fn record_ns(&self, v: u64) {
+        self.record_ns_n(v, 1);
+    }
+
+    /// Record `n` samples that all took `v` nanoseconds (e.g. every token of
+    /// one batched decode step shares the step latency).
+    pub fn record_ns_n(&self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(n, Ordering::Relaxed);
+        self.sum_ns.fetch_add(v.saturating_mul(n), Ordering::Relaxed);
+        self.min_ns.fetch_min(v, Ordering::Relaxed);
+        self.max_ns.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn record_n(&self, d: Duration, n: u64) {
+        self.record_ns_n(d.as_nanos().min(u64::MAX as u128) as u64, n);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        let m = self.min_ns.load(Ordering::Relaxed);
+        if m == u64::MAX {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Mean sample in nanoseconds (0 for an empty histogram).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns() as f64 / n as f64
+        }
+    }
+
+    /// Nearest-rank quantile estimate in nanoseconds. `q` is clamped to
+    /// `[0, 1]`. Empty histograms return 0. The bucket-midpoint estimate is
+    /// clamped to the observed `[min, max]`, so a single-sample histogram
+    /// returns that sample exactly at every `q`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let n: u64 = counts.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (n - 1) as f64).round() as u64;
+        let mut cum = 0u64;
+        for (idx, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            if cum > rank {
+                let (lo, hi) = bucket_bounds(idx);
+                let mid = (lo as f64 + hi as f64) / 2.0;
+                return mid.clamp(self.min_ns() as f64, self.max_ns() as f64);
+            }
+        }
+        self.max_ns() as f64
+    }
+
+    /// Quantile in milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile(q) / 1e6
+    }
+
+    /// Fold another histogram into this one (bucket-exact: merging then
+    /// querying equals recording every sample into one histogram).
+    pub fn merge(&self, other: &LatencyHist) {
+        for (d, s) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = s.load(Ordering::Relaxed);
+            if v > 0 {
+                d.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_ns.fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_bounds_roundtrip() {
+        // every probed value must land in a bucket whose range contains it,
+        // and bucket indices must be monotone in the value
+        let mut probes: Vec<u64> = (0..200).collect();
+        for shift in 4..63 {
+            for off in [0u64, 1, 7] {
+                probes.push((1u64 << shift) + off);
+                probes.push((1u64 << shift).wrapping_sub(1));
+            }
+        }
+        probes.push(u64::MAX);
+        probes.sort_unstable();
+        let mut last_idx = 0usize;
+        for &v in &probes {
+            let idx = bucket_index(v);
+            assert!(idx < BUCKETS, "v={v} idx={idx}");
+            let (lo, hi) = bucket_bounds(idx);
+            // the top bucket's upper bound saturates at u64::MAX
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "v={v} not in [{lo},{hi})");
+            assert!(idx >= last_idx, "index not monotone at v={v}");
+            last_idx = idx;
+        }
+    }
+
+    #[test]
+    fn bucket_relative_width_bounded() {
+        // above the exact range, bucket width / lo <= 1/16
+        for idx in SUB..BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(hi > lo);
+            assert!((hi - lo) as f64 / lo as f64 <= 1.0 / SUB as f64 + 1e-12, "idx={idx}");
+        }
+    }
+
+    #[test]
+    fn empty_hist_is_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+    }
+
+    #[test]
+    fn single_sample_is_exact_at_every_quantile() {
+        let h = LatencyHist::new();
+        h.record_ns(123_456_789);
+        assert_eq!(h.count(), 1);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 123_456_789.0, "q={q}");
+        }
+        assert_eq!(h.mean_ns(), 123_456_789.0);
+    }
+
+    #[test]
+    fn quantiles_track_known_distribution() {
+        // 1..=1000 µs uniform: p50 ≈ 500µs, p99 ≈ 990µs, within bucket error
+        let h = LatencyHist::new();
+        for us in 1..=1000u64 {
+            h.record_ns(us * 1000);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 500_000.0).abs() / 500_000.0 < 0.07, "p50={p50}");
+        assert!((p99 - 990_000.0).abs() / 990_000.0 < 0.07, "p99={p99}");
+        assert!((h.mean_ns() - 500_500.0 * 1000.0 / 1000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_equals_recording_into_one() {
+        let a = LatencyHist::new();
+        let b = LatencyHist::new();
+        let all = LatencyHist::new();
+        for v in [5u64, 900, 1_000_000, 7, 42_000] {
+            a.record_ns(v);
+            all.record_ns(v);
+        }
+        for v in [3u64, 88_000_000, 1_000_000] {
+            b.record_ns(v);
+            all.record_ns(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum_ns(), all.sum_ns());
+        assert_eq!(a.min_ns(), all.min_ns());
+        assert_eq!(a.max_ns(), all.max_ns());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_preserves() {
+        let a = LatencyHist::new();
+        a.record_ns(777);
+        let empty = LatencyHist::new();
+        a.merge(&empty);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.quantile(0.5), 777.0);
+        // and empty.merge(full) equals full
+        empty.merge(&a);
+        assert_eq!(empty.count(), 1);
+        assert_eq!(empty.quantile(0.99), 777.0);
+    }
+
+    #[test]
+    fn record_n_counts_every_token() {
+        let h = LatencyHist::new();
+        h.record_ns_n(1000, 8);
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum_ns(), 8000);
+        assert_eq!(h.quantile(0.5), 1000.0);
+        h.record_ns_n(5, 0); // no-op
+        assert_eq!(h.count(), 8);
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let h = LatencyHist::new();
+        h.record_ns(10);
+        let c = h.clone();
+        h.record_ns(20);
+        assert_eq!(c.count(), 1);
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,0 +1,288 @@
+//! End-to-end observability: span tracing, latency histograms, per-kernel
+//! runtime profiles, and exportable metrics snapshots.
+//!
+//! One [`Obs`] handle per serving fleet, distributed to every layer through
+//! [`crate::runtime::Runtime`] (which the model already threads into each
+//! GEMM). Everything here is std-only and designed so the *disabled* state
+//! costs one relaxed atomic load per would-be record — the overhead budget
+//! `benches/perf_smoke.rs` enforces is < 2% tokens/s with tracing off.
+//!
+//! The pieces:
+//! * [`span`] — hierarchical spans (request → step → prefill/decode →
+//!   layer → kernel → tile) in a fixed-capacity overwrite-oldest ring.
+//! * [`hist`] — log-bucketed latency histograms (TTFT, per-output-token,
+//!   queue wait, end-to-end) with p50/p90/p99 and cross-replica merge.
+//! * [`profile`] — measured ns per (kernel, GEMM shape) joined with the
+//!   analytical [`crate::gemm::trace::OpTrace`] counts and the cost
+//!   model's prediction, validating `costmodel` against wall-clock.
+//! * [`export`] — Prometheus text format and JSON snapshots for
+//!   `serve --metrics-out` and the `profile` CLI subcommand.
+
+pub mod export;
+pub mod hist;
+pub mod profile;
+pub mod span;
+
+pub use export::MetricsSnapshot;
+pub use hist::LatencyHist;
+pub use profile::{format_table, KernelProfiles, ProfileRow, ShapeKey};
+pub use span::{SpanKind, SpanRecord, SpanRing};
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+thread_local! {
+    /// Id of the innermost open span on this thread (0 = none). Guards
+    /// save/restore it, so nesting needs no explicit parent plumbing;
+    /// cross-thread children (pool tile tasks) pass the parent explicitly.
+    static CURRENT_SPAN: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The observability hub: span ring + kernel profiles + live latency
+/// mirrors. Shared as `Arc<Obs>` via [`crate::runtime::Runtime::with_obs`].
+pub struct Obs {
+    enabled: AtomicBool,
+    /// All span timestamps are nanoseconds since this instant.
+    epoch: Instant,
+    next_span_id: AtomicU64,
+    pub spans: SpanRing,
+    pub profiles: KernelProfiles,
+    /// Live latency mirrors, recorded by the engine as requests finish so
+    /// the periodic `--metrics-out` dumper can export mid-run. The
+    /// authoritative per-replica histograms live in
+    /// [`crate::coordinator::Metrics`] and merge across replicas.
+    pub ttft: LatencyHist,
+    pub tpot: LatencyHist,
+    pub queue_wait: LatencyHist,
+    pub e2e: LatencyHist,
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub decode_tokens: AtomicU64,
+}
+
+impl Obs {
+    /// A new enabled hub whose span ring holds `span_capacity` records
+    /// (0 disables span retention but keeps histograms and profiles).
+    pub fn new(span_capacity: usize) -> Arc<Obs> {
+        Arc::new(Obs {
+            enabled: AtomicBool::new(true),
+            epoch: Instant::now(),
+            next_span_id: AtomicU64::new(0),
+            spans: SpanRing::new(span_capacity),
+            profiles: KernelProfiles::new(),
+            ttft: LatencyHist::new(),
+            tpot: LatencyHist::new(),
+            queue_wait: LatencyHist::new(),
+            e2e: LatencyHist::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            decode_tokens: AtomicU64::new(0),
+        })
+    }
+
+    /// The gate every record site checks first: one relaxed load.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since this hub's epoch (the span timebase).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+
+    /// Open a span; the guard records it on drop. Returns `None` (and does
+    /// no work) when disabled — bind the result as `let _sp = …;` so the
+    /// guard lives to the end of the scope.
+    #[inline]
+    pub fn span(self: &Arc<Self>, kind: SpanKind, label: &'static str) -> Option<SpanGuard> {
+        self.span_tagged(kind, label, 0)
+    }
+
+    /// [`Obs::span`] with a kind-specific tag (request id, layer index,
+    /// batch size, …).
+    #[inline]
+    pub fn span_tagged(
+        self: &Arc<Self>,
+        kind: SpanKind,
+        label: &'static str,
+        tag: u64,
+    ) -> Option<SpanGuard> {
+        if !self.is_enabled() {
+            return None;
+        }
+        let id = self.next_span_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let prev = CURRENT_SPAN.with(|c| c.replace(id));
+        Some(SpanGuard {
+            obs: self.clone(),
+            id,
+            parent: prev,
+            kind,
+            label,
+            tag,
+            start_ns: self.now_ns(),
+            start: Instant::now(),
+        })
+    }
+
+    /// Record a completed span with an explicit parent — the cross-thread
+    /// path (pool tile tasks capture the parent id on the caller thread).
+    pub fn record_span(
+        &self,
+        kind: SpanKind,
+        label: &'static str,
+        parent: u64,
+        start_ns: u64,
+        dur_ns: u64,
+        tag: u64,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let id = self.next_span_id.fetch_add(1, Ordering::Relaxed) + 1;
+        self.spans.push(SpanRecord {
+            id,
+            parent,
+            kind,
+            label,
+            start_ns,
+            dur_ns,
+            tag,
+            lane: crate::runtime::current_lane(),
+        });
+    }
+
+    /// Id of the innermost open span on the calling thread (0 = none).
+    /// Capture this before handing work to another thread to parent the
+    /// work's spans correctly.
+    pub fn current_span() -> u64 {
+        CURRENT_SPAN.with(|c| c.get())
+    }
+}
+
+/// RAII guard for an open span: pushes the record and restores the
+/// thread's previous span on drop.
+pub struct SpanGuard {
+    obs: Arc<Obs>,
+    id: u64,
+    parent: u64,
+    kind: SpanKind,
+    label: &'static str,
+    tag: u64,
+    start_ns: u64,
+    start: Instant,
+}
+
+impl SpanGuard {
+    /// This span's id — the parent for explicitly-parented children.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur_ns = self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.obs.spans.push(SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            kind: self.kind,
+            label: self.label,
+            start_ns: self.start_ns,
+            dur_ns,
+            tag: self.tag,
+            lane: crate::runtime::current_lane(),
+        });
+        CURRENT_SPAN.with(|c| c.set(self.parent));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guards_nest_and_record_parents() {
+        let obs = Obs::new(64);
+        {
+            let outer = obs.span_tagged(SpanKind::Step, "step", 7).expect("enabled");
+            let outer_id = outer.id();
+            assert_eq!(Obs::current_span(), outer_id);
+            {
+                let inner = obs.span(SpanKind::Decode, "decode").expect("enabled");
+                assert_eq!(Obs::current_span(), inner.id());
+            }
+            assert_eq!(Obs::current_span(), outer_id);
+        }
+        assert_eq!(Obs::current_span(), 0);
+        let spans = obs.spans.snapshot();
+        assert_eq!(spans.len(), 2);
+        let step = spans.iter().find(|s| s.kind == SpanKind::Step).unwrap();
+        let decode = spans.iter().find(|s| s.kind == SpanKind::Decode).unwrap();
+        assert_eq!(step.parent, 0);
+        assert_eq!(decode.parent, step.id);
+        assert_eq!(step.tag, 7);
+        assert_eq!(step.label, "step");
+        // the inner span closed first, inside the outer's window
+        assert!(decode.start_ns >= step.start_ns);
+    }
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let obs = Obs::new(64);
+        obs.set_enabled(false);
+        assert!(obs.span(SpanKind::Step, "step").is_none());
+        obs.record_span(SpanKind::Tile, "tile", 0, 0, 10, 0);
+        assert!(obs.spans.snapshot().is_empty());
+        assert_eq!(Obs::current_span(), 0);
+        obs.set_enabled(true);
+        assert!(obs.span(SpanKind::Step, "step").is_some());
+    }
+
+    #[test]
+    fn explicit_parent_spans_record() {
+        let obs = Obs::new(8);
+        let parent_id = {
+            let g = obs.span(SpanKind::Kernel, "w4a8-fg-is").unwrap();
+            let pid = g.id();
+            obs.record_span(SpanKind::Tile, "tile", pid, obs.now_ns(), 123, 64);
+            pid
+        };
+        let spans = obs.spans.snapshot();
+        let tile = spans.iter().find(|s| s.kind == SpanKind::Tile).unwrap();
+        assert_eq!(tile.parent, parent_id);
+        assert_eq!(tile.dur_ns, 123);
+        assert_eq!(tile.tag, 64);
+    }
+
+    #[test]
+    fn span_ids_are_unique_across_threads() {
+        let obs = Obs::new(256);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let obs = obs.clone();
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let _sp = obs.span(SpanKind::Tile, "t");
+                    }
+                });
+            }
+        });
+        let spans = obs.spans.snapshot();
+        assert_eq!(spans.len(), 80);
+        let mut ids: Vec<u64> = spans.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 80, "span ids must be unique");
+    }
+}

@@ -1,0 +1,286 @@
+//! Per-kernel runtime profiles: measured wall time per (kernel, GEMM shape)
+//! next to the analytical [`OpTrace`] counts and the cost model's predicted
+//! latency — the measurement that validates (and can recalibrate) the
+//! `costmodel` the plan auto-selector trusts.
+//!
+//! Recording is hot-path adjacent (`Linear::forward_rt` calls it once per
+//! GEMM), so the slot map lock is held only for a hashmap probe; the
+//! counters themselves are relaxed atomics updated outside the lock.
+
+use crate::costmodel::{self, Gpu};
+use crate::gemm::registry;
+use crate::gemm::trace::OpTrace;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Profile key: one registry kernel at one GEMM shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeKey {
+    pub kernel: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub g: usize,
+}
+
+struct Slot {
+    calls: AtomicU64,
+    total_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+/// Aggregated measurements for every (kernel, shape) seen so far.
+#[derive(Default)]
+pub struct KernelProfiles {
+    slots: Mutex<HashMap<ShapeKey, Arc<Slot>>>,
+}
+
+/// One row of the profile table: measured aggregate + analytical trace +
+/// modeled-GPU prediction for the same kernel and shape.
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub kernel: &'static str,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub g: usize,
+    pub calls: u64,
+    pub total_ns: u64,
+    pub mean_ns: f64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    /// Analytical op counts for this shape (paper Table 2).
+    pub trace: OpTrace,
+    /// `costmodel::latency` on the default modeled A100, in nanoseconds.
+    /// The absolute scale differs from CPU measurements by construction;
+    /// what validates the model is the *consistency* of measured/predicted
+    /// across kernels (see [`crate::costmodel::recalibrate_utilization`]).
+    pub predicted_ns: f64,
+}
+
+impl ProfileRow {
+    /// Measured mean over modeled prediction — the calibration ratio.
+    pub fn measured_vs_predicted(&self) -> f64 {
+        if self.predicted_ns > 0.0 {
+            self.mean_ns / self.predicted_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+impl KernelProfiles {
+    pub fn new() -> KernelProfiles {
+        KernelProfiles::default()
+    }
+
+    /// Record one forward of `kernel` at shape (m, k, n) with group size `g`
+    /// that took `dt` of wall time.
+    pub fn record(&self, kernel: &'static str, m: usize, k: usize, n: usize, g: usize, dt: Duration) {
+        let key = ShapeKey { kernel, m, k, n, g };
+        let slot = {
+            let mut map = self.slots.lock().unwrap();
+            map.entry(key)
+                .or_insert_with(|| {
+                    Arc::new(Slot {
+                        calls: AtomicU64::new(0),
+                        total_ns: AtomicU64::new(0),
+                        min_ns: AtomicU64::new(u64::MAX),
+                        max_ns: AtomicU64::new(0),
+                    })
+                })
+                .clone()
+        };
+        let ns = dt.as_nanos().min(u64::MAX as u128) as u64;
+        slot.calls.fetch_add(1, Ordering::Relaxed);
+        slot.total_ns.fetch_add(ns, Ordering::Relaxed);
+        slot.min_ns.fetch_min(ns, Ordering::Relaxed);
+        slot.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.lock().unwrap().is_empty()
+    }
+
+    /// Snapshot every profiled (kernel, shape) as a table row, sorted by
+    /// kernel name then shape. Rows are priced through the cost model at
+    /// snapshot time from the kernel's registry self-description.
+    pub fn rows(&self) -> Vec<ProfileRow> {
+        let gpu = Gpu::default();
+        let slots: Vec<(ShapeKey, Arc<Slot>)> = {
+            let map = self.slots.lock().unwrap();
+            map.iter().map(|(k, v)| (*k, v.clone())).collect()
+        };
+        let mut rows: Vec<ProfileRow> = slots
+            .into_iter()
+            .map(|(key, slot)| {
+                let calls = slot.calls.load(Ordering::Relaxed);
+                let total = slot.total_ns.load(Ordering::Relaxed);
+                let min = slot.min_ns.load(Ordering::Relaxed);
+                let (m, k, n, g) = (key.m as u64, key.k as u64, key.n as u64, key.g as u64);
+                let (trace, predicted_ns) = match registry::get(key.kernel) {
+                    Some(kern) => (
+                        kern.trace(m, k, n, g),
+                        costmodel::latency(&gpu, &*kern, m, k, n, g) * 1e9,
+                    ),
+                    None => (OpTrace::default(), 0.0),
+                };
+                ProfileRow {
+                    kernel: key.kernel,
+                    m: key.m,
+                    k: key.k,
+                    n: key.n,
+                    g: key.g,
+                    calls,
+                    total_ns: total,
+                    mean_ns: if calls == 0 { 0.0 } else { total as f64 / calls as f64 },
+                    min_ns: if min == u64::MAX { 0 } else { min },
+                    max_ns: slot.max_ns.load(Ordering::Relaxed),
+                    trace,
+                    predicted_ns,
+                }
+            })
+            .collect();
+        rows.sort_by_key(|r| (r.kernel, r.m, r.k, r.n, r.g));
+        rows
+    }
+
+    /// Per-kernel (measured seconds, predicted seconds) aggregates across
+    /// all shapes — the input to [`crate::costmodel::recalibrate_utilization`].
+    pub fn calibration_samples(&self) -> Vec<(String, f64, f64)> {
+        let mut agg: Vec<(String, f64, f64)> = Vec::new();
+        for r in self.rows() {
+            let measured = r.total_ns as f64 / 1e9;
+            let predicted = r.predicted_ns * r.calls as f64 / 1e9;
+            match agg.iter_mut().find(|(name, _, _)| name == r.kernel) {
+                Some(e) => {
+                    e.1 += measured;
+                    e.2 += predicted;
+                }
+                None => agg.push((r.kernel.to_string(), measured, predicted)),
+            }
+        }
+        agg
+    }
+}
+
+/// Render rows as the fixed-width table the `profile` CLI subcommand
+/// prints: measured nanoseconds next to the `OpTrace`-predicted costs.
+pub fn format_table(rows: &[ProfileRow]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<16} {:>5} {:>6} {:>6} {:>5} {:>7} {:>12} {:>12} {:>14} {:>10} {:>12} {:>12}\n",
+        "kernel",
+        "m",
+        "k",
+        "n",
+        "g",
+        "calls",
+        "mean_ns",
+        "min_ns",
+        "pred_ns(A100)",
+        "meas/pred",
+        "i32_to_f32",
+        "int_scale_mac"
+    ));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<16} {:>5} {:>6} {:>6} {:>5} {:>7} {:>12.0} {:>12} {:>14.1} {:>10.1} {:>12} {:>12}\n",
+            r.kernel,
+            r.m,
+            r.k,
+            r.n,
+            r.g,
+            r.calls,
+            r.mean_ns,
+            r.min_ns,
+            r.predicted_ns,
+            r.measured_vs_predicted(),
+            r.trace.i32_to_f32,
+            r.trace.int_scale_mac
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_aggregates_per_shape() {
+        let p = KernelProfiles::new();
+        assert!(p.is_empty());
+        p.record("w4a8-fg-is", 8, 1024, 4096, 128, Duration::from_micros(100));
+        p.record("w4a8-fg-is", 8, 1024, 4096, 128, Duration::from_micros(300));
+        p.record("w4a8-fg-is", 1, 1024, 4096, 128, Duration::from_micros(50));
+        p.record("w4a8-fg-fs", 8, 1024, 4096, 128, Duration::from_micros(400));
+        let rows = p.rows();
+        assert_eq!(rows.len(), 3);
+        let is8 = rows
+            .iter()
+            .find(|r| r.kernel == "w4a8-fg-is" && r.m == 8)
+            .expect("is m=8 row");
+        assert_eq!(is8.calls, 2);
+        assert_eq!(is8.total_ns, 400_000);
+        assert!((is8.mean_ns - 200_000.0).abs() < 1e-6);
+        assert_eq!(is8.min_ns, 100_000);
+        assert_eq!(is8.max_ns, 300_000);
+        // registry-backed trace: IS converts M·N, FS converts M·N·K/g
+        assert_eq!(is8.trace.i32_to_f32, 8 * 4096);
+        let fs8 = rows.iter().find(|r| r.kernel == "w4a8-fg-fs").unwrap();
+        assert_eq!(fs8.trace.i32_to_f32, 8 * 4096 * (1024 / 128));
+        // at m=8 both kernels are memory-bound and price identically
+        assert!(fs8.predicted_ns >= is8.predicted_ns);
+        assert!(is8.measured_vs_predicted() > 0.0);
+    }
+
+    #[test]
+    fn model_prices_fs_above_is_when_compute_bound() {
+        let p = KernelProfiles::new();
+        p.record("w4a8-fg-is", 512, 4096, 22016, 128, Duration::from_millis(1));
+        p.record("w4a8-fg-fs", 512, 4096, 22016, 128, Duration::from_millis(2));
+        let rows = p.rows();
+        let is = rows.iter().find(|r| r.kernel == "w4a8-fg-is").unwrap();
+        let fs = rows.iter().find(|r| r.kernel == "w4a8-fg-fs").unwrap();
+        assert!(fs.predicted_ns > is.predicted_ns, "fs={} is={}", fs.predicted_ns, is.predicted_ns);
+    }
+
+    #[test]
+    fn unknown_kernel_rows_are_harmless() {
+        let p = KernelProfiles::new();
+        p.record("not-a-kernel", 1, 64, 64, 64, Duration::from_nanos(500));
+        let rows = p.rows();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].predicted_ns, 0.0);
+        assert_eq!(rows[0].measured_vs_predicted(), 0.0);
+        assert_eq!(rows[0].trace, OpTrace::default());
+    }
+
+    #[test]
+    fn table_renders_measured_next_to_predicted() {
+        let p = KernelProfiles::new();
+        p.record("w4a8-fg-is", 8, 1024, 4096, 128, Duration::from_micros(120));
+        p.record("w4a8-fg-fs", 8, 1024, 4096, 128, Duration::from_micros(480));
+        let t = format_table(&p.rows());
+        assert!(t.contains("w4a8-fg-is"));
+        assert!(t.contains("w4a8-fg-fs"));
+        assert!(t.contains("pred_ns(A100)"));
+        assert!(t.contains("i32_to_f32"));
+    }
+
+    #[test]
+    fn calibration_samples_aggregate_across_shapes() {
+        let p = KernelProfiles::new();
+        p.record("w4a8-fg-is", 8, 1024, 4096, 128, Duration::from_micros(100));
+        p.record("w4a8-fg-is", 16, 1024, 4096, 128, Duration::from_micros(200));
+        let s = p.calibration_samples();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].0, "w4a8-fg-is");
+        assert!((s[0].1 - 300e-6).abs() < 1e-12);
+        assert!(s[0].2 > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Span records and the fixed-capacity span ring.
+//!
+//! A span is one timed region of the serving hot path. Spans form a
+//! hierarchy via `parent` ids (engine step → prefill/decode → layer →
+//! kernel → tile); the ring keeps the most recent `capacity` records and
+//! counts what it overwrote, so tracing is bounded-memory no matter how
+//! long the server runs.
+//!
+//! Slot claims are a single `fetch_add` on the ring sequence; each slot is
+//! individually locked only for the record copy, so concurrent recorders
+//! (replica threads, pool lanes) never contend on a global lock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// What a span measures. The hierarchy nests top-down in this order
+/// (`Request` spans are retrospective timeline markers — one batched step
+/// serves many requests, so they parent nothing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole request lifetime (arrival → completion), tag = request id.
+    Request,
+    /// One engine iteration (admit + prefill + decode + retire).
+    Step,
+    /// Prefill of one sequence, tag = tokens computed.
+    Prefill,
+    /// One batched decode pass, tag = batch size.
+    Decode,
+    /// One transformer layer, tag = layer index.
+    Layer,
+    /// One GEMM kernel forward, tag = M (batch rows).
+    Kernel,
+    /// One column tile of a parallel GEMM, tag = first output column.
+    Tile,
+}
+
+/// One completed span. `start_ns` is relative to the owning
+/// [`crate::obs::Obs`] epoch; `lane` is the worker-pool lane that executed
+/// it (0 = a caller thread).
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub id: u64,
+    /// Id of the enclosing span, 0 for roots.
+    pub parent: u64,
+    pub kind: SpanKind,
+    pub label: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Kind-specific payload (request id, layer index, batch size, …).
+    pub tag: u64,
+    pub lane: u32,
+}
+
+/// Fixed-capacity overwrite-oldest span buffer.
+pub struct SpanRing {
+    slots: Box<[Mutex<Option<SpanRecord>>]>,
+    seq: AtomicU64,
+}
+
+impl SpanRing {
+    /// A ring holding at most `capacity` spans; capacity 0 disables span
+    /// recording entirely (pushes become no-ops).
+    pub fn new(capacity: usize) -> SpanRing {
+        SpanRing { slots: (0..capacity).map(|_| Mutex::new(None)).collect(), seq: AtomicU64::new(0) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total spans ever pushed (including ones since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Spans lost to wraparound.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    pub fn push(&self, rec: SpanRecord) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let idx = (n % self.slots.len() as u64) as usize;
+        *self.slots[idx].lock().unwrap() = Some(rec);
+    }
+
+    /// The retained spans, oldest first (sorted by start time, then id —
+    /// concurrent recorders may land in the ring slightly out of order).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> =
+            self.slots.iter().filter_map(|s| *s.lock().unwrap()).collect();
+        out.sort_by_key(|r| (r.start_ns, r.id));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, start_ns: u64) -> SpanRecord {
+        SpanRecord {
+            id,
+            parent: 0,
+            kind: SpanKind::Step,
+            label: "t",
+            start_ns,
+            dur_ns: 1,
+            tag: 0,
+            lane: 0,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_dropped() {
+        let ring = SpanRing::new(8);
+        for i in 0..20u64 {
+            ring.push(rec(i + 1, i * 10));
+        }
+        assert_eq!(ring.recorded(), 20);
+        assert_eq!(ring.dropped(), 12);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        // the 8 newest (ids 13..=20), oldest first
+        let ids: Vec<u64> = snap.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (13..=20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn ring_under_capacity_keeps_all() {
+        let ring = SpanRing::new(16);
+        for i in 0..5u64 {
+            ring.push(rec(i + 1, i));
+        }
+        assert_eq!(ring.recorded(), 5);
+        assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.snapshot().len(), 5);
+    }
+
+    #[test]
+    fn zero_capacity_ring_is_inert() {
+        let ring = SpanRing::new(0);
+        ring.push(rec(1, 0));
+        assert_eq!(ring.recorded(), 0);
+        assert!(ring.snapshot().is_empty());
+        assert_eq!(ring.dropped(), 0);
+    }
+}

@@ -34,11 +34,13 @@
 
 mod pool;
 
-pub use pool::WorkerPool;
+pub use pool::{current_lane, LaneStats, WorkerPool};
 
+use crate::obs::{Obs, SpanKind};
 use crate::tensor::Mat;
 use std::fmt;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Below roughly this many MACs a GEMM is not worth dispatching to the
 /// pool: tile bookkeeping would rival the compute itself. Purely a
@@ -54,16 +56,20 @@ pub const MIN_TILE_COLS: usize = 8;
 /// Handle to the execution runtime a model (or bench) computes on: either
 /// serial (no pool — the default everywhere) or a shared [`WorkerPool`].
 /// Cloning shares the pool, so one pool serves every layer of a model and
-/// every replica of a router.
+/// every replica of a router. The runtime also carries the (optional)
+/// observability hub — it is the one handle already threaded through every
+/// layer and GEMM, so attaching [`Obs`] here instruments the whole stack
+/// without new plumbing.
 #[derive(Clone, Default)]
 pub struct Runtime {
     pool: Option<Arc<WorkerPool>>,
+    obs: Option<Arc<Obs>>,
 }
 
 impl Runtime {
     /// Single-lane runtime: every forward runs inline on the caller.
     pub fn serial() -> Runtime {
-        Runtime { pool: None }
+        Runtime { pool: None, obs: None }
     }
 
     /// Runtime backed by a `workers`-lane pool; `workers <= 1` is serial.
@@ -71,8 +77,26 @@ impl Runtime {
         if workers <= 1 {
             Runtime::serial()
         } else {
-            Runtime { pool: Some(Arc::new(WorkerPool::new(workers))) }
+            Runtime { pool: Some(Arc::new(WorkerPool::new(workers))), obs: None }
         }
+    }
+
+    /// Attach an observability hub; everything executing on this runtime
+    /// (and its clones) records spans, kernel profiles, and histograms
+    /// through it.
+    pub fn with_obs(mut self, obs: Arc<Obs>) -> Runtime {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// The attached observability hub, if any.
+    pub fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
+    }
+
+    /// Per-lane busy/idle gauges of the backing pool (empty when serial).
+    pub fn lane_stats(&self) -> Vec<LaneStats> {
+        self.pool.as_ref().map(|p| p.lane_stats()).unwrap_or_default()
     }
 
     /// One lane per available hardware thread.
@@ -150,9 +174,18 @@ pub fn parallel_columns(
     }
     let bounds = partition(n, tiles);
     let slots: Vec<Mutex<Option<Mat>>> = (0..bounds.len()).map(|_| Mutex::new(None)).collect();
+    // Tile tasks run on pool threads, so the span parent is captured here
+    // on the caller (the enclosing Kernel span) and passed explicitly.
+    let obs = rt.obs().filter(|o| o.is_enabled()).cloned();
+    let parent = Obs::current_span();
     rt.run_tiles(bounds.len(), &|t| {
         let (j0, j1) = bounds[t];
+        let timing = obs.as_ref().map(|o| (o.now_ns(), Instant::now()));
         *slots[t].lock().unwrap() = Some(f(j0, j1));
+        if let (Some(o), Some((start_ns, start))) = (&obs, timing) {
+            let dur = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            o.record_span(SpanKind::Tile, "tile", parent, start_ns, dur, j0 as u64);
+        }
     });
     let mut out = Mat::zeros(m, n);
     for (slot, &(j0, j1)) in slots.iter().zip(bounds.iter()) {

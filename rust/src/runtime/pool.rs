@@ -16,18 +16,58 @@
 //! concurrently on one shared pool; their tasks interleave in the queue and
 //! each caller waits only on its own completion latch.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Instant;
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Pool lane of the current thread: workers set their lane index,
+    /// every other thread (including `run_tiles` callers) reads 0.
+    static LANE: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Pool lane executing the calling thread (0 = a caller / non-pool
+/// thread). Observability tags span records with this.
+pub fn current_lane() -> u32 {
+    LANE.with(|l| l.get())
+}
+
+/// Busy-time / task-count gauge for one pool lane.
+#[derive(Default)]
+struct LaneCounters {
+    busy_ns: AtomicU64,
+    tasks: AtomicU64,
+}
+
+impl LaneCounters {
+    fn add(&self, start: Instant) {
+        let ns = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Snapshot of one lane's lifetime utilization (lane 0 aggregates every
+/// caller thread that participates in `run_tiles`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStats {
+    pub lane: usize,
+    pub busy_ns: u64,
+    pub tasks: u64,
+}
 
 struct Shared {
     queue: Mutex<VecDeque<Task>>,
     available: Condvar,
     shutdown: AtomicBool,
+    /// One gauge per lane; index = lane id.
+    lanes: Vec<LaneCounters>,
 }
 
 /// Completion latch for one `run_tiles` scope: counts outstanding enqueued
@@ -73,7 +113,8 @@ impl Latch {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, lane: usize) {
+    LANE.with(|l| l.set(lane as u32));
     loop {
         let task = {
             let mut q = shared.queue.lock().unwrap();
@@ -88,7 +129,11 @@ fn worker_loop(shared: Arc<Shared>) {
             }
         };
         match task {
-            Some(t) => t(), // panics are caught inside the task closure
+            Some(t) => {
+                let start = Instant::now();
+                t(); // panics are caught inside the task closure
+                shared.lanes[lane].add(start);
+            }
             None => return,
         }
     }
@@ -110,13 +155,14 @@ impl WorkerPool {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            lanes: (0..workers).map(|_| LaneCounters::default()).collect(),
         });
         let handles = (1..workers)
             .map(|i| {
                 let sh = shared.clone();
                 thread::Builder::new()
                     .name(format!("is-worker-{i}"))
-                    .spawn(move || worker_loop(sh))
+                    .spawn(move || worker_loop(sh, i))
                     .expect("spawn worker thread")
             })
             .collect();
@@ -126,6 +172,22 @@ impl WorkerPool {
     /// Total lanes (spawned threads + the participating caller).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Lifetime busy-time / task-count per lane. Lane 0 is the caller
+    /// side: every `run_tiles` caller (and its help-drained tasks) counts
+    /// there; lanes 1.. are the spawned worker threads.
+    pub fn lane_stats(&self) -> Vec<LaneStats> {
+        self.shared
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(lane, c)| LaneStats {
+                lane,
+                busy_ns: c.busy_ns.load(Ordering::Relaxed),
+                tasks: c.tasks.load(Ordering::Relaxed),
+            })
+            .collect()
     }
 
     /// Execute `f(t)` exactly once for every tile `t in 0..tiles`, spread
@@ -138,9 +200,11 @@ impl WorkerPool {
     /// output, so outputs are identical for any lane assignment.
     pub fn run_tiles(&self, tiles: usize, f: &(dyn Fn(usize) + Sync)) {
         if tiles <= 1 || self.workers == 1 {
+            let start = Instant::now();
             for t in 0..tiles {
                 f(t);
             }
+            self.shared.lanes[0].add(start);
             return;
         }
         let latch = Arc::new(Latch::new(tiles - 1));
@@ -162,7 +226,9 @@ impl WorkerPool {
             }
         }
         self.shared.available.notify_all();
+        let caller_start = Instant::now();
         let caller_result = catch_unwind(AssertUnwindSafe(|| f(0)));
+        self.shared.lanes[0].add(caller_start);
         // Help drain the queue (this scope's tiles or a concurrent one's)
         // rather than idling — but only while this scope's own tiles are
         // outstanding, so a finished caller is never conscripted into
@@ -170,7 +236,11 @@ impl WorkerPool {
         while latch.pending() {
             let task = self.shared.queue.lock().unwrap().pop_front();
             match task {
-                Some(t) => t(),
+                Some(t) => {
+                    let start = Instant::now();
+                    t();
+                    self.shared.lanes[0].add(start);
+                }
                 None => break,
             }
         }
@@ -254,6 +324,25 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(total.load(Ordering::Relaxed), 4 * 20 * 8);
+    }
+
+    #[test]
+    fn lane_gauges_count_executed_tasks() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..10 {
+            pool.run_tiles(6, &|_| {
+                std::hint::black_box((0..500).sum::<u64>());
+            });
+        }
+        let stats = pool.lane_stats();
+        assert_eq!(stats.len(), 3);
+        // caller always executes tile 0, so lane 0 saw all 10 scopes
+        assert!(stats[0].tasks >= 10, "lane0 tasks={}", stats[0].tasks);
+        assert!(stats[0].busy_ns > 0);
+        // every enqueued tile landed on *some* lane
+        let total: u64 = stats.iter().map(|l| l.tasks).sum();
+        assert!(total >= 10 + 10 * 5, "total={total}");
+        assert_eq!(current_lane(), 0, "callers are lane 0");
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! End-to-end observability tests: snapshot export/parse roundtrips, span
+//! hierarchy under a threaded runtime, zero-effect tracing (obs on/off must
+//! not change generated tokens), and CLI acceptance for
+//! `serve --metrics-out` and the `profile` subcommand (driven through the
+//! real binary via `CARGO_BIN_EXE`).
+
+use integer_scale::coordinator::{Engine, EngineConfig, Request, Response};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::obs::export::parse_json;
+use integer_scale::obs::{MetricsSnapshot, Obs, SpanKind};
+use integer_scale::plan::PlanBuilder;
+use integer_scale::quant::{BitWidth, Granularity};
+use integer_scale::runtime::Runtime;
+use integer_scale::tensor::Rng;
+use std::process::Command;
+use std::sync::Arc;
+
+fn small_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 128,
+        max_seq: 128,
+        n_experts: None,
+    }
+}
+
+/// A small w4a8 integer-scale model with the given runtime attached.
+fn quantized_model(rt: Runtime) -> Transformer {
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 42);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(128, Split::C4, 11);
+    let plan = PlanBuilder::uniform(
+        QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(64)).with_is(1024),
+    );
+    quantize_model_plan(&weights, &plan, &calib).with_runtime(rt)
+}
+
+fn run_requests(model: Arc<Transformer>, n: usize) -> (Engine, Vec<Response>) {
+    let mut engine = Engine::new(
+        model,
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+    );
+    let gen = CorpusGen::new(64, 7);
+    let mut rng = Rng::new(5);
+    for i in 0..n {
+        let mut req = Request::greedy(i as u64, gen.document(8, Split::C4, &mut rng), 6);
+        req.stop_at_eos = false;
+        engine.submit(req);
+    }
+    let res = engine.run_to_completion();
+    (engine, res)
+}
+
+#[test]
+fn snapshot_roundtrips_through_json_and_file() {
+    let obs = Obs::new(4096);
+    let model = Arc::new(quantized_model(Runtime::serial().with_obs(obs.clone())));
+    let rt = model.rt.clone();
+    let (engine, res) = run_requests(model, 4);
+    assert_eq!(res.len(), 4);
+
+    let snap = MetricsSnapshot::build(&engine.metrics, Some(&rt), 1.5);
+    let doc = parse_json(&snap.json()).expect("snapshot must be valid JSON");
+    assert_eq!(doc.path("requests.completed").unwrap().as_f64(), Some(4.0));
+    assert_eq!(doc.path("latency.ttft.count").unwrap().as_f64(), Some(4.0));
+    let p50 = doc.path("latency.ttft.p50_ms").unwrap().as_f64().unwrap();
+    let p99 = doc.path("latency.ttft.p99_ms").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+    assert!(doc.path("latency.tpot.p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    let kernels = doc.path("kernels").unwrap().as_arr().unwrap();
+    assert!(
+        kernels.iter().any(|k| k.get("kernel").unwrap().as_str() == Some("w4a8-fg-is")),
+        "profile table must carry the integer-scale kernel"
+    );
+
+    // file roundtrip: what `serve --metrics-out` writes must parse back
+    let path = std::env::temp_dir().join("is_obs_it_snapshot.json");
+    snap.write(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let doc2 = parse_json(&text).expect("written file must parse");
+    assert_eq!(
+        doc2.path("latency.ttft.p50_ms").unwrap().as_f64(),
+        doc.path("latency.ttft.p50_ms").unwrap().as_f64()
+    );
+}
+
+#[test]
+fn prometheus_export_covers_latency_and_kernels() {
+    let obs = Obs::new(1024);
+    let model = Arc::new(quantized_model(Runtime::serial().with_obs(obs.clone())));
+    let rt = model.rt.clone();
+    let (engine, _) = run_requests(model, 3);
+    let text = MetricsSnapshot::build(&engine.metrics, Some(&rt), 1.0).prometheus();
+    assert!(text.contains("is_requests_completed 3"), "{text}");
+    assert!(text.contains("is_ttft_seconds{quantile=\"0.5\"}"));
+    assert!(text.contains("is_ttft_seconds{quantile=\"0.99\"}"));
+    assert!(text.contains("is_e2e_seconds_count 3"));
+    assert!(text.contains("kernel=\"w4a8-fg-is\""));
+    assert!(text.contains("is_spans_recorded"));
+}
+
+#[test]
+fn span_hierarchy_holds_under_threaded_runtime() {
+    let obs = Obs::new(65536);
+    let model = Arc::new(quantized_model(Runtime::threaded(3).with_obs(obs.clone())));
+    let (_, res) = run_requests(model, 3);
+    assert_eq!(res.len(), 3);
+
+    let spans = obs.spans.snapshot();
+    assert!(!spans.is_empty());
+    let by_id: std::collections::HashMap<u64, &integer_scale::obs::SpanRecord> =
+        spans.iter().map(|s| (s.id, s)).collect();
+    // every kernel span must sit under a layer (or prefill/decode) span,
+    // and every tile span under a kernel span — even with pool threads
+    for s in &spans {
+        match s.kind {
+            SpanKind::Kernel => {
+                let p = by_id.get(&s.parent).expect("kernel span must have a live parent");
+                assert!(
+                    matches!(p.kind, SpanKind::Layer | SpanKind::Prefill | SpanKind::Decode),
+                    "kernel span parented to {:?}",
+                    p.kind
+                );
+            }
+            SpanKind::Tile => {
+                let p = by_id.get(&s.parent).expect("tile span must have a live parent");
+                assert_eq!(p.kind, SpanKind::Kernel, "tile span parented to {:?}", p.kind);
+            }
+            _ => {}
+        }
+    }
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Kernel));
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Step));
+}
+
+#[test]
+fn tracing_on_or_off_never_changes_tokens() {
+    let baseline = {
+        let model = Arc::new(quantized_model(Runtime::serial()));
+        run_requests(model, 3).1
+    };
+    let enabled = {
+        let model = Arc::new(quantized_model(Runtime::serial().with_obs(Obs::new(1024))));
+        run_requests(model, 3).1
+    };
+    let disabled = {
+        let obs = Obs::new(1024);
+        obs.set_enabled(false);
+        let model = Arc::new(quantized_model(Runtime::serial().with_obs(obs)));
+        run_requests(model, 3).1
+    };
+    for (a, b) in baseline.iter().zip(enabled.iter()) {
+        assert_eq!(a.tokens, b.tokens, "enabled tracing changed tokens for req {}", a.id);
+    }
+    for (a, b) in baseline.iter().zip(disabled.iter()) {
+        assert_eq!(a.tokens, b.tokens, "disabled tracing changed tokens for req {}", a.id);
+    }
+}
+
+#[test]
+fn cli_serve_writes_parseable_json_snapshot() {
+    let dir = std::env::temp_dir().join("is_obs_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("serve_metrics.json");
+    let status = Command::new(env!("CARGO_BIN_EXE_integer-scale"))
+        .args([
+            "serve",
+            "--scheme",
+            "fp16",
+            "--requests",
+            "2",
+            "--prompt-len",
+            "8",
+            "--new-tokens",
+            "4",
+            "--metrics-interval-ms",
+            "0",
+            "--metrics-out",
+        ])
+        .arg(&out)
+        .status()
+        .expect("serve must run");
+    assert!(status.success());
+    let text = std::fs::read_to_string(&out).unwrap();
+    std::fs::remove_file(&out).ok();
+    let doc = parse_json(&text).expect("metrics-out JSON must parse");
+    assert_eq!(doc.path("requests.completed").unwrap().as_f64(), Some(2.0));
+    assert!(doc.path("latency.ttft.p50_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(doc.path("latency.tpot.p99_ms").is_some());
+    assert!(doc.path("spans.recorded").unwrap().as_f64().unwrap() > 0.0);
+}
+
+#[test]
+fn cli_serve_writes_prometheus_snapshot() {
+    let dir = std::env::temp_dir().join("is_obs_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("serve_metrics.prom");
+    let status = Command::new(env!("CARGO_BIN_EXE_integer-scale"))
+        .args([
+            "serve",
+            "--scheme",
+            "fp16",
+            "--requests",
+            "2",
+            "--prompt-len",
+            "8",
+            "--new-tokens",
+            "4",
+            "--metrics-interval-ms",
+            "0",
+            "--metrics-out",
+        ])
+        .arg(&out)
+        .status()
+        .expect("serve must run");
+    assert!(status.success());
+    let text = std::fs::read_to_string(&out).unwrap();
+    std::fs::remove_file(&out).ok();
+    assert!(text.starts_with("# HELP"), "{text}");
+    assert!(text.contains("is_requests_completed 2"), "{text}");
+    assert!(text.contains("is_ttft_seconds{quantile=\"0.99\"}"), "{text}");
+}
+
+#[test]
+fn cli_profile_prints_measured_vs_predicted_table() {
+    let output = Command::new(env!("CARGO_BIN_EXE_integer-scale"))
+        .args(["profile", "--requests", "2", "--prompt-len", "8", "--new-tokens", "4"])
+        .output()
+        .expect("profile must run");
+    assert!(output.status.success(), "stderr: {}", String::from_utf8_lossy(&output.stderr));
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    // default schemes are w4a8-fs vs w4a8-is: both kernels must appear,
+    // with measured and predicted columns side by side
+    assert!(stdout.contains("w4a8-fg-fs"), "{stdout}");
+    assert!(stdout.contains("w4a8-fg-is"), "{stdout}");
+    assert!(stdout.contains("pred_ns"), "{stdout}");
+    assert!(stdout.contains("meas/pred"), "{stdout}");
+}
