@@ -1,0 +1,104 @@
+//! **Self-speculative decoding**: serve the same repeat-heavy prompts
+//! twice — plain greedy decode under a W4A16 target plan, then with a
+//! draft model on the fast Integer-Scale W4A8 plan attached
+//! (`serve --spec-decode` in the CLI). Both runs produce byte-identical
+//! output: the draft only proposes, the target plan verifies every
+//! position, so the draft plan can only change *speed*. The example
+//! prints acceptance rate and tokens/sec side by side.
+//!
+//! ```sh
+//! cargo run --release --example spec_decode
+//! ```
+
+use integer_scale::coordinator::{Engine, EngineConfig, Metrics, Request, Response};
+use integer_scale::data::{CorpusGen, Split};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::PlanBuilder;
+use integer_scale::quant::{BitWidth, Granularity};
+use integer_scale::runtime::Runtime;
+use integer_scale::specdec::SpecConfig;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Repeat-heavy prompts — the regime speculation targets: once the
+/// target settles into a loop, the draft predicts it almost perfectly.
+fn requests() -> Vec<Request> {
+    (0..6u64)
+        .map(|i| {
+            let pat = [(i as u32 % 5) + 3, ((i as u32 * 3) % 7) + 4];
+            let prompt: Vec<u32> = pat.iter().cycle().take(12).copied().collect();
+            let mut r = Request::greedy(i, prompt, 24);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect()
+}
+
+/// One single-stream serve pass, optionally with a draft model attached.
+fn serve(
+    target: &Arc<Transformer>,
+    draft: Option<&Arc<Transformer>>,
+) -> (Vec<Response>, f64, Metrics) {
+    let mut e = Engine::new(
+        target.clone(),
+        EngineConfig { max_batch: 1, kv_token_budget: 4096, seed: 1 },
+    );
+    if let Some(d) = draft {
+        e.enable_spec_decode(d.clone(), SpecConfig::with_k(4));
+    }
+    for r in requests() {
+        e.submit(r);
+    }
+    let t0 = Instant::now();
+    let res = e.run_to_completion();
+    (res, t0.elapsed().as_secs_f64(), e.metrics.clone())
+}
+
+fn main() {
+    let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
+    let weights = ModelWeights::random(cfg, 42);
+    let gen = CorpusGen::new(cfg.vocab as u32, 7);
+    let calib = gen.stream(128, Split::C4, 11);
+    let rt = Runtime::threaded(1);
+
+    // target: weight-only W4A16 — high fidelity, float math per row.
+    // draft: the paper's Integer-Scale W4A8 path — same int4 codes, int8
+    // activations, integer accumulation; much cheaper per drafted token.
+    let t_spec = QuantSpec::new(Method::Rtn, BitWidth::W4A16, Granularity::Group(128));
+    let d_spec =
+        QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024);
+    let target = Arc::new(
+        quantize_model_plan(&weights, &PlanBuilder::uniform(t_spec), &calib)
+            .with_runtime(rt.clone()),
+    );
+    let draft = Arc::new(
+        quantize_model_plan(&weights, &PlanBuilder::uniform(d_spec), &calib).with_runtime(rt),
+    );
+
+    println!("warm-up + plain decode (target plan only) ...");
+    let (plain, plain_wall, _) = serve(&target, None);
+    println!("speculative decode (IS draft, k=4) ...\n");
+    let (spec, spec_wall, m) = serve(&target, Some(&draft));
+
+    for (p, s) in plain.iter().zip(spec.iter()) {
+        assert_eq!(p.tokens, s.tokens, "speculation must not change greedy output");
+    }
+    let toks: usize = plain.iter().map(|r| r.tokens.len()).sum();
+    println!("outputs identical: {} requests, {toks} generated tokens\n", plain.len());
+
+    println!("{:>24} {:>12} {:>14}", "", "plain", "spec-decode");
+    println!("{:>24} {:>12.3} {:>14.3}", "wall (s)", plain_wall, spec_wall);
+    println!(
+        "{:>24} {:>12.1} {:>14.1}",
+        "tokens/sec",
+        toks as f64 / plain_wall,
+        toks as f64 / spec_wall
+    );
+    println!("{:>24} {:>12} {:>14.3}", "acceptance rate", "-", m.acceptance_rate());
+    println!(
+        "\nspec stats: {} steps, {} drafted, {} accepted, {} rolled back",
+        m.spec_steps, m.spec_draft_tokens, m.spec_accepted_tokens, m.spec_rollbacks
+    );
+    println!("speedup: {:.2}x", plain_wall / spec_wall);
+}

@@ -23,6 +23,7 @@ use crate::kvpool::{BlockPool, PoolGauges, BLOCK_SIZE};
 use crate::model::sampler::{sample, Sampling};
 use crate::model::{KvCache, Transformer};
 use crate::obs::{Obs, SpanKind};
+use crate::specdec::{SpecConfig, SpecDecoder};
 use crate::tensor::Rng;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
@@ -49,6 +50,9 @@ struct Running {
     next_token: u32,
     /// Monotone admission stamp — preemption targets the youngest.
     admit_seq: u64,
+    /// Current speculative draft window for this sequence (0 when
+    /// speculation is disabled); adapted per step by acceptance.
+    spec_k: usize,
 }
 
 pub struct Engine {
@@ -61,6 +65,8 @@ pub struct Engine {
     pub metrics: Metrics,
     finished: Vec<Response>,
     admit_counter: u64,
+    /// Self-speculative decoding (draft plan + window config), when enabled.
+    spec: Option<SpecDecoder>,
 }
 
 impl Engine {
@@ -78,7 +84,29 @@ impl Engine {
             metrics: Metrics { pool_blocks_total: n_blocks, ..Metrics::default() },
             finished: Vec::new(),
             admit_counter: 0,
+            spec: None,
         }
+    }
+
+    /// Enable self-speculative decoding: greedy sequences draft up to
+    /// `cfg.k` tokens per step on the (cheap) `draft` model and the target
+    /// plan verifies them in one batched prefill. The draft must be built
+    /// from the SAME weights as the target (only the quantization plan may
+    /// differ) and should share the target's runtime so both plans use one
+    /// worker pool and observability hub. Greedy outputs are unchanged —
+    /// verification accepts exactly the tokens plain decode would produce;
+    /// temperature-sampled sequences keep the plain batched path.
+    pub fn enable_spec_decode(&mut self, draft: Arc<Transformer>, cfg: SpecConfig) {
+        // a speculative step can grow a sequence by up to k_max + 1 rows and
+        // briefly copy-on-write two tail blocks (draft fork + verify), so
+        // admission keeps proportionally more growth headroom
+        let headroom = (cfg.k_max + 1).div_ceil(BLOCK_SIZE) + 2;
+        self.scheduler.set_decode_headroom(headroom);
+        self.spec = Some(SpecDecoder::new(draft, cfg));
+    }
+
+    pub fn spec_enabled(&self) -> bool {
+        self.spec.is_some()
     }
 
     /// The observability hub attached to this engine's model runtime (if
@@ -145,27 +173,52 @@ impl Engine {
         //    pool exhaustion, preempt the youngest instead of crashing
         self.ensure_decode_headroom();
 
-        // 4. batched decode step
+        // 4. decode step: speculative draft/verify for greedy sequences
+        //    when enabled, plain batched decode for everyone else
         if !self.running.is_empty() {
-            let t0 = Instant::now();
-            let tokens: Vec<u32> = self.running.iter().map(|r| r.next_token).collect();
-            let mut caches: Vec<&mut KvCache> =
-                self.running.iter_mut().map(|r| &mut r.cache).collect();
-            let logits = self.model.decode_batch(&tokens, &mut caches);
-            let dt = t0.elapsed();
-            self.metrics.record_batch(tokens.len());
-            self.metrics.decode_time += dt;
-            self.metrics.decode_tokens += tokens.len() as u64;
-            // every token in the batch waited this step's duration
-            self.metrics.tpot_hist.record_n(dt, tokens.len() as u64);
-            if let Some(o) = self.obs() {
-                o.tpot.record_n(dt, tokens.len() as u64);
-                o.decode_tokens.fetch_add(tokens.len() as u64, Relaxed);
+            let spec_on = self.spec.is_some();
+            let flags: Vec<bool> = self
+                .running
+                .iter()
+                .map(|r| spec_on && matches!(r.tracked.req.sampling, Sampling::Greedy))
+                .collect();
+            if flags.iter().any(|&f| !f) {
+                let t0 = Instant::now();
+                let tokens: Vec<u32> = self
+                    .running
+                    .iter()
+                    .zip(&flags)
+                    .filter(|&(_, &f)| !f)
+                    .map(|(r, _)| r.next_token)
+                    .collect();
+                let mut caches: Vec<&mut KvCache> = self
+                    .running
+                    .iter_mut()
+                    .zip(&flags)
+                    .filter(|&(_, &f)| !f)
+                    .map(|(r, _)| &mut r.cache)
+                    .collect();
+                let logits = self.model.decode_batch(&tokens, &mut caches);
+                let dt = t0.elapsed();
+                self.metrics.record_batch(tokens.len());
+                self.metrics.decode_time += dt;
+                self.metrics.decode_tokens += tokens.len() as u64;
+                // every token in the batch waited this step's duration
+                self.metrics.tpot_hist.record_n(dt, tokens.len() as u64);
+                if let Some(o) = self.obs() {
+                    o.tpot.record_n(dt, tokens.len() as u64);
+                    o.decode_tokens.fetch_add(tokens.len() as u64, Relaxed);
+                }
+                let mut row = 0usize;
+                for (r, _) in self.running.iter_mut().zip(&flags).filter(|&(_, &f)| !f) {
+                    let tok = sample(logits.row(row), r.tracked.req.sampling, &mut self.rng);
+                    r.tracked.generated.push(tok);
+                    r.next_token = tok;
+                    row += 1;
+                }
             }
-            for (i, r) in self.running.iter_mut().enumerate() {
-                let tok = sample(logits.row(i), r.tracked.req.sampling, &mut self.rng);
-                r.tracked.generated.push(tok);
-                r.next_token = tok;
+            if flags.iter().any(|&f| f) {
+                self.spec_phase(&flags);
             }
             self.retire_done();
         }
@@ -216,12 +269,106 @@ impl Engine {
             tok
         };
         self.admit_counter += 1;
+        let spec_k = self.spec.as_ref().map_or(0, |s| s.cfg.k);
         self.running.push(Running {
             tracked: tr,
             cache,
             next_token: next,
             admit_seq: self.admit_counter,
+            spec_k,
         });
+    }
+
+    /// Speculative decode for every flagged (greedy) running sequence: draft
+    /// `spec_k` tokens on the cheap plan, verify all of them plus the
+    /// pending token in ONE batched target prefill, accept the longest
+    /// matching prefix, and roll the cache back over rejected positions.
+    /// Lossless versus plain greedy decode by construction — the verify
+    /// rows are bit-identical to sequential decode under the target plan.
+    fn spec_phase(&mut self, flags: &[bool]) {
+        let spec = self.spec.as_ref().expect("spec_phase without a decoder").clone();
+        let bs = self.pool.block_size();
+        for i in 0..self.running.len() {
+            if !flags[i] {
+                continue;
+            }
+            // every OTHER running sequence is guaranteed one growth block
+            // by ensure_decode_headroom — speculation must not starve them,
+            // so only blocks beyond that reserve fund a deeper window
+            let reserve = self.running.len() - 1;
+            let avail = self.pool.available_blocks().saturating_sub(reserve);
+            let r = &mut self.running[i];
+            if r.spec_k == 0 {
+                // admitted before speculation was enabled
+                r.spec_k = spec.cfg.k;
+            }
+            let len = r.cache.seq_len;
+            // Window clamps. Generation budget: emitted ≤ k+1, and plain
+            // decode stops at exactly `max_new_tokens`. Capacity: verify
+            // appends k+1 rows AND the capacity retire must fire at the
+            // same generated length as plain decode (hence −2, not −1).
+            // Pool: worst case the draft fork and the verify each pay one
+            // copy-on-write of the shared tail block on top of growth.
+            let mut k = r
+                .spec_k
+                .min(r.tracked.req.max_new_tokens.saturating_sub(r.tracked.generated.len() + 1))
+                .min(r.cache.capacity.saturating_sub(len + 2));
+            while k > 0 && (len + k + 1).div_ceil(bs) + 2 > r.cache.blocks_held() + avail {
+                k -= 1;
+            }
+            let t0 = Instant::now();
+            let step = spec.step(&self.model, &mut r.cache, r.next_token, k);
+            let dt = t0.elapsed();
+            // adaptive window: full acceptance widens, heavy rejection halves
+            if step.drafted > 0 {
+                if step.accepted == step.drafted {
+                    r.spec_k = (r.spec_k + 1).min(spec.cfg.k_max);
+                } else if step.accepted * 2 < step.drafted {
+                    r.spec_k = (r.spec_k / 2).max(spec.cfg.k_min);
+                }
+            }
+            let mut emitted = step.emitted;
+            if r.tracked.req.stop_at_eos {
+                // cut at the first EOS so the retire check sees it last,
+                // exactly where plain decode would have stopped
+                if let Some(p) = emitted.iter().position(|&t| t == EOS) {
+                    emitted.truncate(p + 1);
+                }
+            }
+            r.tracked.generated.extend_from_slice(&emitted);
+            r.next_token = *emitted.last().expect("a spec step always emits");
+            let n = emitted.len() as u64;
+            let (drafted, accepted) = (step.drafted as u64, step.accepted as u64);
+            self.metrics.spec_steps += 1;
+            self.metrics.spec_draft_tokens += drafted;
+            self.metrics.spec_accepted_tokens += accepted;
+            if accepted < drafted {
+                self.metrics.spec_rollbacks += 1;
+                self.metrics.spec_rejected_tokens += drafted - accepted;
+            }
+            self.metrics.draft_time += step.draft_time;
+            self.metrics.verify_time += step.verify_time;
+            if drafted > 0 {
+                self.metrics.draft_hist.record(step.draft_time);
+            }
+            self.metrics.verify_hist.record(step.verify_time);
+            self.metrics.decode_time += dt;
+            self.metrics.decode_tokens += n;
+            self.metrics.tpot_hist.record_n(dt, n);
+            if let Some(o) = self.obs() {
+                o.tpot.record_n(dt, n);
+                o.decode_tokens.fetch_add(n, Relaxed);
+                if drafted > 0 {
+                    o.draft.record(step.draft_time);
+                }
+                o.verify.record(step.verify_time);
+                o.spec_drafted.fetch_add(drafted, Relaxed);
+                o.spec_accepted.fetch_add(accepted, Relaxed);
+                if accepted < drafted {
+                    o.spec_rollbacks.fetch_add(1, Relaxed);
+                }
+            }
+        }
     }
 
     /// Preempt youngest-first until every running sequence that needs a
@@ -500,6 +647,91 @@ mod tests {
         for (a, b) in tight.iter().zip(ample.iter()) {
             assert_eq!(a.tokens, b.tokens, "preemption changed tokens for req {}", a.id);
         }
+    }
+
+    #[test]
+    fn spec_decode_same_plan_draft_accepts_everything_losslessly() {
+        // draft == target (same weights, same plan): verification is
+        // bit-identical, so every draft is accepted and outputs must equal
+        // the plain engine's greedy tokens exactly
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        let submit_all = |e: &mut Engine| {
+            for i in 0..5 {
+                let mut r = Request::greedy(i, vec![(i % 20) as u32 + 3; 6], 12);
+                r.stop_at_eos = false;
+                e.submit(r);
+            }
+        };
+        let mut plain =
+            Engine::new(model.clone(), EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 });
+        submit_all(&mut plain);
+        let base = plain.run_to_completion();
+
+        let mut spec =
+            Engine::new(model.clone(), EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 });
+        spec.enable_spec_decode(model.clone(), crate::specdec::SpecConfig::default());
+        assert!(spec.spec_enabled());
+        submit_all(&mut spec);
+        let fast = spec.run_to_completion();
+
+        assert_eq!(base.len(), fast.len());
+        for (a, b) in base.iter().zip(fast.iter()) {
+            assert_eq!(a.tokens, b.tokens, "speculation changed tokens for req {}", a.id);
+            assert_eq!(a.finish, b.finish);
+        }
+        let m = &spec.metrics;
+        assert!(m.spec_steps > 0, "speculation must actually run");
+        assert!(m.spec_draft_tokens > 0);
+        assert_eq!(m.spec_accepted_tokens, m.spec_draft_tokens, "same plan ⇒ full acceptance");
+        assert_eq!(m.spec_rollbacks, 0);
+        assert!((m.acceptance_rate() - 1.0).abs() < 1e-12);
+        // token accounting stays consistent in spec mode
+        assert_eq!(m.tpot_hist.count(), m.decode_tokens);
+        assert!(m.verify_hist.count() > 0 && m.draft_hist.count() > 0);
+    }
+
+    #[test]
+    fn spec_decode_mismatched_draft_rejects_but_output_is_unchanged() {
+        // a draft with unrelated weights rejects nearly everything; with a
+        // tight pool on top (preemption + rollback interplay) the emitted
+        // tokens must still equal plain decode on an ample pool
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let target = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        let draft = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 10)));
+        let submit_all = |e: &mut Engine| {
+            for i in 0..4 {
+                let mut r = Request::greedy(i, vec![(i % 20) as u32 + 4; 8], 16);
+                r.stop_at_eos = false;
+                e.submit(r);
+            }
+            // one temperature sequence keeps the plain batched path alive
+            // alongside speculation (it is the only rng consumer, so its
+            // stream is identical in both engines)
+            let mut t = Request::greedy(4, vec![9, 9, 7], 8);
+            t.sampling = Sampling::Temperature(0.8);
+            t.stop_at_eos = false;
+            e.submit(t);
+        };
+        let mut plain =
+            Engine::new(target.clone(), EngineConfig { max_batch: 8, kv_token_budget: 4096, seed: 1 });
+        submit_all(&mut plain);
+        let base = plain.run_to_completion();
+
+        let mut spec =
+            Engine::new(target.clone(), EngineConfig { max_batch: 8, kv_token_budget: 128, seed: 1 });
+        spec.enable_spec_decode(draft, crate::specdec::SpecConfig::default());
+        submit_all(&mut spec);
+        let fast = spec.run_to_completion();
+
+        for (a, b) in base.iter().zip(fast.iter()) {
+            assert_eq!(a.tokens, b.tokens, "rejection path changed tokens for req {}", a.id);
+        }
+        let m = &spec.metrics;
+        assert!(m.spec_rollbacks > 0, "unrelated draft weights must reject");
+        assert!(m.spec_rejected_tokens > 0);
+        assert!(m.spec_accepted_tokens <= m.spec_draft_tokens);
+        assert!(m.acceptance_rate() < 1.0);
     }
 
     #[test]

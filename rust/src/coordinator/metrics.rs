@@ -29,6 +29,20 @@ pub struct Metrics {
     /// KV pool size and high-water occupancy, in blocks.
     pub pool_blocks_total: usize,
     pub peak_blocks_in_use: usize,
+    /// Speculative decoding: draft/verify iterations run, tokens drafted on
+    /// the cheap plan, drafted tokens the target plan accepted, and
+    /// rejection rollbacks (each discards `spec_rejected_tokens` total).
+    pub spec_steps: u64,
+    pub spec_draft_tokens: u64,
+    pub spec_accepted_tokens: u64,
+    pub spec_rollbacks: u64,
+    pub spec_rejected_tokens: u64,
+    /// Wall time inside the draft loop / the batched verify call.
+    pub draft_time: Duration,
+    pub verify_time: Duration,
+    /// Per-call draft and verify latency.
+    pub draft_hist: LatencyHist,
+    pub verify_hist: LatencyHist,
     /// Time to first token per completed request (submit → first decode).
     pub ttft_hist: LatencyHist,
     /// Per-output-token latency (each decode step's duration, weighted by
@@ -88,10 +102,29 @@ impl Metrics {
         self.prefix_hits += o.prefix_hits;
         self.pool_blocks_total += o.pool_blocks_total;
         self.peak_blocks_in_use += o.peak_blocks_in_use;
+        self.spec_steps += o.spec_steps;
+        self.spec_draft_tokens += o.spec_draft_tokens;
+        self.spec_accepted_tokens += o.spec_accepted_tokens;
+        self.spec_rollbacks += o.spec_rollbacks;
+        self.spec_rejected_tokens += o.spec_rejected_tokens;
+        self.draft_time += o.draft_time;
+        self.verify_time += o.verify_time;
+        self.draft_hist.merge(&o.draft_hist);
+        self.verify_hist.merge(&o.verify_hist);
         self.ttft_hist.merge(&o.ttft_hist);
         self.tpot_hist.merge(&o.tpot_hist);
         self.queue_wait_hist.merge(&o.queue_wait_hist);
         self.e2e_hist.merge(&o.e2e_hist);
+    }
+
+    /// Fraction of drafted tokens the target plan accepted. 0 when
+    /// speculation never ran.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.spec_draft_tokens == 0 {
+            0.0
+        } else {
+            self.spec_accepted_tokens as f64 / self.spec_draft_tokens as f64
+        }
     }
 
     /// Fraction of prefix-index probes that hit (block granularity).
@@ -107,7 +140,7 @@ impl Metrics {
     /// parse it — `Duration`'s `{:?}` switches units with magnitude.
     pub fn summary(&self) -> String {
         let ms = |d: Duration| d.as_secs_f64() * 1e3;
-        format!(
+        let mut s = format!(
             "submitted={} completed={} prefill_tok={} decode_tok={} prefill_ms={:.1} decode_ms={:.1} ttft_p50_ms={:.2} ttft_p99_ms={:.2} tpot_p50_ms={:.3} tpot_p99_ms={:.3} mean_batch={:.2} peak_blocks={}/{} preempt={} prefix_hit_tok={} hit_rate={:.1}%",
             self.submitted,
             self.completed,
@@ -125,7 +158,20 @@ impl Metrics {
             self.preemptions,
             self.prefix_hit_tokens,
             100.0 * self.prefix_hit_rate(),
-        )
+        );
+        if self.spec_steps > 0 {
+            s.push_str(&format!(
+                " spec_steps={} spec_drafted={} spec_accepted={} accept_rate={:.1}% spec_rollbacks={} draft_ms={:.1} verify_ms={:.1}",
+                self.spec_steps,
+                self.spec_draft_tokens,
+                self.spec_accepted_tokens,
+                100.0 * self.acceptance_rate(),
+                self.spec_rollbacks,
+                ms(self.draft_time),
+                ms(self.verify_time),
+            ));
+        }
+        s
     }
 }
 

@@ -33,6 +33,11 @@ pub struct SchedulerState {
     /// Tokens per block.
     pub block_size: usize,
     pub running_count: usize,
+    /// Spare blocks each admission leaves against immediate decode growth.
+    /// 1 for plain decode (one token per step); the engine raises it in
+    /// speculative mode, where a step grows up to `k + 1` positions and the
+    /// draft fork briefly copy-on-writes the shared tail block.
+    pub decode_headroom: usize,
 }
 
 #[derive(Debug)]
@@ -50,8 +55,15 @@ impl Scheduler {
                 total_blocks,
                 block_size: block_size.max(1),
                 running_count: 0,
+                decode_headroom: 1,
             },
         }
+    }
+
+    /// Raise (or restore) the per-admission growth headroom — see
+    /// [`SchedulerState::decode_headroom`]. Clamped to at least one block.
+    pub fn set_decode_headroom(&mut self, blocks: usize) {
+        self.state.decode_headroom = blocks.max(1);
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -92,7 +104,7 @@ impl Scheduler {
                 break;
             }
             let need = self.admission_need(front);
-            let fits_now = need + 1 <= available;
+            let fits_now = need + self.state.decode_headroom <= available;
             let sole_survivor = self.state.running_count == 0
                 && out.is_empty()
                 && need <= self.state.total_blocks;
@@ -222,5 +234,28 @@ mod tests {
         s.submit(req(2, 40, 8));
         // 2 running, 8 - 6 = 2 available: 3+1 > 2 and not sole survivor
         assert!(s.admit(2).is_empty());
+    }
+
+    #[test]
+    fn speculative_headroom_tightens_admission() {
+        // with 3 blocks of headroom a 3-block context needs 6 available
+        let mut s = Scheduler::new(8, 16, 16);
+        s.set_decode_headroom(3);
+        s.submit(req(0, 40, 8)); // 3 blocks
+        s.submit(req(1, 40, 8));
+        let a = s.admit(16);
+        assert_eq!(a.len(), 2, "ample pool admits both");
+        s.submit(req(2, 40, 8));
+        // 5 available: 3 + 3 > 5 → waits (plain headroom would admit)
+        assert!(s.admit(5).is_empty());
+        assert_eq!(s.admit(6).len(), 1);
+        // the sole-survivor rule is untouched by headroom
+        let mut tight = Scheduler::new(8, 4, 16);
+        tight.set_decode_headroom(4);
+        tight.submit(req(3, 40, 8));
+        assert_eq!(tight.admit(4).len(), 1, "forward progress guarantee");
+        // and the knob clamps to at least one block
+        tight.set_decode_headroom(0);
+        assert_eq!(tight.state.decode_headroom, 1);
     }
 }

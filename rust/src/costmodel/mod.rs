@@ -67,10 +67,25 @@ fn act_out_bytes(kernel: &dyn GemmKernel, m: u64, k: u64, n: u64) -> u64 {
 
 /// Predicted kernel latency in seconds.
 pub fn latency(gpu: &Gpu, kernel: &dyn GemmKernel, m: u64, k: u64, n: u64, g: u64) -> f64 {
+    latency_scaled(gpu, kernel, m, k, n, g, 1.0)
+}
+
+/// [`latency`] with the kernel's declared utilization scaled by a measured
+/// host multiplier (see [`Calibration`]); `util_mult` ≤ 0 means uncalibrated.
+pub fn latency_scaled(
+    gpu: &Gpu,
+    kernel: &dyn GemmKernel,
+    m: u64,
+    k: u64,
+    n: u64,
+    g: u64,
+    util_mult: f64,
+) -> f64 {
+    let util_mult = if util_mult > 0.0 { util_mult } else { 1.0 };
     let t: OpTrace = kernel.trace(m, k, n, g);
     // math pipe
     let macs = (t.int_mac + t.float_mac) as f64;
-    let t_math = macs / (tc_rate(gpu, kernel.math_pipe()) * kernel.utilization());
+    let t_math = macs / (tc_rate(gpu, kernel.math_pipe()) * kernel.utilization() * util_mult);
     // CUDA-core epilogue / expansion pipe (serializes with MMA)
     let t_cuda = t.i32_to_f32 as f64 / gpu.convert
         + (t.int_scale_mac + t.expand_ops) as f64 / gpu.cuda_alu;
@@ -116,6 +131,84 @@ pub fn recalibrate_utilization(
         .iter()
         .filter_map(|(n, m, p)| ratio(*m, *p).map(|r| (n.clone(), ref_ratio / r)))
         .collect()
+}
+
+/// Measured host calibration: the [`recalibrate_utilization`] multipliers
+/// persisted as JSON, closing the profile→costmodel loop. `repro profile
+/// --calibration-out <file>` writes one from the run's kernel profiles;
+/// `serve --calibration <file>` (or [`crate::plan::QuantPlan`]'s
+/// `calibration` field) feeds it back so plan auto-selection prices kernels
+/// with *this* host's measured ratios instead of the modeled A100's.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Calibration {
+    /// Kernel every ratio is normalized against (multiplier 1.0).
+    pub reference: String,
+    pub multipliers: Vec<(String, f64)>,
+}
+
+impl Calibration {
+    /// Derive from measured `(name, measured_s, predicted_s)` aggregates —
+    /// [`recalibrate_utilization`] plus provenance.
+    pub fn from_samples(samples: &[(String, f64, f64)], reference: &str) -> Calibration {
+        Calibration {
+            reference: reference.to_string(),
+            multipliers: recalibrate_utilization(samples, reference),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.multipliers.is_empty()
+    }
+
+    /// The utilization multiplier for `kernel` — 1.0 when unmeasured.
+    pub fn multiplier(&self, kernel: &str) -> f64 {
+        self.multipliers.iter().find(|(n, _)| n == kernel).map_or(1.0, |(_, f)| *f)
+    }
+
+    /// Hand-rolled JSON document (the crate is dependency-free).
+    pub fn to_json(&self) -> String {
+        let mults: Vec<String> = self
+            .multipliers
+            .iter()
+            .map(|(n, f)| format!("{:?}:{}", n, if f.is_finite() { *f } else { 1.0 }))
+            .collect();
+        format!(
+            "{{\"reference\":{:?},\"multipliers\":{{{}}}}}\n",
+            self.reference,
+            mults.join(",")
+        )
+    }
+
+    /// Parse the [`Calibration::to_json`] format back.
+    pub fn parse(src: &str) -> Result<Calibration, String> {
+        let doc = crate::obs::export::parse_json(src)?;
+        let reference = doc
+            .get("reference")
+            .and_then(|v| v.as_str())
+            .ok_or("calibration file missing \"reference\"")?
+            .to_string();
+        let mults = match doc.get("multipliers") {
+            Some(crate::obs::export::JsonValue::Obj(fields)) => fields
+                .iter()
+                .map(|(k, v)| {
+                    v.as_f64()
+                        .map(|f| (k.clone(), f))
+                        .ok_or_else(|| format!("multiplier '{k}' is not a number"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            _ => return Err("calibration file missing \"multipliers\" object".to_string()),
+        };
+        Ok(Calibration { reference, multipliers: mults })
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Calibration, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Calibration::parse(&src)
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
 }
 
 /// End-to-end per-token decode latency estimate for a model with `layers`
@@ -243,6 +336,30 @@ mod tests {
         assert!(recalibrate_utilization(&samples, "missing").is_empty());
         let zeroed = vec![("a".to_string(), 0.0, 1.0)];
         assert!(recalibrate_utilization(&zeroed, "a").is_empty());
+    }
+
+    #[test]
+    fn calibration_roundtrips_and_scales_latency() {
+        let samples = vec![
+            ("w4a8-fg-is".to_string(), 1.0, 1.0),
+            ("w4a8-fg-fs".to_string(), 4.0, 2.0),
+        ];
+        let c = Calibration::from_samples(&samples, "w4a8-fg-is");
+        assert!((c.multiplier("w4a8-fg-is") - 1.0).abs() < 1e-12);
+        assert!((c.multiplier("w4a8-fg-fs") - 0.5).abs() < 1e-12);
+        assert_eq!(c.multiplier("unmeasured"), 1.0);
+        let back = Calibration::parse(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // a 0.5 multiplier halves effective utilization → higher latency at
+        // a compute-bound shape
+        let gpu = Gpu::default();
+        let fs = get_or_panic("w4a8-fg-fs");
+        let base = latency(&gpu, &*fs, 512, K, N, G);
+        let cal = latency_scaled(&gpu, &*fs, 512, K, N, G, c.multiplier("w4a8-fg-fs"));
+        assert!(cal > base, "cal={cal} base={base}");
+        // degenerate multipliers fall back to uncalibrated
+        assert_eq!(latency_scaled(&gpu, &*fs, 512, K, N, G, 0.0), base);
+        assert!(Calibration::parse("{}").is_err());
     }
 
     #[test]

@@ -336,6 +336,12 @@ impl BlockPool {
             } else if inner.slots[table[idx]].refcount > 1 {
                 let nid = inner.cow_clone(table[idx]);
                 table[idx] = nid;
+            } else if let Some(h) = inner.slots[table[idx]].hash.take() {
+                // Overwriting an exclusive but prefix-registered block (a
+                // truncated tail being refilled): unregister it so the index
+                // never points at mutated content. Cheaper than CoW — no one
+                // else holds a reference.
+                inner.prefix.remove(h);
             }
             let id = table[idx];
             let off = BlockData::row_offset(bs, d, layer, pos % bs);

@@ -57,5 +57,6 @@ pub mod obs;
 pub mod plan;
 pub mod quant;
 pub mod runtime;
+pub mod specdec;
 pub mod tables;
 pub mod tensor;

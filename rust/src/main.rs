@@ -12,8 +12,17 @@
 //!                                             # (.json → JSON, else Prometheus text)
 //!             [--metrics-interval-ms 500]     # also dump periodically while serving
 //!             [--trace-spans 4096]            # span ring capacity (0 disables spans)
+//!             [--trace-out trace.json]        # chrome://tracing dump at exit
+//!             [--calibration cal.json]        # utilization multipliers for
+//!                                             # auto-selection (from `repro profile`)
+//!             [--spec-decode] [--spec-k 4 | -k 4]   # self-speculative decoding
+//!             [--draft-scheme w4a8-is | --draft-plan file]  # draft quant plan
+//!                                             # (default: cheapest guarded
+//!                                             #  integer-scale auto plan)
 //! repro profile [--schemes w4a8-fs,w4a8-is] [--requests 8]
 //!             [--prompt-len 16] [--new-tokens 16] [--workers N]
+//!             [--calibration-out cal.json]    # write measured multipliers for
+//!                                             # `serve --calibration`
 //!                                  # run a workload per scheme, print per-kernel
 //!                                  # measured ns next to OpTrace-predicted costs
 //! repro runtime-check [--workers N]  # parallel == serial + speedup
@@ -24,7 +33,7 @@
 //! (CLI is hand-rolled: clap is not available in this offline environment.)
 
 use integer_scale::coordinator::{Engine, EngineConfig, Policy, Request, Router};
-use integer_scale::costmodel::recalibrate_utilization;
+use integer_scale::costmodel::Calibration;
 use integer_scale::data::{CorpusGen, Split};
 use integer_scale::model::quantize::{
     kernel_assignment, quantize_model_plan, Method, QuantSpec,
@@ -34,6 +43,7 @@ use integer_scale::obs::{format_table, MetricsSnapshot, Obs};
 use integer_scale::plan::{PlanBuilder, QuantPlan};
 use integer_scale::quant::{BitWidth, Bits, Granularity};
 use integer_scale::runtime::Runtime;
+use integer_scale::specdec::{self, SpecConfig};
 use integer_scale::tables::{self, Ctx};
 use integer_scale::tensor::Mat;
 use std::path::Path;
@@ -55,7 +65,7 @@ fn parse_args() -> Args {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags take no value; value flags consume the next arg
-            if name == "moe" {
+            if name == "moe" || name == "spec-decode" {
                 flags.insert(name.to_string(), "true".to_string());
             } else if i + 1 < argv.len() {
                 flags.insert(name.to_string(), argv[i + 1].clone());
@@ -63,6 +73,10 @@ fn parse_args() -> Args {
             } else {
                 flags.insert(name.to_string(), "true".to_string());
             }
+        } else if a == "-k" && i + 1 < argv.len() {
+            // shorthand for the speculative draft window length
+            flags.insert("spec-k".to_string(), argv[i + 1].clone());
+            i += 1;
         } else if cmd.is_empty() {
             cmd = a.clone();
         }
@@ -132,6 +146,8 @@ fn serve(args: &Args) {
     let metrics_out = args.flags.get("metrics-out").cloned();
     let metrics_interval_ms = args.get_usize("metrics-interval-ms", 500);
     let trace_spans = args.get_usize("trace-spans", 4096);
+    let spec_decode = args.get_bool("spec-decode");
+    let spec_k = args.get_usize("spec-k", 4);
 
     let cfg = if moe { ModelConfig::moe_tiny() } else { ModelConfig::tiny() };
     let wpath = if moe { "artifacts/weights_moe.bin" } else { "artifacts/weights.bin" };
@@ -139,7 +155,7 @@ fn serve(args: &Args) {
     let gen = CorpusGen::new(cfg.vocab as u32, 7);
     let calib = gen.stream(192, Split::C4, 11);
     // `--plan <file>` takes precedence over `--scheme <name>`
-    let (label, plan) = match args.flags.get("plan") {
+    let (label, mut plan) = match args.flags.get("plan") {
         Some(path) => {
             let plan = match QuantPlan::from_file(Path::new(path)) {
                 Ok(p) => p,
@@ -156,6 +172,27 @@ fn serve(args: &Args) {
             (scheme.clone(), scheme_plan(&scheme))
         }
     };
+    // `--calibration <file>` feeds `repro profile`'s measured utilization
+    // multipliers into the cost-model auto-selection for this plan
+    if let Some(path) = args.flags.get("calibration") {
+        match Calibration::from_file(Path::new(path)) {
+            Ok(c) => match plan.as_mut() {
+                Some(p) => {
+                    println!(
+                        "calibration {path}: {} multipliers (reference {})",
+                        c.multipliers.len(),
+                        c.reference
+                    );
+                    p.calibration = Some(c);
+                }
+                None => eprintln!("--calibration ignored: fp16 baseline selects no kernels"),
+            },
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
     let mut model = match &plan {
         None => Transformer::from_weights(&weights),
         Some(p) => quantize_model_plan(&weights, p, &calib),
@@ -182,6 +219,33 @@ fn serve(args: &Args) {
     let model = Arc::new(model);
     // runtime handle for exporters: carries the obs hub + pool lane gauges
     let rt_handle = model.rt.clone();
+    // self-speculative decoding: a second quantization of the *same*
+    // weights serves as the draft model, sharing the target's runtime (and
+    // therefore its worker pool, obs hub, and kernel profiles)
+    let draft = if spec_decode {
+        let (dlabel, dplan) = match args.flags.get("draft-plan") {
+            Some(path) => match QuantPlan::from_file(Path::new(path)) {
+                Ok(p) => (path.clone(), Some(p)),
+                Err(e) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            },
+            None => match args.flags.get("draft-scheme") {
+                Some(s) => (s.clone(), scheme_plan(s)),
+                None => ("auto-is".to_string(), Some(specdec::default_draft_plan())),
+            },
+        };
+        let mut dm = match &dplan {
+            None => Transformer::from_weights(&weights),
+            Some(p) => quantize_model_plan(&weights, p, &calib),
+        };
+        dm.set_runtime(model.rt.clone());
+        println!("spec-decode: draft={dlabel} k={spec_k}");
+        Some(Arc::new(dm))
+    } else {
+        None
+    };
     let mut rng = integer_scale::tensor::Rng::new(77);
     let reqs: Vec<Request> = (0..requests)
         .map(|i| {
@@ -215,7 +279,13 @@ fn serve(args: &Args) {
         // true multi-replica serving: one engine per OS thread behind a
         // request channel, least-loaded dispatch with round-robin ties
         let engines = (0..replicas)
-            .map(|i| Engine::new(model.clone(), engine_cfg(i as u64)))
+            .map(|i| {
+                let mut e = Engine::new(model.clone(), engine_cfg(i as u64));
+                if let Some(d) = &draft {
+                    e.enable_spec_decode(d.clone(), SpecConfig::with_k(spec_k));
+                }
+                e
+            })
             .collect();
         let mut router = Router::new(engines, Policy::LeastLoaded);
         let t0 = Instant::now();
@@ -226,6 +296,9 @@ fn serve(args: &Args) {
         (res, wall, router.merged_metrics(), routed)
     } else {
         let mut engine = Engine::new(model, engine_cfg(3));
+        if let Some(d) = &draft {
+            engine.enable_spec_decode(d.clone(), SpecConfig::with_k(spec_k));
+        }
         for req in reqs {
             engine.submit(req);
         }
@@ -247,6 +320,15 @@ fn serve(args: &Args) {
         metrics.mean_batch()
     );
     println!("{}", metrics.summary());
+    if spec_decode && metrics.spec_steps > 0 {
+        println!(
+            "spec-decode: acceptance {:.3} ({} drafted, {} accepted, {} rollbacks)",
+            metrics.acceptance_rate(),
+            metrics.spec_draft_tokens,
+            metrics.spec_accepted_tokens,
+            metrics.spec_rollbacks
+        );
+    }
     if let Some(h) = dumper {
         stop_dumper.store(true, Ordering::Relaxed);
         let _ = h.join();
@@ -263,6 +345,14 @@ fn serve(args: &Args) {
                 obs.spans.dropped()
             ),
             Err(e) => eprintln!("failed to write metrics to {path}: {e}"),
+        }
+    }
+    if let Some(path) = args.flags.get("trace-out") {
+        // chrome://tracing / Perfetto "Load trace" compatible span dump
+        let spans = obs.spans.snapshot();
+        match integer_scale::obs::export::write_chrome_trace(&spans, Path::new(path)) {
+            Ok(()) => println!("chrome trace written to {path} ({} events)", spans.len()),
+            Err(e) => eprintln!("failed to write trace to {path}: {e}"),
         }
     }
 }
@@ -319,11 +409,19 @@ fn profile(args: &Args) {
         }
     }
     let reference = "w4a8-fg-is";
-    let multipliers = recalibrate_utilization(&samples, reference);
-    if !multipliers.is_empty() {
+    let calibration = Calibration::from_samples(&samples, reference);
+    if !calibration.is_empty() {
         println!("--- suggested utilization multipliers (reference {reference}) ---");
-        for (name, f) in multipliers {
+        for (name, f) in &calibration.multipliers {
             println!("{name:<16} x{f:.3}");
+        }
+    }
+    if let Some(path) = args.flags.get("calibration-out") {
+        match calibration.write(Path::new(path)) {
+            Ok(()) => {
+                println!("calibration written to {path} (feed back: serve --calibration {path})");
+            }
+            Err(e) => eprintln!("failed to write calibration to {path}: {e}"),
         }
     }
 }

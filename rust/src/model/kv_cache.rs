@@ -9,7 +9,7 @@
 //! tail), and caches created inside an engine share that engine's pool so
 //! common prompt prefixes are served from cached blocks.
 
-use crate::kvpool::{BlockId, BlockPool, HASH_SEED};
+use crate::kvpool::{chain_hash, BlockId, BlockPool, HASH_SEED};
 use crate::tensor::Mat;
 use std::fmt;
 use std::sync::Arc;
@@ -110,6 +110,45 @@ impl KvCache {
             let chunk = &self.tokens[b * bs..(b + 1) * bs];
             self.hash_state = self.pool.register_full_block(self.hash_state, chunk, self.table[b]);
             self.registered_blocks += 1;
+        }
+    }
+
+    /// Disable prefix registration for this sequence from now on. Draft
+    /// forks in speculative decoding use this: their K/V rows come from the
+    /// *draft* quantization plan, so registering them under the token chain
+    /// hash would poison the shared prefix cache with draft-quality blocks.
+    pub fn set_anonymous(&mut self) {
+        self.anonymous = true;
+    }
+
+    /// Roll the sequence back to `len` committed positions — the rejection
+    /// path of speculative decoding. Whole blocks past the new tail are
+    /// released back to the pool (refcount-correct: shared blocks survive
+    /// for their other holders); the partially-filled tail block is kept and
+    /// simply overwritten by future appends. Token tracking, the registered-
+    /// block counter, and the chain-hash state rewind consistently so prefix
+    /// registration resumes correctly after the rollback.
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.seq_len, "truncate beyond the committed length");
+        if len == self.seq_len {
+            return;
+        }
+        let bs = self.pool.block_size();
+        let keep = len.div_ceil(bs);
+        self.pool.drop_table(&self.table[keep..]);
+        self.table.truncate(keep);
+        self.seq_len = len;
+        if self.tokens.len() > len {
+            self.tokens.truncate(len);
+        }
+        let reg = self.registered_blocks.min(len / bs);
+        if reg < self.registered_blocks {
+            let mut state = HASH_SEED;
+            for b in 0..reg {
+                state = chain_hash(state, &self.tokens[b * bs..(b + 1) * bs]);
+            }
+            self.hash_state = state;
+            self.registered_blocks = reg;
         }
     }
 

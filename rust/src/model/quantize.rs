@@ -304,13 +304,14 @@ fn quantize_linear_planned(
             audited_risky = audit_utilization(&is_ql, calib) > OVERFLOW_UTILIZATION_LIMIT;
             probe = Some((is_spec, is_ql));
             let g = is_spec.gran.group_size(w.cols);
-            let k = plan::auto_select_kernel(
+            let k = plan::auto_select_kernel_calibrated(
                 gpu,
                 plan.batch,
                 w.cols,
                 w.rows,
                 g,
                 audited_risky,
+                plan.calibration.as_ref(),
             );
             (plan::spec_for_kernel(&entry.spec, &*k), k)
         }

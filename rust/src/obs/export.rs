@@ -9,6 +9,7 @@
 //! format (`.json` → JSON, anything else → Prometheus text).
 
 use super::profile::ProfileRow;
+use super::span::SpanRecord;
 use super::Obs;
 use crate::coordinator::Metrics;
 use crate::runtime::{LaneStats, Runtime};
@@ -58,6 +59,11 @@ impl MetricsSnapshot {
             submitted: obs.submitted.load(Relaxed),
             completed: obs.completed.load(Relaxed),
             decode_tokens: obs.decode_tokens.load(Relaxed),
+            spec_draft_tokens: obs.spec_drafted.load(Relaxed),
+            spec_accepted_tokens: obs.spec_accepted.load(Relaxed),
+            spec_rollbacks: obs.spec_rollbacks.load(Relaxed),
+            draft_hist: obs.draft.clone(),
+            verify_hist: obs.verify.clone(),
             ttft_hist: obs.ttft.clone(),
             tpot_hist: obs.tpot.clone(),
             queue_wait_hist: obs.queue_wait.clone(),
@@ -107,6 +113,15 @@ impl MetricsSnapshot {
         counter(&mut s, "prefix_hit_tokens", "Prompt tokens served from cache.", m.prefix_hit_tokens);
         counter(&mut s, "spans_recorded", "Spans pushed to the trace ring.", self.spans_recorded);
         counter(&mut s, "spans_dropped", "Spans lost to ring wraparound.", self.spans_dropped);
+        counter(&mut s, "spec_steps", "Speculative draft/verify iterations.", m.spec_steps);
+        counter(&mut s, "spec_draft_tokens", "Tokens drafted on the draft plan.", m.spec_draft_tokens);
+        counter(&mut s, "spec_accepted_tokens", "Drafted tokens the target accepted.", m.spec_accepted_tokens);
+        counter(&mut s, "spec_rollbacks", "Speculation rejections rolled back.", m.spec_rollbacks);
+        counter(&mut s, "spec_rejected_tokens", "Drafted tokens discarded on rollback.", m.spec_rejected_tokens);
+        s.push_str(&format!(
+            "# HELP is_spec_acceptance_rate Fraction of drafted tokens accepted.\n# TYPE is_spec_acceptance_rate gauge\nis_spec_acceptance_rate {}\n",
+            fnum(m.acceptance_rate())
+        ));
         s.push_str(&format!(
             "# HELP is_pool_blocks_total KV pool capacity in blocks.\n# TYPE is_pool_blocks_total gauge\nis_pool_blocks_total {}\n",
             m.pool_blocks_total
@@ -124,6 +139,8 @@ impl MetricsSnapshot {
             ("tpot_seconds", "Per-output-token latency.", &m.tpot_hist),
             ("queue_wait_seconds", "Arrival to first prefill.", &m.queue_wait_hist),
             ("e2e_seconds", "End-to-end request latency.", &m.e2e_hist),
+            ("spec_draft_seconds", "Per-sequence speculative draft loop.", &m.draft_hist),
+            ("spec_verify_seconds", "Per-sequence batched verify call.", &m.verify_hist),
         ] {
             s.push_str(&format!("# HELP is_{name} {help}\n# TYPE is_{name} summary\n"));
             for q in [0.5, 0.9, 0.99] {
@@ -213,6 +230,7 @@ impl MetricsSnapshot {
              \"tokens\":{{\"prefill\":{},\"decode\":{},\"prefix_hit\":{},\"tokens_per_sec\":{}}},\n\
              \"batch\":{{\"mean\":{},\"max\":{}}},\n\
              \"pool\":{{\"blocks_total\":{},\"peak_blocks_in_use\":{},\"prefix_hit_rate\":{}}},\n\
+             \"spec\":{{\"steps\":{},\"draft_tokens\":{},\"accepted_tokens\":{},\"rollbacks\":{},\"rejected_tokens\":{},\"acceptance_rate\":{},\"draft\":{},\"verify\":{}}},\n\
              \"latency\":{{\"ttft\":{},\"tpot\":{},\"queue_wait\":{},\"e2e\":{}}},\n\
              \"lanes\":[{}],\n\
              \"kernels\":[{}],\n\
@@ -232,6 +250,14 @@ impl MetricsSnapshot {
             m.pool_blocks_total,
             m.peak_blocks_in_use,
             fnum(m.prefix_hit_rate()),
+            m.spec_steps,
+            m.spec_draft_tokens,
+            m.spec_accepted_tokens,
+            m.spec_rollbacks,
+            m.spec_rejected_tokens,
+            fnum(m.acceptance_rate()),
+            hist(&m.draft_hist),
+            hist(&m.verify_hist),
             hist(&m.ttft_hist),
             hist(&m.tpot_hist),
             hist(&m.queue_wait_hist),
@@ -260,6 +286,42 @@ impl MetricsSnapshot {
         }
         std::fs::rename(&tmp, path)
     }
+}
+
+/// Render a span snapshot as `chrome://tracing` / Perfetto trace-event
+/// JSON: one complete (`"ph":"X"`) event per span, timestamps in
+/// microseconds since the obs epoch, `tid` = the worker lane that executed
+/// the span (0 = a caller thread). Load the file via `chrome://tracing` or
+/// <https://ui.perfetto.dev> to inspect request timelines visually. Span
+/// ids and parents ride along in `args` so tooling can rebuild the
+/// hierarchy the flat event list flattens away.
+pub fn chrome_trace(spans: &[SpanRecord]) -> String {
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        events.push(format!(
+            "{{\"name\":{},\"cat\":\"{:?}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"id\":{},\"parent\":{},\"tag\":{}}}}}",
+            jstr(s.label),
+            s.kind,
+            fnum(s.start_ns as f64 / 1e3),
+            fnum(s.dur_ns as f64 / 1e3),
+            s.lane,
+            s.id,
+            s.parent,
+            s.tag,
+        ));
+    }
+    format!("{{\"traceEvents\":[{}],\"displayTimeUnit\":\"ms\"}}\n", events.join(",\n"))
+}
+
+/// Write a span snapshot as a Chrome-trace JSON file (tmp + rename, like
+/// [`MetricsSnapshot::write`]).
+pub fn write_chrome_trace(spans: &[SpanRecord], path: &Path) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(chrome_trace(spans).as_bytes())?;
+    }
+    std::fs::rename(&tmp, path)
 }
 
 /// Finite-or-zero float formatting (NaN/inf are not valid JSON).
@@ -595,6 +657,71 @@ mod tests {
         assert!(parse_json("[1,]").is_err());
         assert!(parse_json("{} trailing").is_err());
         assert!(parse_json("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_through_the_parser() {
+        use crate::obs::SpanKind;
+        let spans = vec![
+            SpanRecord {
+                id: 1,
+                parent: 0,
+                kind: SpanKind::Step,
+                label: "step",
+                start_ns: 1_000,
+                dur_ns: 5_000,
+                tag: 0,
+                lane: 0,
+            },
+            SpanRecord {
+                id: 2,
+                parent: 1,
+                kind: SpanKind::Verify,
+                label: "verify",
+                start_ns: 2_000,
+                dur_ns: 1_500,
+                tag: 5,
+                lane: 1,
+            },
+        ];
+        let doc = parse_json(&chrome_trace(&spans)).expect("trace must be valid JSON");
+        let evs = doc.path("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        let v = &evs[1];
+        assert_eq!(v.get("name").unwrap().as_str(), Some("verify"));
+        assert_eq!(v.get("cat").unwrap().as_str(), Some("Verify"));
+        assert_eq!(v.get("ph").unwrap().as_str(), Some("X"));
+        // nanoseconds → microseconds
+        assert_eq!(v.get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("dur").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.path("args.parent").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.path("args.tag").unwrap().as_f64(), Some(5.0));
+        // an empty snapshot is still a loadable trace
+        assert!(parse_json(&chrome_trace(&[])).is_ok());
+    }
+
+    #[test]
+    fn spec_metrics_export_in_both_formats() {
+        let mut snap = sample_snapshot();
+        snap.metrics.spec_steps = 4;
+        snap.metrics.spec_draft_tokens = 16;
+        snap.metrics.spec_accepted_tokens = 12;
+        snap.metrics.spec_rollbacks = 2;
+        snap.metrics.spec_rejected_tokens = 4;
+        snap.metrics.draft_hist.record(Duration::from_micros(300));
+        snap.metrics.verify_hist.record(Duration::from_micros(700));
+        let text = snap.prometheus();
+        assert!(text.contains("is_spec_draft_tokens 16"));
+        assert!(text.contains("is_spec_accepted_tokens 12"));
+        assert!(text.contains("is_spec_rollbacks 2"));
+        assert!(text.contains("is_spec_acceptance_rate 0.75"));
+        assert!(text.contains("is_spec_verify_seconds_count 1"));
+        let doc = parse_json(&snap.json()).unwrap();
+        assert_eq!(doc.path("spec.draft_tokens").unwrap().as_f64(), Some(16.0));
+        assert_eq!(doc.path("spec.acceptance_rate").unwrap().as_f64(), Some(0.75));
+        assert_eq!(doc.path("spec.rollbacks").unwrap().as_f64(), Some(2.0));
+        assert!(doc.path("spec.verify.p50_ms").is_some());
     }
 
     #[test]

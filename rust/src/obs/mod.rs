@@ -60,6 +60,13 @@ pub struct Obs {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub decode_tokens: AtomicU64,
+    /// Speculative decoding: per-call draft / verify latency mirrors and
+    /// live acceptance counters (drafted vs accepted vs rolled back).
+    pub draft: LatencyHist,
+    pub verify: LatencyHist,
+    pub spec_drafted: AtomicU64,
+    pub spec_accepted: AtomicU64,
+    pub spec_rollbacks: AtomicU64,
 }
 
 impl Obs {
@@ -79,6 +86,11 @@ impl Obs {
             submitted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             decode_tokens: AtomicU64::new(0),
+            draft: LatencyHist::new(),
+            verify: LatencyHist::new(),
+            spec_drafted: AtomicU64::new(0),
+            spec_accepted: AtomicU64::new(0),
+            spec_rollbacks: AtomicU64::new(0),
         })
     }
 

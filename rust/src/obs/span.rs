@@ -26,6 +26,11 @@ pub enum SpanKind {
     Prefill,
     /// One batched decode pass, tag = batch size.
     Decode,
+    /// Speculative draft loop for one sequence, tag = tokens drafted.
+    Draft,
+    /// Speculative batch-verify call for one sequence, tag = positions
+    /// verified (k drafted + 1 bonus).
+    Verify,
     /// One transformer layer, tag = layer index.
     Layer,
     /// One GEMM kernel forward, tag = M (batch rows).

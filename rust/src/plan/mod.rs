@@ -26,7 +26,7 @@ pub mod text;
 
 pub use text::PlanError;
 
-use crate::costmodel::{self, Gpu};
+use crate::costmodel::{self, Calibration, Gpu};
 use crate::gemm::registry::{self, ScaleMode};
 use crate::gemm::GemmKernel;
 use crate::model::quantize::QuantSpec;
@@ -143,6 +143,10 @@ pub struct QuantPlan {
     pub overflow_guard: bool,
     /// Expected decode batch for the cost model (auto-select entries).
     pub batch: usize,
+    /// Measured host calibration for auto-select pricing (`serve
+    /// --calibration <file>`). Host-local, so not part of the textual plan
+    /// format — attach it after parsing.
+    pub calibration: Option<Calibration>,
 }
 
 impl QuantPlan {
@@ -155,6 +159,7 @@ impl QuantPlan {
             layers: BTreeMap::new(),
             overflow_guard: false,
             batch: DEFAULT_AUTO_BATCH,
+            calibration: None,
         }
     }
 
@@ -255,6 +260,12 @@ impl PlanBuilder {
         self
     }
 
+    /// Attach measured host calibration multipliers for auto-select pricing.
+    pub fn calibration(mut self, calib: Calibration) -> Self {
+        self.plan.calibration = if calib.is_empty() { None } else { Some(calib) };
+        self
+    }
+
     pub fn build(self) -> QuantPlan {
         self.plan
     }
@@ -279,6 +290,21 @@ pub fn auto_select_kernel(
     g: usize,
     risky: bool,
 ) -> Arc<dyn GemmKernel> {
+    auto_select_kernel_calibrated(gpu, m, k, n, g, risky, None)
+}
+
+/// [`auto_select_kernel`] pricing each candidate with measured host
+/// utilization multipliers (`repro profile --calibration-out` →
+/// `serve --calibration`). `None` keeps the modeled-A100 utilizations.
+pub fn auto_select_kernel_calibrated(
+    gpu: &Gpu,
+    m: usize,
+    k: usize,
+    n: usize,
+    g: usize,
+    risky: bool,
+    calib: Option<&Calibration>,
+) -> Arc<dyn GemmKernel> {
     let mut best: Option<(f64, Arc<dyn GemmKernel>)> = None;
     for name in AUTO_CANDIDATES {
         let mut kern = registry::get_or_panic(name);
@@ -288,7 +314,10 @@ pub fn auto_select_kernel(
             }
         }
         let geff = if kern.fine_grained() { g.min(k) } else { k };
-        let lat = costmodel::latency(gpu, &*kern, m as u64, k as u64, n as u64, geff as u64);
+        let mult = calib.map_or(1.0, |c| c.multiplier(kern.name()));
+        let lat = costmodel::latency_scaled(
+            gpu, &*kern, m as u64, k as u64, n as u64, geff as u64, mult,
+        );
         if best.as_ref().map_or(true, |(b, _)| lat < *b) {
             best = Some((lat, kern));
         }
@@ -401,6 +430,25 @@ mod tests {
         // must be audit-safe (no un-fallen-back integer-scale fast path)
         let k = auto_select_kernel(&gpu, 256, 4096, 22016, 128, true);
         assert_ne!(k.name(), "w4a8-fg-is");
+    }
+
+    #[test]
+    fn calibration_multipliers_change_auto_selection() {
+        let gpu = Gpu::default();
+        // uncalibrated, the IS kernel wins the compute-bound shape
+        assert_eq!(auto_select_kernel(&gpu, 256, 4096, 22016, 128, false).name(), "w4a8-fg-is");
+        // a host where the IS epilogue measures 50× slower than modeled
+        // must steer auto-selection elsewhere
+        let calib = Calibration {
+            reference: "w8a8".to_string(),
+            multipliers: vec![("w4a8-fg-is".to_string(), 0.02), ("w8a8".to_string(), 1.0)],
+        };
+        let k = auto_select_kernel_calibrated(&gpu, 256, 4096, 22016, 128, false, Some(&calib));
+        assert_ne!(k.name(), "w4a8-fg-is");
+        // an empty calibration is the identity
+        let empty = Calibration::default();
+        let k = auto_select_kernel_calibrated(&gpu, 256, 4096, 22016, 128, false, Some(&empty));
+        assert_eq!(k.name(), "w4a8-fg-is");
     }
 
     #[test]

@@ -299,7 +299,7 @@ pub fn parse(textual: &str) -> Result<QuantPlan, PlanError> {
         return Err(err(1, "empty plan file (expected 'plan v1')"));
     }
     let base = base.ok_or_else(|| err(textual.lines().count().max(1), "missing 'base' line"))?;
-    Ok(QuantPlan { base, roles, layers, overflow_guard, batch })
+    Ok(QuantPlan { base, roles, layers, overflow_guard, batch, calibration: None })
 }
 
 impl QuantPlan {

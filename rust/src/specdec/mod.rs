@@ -1,0 +1,309 @@
+//! Self-speculative decoding: draft on the fast Integer-Scale path, verify
+//! on the target plan.
+//!
+//! Both "models" are the same Transformer weights under two [`QuantPlan`]s.
+//! The *draft* runs the cheapest overflow-safe scheme (by default the
+//! Integer-Scale fast path the paper makes free); the *target* is whatever
+//! plan the deployment actually serves. Each speculation step:
+//!
+//! 1. **Draft** `k` tokens greedily on a copy-on-write fork of the
+//!    sequence's KV block table ([`KvCache::clone`] shares every block; the
+//!    fork is [`KvCache::set_anonymous`] so draft-quality K/V never enters
+//!    the shared prefix index).
+//! 2. **Verify** all `k + 1` positions (the pending token plus the drafts)
+//!    in ONE batched [`Transformer::prefill`] call on the target plan. Per
+//!    output row the batched GEMMs are bit-identical to sequential decode
+//!    (row-independent kernels, position-only rope, causal per-row
+//!    attention), so greedy verification is *lossless*: accepted tokens are
+//!    exactly what plain decode under the target plan would have produced.
+//! 3. **Accept** the longest prefix of drafts matching the target's argmax,
+//!    plus one free token from the verify logits (the correction on a
+//!    rejection, the bonus token on full acceptance).
+//! 4. **Roll back** rejected positions with [`KvCache::truncate`]
+//!    (refcount-correct tail release; prefix-cache registration rewinds).
+//!
+//! A step always emits between 1 and `k + 1` tokens, so speculation can
+//! only reduce the number of target-model *calls* per token — the win the
+//! paper's cheap draft path pays for. `k = 0` degenerates to a correct
+//! single-token decode through the verify call, which is what the engine
+//! falls back to under KV-pool pressure.
+
+use crate::model::quantize::Method;
+use crate::model::sampler::argmax;
+use crate::model::{KvCache, QuantSpec, Transformer};
+use crate::obs::SpanKind;
+use crate::plan::{PlanBuilder, QuantPlan};
+use crate::quant::{BitWidth, Granularity};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Speculation window controls. The engine adapts `k` per sequence inside
+/// `[k_min, k_max]`: full acceptance widens the window, repeated rejection
+/// halves it, so well-predicted (repetitive) text drafts deeper while
+/// adversarial text degrades toward plain decode instead of wasting drafts.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecConfig {
+    /// Initial tokens drafted per verify call.
+    pub k: usize,
+    /// Adaptive window floor (never stop speculating entirely).
+    pub k_min: usize,
+    /// Adaptive window ceiling.
+    pub k_max: usize,
+}
+
+impl Default for SpecConfig {
+    fn default() -> Self {
+        SpecConfig { k: 4, k_min: 1, k_max: 8 }
+    }
+}
+
+impl SpecConfig {
+    /// A config starting (and capped no lower than) `k` drafts per step.
+    pub fn with_k(k: usize) -> Self {
+        let k = k.max(1);
+        SpecConfig { k, k_min: 1, k_max: k.max(8) }
+    }
+}
+
+/// The default draft plan: RTN W4A8 fine-grained with Integer Scale —
+/// quantization is calibration-free (fast to build at serve start) and the
+/// kernel resolves through cost-model auto-selection at decode batch 1 with
+/// the §B.4 overflow guard on, i.e. the cheapest overflow-safe scheme.
+pub fn default_draft_plan() -> QuantPlan {
+    PlanBuilder::new(
+        QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
+    )
+    .overflow_guard(true)
+    .auto_select(1)
+    .build()
+}
+
+/// Outcome of one speculation step.
+#[derive(Clone, Debug)]
+pub struct SpecStep {
+    /// Tokens committed to the sequence this step: the accepted drafts plus
+    /// the target's correction/bonus token. Always non-empty.
+    pub emitted: Vec<u32>,
+    /// Tokens the draft model proposed (`<= k`; 0 when `k == 0`).
+    pub drafted: usize,
+    /// Drafted tokens the target accepted (`<= drafted`).
+    pub accepted: usize,
+    /// Wall time inside the draft loop.
+    pub draft_time: Duration,
+    /// Wall time inside the batched verify (including the rollback).
+    pub verify_time: Duration,
+}
+
+/// Drives draft/verify/rollback for one sequence at a time. Cheap to clone
+/// (the draft model is shared). The draft transformer should share the
+/// target's [`crate::runtime::Runtime`] so spans, profiles, and the worker
+/// pool are common to both plans.
+#[derive(Clone)]
+pub struct SpecDecoder {
+    pub draft: Arc<Transformer>,
+    pub cfg: SpecConfig,
+}
+
+impl SpecDecoder {
+    pub fn new(draft: Arc<Transformer>, cfg: SpecConfig) -> Self {
+        SpecDecoder { draft, cfg }
+    }
+
+    /// One draft/verify/rollback round for a sequence whose cache holds the
+    /// K/V of everything before `next_token` (the pending token: sampled
+    /// but not yet run through the model).
+    ///
+    /// The caller picks `k` (already clamped for generation budget, cache
+    /// capacity, and pool headroom); `k = 0` skips drafting and the verify
+    /// call becomes a plain single-token decode. On return the cache again
+    /// holds exactly the K/V of everything before the new pending token
+    /// (`emitted.last()`), i.e. `seq_len` grew by `emitted.len()`.
+    pub fn step(
+        &self,
+        target: &Transformer,
+        cache: &mut KvCache,
+        next_token: u32,
+        k: usize,
+    ) -> SpecStep {
+        let obs = target.rt.obs().filter(|o| o.is_enabled());
+
+        // --- draft: k greedy tokens on a CoW fork of the block table
+        let t0 = Instant::now();
+        let mut drafted = Vec::with_capacity(k);
+        if k > 0 {
+            let _draft_span =
+                obs.and_then(|o| o.span_tagged(SpanKind::Draft, "draft", k as u64));
+            let mut fork = cache.clone();
+            fork.set_anonymous();
+            let mut tok = next_token;
+            for _ in 0..k {
+                let mut refs = [&mut fork];
+                let logits = self.draft.decode_batch(&[tok], &mut refs);
+                tok = argmax(logits.row(0));
+                drafted.push(tok);
+            }
+            // the fork drops here, releasing its blocks before verify grows
+        }
+        let draft_time = t0.elapsed();
+
+        // --- verify: all k+1 positions in one batched target prefill
+        let t1 = Instant::now();
+        let base = cache.seq_len;
+        let mut ctx = Vec::with_capacity(drafted.len() + 1);
+        ctx.push(next_token);
+        ctx.extend_from_slice(&drafted);
+        let logits = {
+            let _verify_span =
+                obs.and_then(|o| o.span_tagged(SpanKind::Verify, "verify", ctx.len() as u64));
+            target.prefill(&ctx, cache)
+        };
+
+        // --- accept the longest matching prefix of the drafts
+        let mut accepted = 0usize;
+        for (j, &d) in drafted.iter().enumerate() {
+            if argmax(logits.row(j)) == d {
+                accepted = j + 1;
+            } else {
+                break;
+            }
+        }
+        let mut emitted = drafted[..accepted].to_vec();
+        // the target's correction on rejection, or the bonus token on full
+        // acceptance — a step always makes progress
+        emitted.push(argmax(logits.row(accepted)));
+
+        // --- roll back rejected positions; keep K/V for everything before
+        //     the new pending token
+        cache.truncate(base + accepted + 1);
+        let verify_time = t1.elapsed();
+
+        SpecStep { emitted, drafted: drafted.len(), accepted, draft_time, verify_time }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ModelWeights};
+
+    fn tiny(seed: u64) -> Transformer {
+        let cfg = ModelConfig {
+            n_layers: 2,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 64,
+            max_seq: 64,
+            n_experts: None,
+        };
+        Transformer::from_weights(&ModelWeights::random(cfg, seed))
+    }
+
+    /// `steps` greedy tokens the plain decode loop produces after `prompt`.
+    fn plain_greedy(model: &Transformer, prompt: &[u32], steps: usize) -> Vec<u32> {
+        let mut cache = model.new_cache();
+        let logits = model.prefill(prompt, &mut cache);
+        let mut next = argmax(logits.row(prompt.len() - 1));
+        let mut out = vec![next];
+        while out.len() < steps {
+            let mut refs = [&mut cache];
+            let logits = model.decode_batch(&[next], &mut refs);
+            next = argmax(logits.row(0));
+            out.push(next);
+        }
+        out
+    }
+
+    /// Run speculation to exactly `steps` tokens with the engine's clamps.
+    fn spec_greedy(
+        dec: &SpecDecoder,
+        target: &Transformer,
+        prompt: &[u32],
+        steps: usize,
+    ) -> (Vec<u32>, usize, usize, bool) {
+        let mut cache = target.new_cache();
+        let logits = target.prefill(prompt, &mut cache);
+        let mut next = argmax(logits.row(prompt.len() - 1));
+        let mut out = vec![next];
+        let (mut drafted, mut accepted, mut rejected) = (0, 0, false);
+        while out.len() < steps {
+            let k = dec.cfg.k.min(steps - out.len() - 1).min(cache.capacity - cache.seq_len - 2);
+            let step = dec.step(target, &mut cache, next, k);
+            assert!(!step.emitted.is_empty(), "a step must always make progress");
+            assert_eq!(step.emitted.len(), step.accepted + 1);
+            drafted += step.drafted;
+            accepted += step.accepted;
+            rejected |= step.accepted < step.drafted;
+            out.extend_from_slice(&step.emitted);
+            next = *out.last().unwrap();
+            // committed-cache invariant: prompt + generated − 1 (pending)
+            assert_eq!(cache.seq_len, prompt.len() + out.len() - 1);
+        }
+        (out, drafted, accepted, rejected)
+    }
+
+    #[test]
+    fn same_plan_draft_fully_accepts_and_matches_plain_decode() {
+        let model = Arc::new(tiny(11));
+        let dec = SpecDecoder::new(model.clone(), SpecConfig::default());
+        let prompt = [3u32, 9, 14, 2];
+        let plain = plain_greedy(&model, &prompt, 13);
+        let (spec, drafted, accepted, rejected) = spec_greedy(&dec, &model, &prompt, 13);
+        assert_eq!(spec, plain, "speculation changed greedy output");
+        assert_eq!(accepted, drafted, "identical plans must agree bit-for-bit");
+        assert!(!rejected);
+        assert!(drafted > 0);
+    }
+
+    #[test]
+    fn mismatched_draft_rejects_but_stays_lossless() {
+        // a draft with unrelated weights is the worst case: almost every
+        // draft is rejected, yet emitted tokens must still be exactly the
+        // target's plain greedy decode
+        let target = Arc::new(tiny(11));
+        let draft = Arc::new(tiny(12));
+        let dec = SpecDecoder::new(draft, SpecConfig::default());
+        let prompt = [5u32, 1, 30];
+        let plain = plain_greedy(&target, &prompt, 12);
+        let (spec, drafted, accepted, rejected) = spec_greedy(&dec, &target, &prompt, 12);
+        assert_eq!(spec, plain, "rejection path broke losslessness");
+        assert!(rejected, "unrelated draft weights must reject sometimes");
+        assert!(accepted <= drafted);
+    }
+
+    #[test]
+    fn zero_window_degenerates_to_plain_decode() {
+        let model = Arc::new(tiny(11));
+        let dec = SpecDecoder::new(model.clone(), SpecConfig::default());
+        let prompt = [7u32, 7, 7];
+        let mut cache = model.new_cache();
+        let logits = model.prefill(&prompt, &mut cache);
+        let next = argmax(logits.row(prompt.len() - 1));
+        let step = dec.step(&model, &mut cache, next, 0);
+        assert_eq!(step.drafted, 0);
+        assert_eq!(step.accepted, 0);
+        assert_eq!(step.emitted.len(), 1);
+        assert_eq!(cache.seq_len, prompt.len() + 1);
+        // and it emits what plain decode would
+        let plain = plain_greedy(&model, &prompt, 2);
+        assert_eq!(step.emitted[0], plain[1]);
+    }
+
+    #[test]
+    fn default_draft_plan_is_auto_selected_with_guard() {
+        let p = default_draft_plan();
+        assert!(p.has_auto());
+        assert!(p.overflow_guard);
+        assert_eq!(p.batch, 1);
+    }
+
+    #[test]
+    fn with_k_clamps_sensibly() {
+        let c = SpecConfig::with_k(0);
+        assert_eq!(c.k, 1);
+        assert!(c.k_min <= c.k && c.k <= c.k_max);
+        let c = SpecConfig::with_k(12);
+        assert_eq!(c.k, 12);
+        assert_eq!(c.k_max, 12);
+    }
+}

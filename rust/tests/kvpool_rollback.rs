@@ -1,0 +1,240 @@
+//! Property tests for KV-cache rollback — the pool-level safety net under
+//! speculative decoding, where every step forks a draft cache, batch-writes
+//! a verify window, and truncates the rejected tail.
+//!
+//! Hand-rolled (proptest is unavailable offline): seeded random
+//! append/truncate/clone/drop interleavings, failing seed printed in the
+//! assert message.
+
+use integer_scale::kvpool::{BlockPool, BLOCK_SIZE};
+use integer_scale::model::KvCache;
+use integer_scale::tensor::{Mat, Rng};
+
+const D: usize = 8;
+
+/// Random interleavings of the operations an engine performs during
+/// speculative decoding (commit, rollback, fork, preempt-release, read)
+/// never break the allocator's accounting: gauges always partition the
+/// fixed pool exactly, per-cache tables track the committed length, and
+/// dropping every cache returns every block.
+#[test]
+fn prop_random_interleavings_preserve_pool_accounting() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let n_blocks = 24 + rng.below(24);
+        let pool = BlockPool::shared(1, D, n_blocks, BLOCK_SIZE);
+        let capacity = 64;
+        let mut caches = vec![KvCache::new_in_pool(pool.clone(), capacity)];
+        let mut next_tok = 0u32;
+        for step in 0..150u64 {
+            match rng.below(6) {
+                0 | 1 => {
+                    // append + commit (unique tokens: the chain-hash paths
+                    // run, accidental prefix hits do not)
+                    if caches.is_empty() {
+                        caches.push(KvCache::new_in_pool(pool.clone(), capacity));
+                    }
+                    let i = rng.below(caches.len());
+                    let t = 1 + rng.below(6);
+                    let c = &mut caches[i];
+                    if c.seq_len + t > capacity {
+                        continue;
+                    }
+                    let bs = c.block_size();
+                    // worst case: new tail blocks + one copy-on-write
+                    let need =
+                        (c.seq_len + t).div_ceil(bs).saturating_sub(c.blocks_held()) + 1;
+                    if pool.available_blocks() < need {
+                        continue;
+                    }
+                    let mut gen = Rng::new(seed * 1000 + step);
+                    let k = Mat::randn(t, D, 1.0, &mut gen);
+                    let v = Mat::randn(t, D, 0.5, &mut gen);
+                    c.append(0, &k, &v);
+                    let mut toks = Vec::with_capacity(t);
+                    for _ in 0..t {
+                        next_tok += 1;
+                        toks.push(next_tok);
+                    }
+                    c.advance_tokens(&toks);
+                }
+                2 => {
+                    // rollback (the speculative rejection path)
+                    if caches.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(caches.len());
+                    let len = rng.below(caches[i].seq_len + 1);
+                    caches[i].truncate(len);
+                }
+                3 => {
+                    // fork (the speculative draft path)
+                    if caches.is_empty() || caches.len() >= 6 {
+                        continue;
+                    }
+                    let i = rng.below(caches.len());
+                    let fork = caches[i].clone();
+                    caches.push(fork);
+                }
+                4 => {
+                    // drop (retire / preempt releases the whole table)
+                    if caches.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(caches.len());
+                    caches.swap_remove(i);
+                }
+                _ => {
+                    // every committed row stays readable
+                    if caches.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(caches.len());
+                    let c = &caches[i];
+                    assert_eq!(
+                        c.gather_keys(0, c.seq_len).data.len(),
+                        c.seq_len * D,
+                        "seed={seed} step={step}"
+                    );
+                }
+            }
+            let g = pool.gauges();
+            assert_eq!(g.total_blocks, n_blocks, "seed={seed}: fixed pool grew");
+            assert_eq!(
+                g.free_blocks + g.evictable_blocks + g.blocks_in_use,
+                n_blocks,
+                "seed={seed} step={step}: gauges no longer partition the pool"
+            );
+            let held: usize = caches.iter().map(|c| c.blocks_held()).sum();
+            assert!(
+                g.blocks_in_use <= held,
+                "seed={seed} step={step}: in-use blocks exceed live tables"
+            );
+            for c in &caches {
+                assert_eq!(
+                    c.blocks_held(),
+                    c.seq_len.div_ceil(BLOCK_SIZE),
+                    "seed={seed} step={step}: table drifted from committed length"
+                );
+            }
+        }
+        caches.clear();
+        let g = pool.gauges();
+        assert_eq!(g.blocks_in_use, 0, "seed={seed}: leak after dropping all caches");
+        assert_eq!(g.free_blocks + g.evictable_blocks, n_blocks, "seed={seed}");
+    }
+}
+
+/// Roll a fork back and regrow it: the surviving prefix stays shared
+/// bit-for-bit, the regrown tail is copy-on-write private, and the other
+/// fork never observes any of it.
+#[test]
+fn prop_rollback_and_regrow_never_touches_the_other_fork() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(seed);
+        let pool = BlockPool::shared(1, D, 64, BLOCK_SIZE);
+        let n = 1 + rng.below(40);
+        let mut a = KvCache::new_in_pool(pool.clone(), 64);
+        let k = Mat::randn(n, D, 1.0, &mut rng);
+        let v = Mat::randn(n, D, 0.5, &mut rng);
+        a.append(0, &k, &v);
+        a.advance(n);
+        let snapshot = a.gather_keys(0, n).data.clone();
+
+        let mut b = a.clone();
+        let cut = rng.below(n + 1);
+        b.truncate(cut);
+        assert_eq!(b.seq_len, cut, "seed={seed}");
+        assert_eq!(b.blocks_held(), cut.div_ceil(BLOCK_SIZE), "seed={seed}");
+        assert_eq!(&b.gather_keys(0, cut).data[..], &snapshot[..cut * D], "seed={seed}");
+
+        let t = 1 + rng.below(8);
+        let k2 = Mat::randn(t, D, 2.0, &mut rng);
+        b.append(0, &k2, &k2);
+        b.advance(t);
+        assert_eq!(
+            a.gather_keys(0, n).data,
+            snapshot,
+            "seed={seed}: fork write leaked into the other holder"
+        );
+        let regrown = b.gather_keys(0, cut + t);
+        assert_eq!(&regrown.data[..cut * D], &snapshot[..cut * D], "seed={seed}");
+        assert_eq!(&regrown.data[cut * D..], &k2.data[..], "seed={seed}");
+    }
+}
+
+/// Truncating into registered territory rewinds the chain-hash state so
+/// re-registration after the rollback stays consistent: a later reader
+/// over the post-rollback token stream reuses every full block and reads
+/// bit-identical K/V.
+#[test]
+fn prop_truncate_rewinds_prefix_registration_consistently() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed);
+        let pool = BlockPool::shared(1, D, 64, BLOCK_SIZE);
+        let n = 2 * BLOCK_SIZE + 1 + rng.below(2 * BLOCK_SIZE);
+        let toks: Vec<u32> = (0..n as u32).map(|i| i * 5 + (seed as u32 % 7)).collect();
+        let mut w = KvCache::new_in_pool(pool.clone(), 256);
+        let k = Mat::randn(n, D, 1.0, &mut rng);
+        w.append(0, &k, &k);
+        w.advance_tokens(&toks);
+
+        // roll back to an arbitrary point, then regrow with a diverging
+        // suffix (fresh rows, fresh tokens)
+        let cut = rng.below(n);
+        w.truncate(cut);
+        let t = n - cut;
+        let k2 = Mat::randn(t, D, 1.0, &mut rng);
+        let toks2: Vec<u32> = (0..t as u32).map(|i| 1000 + i * 3 + seed as u32).collect();
+        w.append(0, &k2, &k2);
+        w.advance_tokens(&toks2);
+        assert_eq!(w.seq_len, n, "seed={seed}");
+
+        let mut stream = toks[..cut].to_vec();
+        stream.extend_from_slice(&toks2);
+        stream.push(4242); // reader's extra tail position
+        let mut r = KvCache::new_in_pool(pool.clone(), 256);
+        let reused = r.match_prefix(&stream);
+        assert_eq!(
+            reused,
+            (n / BLOCK_SIZE) * BLOCK_SIZE,
+            "seed={seed} cut={cut}: full post-rollback blocks not all reusable"
+        );
+        let (wk, rk) = (w.gather_keys(0, reused), r.gather_keys(0, reused));
+        for (x, y) in wk.data.iter().zip(rk.data.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "seed={seed} cut={cut}: K/V diverged");
+        }
+    }
+}
+
+/// A draft fork marked anonymous never registers its blocks: speculative
+/// drafts are computed under the *draft* quantization plan, so letting
+/// them into the shared prefix index would poison it for every other
+/// sequence.
+#[test]
+fn anonymous_draft_forks_never_register_prefix_blocks() {
+    let pool = BlockPool::shared(1, D, 32, BLOCK_SIZE);
+    let n = 2 * BLOCK_SIZE;
+    let toks: Vec<u32> = (0..n as u32).map(|i| i + 10).collect();
+    let mut rng = Rng::new(5);
+    let mut w = KvCache::new_in_pool(pool.clone(), 128);
+    let k = Mat::randn(n, D, 1.0, &mut rng);
+    w.append(0, &k, &k);
+    w.advance_tokens(&toks);
+
+    let mut fork = w.clone();
+    fork.set_anonymous();
+    let dtoks: Vec<u32> = (0..BLOCK_SIZE as u32).map(|i| i + 500).collect();
+    let dk = Mat::randn(BLOCK_SIZE, D, 1.0, &mut rng);
+    fork.append(0, &dk, &dk);
+    fork.advance_tokens(&dtoks);
+    drop(fork);
+
+    // a reader over the fork's exact stream only reuses the *committed*
+    // prefix — the fork's full block was never registered
+    let mut stream = toks.clone();
+    stream.extend_from_slice(&dtoks);
+    stream.push(7);
+    let mut r = KvCache::new_in_pool(pool.clone(), 128);
+    assert_eq!(r.match_prefix(&stream), n, "draft block leaked into the prefix index");
+}

@@ -1,0 +1,155 @@
+//! Losslessness of self-speculative decoding — the acceptance tests of
+//! `specdec`:
+//!
+//! * greedy spec-decode is **token-identical** to plain decode under the
+//!   target plan, for every (target scheme × draft scheme × worker count)
+//!   combination — the draft plan may only change *speed*, never output;
+//! * the property survives a KV pool tight enough to force preemptions
+//!   and speculative-window clamping mid-stream;
+//! * a draft running the *same* plan as the target accepts every drafted
+//!   token (acceptance rate 1.0, zero rollbacks) — the structural upper
+//!   bound of the paper's free-lunch claim applied to decoding.
+
+use integer_scale::coordinator::{Engine, EngineConfig, FinishReason, Request};
+use integer_scale::model::quantize::{quantize_model_plan, Method, QuantSpec};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::plan::PlanBuilder;
+use integer_scale::quant::{BitWidth, Granularity};
+use integer_scale::runtime::Runtime;
+use integer_scale::specdec::SpecConfig;
+use std::sync::Arc;
+
+fn small_cfg() -> ModelConfig {
+    // Group(128) plans need d_model/d_ff divisible by 128; tiny() is the
+    // smallest committed config that satisfies every recipe
+    ModelConfig { n_layers: 2, ..ModelConfig::tiny() }
+}
+
+/// The scheme grid: `None` = FP16, otherwise a uniform quant plan.
+fn build(weights: &ModelWeights, spec: Option<QuantSpec>) -> Transformer {
+    let gen = integer_scale::data::CorpusGen::new(weights.config.vocab as u32, 7);
+    let calib = gen.stream(128, integer_scale::data::Split::C4, 11);
+    match spec {
+        None => Transformer::from_weights(weights),
+        Some(s) => quantize_model_plan(weights, &PlanBuilder::uniform(s), &calib),
+    }
+}
+
+fn is_spec() -> QuantSpec {
+    QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024)
+}
+
+fn fs_spec() -> QuantSpec {
+    QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128))
+}
+
+fn requests() -> Vec<Request> {
+    // varied prompt lengths; a few keep the default stop_at_eos=true so the
+    // EOS cut inside a speculative window is exercised too
+    (0..6u64)
+        .map(|i| {
+            let len = 3 + (i as usize % 4);
+            let prompt: Vec<u32> =
+                (0..len as u32).map(|j| (i as u32 * 7 + j) % 28 + 4).collect();
+            let mut r = Request::greedy(i, prompt, 10);
+            r.stop_at_eos = i % 3 == 0;
+            r
+        })
+        .collect()
+}
+
+fn run(
+    model: &Transformer,
+    draft: Option<(&Transformer, usize)>,
+    workers: usize,
+    budget: usize,
+) -> Vec<(Vec<u32>, FinishReason)> {
+    let rt = Runtime::threaded(workers);
+    let target = Arc::new(model.clone().with_runtime(rt.clone()));
+    let mut e = Engine::new(
+        target,
+        EngineConfig { max_batch: 4, kv_token_budget: budget, seed: 1 },
+    );
+    if let Some((d, k)) = draft {
+        let d = Arc::new(d.clone().with_runtime(rt));
+        e.enable_spec_decode(d, SpecConfig::with_k(k));
+    }
+    for r in requests() {
+        e.submit(r);
+    }
+    e.run_to_completion().into_iter().map(|r| (r.tokens, r.finish)).collect()
+}
+
+#[test]
+fn spec_decode_token_identical_across_schemes_and_workers() {
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 77);
+    // target grid × draft grid: a draft on a *different* plan mispredicts
+    // sometimes, but verification must keep the output byte-for-byte equal
+    let targets: [(&str, Option<QuantSpec>); 3] =
+        [("fp16", None), ("w4a8-fs", Some(fs_spec())), ("w4a8-is", Some(is_spec()))];
+    for (tlabel, tspec) in targets {
+        let target = build(&weights, tspec);
+        let plain = run(&target, None, 1, 4096);
+        assert!(
+            plain.iter().any(|(t, _)| !t.is_empty()),
+            "{tlabel}: baseline generated nothing"
+        );
+        for (dlabel, dspec) in [("w4a8-is", Some(is_spec())), ("fp16", None)] {
+            let draft = build(&weights, dspec);
+            for workers in [1usize, 2] {
+                for k in [1usize, 4] {
+                    let got = run(&target, Some((&draft, k)), workers, 4096);
+                    assert_eq!(
+                        plain, got,
+                        "target={tlabel} draft={dlabel} workers={workers} k={k}: \
+                         speculative decoding changed greedy output"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_decode_identical_under_tight_kv_budget() {
+    // a pool small enough to force preemptions and window clamps must
+    // still reproduce the generous-pool output exactly
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 78);
+    let target = build(&weights, Some(fs_spec()));
+    let draft = build(&weights, Some(is_spec()));
+    let plain = run(&target, None, 1, 4096);
+    for budget in [96usize, 160] {
+        let got = run(&target, Some((&draft, 6)), 1, budget);
+        assert_eq!(plain, got, "budget={budget}: tight pool changed spec output");
+    }
+}
+
+#[test]
+fn spec_decode_same_plan_draft_accepts_everything() {
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 79);
+    let target = build(&weights, Some(is_spec()));
+    let rt = Runtime::threaded(1);
+    let mut e = Engine::new(
+        Arc::new(target.clone().with_runtime(rt.clone())),
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+    );
+    e.enable_spec_decode(Arc::new(target.clone().with_runtime(rt)), SpecConfig::with_k(4));
+    for r in requests() {
+        e.submit(r);
+    }
+    let got: Vec<(Vec<u32>, FinishReason)> =
+        e.run_to_completion().into_iter().map(|r| (r.tokens, r.finish)).collect();
+    assert_eq!(got, run(&target, None, 1, 4096), "same-plan spec changed output");
+    let m = &e.metrics;
+    assert!(m.spec_steps > 0, "speculative path never engaged");
+    assert!(m.spec_draft_tokens > 0, "nothing drafted");
+    assert_eq!(
+        m.spec_accepted_tokens, m.spec_draft_tokens,
+        "a deterministic draft on the target plan must be fully accepted"
+    );
+    assert_eq!(m.spec_rollbacks, 0);
+    assert!((m.acceptance_rate() - 1.0).abs() < 1e-12);
+}
