@@ -3,6 +3,7 @@
 regressions.
 
 Usage: perf_trajectory.py BENCH_nightly.json perf_trajectory.jsonl
+       perf_trajectory.py --self-test
 
 Each trajectory line is one JSON object: {"utc", "sha", "records"} where
 "records" is the BENCH array written by rust's bench_harness (min / median /
@@ -16,6 +17,9 @@ useless). It fails when either:
 
 With fewer than MIN_HISTORY prior runs it appends without gating (the
 trajectory has to grow before trends mean anything).
+
+`--self-test` runs the gate's unit tests (the nightly workflow runs this
+before trusting the gate with real data).
 """
 
 import json
@@ -71,7 +75,34 @@ def serve_stats(records):
     return out
 
 
+def gate(records, history, window=WINDOW, ratio=REGRESSION_RATIO, log=print):
+    """Compare tonight's serve_* records against the trailing-median
+    baseline from `history`. Returns the list of regression messages
+    (empty = gate passed). Pure: no filesystem or process state."""
+    tonight = serve_stats(records)
+    failures = []
+    for name, (p99, tps) in sorted(tonight.items()):
+        prior = [serve_stats(h.get("records", [])).get(name, (0, 0)) for h in history[-window:]]
+        prior_p99 = [p for p, _ in prior if p > 0]
+        prior_tps = [t for _, t in prior if t > 0]
+        if not prior_p99 or not prior_tps:
+            log(f"{name}: no prior data, skipping")
+            continue
+        base_p99, base_tps = median(prior_p99), median(prior_tps)
+        log(f"{name}: p99 {p99/1e6:.2f}ms vs baseline {base_p99/1e6:.2f}ms, "
+            f"{tps:.1f} tok/s vs baseline {base_tps:.1f}")
+        if base_p99 > 0 and p99 > base_p99 * ratio:
+            failures.append(
+                f"{name}: p99 {p99/1e6:.2f}ms > {ratio}x baseline {base_p99/1e6:.2f}ms"
+            )
+        if base_tps > 0 and tps < base_tps / ratio:
+            failures.append(f"{name}: {tps:.1f} tok/s < baseline {base_tps:.1f} / {ratio}")
+    return failures
+
+
 def main():
+    if len(sys.argv) == 2 and sys.argv[1] == "--self-test":
+        sys.exit(run_self_test())
     if len(sys.argv) != 3:
         sys.exit(__doc__)
     bench_path, traj_path = sys.argv[1], sys.argv[2]
@@ -93,40 +124,87 @@ def main():
         print(f"only {len(history)} prior runs (< {MIN_HISTORY}): skipping the gate")
         return
 
-    tonight = serve_stats(records)
-    failures = []
-    for name, (p99, tps) in sorted(tonight.items()):
-        prior_p99 = [
-            serve_stats(h.get("records", [])).get(name, (0, 0))[0]
-            for h in history[-WINDOW:]
-        ]
-        prior_tps = [
-            serve_stats(h.get("records", [])).get(name, (0, 0))[1]
-            for h in history[-WINDOW:]
-        ]
-        prior_p99 = [v for v in prior_p99 if v > 0]
-        prior_tps = [v for v in prior_tps if v > 0]
-        if not prior_p99 or not prior_tps:
-            print(f"{name}: no prior data, skipping")
-            continue
-        base_p99, base_tps = median(prior_p99), median(prior_tps)
-        print(f"{name}: p99 {p99/1e6:.2f}ms vs baseline {base_p99/1e6:.2f}ms, "
-              f"{tps:.1f} tok/s vs baseline {base_tps:.1f}")
-        if base_p99 > 0 and p99 > base_p99 * REGRESSION_RATIO:
-            failures.append(
-                f"{name}: p99 {p99/1e6:.2f}ms > {REGRESSION_RATIO}x baseline "
-                f"{base_p99/1e6:.2f}ms"
-            )
-        if base_tps > 0 and tps < base_tps / REGRESSION_RATIO:
-            failures.append(
-                f"{name}: {tps:.1f} tok/s < baseline {base_tps:.1f} / {REGRESSION_RATIO}"
-            )
-
+    failures = gate(records, history)
     if failures:
         for f_ in failures:
             print(f"REGRESSION: {f_}", file=sys.stderr)
         sys.exit(1)
     print("perf trajectory gate passed")
+
+
+# --- self tests -----------------------------------------------------------
+
+
+def _rec(name, p99_ns, tps):
+    return {"name": name, "p99_ns": p99_ns, "tokens_per_sec": tps}
+
+
+def _run(*records):
+    return {"utc": "t", "sha": "s", "records": list(records)}
+
+
+def run_self_test():
+    import tempfile
+    import unittest
+
+    quiet = lambda *_: None  # noqa: E731 — silence gate logs inside tests
+
+    class GateTests(unittest.TestCase):
+        def test_serve_stats_filters_non_serving_records(self):
+            stats = serve_stats([
+                _rec("serve_is_workers1", 100, 50.0),
+                _rec("gemm_is_workers4", 10, 0),
+                {"name": "serve_no_tps", "p99_ns": 5},
+            ])
+            self.assertEqual(stats, {"serve_is_workers1": (100, 50.0)})
+
+        def test_steady_trajectory_passes(self):
+            hist = [_run(_rec("serve_a", 100, 50.0)) for _ in range(5)]
+            self.assertEqual(gate([_rec("serve_a", 110, 48.0)], hist, log=quiet), [])
+
+        def test_p99_regression_fails(self):
+            hist = [_run(_rec("serve_a", 100, 50.0)) for _ in range(5)]
+            fails = gate([_rec("serve_a", 200, 50.0)], hist, log=quiet)
+            self.assertEqual(len(fails), 1)
+            self.assertIn("p99", fails[0])
+
+        def test_throughput_regression_fails(self):
+            hist = [_run(_rec("serve_a", 100, 60.0)) for _ in range(5)]
+            fails = gate([_rec("serve_a", 100, 20.0)], hist, log=quiet)
+            self.assertEqual(len(fails), 1)
+            self.assertIn("tok/s", fails[0])
+
+        def test_baseline_is_median_not_worst(self):
+            # one noisy prior run must not mask a real regression
+            hist = [_run(_rec("serve_a", 100, 50.0)) for _ in range(4)]
+            hist.append(_run(_rec("serve_a", 10_000, 1.0)))
+            fails = gate([_rec("serve_a", 400, 50.0)], hist, log=quiet)
+            self.assertEqual(len(fails), 1)
+
+        def test_window_drops_ancient_history(self):
+            # a fast run outside the trailing window no longer sets the bar
+            hist = [_run(_rec("serve_a", 10, 500.0))]
+            hist += [_run(_rec("serve_a", 100, 50.0)) for _ in range(WINDOW)]
+            self.assertEqual(gate([_rec("serve_a", 120, 45.0)], hist, log=quiet), [])
+
+        def test_new_benchmark_skips_without_prior_data(self):
+            hist = [_run(_rec("serve_old", 100, 50.0)) for _ in range(5)]
+            self.assertEqual(gate([_rec("serve_new", 9_999, 0.1)], hist, log=quiet), [])
+
+        def test_load_history_skips_malformed_lines(self):
+            with tempfile.NamedTemporaryFile("w", suffix=".jsonl", delete=False) as f:
+                f.write(json.dumps(_run(_rec("serve_a", 1, 1.0))) + "\n")
+                f.write("{not json\n\n")
+                f.write(json.dumps(_run(_rec("serve_a", 2, 2.0))) + "\n")
+                path = f.name
+            try:
+                self.assertEqual(len(load_history(path)), 2)
+            finally:
+                os.unlink(path)
+
+    suite = unittest.defaultTestLoader.loadTestsFromTestCase(GateTests)
+    result = unittest.TextTestRunner(verbosity=2).run(suite)
+    return 0 if result.wasSuccessful() else 1
 
 
 if __name__ == "__main__":

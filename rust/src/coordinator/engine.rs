@@ -6,7 +6,10 @@
 //! sequences whose prompt prefix is already cached skip that part of
 //! prefill entirely; and when the pool cannot supply a growth block the
 //! youngest running sequence is preempted back to the queue front instead
-//! of the engine refusing admission. The synchronous
+//! of the engine refusing admission. With [`Engine::set_overlap`] the
+//! newcomers' prefill runs on a spawned thread while the standing batch
+//! decodes (bounded per step by [`Engine::set_prefill_budget`]); greedy
+//! outputs are unchanged. The synchronous
 //! [`Engine::run_to_completion`] drives a whole workload (used by benches
 //! and the table harness); [`Engine::step`] exposes the inner loop for the
 //! async server in `examples/serve_quantized.rs` and for the per-replica
@@ -27,7 +30,7 @@ use crate::specdec::{SpecConfig, SpecDecoder};
 use crate::tensor::Rng;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
@@ -67,6 +70,35 @@ pub struct Engine {
     admit_counter: u64,
     /// Self-speculative decoding (draft plan + window config), when enabled.
     spec: Option<SpecDecoder>,
+    /// Overlapped continuous batching: newcomers' prefill runs on a spawned
+    /// thread while this thread decodes the standing batch (they join the
+    /// batch at the next step). Off by default — serial phases.
+    overlap: bool,
+    /// Cap on admitted context tokens per step
+    /// ([`Scheduler::admit_budgeted`]); `usize::MAX` = unbounded.
+    prefill_budget: usize,
+    /// Pool blocks the in-flight overlapped prefill may still claim —
+    /// nonzero only while [`Engine::step_overlapped`]'s worker runs, and
+    /// subtracted from the speculative window's pool headroom so the two
+    /// concurrent allocators cannot race the pool dry.
+    prefill_inflight: usize,
+}
+
+/// The pure compute half of one admission's prefill — produced without
+/// touching engine state, so it can run on a worker thread while the
+/// caller thread decodes. [`Engine::finish_admission`] folds it back in.
+struct PrefillOut {
+    tracked: Tracked,
+    cache: KvCache,
+    /// Logits row at the last prompt position; fresh admissions sample
+    /// their first token from it (resumes carry their pending token).
+    last_row: Option<Vec<f32>>,
+    /// Prompt tokens served from cached prefix blocks / actually computed.
+    reused: usize,
+    computed: usize,
+    /// Arrival → prefill compute (fresh admissions only).
+    wait: Option<Duration>,
+    dt: Duration,
 }
 
 impl Engine {
@@ -85,7 +117,29 @@ impl Engine {
             finished: Vec::new(),
             admit_counter: 0,
             spec: None,
+            overlap: false,
+            prefill_budget: usize::MAX,
+            prefill_inflight: 0,
         }
+    }
+
+    /// Enable overlapped continuous batching: when a step has both a
+    /// standing decode batch and newly admitted prompts, the newcomers'
+    /// prefill runs on a spawned thread while this thread decodes. Greedy
+    /// token streams are unchanged — each request's greedy tokens depend
+    /// only on the weights and its own context, so joining the batch one
+    /// step later cannot alter them (batch-invariance is separately proven
+    /// by `batched_equals_sequential_outputs`).
+    pub fn set_overlap(&mut self, on: bool) {
+        self.overlap = on;
+    }
+
+    /// Bound the context tokens admitted per step so one huge prompt (or a
+    /// burst of them) cannot monopolize the worker pool for many decode
+    /// steps; the first admission always proceeds regardless, preserving
+    /// forward progress. `usize::MAX` (the default) disables the bound.
+    pub fn set_prefill_budget(&mut self, tokens: usize) {
+        self.prefill_budget = tokens.max(1);
     }
 
     /// Enable self-speculative decoding: greedy sequences draft up to
@@ -111,7 +165,7 @@ impl Engine {
 
     /// The observability hub attached to this engine's model runtime (if
     /// any, and only while enabled).
-    fn obs(&self) -> Option<&Arc<Obs>> {
+    pub(crate) fn obs(&self) -> Option<&Arc<Obs>> {
         self.model.rt.obs().filter(|o| o.is_enabled())
     }
 
@@ -121,6 +175,20 @@ impl Engine {
             o.submitted.fetch_add(1, Relaxed);
         }
         self.scheduler.submit(req);
+    }
+
+    /// Submit an already-tracked request — how a work-stealing router
+    /// re-routes a queued request migrated from a peer replica. The
+    /// original arrival stamp rides along, and queue wait is recorded when
+    /// THIS engine first prefills it; the victim never prefilled it, so
+    /// the wait lands in exactly one replica's histogram — the one that
+    /// finally ran the request.
+    pub fn submit_tracked(&mut self, t: Tracked) {
+        self.metrics.submitted += 1;
+        if let Some(o) = self.obs() {
+            o.submitted.fetch_add(1, Relaxed);
+        }
+        self.scheduler.submit_tracked(t);
     }
 
     pub fn pending(&self) -> usize {
@@ -140,8 +208,19 @@ impl Engine {
         // the guard stays open for the whole iteration, so prefill/decode/
         // layer/kernel spans recorded below parent to this Step span
         let _step_span = self.obs().cloned().and_then(|o| o.span(SpanKind::Step, "step"));
-        // 1. admission + prefill
-        let admitted = self.scheduler.admit(self.pool.available_blocks());
+        // 1. admission. With overlap on, the standing batch's growth blocks
+        //    are secured FIRST and subtracted from what admission may hand
+        //    out — decode will allocate them concurrently with the
+        //    newcomers' prefill, so they must not be promised twice.
+        let available = if self.overlap {
+            self.ensure_decode_headroom();
+            let growth =
+                self.running.iter().filter(|r| r.cache.needs_block_for_next()).count();
+            self.pool.available_blocks().saturating_sub(growth)
+        } else {
+            self.pool.available_blocks()
+        };
+        let admitted = self.scheduler.admit_budgeted(available, self.prefill_budget);
         if admitted.is_empty() && self.running.is_empty() {
             // a front request too large to EVER fit is failed rather than
             // wedging the queue forever
@@ -149,6 +228,7 @@ impl Engine {
                 self.finish(t, FinishReason::Failed);
             }
         }
+        let mut to_prefill = Vec::new();
         for tracked in admitted {
             // a context beyond the model's window can never prefill — fail
             // it instead of overflowing the cache
@@ -163,64 +243,27 @@ impl Engine {
                 self.finish(tracked, FinishReason::Stop);
                 continue;
             }
-            self.prefill_one(tracked);
+            to_prefill.push(tracked);
         }
 
-        // 2. retire sequences that completed on the prefill token
-        self.retire_done();
-
-        // 3. every running sequence must be able to grow one token; on
-        //    pool exhaustion, preempt the youngest instead of crashing
-        self.ensure_decode_headroom();
-
-        // 4. decode step: speculative draft/verify for greedy sequences
-        //    when enabled, plain batched decode for everyone else
-        if !self.running.is_empty() {
-            let spec_on = self.spec.is_some();
-            let flags: Vec<bool> = self
-                .running
-                .iter()
-                .map(|r| spec_on && matches!(r.tracked.req.sampling, Sampling::Greedy))
-                .collect();
-            if flags.iter().any(|&f| !f) {
-                let t0 = Instant::now();
-                let tokens: Vec<u32> = self
-                    .running
-                    .iter()
-                    .zip(&flags)
-                    .filter(|&(_, &f)| !f)
-                    .map(|(r, _)| r.next_token)
-                    .collect();
-                let mut caches: Vec<&mut KvCache> = self
-                    .running
-                    .iter_mut()
-                    .zip(&flags)
-                    .filter(|&(_, &f)| !f)
-                    .map(|(r, _)| &mut r.cache)
-                    .collect();
-                let logits = self.model.decode_batch(&tokens, &mut caches);
-                let dt = t0.elapsed();
-                self.metrics.record_batch(tokens.len());
-                self.metrics.decode_time += dt;
-                self.metrics.decode_tokens += tokens.len() as u64;
-                // every token in the batch waited this step's duration
-                self.metrics.tpot_hist.record_n(dt, tokens.len() as u64);
-                if let Some(o) = self.obs() {
-                    o.tpot.record_n(dt, tokens.len() as u64);
-                    o.decode_tokens.fetch_add(tokens.len() as u64, Relaxed);
-                }
-                let mut row = 0usize;
-                for (r, _) in self.running.iter_mut().zip(&flags).filter(|&(_, &f)| !f) {
-                    let tok = sample(logits.row(row), r.tracked.req.sampling, &mut self.rng);
-                    r.tracked.generated.push(tok);
-                    r.next_token = tok;
-                    row += 1;
-                }
-            }
-            if flags.iter().any(|&f| f) {
-                self.spec_phase(&flags);
+        if self.overlap && !to_prefill.is_empty() && !self.running.is_empty() {
+            // 2–4 overlapped: newcomers prefill on a worker thread while
+            // this thread decodes; they join the batch next step
+            self.step_overlapped(to_prefill);
+        } else {
+            // 2. prefill newcomers; retire any that completed on the
+            //    prefill token
+            for tracked in to_prefill {
+                self.prefill_one(tracked);
             }
             self.retire_done();
+
+            // 3. every running sequence must be able to grow one token; on
+            //    pool exhaustion, preempt the youngest instead of crashing
+            self.ensure_decode_headroom();
+
+            // 4. decode step
+            self.decode_phase();
         }
 
         // 5. mirror pool gauges into the metrics snapshot
@@ -236,19 +279,21 @@ impl Engine {
     /// (minus the newest token, which stays pending as `next_token`); its
     /// still-cached full blocks make that re-prefill mostly free.
     fn prefill_one(&mut self, tracked: Tracked) {
+        let out = Self::prefill_compute(&self.model, &self.pool, tracked);
+        self.finish_admission(out);
+    }
+
+    /// The model/pool half of prefill — no engine state touched, so the
+    /// overlapped path runs it on a spawned thread (the pool is
+    /// mutex-guarded and the model is `&self` throughout).
+    fn prefill_compute(model: &Transformer, pool: &Arc<BlockPool>, tracked: Tracked) -> PrefillOut {
         let t0 = Instant::now();
-        let mut tr = tracked;
-        let mut cache = KvCache::new_in_pool(self.pool.clone(), self.model.config.max_seq);
+        let tr = tracked;
+        let mut cache = KvCache::new_in_pool(pool.clone(), model.config.max_seq);
         let resumed = !tr.generated.is_empty();
-        if !resumed {
-            // queue wait = arrival to first prefill compute (fresh
-            // admissions only — resumes already waited once)
-            let wait = t0.saturating_duration_since(tr.arrived);
-            self.metrics.queue_wait_hist.record(wait);
-            if let Some(o) = self.obs() {
-                o.queue_wait.record(wait);
-            }
-        }
+        // queue wait = arrival to first prefill compute (fresh admissions
+        // only — resumes already waited once)
+        let wait = (!resumed).then(|| t0.saturating_duration_since(tr.arrived));
         let ctx: Vec<u32> = if resumed {
             let keep = tr.generated.len() - 1;
             tr.req.prompt.iter().chain(tr.generated[..keep].iter()).copied().collect()
@@ -256,27 +301,146 @@ impl Engine {
             tr.req.prompt.clone()
         };
         let reused = cache.match_prefix(&ctx);
+        let logits = model.prefill(&ctx[reused..], &mut cache);
+        let last_row = (!resumed).then(|| logits.row(ctx.len() - reused - 1).to_vec());
+        PrefillOut {
+            tracked: tr,
+            cache,
+            last_row,
+            reused,
+            computed: ctx.len() - reused,
+            wait,
+            dt: t0.elapsed(),
+        }
+    }
+
+    /// Fold a completed [`PrefillOut`] back into engine state: metrics,
+    /// first-token sampling (on this thread, in admission order — the rng
+    /// is never touched off-thread), and the running set.
+    fn finish_admission(&mut self, out: PrefillOut) {
+        let PrefillOut { mut tracked, cache, last_row, reused, computed, wait, dt } = out;
+        if let Some(wait) = wait {
+            self.metrics.queue_wait_hist.record(wait);
+            if let Some(o) = self.obs() {
+                o.queue_wait.record(wait);
+            }
+        }
         self.metrics.prefix_hit_tokens += reused as u64;
-        let logits = self.model.prefill(&ctx[reused..], &mut cache);
-        self.metrics.prefill_tokens += (ctx.len() - reused) as u64;
-        self.metrics.prefill_time += t0.elapsed();
-        let next = if resumed {
-            *tr.generated.last().unwrap()
-        } else {
-            let tok = sample(logits.row(ctx.len() - reused - 1), tr.req.sampling, &mut self.rng);
-            tr.first_token_at = Some(Instant::now());
-            tr.generated.push(tok);
-            tok
+        self.metrics.prefill_tokens += computed as u64;
+        self.metrics.prefill_time += dt;
+        let next = match last_row {
+            Some(row) => {
+                let tok = sample(&row, tracked.req.sampling, &mut self.rng);
+                tracked.first_token_at = Some(Instant::now());
+                tracked.generated.push(tok);
+                tok
+            }
+            None => *tracked.generated.last().unwrap(),
         };
         self.admit_counter += 1;
         let spec_k = self.spec.as_ref().map_or(0, |s| s.cfg.k);
         self.running.push(Running {
-            tracked: tr,
+            tracked,
             cache,
             next_token: next,
             admit_seq: self.admit_counter,
             spec_k,
         });
+    }
+
+    /// Run the newcomers' prefill on a spawned thread while this thread
+    /// decodes the standing batch, then fold the newcomers in (they join
+    /// the decode batch next step). Admission already reserved the standing
+    /// batch's growth blocks, and `prefill_inflight` fences the speculative
+    /// window off the blocks the worker may still claim, so the two
+    /// concurrent allocators cannot race the pool dry.
+    fn step_overlapped(&mut self, to_prefill: Vec<Tracked>) {
+        let n = to_prefill.len() as u64;
+        self.prefill_inflight =
+            to_prefill.iter().map(|t| self.scheduler.admission_need(t)).sum();
+        let model = self.model.clone();
+        let pool = self.pool.clone();
+        let obs = self.obs().cloned();
+        let parent = Obs::current_span();
+        let outs = std::thread::scope(|s| {
+            let worker = s.spawn(move || {
+                // the overlap span parents to this engine's Step span even
+                // though it runs on another thread; the per-sequence
+                // Prefill/Layer/Kernel spans nest under it
+                let _ov = obs.as_ref().and_then(|o| {
+                    o.span_with_parent(SpanKind::PrefillOverlap, "prefill-overlap", n, parent)
+                });
+                to_prefill
+                    .into_iter()
+                    .map(|t| Self::prefill_compute(&model, &pool, t))
+                    .collect::<Vec<_>>()
+            });
+            self.decode_phase();
+            worker.join().expect("overlapped prefill thread panicked")
+        });
+        self.prefill_inflight = 0;
+        self.metrics.prefill_overlaps += 1;
+        if let Some(o) = self.obs() {
+            o.prefill_overlaps.fetch_add(1, Relaxed);
+        }
+        for out in outs {
+            self.finish_admission(out);
+        }
+        self.retire_done();
+    }
+
+    /// One decode step over every running sequence: speculative
+    /// draft/verify for greedy sequences when enabled, plain batched decode
+    /// for everyone else; finished sequences retire at the end.
+    fn decode_phase(&mut self) {
+        if self.running.is_empty() {
+            return;
+        }
+        let spec_on = self.spec.is_some();
+        let flags: Vec<bool> = self
+            .running
+            .iter()
+            .map(|r| spec_on && matches!(r.tracked.req.sampling, Sampling::Greedy))
+            .collect();
+        if flags.iter().any(|&f| !f) {
+            let t0 = Instant::now();
+            let tokens: Vec<u32> = self
+                .running
+                .iter()
+                .zip(&flags)
+                .filter(|&(_, &f)| !f)
+                .map(|(r, _)| r.next_token)
+                .collect();
+            let mut caches: Vec<&mut KvCache> = self
+                .running
+                .iter_mut()
+                .zip(&flags)
+                .filter(|&(_, &f)| !f)
+                .map(|(r, _)| &mut r.cache)
+                .collect();
+            let logits = self.model.decode_batch(&tokens, &mut caches);
+            let dt = t0.elapsed();
+            self.metrics.record_batch(tokens.len());
+            self.metrics.decode_time += dt;
+            self.metrics.decode_tokens += tokens.len() as u64;
+            // every token in the batch waited this step's duration
+            self.metrics.tpot_hist.record_n(dt, tokens.len() as u64);
+            if let Some(o) = self.obs() {
+                o.tpot.record_n(dt, tokens.len() as u64);
+                o.decode_tokens.fetch_add(tokens.len() as u64, Relaxed);
+            }
+            let mut row = 0usize;
+            for (r, _) in self.running.iter_mut().zip(&flags).filter(|&(_, &f)| !f) {
+                let tok = sample(logits.row(row), r.tracked.req.sampling, &mut self.rng);
+                r.tracked.generated.push(tok);
+                r.next_token = tok;
+                row += 1;
+            }
+        }
+        if flags.iter().any(|&f| f) {
+            self.spec_phase(&flags);
+        }
+        self.retire_done();
     }
 
     /// Speculative decode for every flagged (greedy) running sequence: draft
@@ -294,8 +458,10 @@ impl Engine {
             }
             // every OTHER running sequence is guaranteed one growth block
             // by ensure_decode_headroom — speculation must not starve them,
-            // so only blocks beyond that reserve fund a deeper window
-            let reserve = self.running.len() - 1;
+            // so only blocks beyond that reserve fund a deeper window. An
+            // in-flight overlapped prefill is fenced off the same way: the
+            // worker thread may still claim `prefill_inflight` blocks.
+            let reserve = self.running.len() - 1 + self.prefill_inflight;
             let avail = self.pool.available_blocks().saturating_sub(reserve);
             let r = &mut self.running[i];
             if r.spec_k == 0 {
@@ -646,6 +812,103 @@ mod tests {
         let ample = mk(4096);
         for (a, b) in tight.iter().zip(ample.iter()) {
             assert_eq!(a.tokens, b.tokens, "preemption changed tokens for req {}", a.id);
+        }
+    }
+
+    #[test]
+    fn overlapped_prefill_preserves_greedy_output() {
+        let submit_all = |e: &mut Engine| {
+            for i in 0..8 {
+                e.submit(Request::greedy(i, vec![(i % 30) as u32 + 4, 6, 7], 6));
+            }
+        };
+        let mut base = engine(4);
+        submit_all(&mut base);
+        let b = base.run_to_completion();
+        let mut fast = engine(4);
+        fast.set_overlap(true);
+        fast.set_prefill_budget(8);
+        submit_all(&mut fast);
+        let f = fast.run_to_completion();
+        assert_eq!(b.len(), f.len());
+        for (x, y) in b.iter().zip(f.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.tokens, y.tokens, "overlap changed tokens for req {}", x.id);
+        }
+        assert!(fast.metrics.prefill_overlaps > 0, "overlap path must actually run");
+        assert_eq!(fast.metrics.completed, 8);
+        // queue wait lands exactly once per request, overlap or not
+        assert_eq!(fast.metrics.queue_wait_hist.count(), 8);
+    }
+
+    #[test]
+    fn overlap_composes_with_spec_decode_losslessly() {
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 9)));
+        let submit_all = |e: &mut Engine| {
+            for i in 0..5 {
+                let mut r = Request::greedy(i, vec![(i % 20) as u32 + 3; 6], 12);
+                r.stop_at_eos = false;
+                e.submit(r);
+            }
+        };
+        let mut plain =
+            Engine::new(model.clone(), EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 });
+        submit_all(&mut plain);
+        let base = plain.run_to_completion();
+
+        let mut fast =
+            Engine::new(model.clone(), EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 });
+        fast.enable_spec_decode(model.clone(), crate::specdec::SpecConfig::default());
+        fast.set_overlap(true);
+        fast.set_prefill_budget(12);
+        submit_all(&mut fast);
+        let res = fast.run_to_completion();
+
+        assert_eq!(base.len(), res.len());
+        for (a, b) in base.iter().zip(res.iter()) {
+            assert_eq!(a.tokens, b.tokens, "overlap+spec changed tokens for req {}", a.id);
+        }
+        assert!(fast.metrics.prefill_overlaps > 0, "overlap must run");
+        assert!(fast.metrics.spec_steps > 0, "speculation must run");
+    }
+
+    #[test]
+    fn overlap_records_prefill_overlap_spans() {
+        use crate::runtime::Runtime;
+        let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 64, n_experts: None };
+        let obs = Obs::new(4096);
+        let model = Transformer::from_weights(&ModelWeights::random(cfg, 9))
+            .with_runtime(Runtime::serial().with_obs(obs.clone()));
+        let mut e = Engine::new(
+            Arc::new(model),
+            EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+        );
+        e.set_overlap(true);
+        e.set_prefill_budget(8);
+        for i in 0..8 {
+            e.submit(Request::greedy(i, vec![5, 6, 7], 4));
+        }
+        let res = e.run_to_completion();
+        assert_eq!(res.len(), 8);
+        assert!(obs.prefill_overlaps.load(Relaxed) > 0, "live mirror increments");
+        let spans = obs.spans.snapshot();
+        let step_ids: Vec<u64> =
+            spans.iter().filter(|s| s.kind == SpanKind::Step).map(|s| s.id).collect();
+        let ovs: Vec<_> =
+            spans.iter().filter(|s| s.kind == SpanKind::PrefillOverlap).collect();
+        assert!(!ovs.is_empty(), "PrefillOverlap spans recorded");
+        for ov in &ovs {
+            assert!(step_ids.contains(&ov.parent), "overlap span orphaned");
+        }
+        // every Prefill span nests under a Step (serial path) or under a
+        // cross-thread PrefillOverlap span (overlapped path)
+        let ov_ids: Vec<u64> = ovs.iter().map(|s| s.id).collect();
+        for s in spans.iter().filter(|s| s.kind == SpanKind::Prefill) {
+            assert!(
+                step_ids.contains(&s.parent) || ov_ids.contains(&s.parent),
+                "prefill span orphaned"
+            );
         }
     }
 

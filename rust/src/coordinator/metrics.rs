@@ -40,6 +40,15 @@ pub struct Metrics {
     /// Wall time inside the draft loop / the batched verify call.
     pub draft_time: Duration,
     pub verify_time: Duration,
+    /// Engine steps whose newcomer prefill ran concurrently with the
+    /// decode batch (continuous-batching overlap).
+    pub prefill_overlaps: u64,
+    /// Work stealing: migration events this engine performed as the thief,
+    /// and whole queued requests it pulled over. Queue-wait for a migrated
+    /// request is attributed HERE (the replica that finally runs it) and
+    /// nowhere else, so merged histograms count each request exactly once.
+    pub steal_events: u64,
+    pub requests_stolen: u64,
     /// Per-call draft and verify latency.
     pub draft_hist: LatencyHist,
     pub verify_hist: LatencyHist,
@@ -109,6 +118,9 @@ impl Metrics {
         self.spec_rejected_tokens += o.spec_rejected_tokens;
         self.draft_time += o.draft_time;
         self.verify_time += o.verify_time;
+        self.prefill_overlaps += o.prefill_overlaps;
+        self.steal_events += o.steal_events;
+        self.requests_stolen += o.requests_stolen;
         self.draft_hist.merge(&o.draft_hist);
         self.verify_hist.merge(&o.verify_hist);
         self.ttft_hist.merge(&o.ttft_hist);
@@ -171,6 +183,12 @@ impl Metrics {
                 ms(self.verify_time),
             ));
         }
+        if self.prefill_overlaps > 0 || self.steal_events > 0 {
+            s.push_str(&format!(
+                " overlap_steps={} steal_events={} requests_stolen={}",
+                self.prefill_overlaps, self.steal_events, self.requests_stolen,
+            ));
+        }
         s
     }
 }
@@ -211,8 +229,15 @@ mod tests {
         b.decode_tokens = 7;
         b.pool_blocks_total = 8;
         b.peak_blocks_in_use = 4;
+        b.prefill_overlaps = 2;
+        b.steal_events = 1;
+        b.requests_stolen = 3;
         a.merge(&b);
         assert_eq!(a.submitted, 5);
+        assert_eq!(a.prefill_overlaps, 2);
+        assert_eq!(a.steal_events, 1);
+        assert_eq!(a.requests_stolen, 3);
+        assert!(a.summary().contains("requests_stolen=3"));
         assert_eq!(a.completed, 5);
         assert_eq!(a.decode_tokens, 17);
         assert_eq!(a.batch_hist[2], 2);

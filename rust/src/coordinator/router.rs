@@ -14,18 +14,32 @@
 //!   Greedy outputs are token-identical to the synchronous mode because a
 //!   sequence's tokens depend only on the shared model weights, never on
 //!   which replica serves it or on arrival interleaving.
+//!
+//! [`Router::with_stealing`] adds work stealing to the threaded mode: each
+//! replica parks its not-yet-prefilled arrivals in a shared steal slot, and
+//! a replica whose backlog drains below the watermark pulls the back half
+//! of the deepest peer's slot. Only whole queued requests migrate — never
+//! KV state — so stealing cannot change any request's tokens, and the
+//! thief records the request's queue wait (the victim never prefilled it).
 
 use super::engine::Engine;
 use super::metrics::Metrics;
-use super::request::{Request, Response};
+use super::request::{Request, Response, Tracked};
+use crate::obs::SpanKind;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
 
 /// Routing policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     RoundRobin,
     LeastLoaded,
+    /// Every request goes to the given replica — a deliberately imbalanced
+    /// policy for exercising work stealing deterministically in tests and
+    /// benches (clamped to the last replica if out of range).
+    Pinned(usize),
 }
 
 /// Pick a replica given per-replica loads. Least-loaded ties break
@@ -50,7 +64,149 @@ fn pick_index(policy: Policy, rr_next: &mut usize, loads: &[usize]) -> usize {
             }
             unreachable!("a minimum always exists")
         }
+        Policy::Pinned(i) => i.min(n - 1),
     }
+}
+
+/// One replica's mailbox in the steal fabric: queued requests that no
+/// engine has prefilled yet, plus a lock-free depth gauge peers read when
+/// picking a victim. `depth` is refreshed under the queue lock, so it can
+/// only lag, never lie about order.
+#[derive(Default)]
+struct StealSlot {
+    queue: Mutex<VecDeque<Tracked>>,
+    depth: AtomicUsize,
+}
+
+/// Steal the back half (`ceil(len/2)`) of the deepest peer's slot into
+/// `me`'s slot, moving the load-gauge units along with the requests.
+/// `split_off` preserves FIFO order among the migrated requests, and each
+/// [`Tracked`] moves intact — the original arrival stamp rides along, so
+/// the thief's engine records the full queue wait when it prefills.
+fn steal_from_deepest(
+    me: usize,
+    engine: &mut Engine,
+    loads: &[AtomicUsize],
+    slots: &[StealSlot],
+) {
+    let Some((victim, depth)) = (0..slots.len())
+        .filter(|&j| j != me)
+        .map(|j| (j, slots[j].depth.load(Ordering::Relaxed)))
+        .max_by_key(|&(_, d)| d)
+    else {
+        return;
+    };
+    if depth == 0 {
+        return;
+    }
+    let t0 = engine.obs().map(|o| o.now_ns());
+    let mut stolen = {
+        let mut q = slots[victim].queue.lock().unwrap();
+        let take = q.len().div_ceil(2);
+        let s = q.split_off(q.len() - take);
+        slots[victim].depth.store(q.len(), Ordering::Relaxed);
+        s
+    };
+    let k = stolen.len();
+    if k == 0 {
+        return; // the victim drained its slot before we locked it
+    }
+    {
+        let mut q = slots[me].queue.lock().unwrap();
+        q.append(&mut stolen);
+        slots[me].depth.store(q.len(), Ordering::Relaxed);
+    }
+    loads[victim].fetch_sub(k, Ordering::Relaxed);
+    loads[me].fetch_add(k, Ordering::Relaxed);
+    engine.metrics.steal_events += 1;
+    engine.metrics.requests_stolen += k as u64;
+    if let Some(o) = engine.obs() {
+        o.steal_events.fetch_add(1, Ordering::Relaxed);
+        o.requests_stolen.fetch_add(k as u64, Ordering::Relaxed);
+        let start = t0.unwrap_or(0);
+        o.record_span(
+            SpanKind::Steal,
+            "steal",
+            0,
+            start,
+            o.now_ns().saturating_sub(start),
+            k as u64,
+        );
+    }
+}
+
+/// One replica's thread body with work stealing. Arrivals are wrapped into
+/// [`Tracked`] on receipt (stamping queue arrival) and parked in this
+/// replica's steal slot; the engine is fed from the slot FRONT only up to
+/// its batch size, so the surplus stays visible to peers. When this
+/// replica's backlog (engine pending + slot depth) drops below
+/// `watermark`, it raids the deepest peer. After the channel closes it
+/// lingers while any slot still holds work — the tail of a skewed
+/// workload gets stolen instead of serialized.
+fn stealing_replica_loop(
+    me: usize,
+    engine: &mut Engine,
+    rx: mpsc::Receiver<Request>,
+    loads: &[AtomicUsize],
+    slots: &[StealSlot],
+    watermark: usize,
+) -> Vec<Response> {
+    let enqueue = |t: Tracked| {
+        let mut q = slots[me].queue.lock().unwrap();
+        q.push_back(t);
+        slots[me].depth.store(q.len(), Ordering::Relaxed);
+    };
+    let mut responses = Vec::new();
+    let mut open = true;
+    loop {
+        // 1. drain arrivals into this replica's slot
+        loop {
+            match rx.try_recv() {
+                Ok(r) => enqueue(Tracked::new(r)),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        // 2. steal when the local backlog runs dry
+        let backlog = engine.pending() + slots[me].depth.load(Ordering::Relaxed);
+        if backlog < watermark {
+            steal_from_deepest(me, engine, loads, slots);
+        }
+        // 3. feed the engine from the slot front up to its batch size
+        {
+            let mut q = slots[me].queue.lock().unwrap();
+            while engine.pending() < engine.cfg.max_batch {
+                match q.pop_front() {
+                    Some(t) => engine.submit_tracked(t),
+                    None => break,
+                }
+            }
+            slots[me].depth.store(q.len(), Ordering::Relaxed);
+        }
+        // 4. work, park, linger for stealable peers, or exit
+        if engine.pending() > 0 {
+            let done = engine.step();
+            loads[me].fetch_sub(done.len(), Ordering::Relaxed);
+            responses.extend(done);
+        } else if open {
+            // parked, but wake periodically to raid busy peers
+            match rx.recv_timeout(Duration::from_micros(500)) {
+                Ok(r) => enqueue(Tracked::new(r)),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+            }
+        } else if slots.iter().any(|sl| sl.depth.load(Ordering::Relaxed) > 0) {
+            std::thread::sleep(Duration::from_micros(200));
+        } else {
+            // channel closed, nothing running, fabric empty — peers can
+            // only shrink slots from here, so exit is race-free
+            break;
+        }
+    }
+    responses
 }
 
 /// One replica's thread body: drain arrivals, step while work remains,
@@ -95,13 +251,25 @@ pub struct Router {
     pub policy: Policy,
     rr_next: usize,
     pub routed: Vec<u64>,
+    /// Work-stealing watermark for the threaded mode; `None` disables
+    /// stealing (each replica serves exactly what was dispatched to it).
+    steal_watermark: Option<usize>,
 }
 
 impl Router {
     pub fn new(engines: Vec<Engine>, policy: Policy) -> Self {
         let n = engines.len();
         assert!(n > 0);
-        Router { engines, policy, rr_next: 0, routed: vec![0; n] }
+        Router { engines, policy, rr_next: 0, routed: vec![0; n], steal_watermark: None }
+    }
+
+    /// Enable cross-replica work stealing in [`Router::run_threaded`]: a
+    /// replica whose backlog (running + queued) drops below `watermark`
+    /// steals half the deepest peer's not-yet-prefilled queue. Clamped to
+    /// at least 1 (a watermark of 0 could never trigger).
+    pub fn with_stealing(mut self, watermark: usize) -> Self {
+        self.steal_watermark = Some(watermark.max(1));
+        self
     }
 
     /// Pick a replica for the next request (synchronous mode: loads are
@@ -151,15 +319,22 @@ impl Router {
     pub fn run_threaded(&mut self, requests: Vec<Request>) -> Vec<Response> {
         let n = self.engines.len();
         let policy = self.policy;
+        // stealing needs a peer to steal from
+        let steal = self.steal_watermark.filter(|_| n > 1);
         let loads: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let slots: Vec<StealSlot> = (0..n).map(|_| StealSlot::default()).collect();
         let (engines, rr_next, routed) = (&mut self.engines, &mut self.rr_next, &mut self.routed);
         let mut out: Vec<Response> = Vec::new();
         std::thread::scope(|s| {
             let mut txs = Vec::with_capacity(n);
             let mut handles = Vec::with_capacity(n);
-            for (engine, load) in engines.iter_mut().zip(loads.iter()) {
+            for (i, (engine, load)) in engines.iter_mut().zip(loads.iter()).enumerate() {
                 let (tx, rx) = mpsc::channel::<Request>();
-                handles.push(s.spawn(move || replica_loop(engine, rx, load)));
+                let (all_loads, all_slots) = (&loads, &slots);
+                handles.push(s.spawn(move || match steal {
+                    Some(w) => stealing_replica_loop(i, engine, rx, all_loads, all_slots, w),
+                    None => replica_loop(engine, rx, load),
+                }));
                 txs.push(tx);
             }
             for req in requests {
@@ -291,6 +466,100 @@ mod tests {
         let per_replica: u64 = r.engines.iter().map(|e| e.metrics.e2e_hist.count()).sum();
         assert_eq!(per_replica, 12);
         assert!(m.summary().contains("ttft_p50_ms="));
+    }
+
+    #[test]
+    fn pinned_policy_routes_everything_to_one_replica() {
+        let mut r = router(3, Policy::Pinned(1));
+        for i in 0..5 {
+            r.submit(Request::greedy(i, vec![4, 5], 2));
+        }
+        assert_eq!(r.routed, vec![0, 5, 0]);
+        assert_eq!(r.run_to_completion().len(), 5);
+        // out-of-range pins clamp instead of panicking
+        let mut loads = [0usize; 2];
+        let mut rr = 0usize;
+        assert_eq!(super::pick_index(Policy::Pinned(9), &mut rr, &loads), 1);
+        loads[0] = 3;
+        assert_eq!(super::pick_index(Policy::Pinned(0), &mut rr, &loads), 0);
+    }
+
+    /// Heavier workload than [`workload`]: long prompts and generations so
+    /// a pinned replica stays busy long enough for peers to raid it.
+    fn skewed_workload(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let mut req =
+                    Request::greedy(i as u64, vec![(i % 20) as u32 + 4; 12], 8);
+                req.stop_at_eos = false;
+                req
+            })
+            .collect()
+    }
+
+    #[test]
+    fn work_stealing_rebalances_pinned_load() {
+        // every request is dispatched to replica 0; replica 1 only gets
+        // work by stealing — and stolen requests must keep their tokens
+        let mut base = router(2, Policy::Pinned(0));
+        for req in skewed_workload(24) {
+            base.submit(req);
+        }
+        let expect = base.run_to_completion();
+
+        let mut r = router(2, Policy::Pinned(0)).with_stealing(2);
+        let res = r.run_threaded(skewed_workload(24));
+        assert_eq!(res.len(), 24);
+        for (a, b) in expect.iter().zip(res.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "stealing changed tokens for req {}", a.id);
+        }
+        let m = r.merged_metrics();
+        assert!(m.steal_events > 0, "the idle replica must raid the pinned one");
+        assert!(m.requests_stolen > 0);
+        // the thief is replica 1: it was dispatched nothing, so every
+        // completion it reports arrived by stealing
+        assert!(r.engines[1].metrics.steal_events > 0);
+        assert!(r.engines[1].metrics.completed > 0);
+    }
+
+    #[test]
+    fn migrated_requests_count_queue_wait_exactly_once() {
+        // regression: queue wait (and the submission itself) must be
+        // attributed to the replica that finally RUNS a stolen request —
+        // never once on the victim and again on the thief
+        let mut r = router(2, Policy::Pinned(0)).with_stealing(2);
+        let res = r.run_threaded(skewed_workload(24));
+        assert_eq!(res.len(), 24);
+        let m = r.merged_metrics();
+        assert_eq!(m.submitted, 24, "each request engine-submitted exactly once");
+        assert_eq!(m.completed, 24);
+        assert_eq!(m.queue_wait_hist.count(), 24, "one queue-wait sample per request");
+        assert_eq!(m.ttft_hist.count(), 24);
+        assert_eq!(m.e2e_hist.count(), 24);
+    }
+
+    #[test]
+    fn stealing_with_overlapped_engines_matches_serial_tokens() {
+        // the full tentpole stack: overlapped prefill inside each engine,
+        // stealing between them — tokens still match the synchronous mode
+        let mut base = router(2, Policy::RoundRobin);
+        for req in skewed_workload(16) {
+            base.submit(req);
+        }
+        let expect = base.run_to_completion();
+
+        let mut r = router(2, Policy::RoundRobin).with_stealing(2);
+        for e in r.engines.iter_mut() {
+            e.set_overlap(true);
+            e.set_prefill_budget(24);
+        }
+        let res = r.run_threaded(skewed_workload(16));
+        assert_eq!(res.len(), 16);
+        for (a, b) in expect.iter().zip(res.iter()) {
+            assert_eq!(a.tokens, b.tokens, "overlap+steal changed tokens for req {}", a.id);
+        }
+        assert_eq!(r.merged_metrics().completed, 16);
     }
 
     #[test]

@@ -70,6 +70,13 @@ impl Scheduler {
         self.waiting.push_back(Tracked::new(req));
     }
 
+    /// Enqueue an already-tracked request, preserving its original arrival
+    /// stamp — how a work-stealing router re-submits a request migrated
+    /// from a peer replica without resetting its queue-wait clock.
+    pub fn submit_tracked(&mut self, t: Tracked) {
+        self.waiting.push_back(t);
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.waiting.len()
     }
@@ -97,10 +104,26 @@ impl Scheduler {
     /// headroom against immediate decode growth; when nothing is running,
     /// the front request is admitted as long as it can *ever* fit, which
     /// guarantees forward progress on a drained pool.
-    pub fn admit(&mut self, mut available: usize) -> Vec<Tracked> {
+    pub fn admit(&mut self, available: usize) -> Vec<Tracked> {
+        self.admit_budgeted(available, usize::MAX)
+    }
+
+    /// [`Self::admit`] with a cap on prefill work per step: admission stops
+    /// once the admitted requests' context tokens would exceed
+    /// `token_budget`, except that the first admission always proceeds so a
+    /// single over-budget prompt cannot stall the queue. Bounding the
+    /// prefill chunk is what lets the overlapped engine run newcomers'
+    /// prefill concurrently with decode without a huge prompt monopolizing
+    /// the worker pool for many decode steps.
+    pub fn admit_budgeted(&mut self, mut available: usize, token_budget: usize) -> Vec<Tracked> {
         let mut out = Vec::new();
+        let mut tokens = 0usize;
         while let Some(front) = self.waiting.front() {
             if self.state.running_count + out.len() >= self.state.max_batch {
+                break;
+            }
+            let ctx = Self::context_len(front);
+            if !out.is_empty() && tokens + ctx > token_budget {
                 break;
             }
             let need = self.admission_need(front);
@@ -112,6 +135,7 @@ impl Scheduler {
                 break;
             }
             available = available.saturating_sub(need);
+            tokens += ctx;
             out.push(self.waiting.pop_front().unwrap());
         }
         self.state.running_count += out.len();
@@ -203,6 +227,42 @@ mod tests {
         let a = s.admit(4);
         assert_eq!(a.len(), 1);
         assert_eq!(a[0].req.id, 1);
+    }
+
+    #[test]
+    fn token_budget_bounds_prefill_chunk() {
+        let mut s = Scheduler::new(8, 64, 16);
+        for i in 0..4 {
+            s.submit(req(i, 10, 4)); // 10 context tokens each
+        }
+        // budget of 25 tokens: 10 + 10 fit, the third (30 > 25) waits
+        let a = s.admit_budgeted(64, 25);
+        assert_eq!(a.len(), 2);
+        assert_eq!(s.queue_depth(), 2);
+        // an unlimited budget drains the rest
+        assert_eq!(s.admit_budgeted(64, usize::MAX).len(), 2);
+        assert_eq!(s.queue_depth(), 0);
+    }
+
+    #[test]
+    fn over_budget_head_still_makes_progress() {
+        let mut s = Scheduler::new(8, 64, 16);
+        s.submit(req(0, 100, 4)); // alone exceeds any small budget
+        s.submit(req(1, 4, 4));
+        let a = s.admit_budgeted(64, 8);
+        assert_eq!(a.len(), 1, "first admission ignores the budget");
+        assert_eq!(a[0].req.id, 0);
+    }
+
+    #[test]
+    fn submit_tracked_preserves_arrival_stamp() {
+        let mut s = Scheduler::new(8, 64, 16);
+        let t = Tracked::new(req(7, 4, 4));
+        let arrived = t.arrived;
+        s.submit_tracked(t);
+        let a = s.admit(64);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].arrived, arrived);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::PackedWeight;
 use crate::quant::Bits;
-use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
+use crate::runtime::{parallel_grid, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 
 /// FP16-baseline kernel descriptor. Registered for the cost model and as
@@ -92,13 +92,20 @@ pub fn gemm_f32_tile(x: &Mat, w: &Mat, j0: usize, j1: usize) -> Mat {
     out
 }
 
-/// [`gemm_f32`] with the N dimension tiled over the runtime's worker pool
-/// — bit-identical to serial for every worker count.
+/// [`gemm_f32`] with the N dimension (and, for large M, batch-row bands)
+/// tiled over the runtime's worker pool — bit-identical to serial for
+/// every worker count (each output cell is one independent dot product).
 pub fn gemm_f32_rt(x: &Mat, w: &Mat, rt: &Runtime) -> Mat {
     if !rt.is_parallel() || x.rows * w.rows * w.cols < PARALLEL_MIN_MACS {
         return gemm_f32(x, w);
     }
-    parallel_columns(rt, x.rows, w.rows, &|j0, j1| gemm_f32_tile(x, w, j0, j1))
+    parallel_grid(rt, x.rows, w.rows, &|i0, i1, j0, j1| {
+        if (i0, i1) == (0, x.rows) {
+            gemm_f32_tile(x, w, j0, j1)
+        } else {
+            gemm_f32_tile(&x.slice_rows(i0, i1), w, j0, j1)
+        }
+    })
 }
 
 #[cfg(test)]

@@ -30,7 +30,7 @@ pub use registry::{GemmKernel, MathPipe, ScaleMode};
 use crate::quant::methods::QuantizedLinear;
 use crate::quant::pack::pack_int4;
 use crate::quant::{Bits, Granularity};
-use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
+use crate::runtime::{parallel_grid, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 
 /// Shared parallel driver for the integer-activation kernels: quantize the
@@ -39,6 +39,11 @@ use crate::tensor::Mat;
 /// parallel forward does not redo the M×K quantization pass per tile
 /// (the generic `forward_tile` path, used as the out-of-tree fallback,
 /// quantizes inside and so would).
+///
+/// Large-M calls (prefill) additionally tile the batch-row dimension via
+/// [`parallel_grid`]. Row tiling is bit-identical because activation
+/// quantization is per-token ([`QuantAct`] carries one scale per row), so a
+/// row band's codes and scales do not depend on which rows share its band.
 pub(crate) fn quantized_forward_rt<T>(
     x: &Mat,
     pw: &PackedWeight,
@@ -53,7 +58,13 @@ where
     if !rt.is_parallel() || x.rows * pw.n * pw.k < PARALLEL_MIN_MACS {
         return tile(&qa, pw, 0, pw.n);
     }
-    parallel_columns(rt, x.rows, pw.n, &|j0, j1| tile(&qa, pw, j0, j1))
+    parallel_grid(rt, x.rows, pw.n, &|i0, i1, j0, j1| {
+        if (i0, i1) == (0, qa.m) {
+            tile(&qa, pw, j0, j1)
+        } else {
+            tile(&qa.slice_rows(i0, i1), pw, j0, j1)
+        }
+    })
 }
 
 /// A weight tensor prepared (packed, scales laid out) for one kernel.
@@ -155,6 +166,20 @@ impl QuantAct {
     #[inline]
     pub fn row(&self, r: usize) -> &[i8] {
         &self.q[r * self.k..(r + 1) * self.k]
+    }
+
+    /// A standalone copy of token rows `i0..i1` with their per-token
+    /// scales — the row-band unit of M-tiled parallel GEMM. Because
+    /// quantization is per-token, a band's codes are byte-identical to the
+    /// same rows of the full quantization.
+    pub fn slice_rows(&self, i0: usize, i1: usize) -> QuantAct {
+        assert!(i0 <= i1 && i1 <= self.m, "row slice {i0}..{i1} out of 0..{}", self.m);
+        QuantAct {
+            m: i1 - i0,
+            k: self.k,
+            q: self.q[i0 * self.k..i1 * self.k].to_vec(),
+            scales: self.scales[i0..i1].to_vec(),
+        }
     }
 }
 

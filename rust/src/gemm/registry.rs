@@ -18,7 +18,7 @@
 use super::trace::OpTrace;
 use super::PackedWeight;
 use crate::quant::Bits;
-use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
+use crate::runtime::{parallel_grid, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -105,14 +105,23 @@ pub trait GemmKernel: Send + Sync {
 
     /// [`Self::forward`] on an execution [`Runtime`]: the N dimension is
     /// split into contiguous tiles (deterministic ownership, disjoint
-    /// output slices) executed on the runtime's worker pool. Results are
-    /// bit-identical to serial execution for every worker count. GEMMs
-    /// too small to amortize dispatch run serially.
+    /// output slices) executed on the runtime's worker pool, and large-M
+    /// calls (prefill) additionally split into batch-row bands
+    /// ([`parallel_grid`]). Results are bit-identical to serial execution
+    /// for every worker count: columns are independent (weight-stationary
+    /// kernels) and rows are independent (per-token activation
+    /// quantization). GEMMs too small to amortize dispatch run serially.
     fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
         if !rt.is_parallel() || x.rows * pw.n * pw.k < PARALLEL_MIN_MACS {
             return self.forward(x, pw);
         }
-        parallel_columns(rt, x.rows, pw.n, &|j0, j1| self.forward_tile(x, pw, j0, j1))
+        parallel_grid(rt, x.rows, pw.n, &|i0, i1, j0, j1| {
+            if (i0, i1) == (0, x.rows) {
+                self.forward_tile(x, pw, j0, j1)
+            } else {
+                self.forward_tile(&x.slice_rows(i0, i1), pw, j0, j1)
+            }
+        })
     }
 }
 

@@ -8,6 +8,10 @@
 //!             [--prompt-len 16] [--new-tokens 32] [--moe]
 //!             [--workers N]    # GEMM tiles across N pool lanes
 //!             [--replicas M]   # M engines on real OS threads
+//!             [--overlap]      # prefill newcomers while decoding
+//!             [--prefill-budget T]  # cap admitted prompt tokens per step
+//!             [--steal W]      # work stealing below backlog watermark W
+//!                              # (replicas > 1 only)
 //!             [--metrics-out serve.json]      # snapshot at exit
 //!                                             # (.json → JSON, else Prometheus text)
 //!             [--metrics-interval-ms 500]     # also dump periodically while serving
@@ -65,7 +69,7 @@ fn parse_args() -> Args {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags take no value; value flags consume the next arg
-            if name == "moe" || name == "spec-decode" {
+            if name == "moe" || name == "spec-decode" || name == "overlap" {
                 flags.insert(name.to_string(), "true".to_string());
             } else if i + 1 < argv.len() {
                 flags.insert(name.to_string(), argv[i + 1].clone());
@@ -148,6 +152,9 @@ fn serve(args: &Args) {
     let trace_spans = args.get_usize("trace-spans", 4096);
     let spec_decode = args.get_bool("spec-decode");
     let spec_k = args.get_usize("spec-k", 4);
+    let overlap = args.get_bool("overlap");
+    let prefill_budget = args.get_usize("prefill-budget", 0);
+    let steal = args.get_usize("steal", 0);
 
     let cfg = if moe { ModelConfig::moe_tiny() } else { ModelConfig::tiny() };
     let wpath = if moe { "artifacts/weights_moe.bin" } else { "artifacts/weights.bin" };
@@ -212,10 +219,13 @@ fn serve(args: &Args) {
         println!("kernel assignment: {counts:?}");
     }
     println!(
-        "scheme={label} model={} params={} max_batch={max_batch} workers={workers} replicas={replicas}",
+        "scheme={label} model={} params={} max_batch={max_batch} workers={workers} replicas={replicas} overlap={overlap} prefill_budget={prefill_budget} steal={steal}",
         if moe { "moe" } else { "dense" },
         cfg.param_count()
     );
+    if steal > 0 && replicas <= 1 {
+        eprintln!("--steal ignored: needs --replicas > 1");
+    }
     let model = Arc::new(model);
     // runtime handle for exporters: carries the obs hub + pool lane gauges
     let rt_handle = model.rt.clone();
@@ -284,10 +294,17 @@ fn serve(args: &Args) {
                 if let Some(d) = &draft {
                     e.enable_spec_decode(d.clone(), SpecConfig::with_k(spec_k));
                 }
+                e.set_overlap(overlap);
+                if prefill_budget > 0 {
+                    e.set_prefill_budget(prefill_budget);
+                }
                 e
             })
             .collect();
         let mut router = Router::new(engines, Policy::LeastLoaded);
+        if steal > 0 {
+            router = router.with_stealing(steal);
+        }
         let t0 = Instant::now();
         let res = router.run_threaded(reqs);
         let wall = t0.elapsed();
@@ -298,6 +315,10 @@ fn serve(args: &Args) {
         let mut engine = Engine::new(model, engine_cfg(3));
         if let Some(d) = &draft {
             engine.enable_spec_decode(d.clone(), SpecConfig::with_k(spec_k));
+        }
+        engine.set_overlap(overlap);
+        if prefill_budget > 0 {
+            engine.set_prefill_budget(prefill_budget);
         }
         for req in reqs {
             engine.submit(req);

@@ -62,6 +62,9 @@ impl MetricsSnapshot {
             spec_draft_tokens: obs.spec_drafted.load(Relaxed),
             spec_accepted_tokens: obs.spec_accepted.load(Relaxed),
             spec_rollbacks: obs.spec_rollbacks.load(Relaxed),
+            prefill_overlaps: obs.prefill_overlaps.load(Relaxed),
+            steal_events: obs.steal_events.load(Relaxed),
+            requests_stolen: obs.requests_stolen.load(Relaxed),
             draft_hist: obs.draft.clone(),
             verify_hist: obs.verify.clone(),
             ttft_hist: obs.ttft.clone(),
@@ -118,6 +121,9 @@ impl MetricsSnapshot {
         counter(&mut s, "spec_accepted_tokens", "Drafted tokens the target accepted.", m.spec_accepted_tokens);
         counter(&mut s, "spec_rollbacks", "Speculation rejections rolled back.", m.spec_rollbacks);
         counter(&mut s, "spec_rejected_tokens", "Drafted tokens discarded on rollback.", m.spec_rejected_tokens);
+        counter(&mut s, "prefill_overlaps", "Steps with prefill/decode overlap.", m.prefill_overlaps);
+        counter(&mut s, "steal_events", "Cross-replica work-steal migrations.", m.steal_events);
+        counter(&mut s, "requests_stolen", "Queued requests moved by stealing.", m.requests_stolen);
         s.push_str(&format!(
             "# HELP is_spec_acceptance_rate Fraction of drafted tokens accepted.\n# TYPE is_spec_acceptance_rate gauge\nis_spec_acceptance_rate {}\n",
             fnum(m.acceptance_rate())
@@ -231,6 +237,7 @@ impl MetricsSnapshot {
              \"batch\":{{\"mean\":{},\"max\":{}}},\n\
              \"pool\":{{\"blocks_total\":{},\"peak_blocks_in_use\":{},\"prefix_hit_rate\":{}}},\n\
              \"spec\":{{\"steps\":{},\"draft_tokens\":{},\"accepted_tokens\":{},\"rollbacks\":{},\"rejected_tokens\":{},\"acceptance_rate\":{},\"draft\":{},\"verify\":{}}},\n\
+             \"scheduling\":{{\"prefill_overlaps\":{},\"steal_events\":{},\"requests_stolen\":{}}},\n\
              \"latency\":{{\"ttft\":{},\"tpot\":{},\"queue_wait\":{},\"e2e\":{}}},\n\
              \"lanes\":[{}],\n\
              \"kernels\":[{}],\n\
@@ -258,6 +265,9 @@ impl MetricsSnapshot {
             fnum(m.acceptance_rate()),
             hist(&m.draft_hist),
             hist(&m.verify_hist),
+            m.prefill_overlaps,
+            m.steal_events,
+            m.requests_stolen,
             hist(&m.ttft_hist),
             hist(&m.tpot_hist),
             hist(&m.queue_wait_hist),
@@ -722,6 +732,22 @@ mod tests {
         assert_eq!(doc.path("spec.acceptance_rate").unwrap().as_f64(), Some(0.75));
         assert_eq!(doc.path("spec.rollbacks").unwrap().as_f64(), Some(2.0));
         assert!(doc.path("spec.verify.p50_ms").is_some());
+    }
+
+    #[test]
+    fn scheduling_counters_export_in_both_formats() {
+        let mut snap = sample_snapshot();
+        snap.metrics.prefill_overlaps = 7;
+        snap.metrics.steal_events = 3;
+        snap.metrics.requests_stolen = 9;
+        let text = snap.prometheus();
+        assert!(text.contains("is_prefill_overlaps 7"));
+        assert!(text.contains("is_steal_events 3"));
+        assert!(text.contains("is_requests_stolen 9"));
+        let doc = parse_json(&snap.json()).unwrap();
+        assert_eq!(doc.path("scheduling.prefill_overlaps").unwrap().as_f64(), Some(7.0));
+        assert_eq!(doc.path("scheduling.steal_events").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.path("scheduling.requests_stolen").unwrap().as_f64(), Some(9.0));
     }
 
     #[test]

@@ -67,6 +67,12 @@ pub struct Obs {
     pub spec_drafted: AtomicU64,
     pub spec_accepted: AtomicU64,
     pub spec_rollbacks: AtomicU64,
+    /// Continuous-batching overlap / work stealing: live mirrors of the
+    /// engine's overlapped-prefill phases and the router's steal
+    /// migrations (events and whole requests moved).
+    pub prefill_overlaps: AtomicU64,
+    pub steal_events: AtomicU64,
+    pub requests_stolen: AtomicU64,
 }
 
 impl Obs {
@@ -91,6 +97,9 @@ impl Obs {
             spec_drafted: AtomicU64::new(0),
             spec_accepted: AtomicU64::new(0),
             spec_rollbacks: AtomicU64::new(0),
+            prefill_overlaps: AtomicU64::new(0),
+            steal_events: AtomicU64::new(0),
+            requests_stolen: AtomicU64::new(0),
         })
     }
 
@@ -139,6 +148,40 @@ impl Obs {
             obs: self.clone(),
             id,
             parent: prev,
+            restore: prev,
+            kind,
+            label,
+            tag,
+            start_ns: self.now_ns(),
+            start: Instant::now(),
+        })
+    }
+
+    /// Open a span whose parent id was captured on another thread — the
+    /// cross-thread *guard* path. The overlapped-prefill worker opens its
+    /// `PrefillOverlap` span this way: the engine captures its Step span id
+    /// before spawning, and the guard still sets this thread's current
+    /// span, so the Prefill/Layer/Kernel spans recorded inside nest
+    /// correctly under the overlap span.
+    pub fn span_with_parent(
+        self: &Arc<Self>,
+        kind: SpanKind,
+        label: &'static str,
+        tag: u64,
+        parent: u64,
+    ) -> Option<SpanGuard> {
+        if !self.is_enabled() {
+            return None;
+        }
+        let id = self.next_span_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let prev = CURRENT_SPAN.with(|c| c.replace(id));
+        // record the caller-supplied parent, but restore this thread's own
+        // previous span on drop (`prev` is 0 on a fresh worker thread)
+        Some(SpanGuard {
+            obs: self.clone(),
+            id,
+            parent,
+            restore: prev,
             kind,
             label,
             tag,
@@ -188,6 +231,9 @@ pub struct SpanGuard {
     obs: Arc<Obs>,
     id: u64,
     parent: u64,
+    /// Thread-local span to restore on drop — equal to `parent` except for
+    /// [`Obs::span_with_parent`], where the parent lives on another thread.
+    restore: u64,
     kind: SpanKind,
     label: &'static str,
     tag: u64,
@@ -215,7 +261,7 @@ impl Drop for SpanGuard {
             tag: self.tag,
             lane: crate::runtime::current_lane(),
         });
-        CURRENT_SPAN.with(|c| c.set(self.parent));
+        CURRENT_SPAN.with(|c| c.set(self.restore));
     }
 }
 
@@ -275,6 +321,40 @@ mod tests {
         assert_eq!(tile.parent, parent_id);
         assert_eq!(tile.dur_ns, 123);
         assert_eq!(tile.tag, 64);
+    }
+
+    #[test]
+    fn span_with_parent_crosses_threads_and_restores_thread_state() {
+        let obs = Obs::new(64);
+        let step = obs.span(SpanKind::Step, "step").unwrap();
+        let step_id = step.id();
+        std::thread::scope(|s| {
+            let obs = obs.clone();
+            s.spawn(move || {
+                assert_eq!(Obs::current_span(), 0, "fresh thread has no span");
+                {
+                    let g = obs
+                        .span_with_parent(SpanKind::PrefillOverlap, "prefill-overlap", 2, step_id)
+                        .unwrap();
+                    // children on this thread nest under the overlap span
+                    assert_eq!(Obs::current_span(), g.id());
+                    let _inner = obs.span(SpanKind::Prefill, "prefill");
+                }
+                // drop restores THIS thread's previous span (0), not the
+                // cross-thread parent
+                assert_eq!(Obs::current_span(), 0);
+            });
+        });
+        drop(step);
+        let spans = obs.spans.snapshot();
+        let ov = spans.iter().find(|s| s.kind == SpanKind::PrefillOverlap).unwrap();
+        assert_eq!(ov.parent, step_id, "overlap span parents to the Step span");
+        assert_eq!(ov.tag, 2);
+        let pf = spans.iter().find(|s| s.kind == SpanKind::Prefill).unwrap();
+        assert_eq!(pf.parent, ov.id, "inner prefill nests under the overlap span");
+        // disabled hub: the guard is None, like span()
+        obs.set_enabled(false);
+        assert!(obs.span_with_parent(SpanKind::Steal, "steal", 0, 1).is_none());
     }
 
     #[test]

@@ -37,6 +37,15 @@ pub enum SpanKind {
     Kernel,
     /// One column tile of a parallel GEMM, tag = first output column.
     Tile,
+    /// Prefill of newly admitted sequences running concurrently with the
+    /// decode batch (continuous-batching overlap), tag = sequences
+    /// prefilled. Parents to the engine's Step span; the per-sequence
+    /// Prefill spans nest under it.
+    PrefillOverlap,
+    /// One work-stealing migration between replicas, tag = requests
+    /// stolen. Recorded by the thief's replica thread as a root span
+    /// (migration happens between engine steps, outside any Step).
+    Steal,
 }
 
 /// One completed span. `start_ns` is relative to the owning

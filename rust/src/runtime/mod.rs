@@ -20,6 +20,11 @@
 //!   dimension of a GEMM is partitioned into tiles, each tile computed by
 //!   exactly one task into its own `M×width` matrix, and the tiles are
 //!   stitched into disjoint column ranges of the output.
+//! * [`parallel_grid`] — [`parallel_columns`] composed with M-dimension
+//!   (batch-row) band tiling: large prefills split into row bands × column
+//!   tiles so their tasks are short enough for a concurrent decode scope
+//!   (prefill/decode overlap in [`crate::coordinator`]) to interleave on
+//!   the shared pool instead of stalling behind whole-prefill tiles.
 //!
 //! ## Determinism argument
 //!
@@ -52,6 +57,14 @@ pub const PARALLEL_MIN_MACS: usize = 1 << 15;
 /// instead of paying dispatch/stitch overhead on slivers. (Tiles can still
 /// be narrower than this when the cap, not the worker count, binds.)
 pub const MIN_TILE_COLS: usize = 8;
+
+/// Row-band cap for [`parallel_grid`]: at most one M band per this many
+/// batch rows. Decode steps (M = batch size, small) stay a single band —
+/// identical task shape to pure column tiling — while large prefills
+/// (M = prompt tokens) split into bands so their tasks are short enough
+/// for a concurrently-running decode scope to interleave on the shared
+/// pool instead of waiting out a monopolizing whole-prefill tile.
+pub const MIN_TILE_ROWS: usize = 16;
 
 /// Handle to the execution runtime a model (or bench) computes on: either
 /// serial (no pool — the default everywhere) or a shared [`WorkerPool`].
@@ -168,30 +181,66 @@ pub fn parallel_columns(
     n: usize,
     f: &(dyn Fn(usize, usize) -> Mat + Sync),
 ) -> Mat {
-    let tiles = rt.workers().min(n.div_ceil(MIN_TILE_COLS));
-    if !rt.is_parallel() || tiles <= 1 || n == 0 {
-        return f(0, n);
+    grid_impl(rt, m, n, 1, &|_i0, _i1, j0, j1| f(j0, j1))
+}
+
+/// Grid-parallel map: [`parallel_columns`] composed with M-dimension
+/// (batch-row) band tiling. `f(i0, i1, j0, j1)` must return the
+/// `(i1-i0) × (j1-j0)` sub-rectangle of the `m × n` result; bands and
+/// column tiles are partitioned deterministically, each rectangle is
+/// computed by exactly one task, and serial runtimes collapse to a single
+/// `f(0, m, 0, n)` call. Output is bit-identical to serial whenever `f`
+/// computes rows and columns independently — true for every GEMM here:
+/// kernels are weight-stationary (columns independent) and activation
+/// quantization is per-token (rows independent).
+pub fn parallel_grid(
+    rt: &Runtime,
+    m: usize,
+    n: usize,
+    f: &(dyn Fn(usize, usize, usize, usize) -> Mat + Sync),
+) -> Mat {
+    let row_bands = (m / MIN_TILE_ROWS).clamp(1, rt.workers());
+    grid_impl(rt, m, n, row_bands, f)
+}
+
+fn grid_impl(
+    rt: &Runtime,
+    m: usize,
+    n: usize,
+    row_bands: usize,
+    f: &(dyn Fn(usize, usize, usize, usize) -> Mat + Sync),
+) -> Mat {
+    let col_tiles = rt.workers().min(n.div_ceil(MIN_TILE_COLS));
+    if !rt.is_parallel() || col_tiles * row_bands <= 1 || n == 0 || m == 0 {
+        return f(0, m, 0, n);
     }
-    let bounds = partition(n, tiles);
+    let row_bounds = partition(m, row_bands);
+    let col_bounds = partition(n, col_tiles);
+    let mut bounds = Vec::with_capacity(row_bounds.len() * col_bounds.len());
+    for &(i0, i1) in &row_bounds {
+        for &(j0, j1) in &col_bounds {
+            bounds.push((i0, i1, j0, j1));
+        }
+    }
     let slots: Vec<Mutex<Option<Mat>>> = (0..bounds.len()).map(|_| Mutex::new(None)).collect();
     // Tile tasks run on pool threads, so the span parent is captured here
     // on the caller (the enclosing Kernel span) and passed explicitly.
     let obs = rt.obs().filter(|o| o.is_enabled()).cloned();
     let parent = Obs::current_span();
     rt.run_tiles(bounds.len(), &|t| {
-        let (j0, j1) = bounds[t];
+        let (i0, i1, j0, j1) = bounds[t];
         let timing = obs.as_ref().map(|o| (o.now_ns(), Instant::now()));
-        *slots[t].lock().unwrap() = Some(f(j0, j1));
+        *slots[t].lock().unwrap() = Some(f(i0, i1, j0, j1));
         if let (Some(o), Some((start_ns, start))) = (&obs, timing) {
             let dur = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
             o.record_span(SpanKind::Tile, "tile", parent, start_ns, dur, j0 as u64);
         }
     });
     let mut out = Mat::zeros(m, n);
-    for (slot, &(j0, j1)) in slots.iter().zip(bounds.iter()) {
+    for (slot, &(i0, i1, j0, j1)) in slots.iter().zip(bounds.iter()) {
         let tile = slot.lock().unwrap().take().expect("tile task ran");
-        assert_eq!((tile.rows, tile.cols), (m, j1 - j0), "tile shape mismatch");
-        out.paste_cols(j0, &tile);
+        assert_eq!((tile.rows, tile.cols), (i1 - i0, j1 - j0), "tile shape mismatch");
+        out.paste_at(i0, j0, &tile);
     }
     out
 }
@@ -257,6 +306,40 @@ mod tests {
             let par = parallel_columns(&Runtime::threaded(workers), m, n, &f);
             assert_eq!(serial.data, par.data, "workers={workers}");
         }
+    }
+
+    #[test]
+    fn parallel_grid_matches_serial_bitwise() {
+        // f computes rows and columns independently: cell (i, j) = i*1000+j
+        let f = |i0: usize, i1: usize, j0: usize, j1: usize| {
+            let mut t = Mat::zeros(i1 - i0, j1 - j0);
+            for i in i0..i1 {
+                for j in j0..j1 {
+                    t.data[(i - i0) * (j1 - j0) + (j - j0)] = (i * 1000 + j) as f32;
+                }
+            }
+            t
+        };
+        // m spans decode-sized (single band) through prefill-sized (many)
+        for m in [1usize, 5, 16, 33, 64, 100] {
+            for n in [1usize, 7, 67, 128] {
+                let serial = parallel_grid(&Runtime::serial(), m, n, &f);
+                for workers in [2, 3, 4] {
+                    let par = parallel_grid(&Runtime::threaded(workers), m, n, &f);
+                    assert_eq!(serial.data, par.data, "m={m} n={n} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grid_band_count_scales_with_rows() {
+        // below 2×MIN_TILE_ROWS rows stay one band (decode unchanged);
+        // large prefills fan out, capped by the worker count
+        let rt = Runtime::threaded(4);
+        assert_eq!((15 / MIN_TILE_ROWS).clamp(1, rt.workers()), 1);
+        assert_eq!((64 / MIN_TILE_ROWS).clamp(1, rt.workers()), 4);
+        assert_eq!((1024 / MIN_TILE_ROWS).clamp(1, rt.workers()), 4);
     }
 
     #[test]

@@ -79,6 +79,17 @@ impl Mat {
         &mut self.data[r * c..(r + 1) * c]
     }
 
+    /// A standalone copy of rows `i0..i1` (contiguous in row-major layout).
+    /// The row-band unit of M-tiled parallel GEMM ([`crate::runtime`]).
+    pub fn slice_rows(&self, i0: usize, i1: usize) -> Mat {
+        assert!(i0 <= i1 && i1 <= self.rows, "row slice {i0}..{i1} out of 0..{}", self.rows);
+        Mat {
+            rows: i1 - i0,
+            cols: self.cols,
+            data: self.data[i0 * self.cols..i1 * self.cols].to_vec(),
+        }
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -139,6 +150,18 @@ impl Mat {
         let (n, w) = (self.cols, tile.cols);
         for i in 0..self.rows {
             self.data[i * n + j0..i * n + j0 + w].copy_from_slice(&tile.data[i * w..(i + 1) * w]);
+        }
+    }
+
+    /// Copy `tile` into the sub-rectangle whose top-left corner is
+    /// `(i0, j0)` — the stitch step of grid-tiled (M×N) parallel GEMM.
+    pub fn paste_at(&mut self, i0: usize, j0: usize, tile: &Mat) {
+        assert!(i0 + tile.rows <= self.rows, "paste_at rows out of range");
+        assert!(j0 + tile.cols <= self.cols, "paste_at cols out of range");
+        let (n, w) = (self.cols, tile.cols);
+        for i in 0..tile.rows {
+            self.data[(i0 + i) * n + j0..(i0 + i) * n + j0 + w]
+                .copy_from_slice(&tile.data[i * w..(i + 1) * w]);
         }
     }
 
@@ -411,6 +434,35 @@ mod tests {
                 }
             }
             out.paste_cols(j0, &tile);
+        }
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn slice_rows_and_paste_at_reassemble_a_grid() {
+        let mut rng = Rng::new(13);
+        let src = Mat::randn(7, 11, 1.0, &mut rng);
+        // row-band slices concatenate back to the source
+        let top = src.slice_rows(0, 3);
+        let bot = src.slice_rows(3, 7);
+        assert_eq!((top.rows, top.cols), (3, 11));
+        let mut glued = Mat::zeros(7, 11);
+        glued.paste_at(0, 0, &top);
+        glued.paste_at(3, 0, &bot);
+        assert_eq!(glued, src);
+        // a full 2×2 grid of sub-rectangles reassembles too
+        let mut out = Mat::zeros(7, 11);
+        for (i0, i1) in [(0usize, 4usize), (4, 7)] {
+            for (j0, j1) in [(0usize, 5usize), (5, 11)] {
+                let band = src.slice_rows(i0, i1);
+                let mut tile = Mat::zeros(i1 - i0, j1 - j0);
+                for i in 0..i1 - i0 {
+                    for j in j0..j1 {
+                        tile.data[i * (j1 - j0) + (j - j0)] = band[(i, j)];
+                    }
+                }
+                out.paste_at(i0, j0, &tile);
+            }
         }
         assert_eq!(out, src);
     }

@@ -6,7 +6,10 @@
 //! * every servable registry kernel's parallel forward is bit-identical to
 //!   its serial forward;
 //! * `workers ∈ {1, 2, 4}` produce token-identical greedy outputs for the
-//!   uniform schemes and for the committed `recipes/llama3.plan`.
+//!   uniform schemes and for the committed `recipes/llama3.plan`;
+//! * the continuous-batching extensions — overlapped prefill/decode and
+//!   cross-replica work stealing — reproduce the serial engine's tokens
+//!   per request.
 
 use integer_scale::coordinator::{Engine, EngineConfig, Request};
 use integer_scale::gemm::{pack_for_test, registry};
@@ -192,4 +195,83 @@ fn multi_replica_threaded_tokens_match_single_engine() {
     let got: Vec<Vec<u32>> =
         router.run_threaded(reqs(8)).into_iter().map(|r| r.tokens).collect();
     assert_eq!(want, got, "replica threading changed greedy tokens");
+}
+
+fn det_requests(n: u64) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let mut r =
+                Request::greedy(i, vec![(i % 24) as u32 + 4, 6, 9, 3, 11, 2], 8);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect()
+}
+
+fn serial_tokens(model: &Transformer, n: u64) -> Vec<Vec<u32>> {
+    let mut e = Engine::new(
+        Arc::new(model.clone()),
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+    );
+    for r in det_requests(n) {
+        e.submit(r);
+    }
+    e.run_to_completion().into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn overlapped_engine_tokens_match_serial_stepping() {
+    // async prefill/decode overlap admits newcomers on a spare thread while
+    // the decode batch runs; greedy tokens per request must be unchanged
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 80);
+    let model = Transformer::from_weights(&weights);
+    let want = serial_tokens(&model, 10);
+
+    let threaded = Arc::new(model.with_runtime(Runtime::threaded(2)));
+    let mut e = Engine::new(
+        threaded,
+        EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: 1 },
+    );
+    e.set_overlap(true);
+    e.set_prefill_budget(12); // force multiple overlapped admission waves
+    for r in det_requests(10) {
+        e.submit(r);
+    }
+    let got: Vec<Vec<u32>> =
+        e.run_to_completion().into_iter().map(|r| r.tokens).collect();
+    assert_eq!(want, got, "overlapped prefill changed greedy tokens");
+    assert!(e.metrics.prefill_overlaps > 0, "overlap path never exercised");
+}
+
+#[test]
+fn stealing_router_with_overlap_tokens_match_serial_stepping() {
+    // the full continuous-batching stack: overlapped engines behind a
+    // work-stealing router, pinned dispatch so stealing must rebalance
+    use integer_scale::coordinator::{Policy, Router};
+    let cfg = small_cfg();
+    let weights = ModelWeights::random(cfg, 81);
+    let model = Transformer::from_weights(&weights);
+    let want = serial_tokens(&model, 16);
+
+    let threaded = Arc::new(model.with_runtime(Runtime::threaded(2)));
+    let engines = (0..2)
+        .map(|i| {
+            let mut e = Engine::new(
+                threaded.clone(),
+                EngineConfig { max_batch: 4, kv_token_budget: 4096, seed: i },
+            );
+            e.set_overlap(true);
+            e.set_prefill_budget(18);
+            e
+        })
+        .collect();
+    let mut router = Router::new(engines, Policy::Pinned(0)).with_stealing(2);
+    let got: Vec<Vec<u32>> =
+        router.run_threaded(det_requests(16)).into_iter().map(|r| r.tokens).collect();
+    assert_eq!(want, got, "work stealing changed greedy tokens");
+    let merged = router.merged_metrics();
+    assert_eq!(merged.completed, 16);
+    // queue-wait attributed exactly once per request even across migrations
+    assert_eq!(merged.queue_wait_hist.count(), 16);
 }
