@@ -1,12 +1,16 @@
 //! Micro-benchmarks over the whole kernel zoo at one canonical shape — the
 //! raw data behind the perf numbers indexed in DESIGN.md. (criterion is unavailable offline;
 //! `integer_scale::bench_harness` provides the same warmup/median protocol.)
+//!
+//! Knobs: `GEMM_ZOO_SAMPLES` overrides the per-bench sample count (CI runs
+//! a short smoke with 3); `BENCH_JSON_OUT` writes the records as JSON.
 
-use integer_scale::bench_harness::{black_box, Bencher};
+use integer_scale::bench_harness::{black_box, write_json, Bencher};
 use integer_scale::gemm::{self, pack_for_test, QuantAct};
 use integer_scale::quant::methods::dual_grained::dual_grain_quantize;
 use integer_scale::quant::{Bits, Granularity};
 use integer_scale::tensor::{Mat, Rng};
+use std::path::PathBuf;
 
 const M: usize = 16;
 const K: usize = 1024;
@@ -14,6 +18,10 @@ const N: usize = 2048;
 const G: usize = 128;
 
 fn main() {
+    let samples = std::env::var("GEMM_ZOO_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(15);
     let mut rng = Rng::new(1);
     let x = Mat::randn(M, K, 1.0, &mut rng);
     let w = Mat::randn(N, K, 0.05, &mut rng);
@@ -25,8 +33,13 @@ fn main() {
     let pw_w8 = pack_for_test(&w, Bits::B8, Granularity::PerChannel, None);
     let dg = dual_grain_quantize(&w, G);
     let gs = gemm::qserve::unit_group_scales(&dg);
+    // the microkernel A/B pair: same codes, with and without the offline
+    // tile-interleaved layout, plus the M=1 decode GEMV shape
+    let pw_is_row = pw_is.without_tiled();
+    let x1 = Mat::randn(1, K, 1.0, &mut rng);
+    let qa8_m1 = QuantAct::quantize(&x1, Bits::B8);
 
-    let mut b = Bencher::group(&format!("gemm_zoo M={M} K={K} N={N} g={G}")).sample_size(15);
+    let mut b = Bencher::group(&format!("gemm_zoo M={M} K={K} N={N} g={G}")).sample_size(samples);
     b.bench("fp16", || {
         black_box(gemm::fp32::gemm_f32(&x, &w));
     });
@@ -45,6 +58,15 @@ fn main() {
     b.bench("w4a8_fg_integer_scale", || {
         black_box(gemm::w4a8_fg_int::gemm(&qa8, &pw_is));
     });
+    b.bench("w4a8_fg_is_rowunpack", || {
+        black_box(gemm::w4a8_fg_int::gemm(&qa8, &pw_is_row));
+    });
+    b.bench("w4a8_fg_is_gemv_m1", || {
+        black_box(gemm::w4a8_fg_int::gemm(&qa8_m1, &pw_is));
+    });
+    b.bench("w4a8_fg_is_gemv_m1_rowunpack", || {
+        black_box(gemm::w4a8_fg_int::gemm(&qa8_m1, &pw_is_row));
+    });
     b.bench("w4a4_atom", || {
         black_box(gemm::w4a4::gemm_float_scale(&qa4, &pw_fs));
     });
@@ -59,5 +81,16 @@ fn main() {
     }
     if let Some(r) = b.ratio("qserve_fine", "w4a8_fg_integer_scale") {
         println!(">> Integer Scale speedup over QServe fine: {r:.2}x (paper: up to 1.53x)");
+    }
+    if let Some(r) = b.ratio("w4a8_fg_is_rowunpack", "w4a8_fg_integer_scale") {
+        println!(">> microkernel speedup over row-unpack at M={M}: {r:.2}x");
+    }
+    if let Some(r) = b.ratio("w4a8_fg_is_gemv_m1_rowunpack", "w4a8_fg_is_gemv_m1") {
+        println!(">> microkernel GEMV speedup over row-unpack at M=1: {r:.2}x");
+    }
+    if let Ok(out) = std::env::var("BENCH_JSON_OUT") {
+        let out = PathBuf::from(out);
+        write_json(&out, b.records()).expect("write BENCH json");
+        println!("\nwrote {} ({} records)", out.display(), b.records().len());
     }
 }

@@ -1,6 +1,6 @@
 //! CI perf gate (`perf-smoke` job): a quick, machine-readable benchmark
 //! pass that writes `BENCH_pr.json` (see `bench_harness::write_json`) and
-//! enforces two invariants on every PR:
+//! enforces these invariants on every PR:
 //!
 //! 1. **parallel GEMM pays**: the 4-worker tiled w4a8-fg-is forward is at
 //!    least 1.3x faster than the 1-worker (serial) path at a serving-sized
@@ -22,7 +22,13 @@
 //!    fleet with overlapped prefill/decode and work stealing serves
 //!    tokens at least 1.15x faster than serial-phase engines that cannot
 //!    rebalance (4 GEMM workers, min-of-samples, gated on >= 4 CPUs) —
-//!    with, checked before timing anything, the same token count.
+//!    with, checked before timing anything, the same token count;
+//! 6. **the microkernel pays**: the register-blocked tiled-layout path of
+//!    `w4a8-fg-is` is at least 1.25x faster than the row-unpack path at
+//!    both M=1 (the zero-alloc decode GEMV) and M=64 (prefill) — with,
+//!    checked before timing anything, bit-identical outputs at both
+//!    shapes and token-identical greedy serve output after
+//!    `strip_tiled_layouts`.
 //!
 //! Also asserts — before timing anything — that parallel tiles are
 //! bit-identical to serial execution, records end-to-end serve tokens/sec
@@ -53,7 +59,7 @@ const K: usize = 1024;
 const N: usize = 4096;
 const G: usize = 128;
 
-fn serve_once(model: &Arc<Transformer>, gen: &CorpusGen) -> usize {
+fn serve_tokens(model: &Arc<Transformer>, gen: &CorpusGen) -> Vec<Vec<u32>> {
     let mut e = Engine::new(
         model.clone(),
         EngineConfig { max_batch: 8, kv_token_budget: 8 * 256, seed: 1 },
@@ -64,8 +70,11 @@ fn serve_once(model: &Arc<Transformer>, gen: &CorpusGen) -> usize {
         r.stop_at_eos = false;
         e.submit(r);
     }
-    let res = e.run_to_completion();
-    res.iter().map(|r| r.tokens.len()).sum()
+    e.run_to_completion().into_iter().map(|r| r.tokens).collect()
+}
+
+fn serve_once(model: &Arc<Transformer>, gen: &CorpusGen) -> usize {
+    serve_tokens(model, gen).iter().map(|t| t.len()).sum()
 }
 
 /// Repeat-heavy prompts: a two-token pattern cycled, the regime
@@ -166,6 +175,22 @@ fn main() {
     assert_eq!(serial.data, par.data, "parallel tiles diverged from serial execution");
     println!("bit-identity: 4-worker tiled w4a8-fg-is == serial (M={M} K={K} N={N})");
 
+    // gate-6 correctness: the register-blocked microkernel layout must be
+    // invisible to results at the decode GEMV (M=1) and prefill (M=64)
+    // shapes before either side is timed
+    assert!(pw_is.tiled.is_some(), "int4 pack must carry the tiled microkernel layout");
+    let pw_row = pw_is.without_tiled();
+    let x1 = Mat::randn(1, K, 1.0, &mut rng);
+    let x64 = Mat::randn(64, K, 1.0, &mut rng);
+    for (label, xm) in [("M=1", &x1), ("M=64", &x64)] {
+        assert_eq!(
+            is_k.forward(xm, &pw_is).data,
+            is_k.forward(xm, &pw_row).data,
+            "microkernel diverged from row-unpack at {label}"
+        );
+    }
+    println!("bit-identity: microkernel w4a8-fg-is == row-unpack (M=1 and M=64, K={K} N={N})");
+
     let mut b = Bencher::group(&format!("perf_smoke M={M} K={K} N={N} g={G}")).sample_size(9);
     let s_w1 = b.bench("gemm_is_workers1", || {
         black_box(is_k.forward_rt(&x, &pw_is, &rt1));
@@ -180,6 +205,21 @@ fn main() {
         black_box(is_k.forward(&x, &pw_is));
     });
 
+    // gate-6 timings: tiled microkernel vs row-unpack on the same codes,
+    // decode GEMV (M=1, zero scratch) and prefill (M=64, register-blocked)
+    let s_micro1 = b.bench("gemm_is_micro_gemv_m1", || {
+        black_box(is_k.forward(&x1, &pw_is));
+    });
+    let s_row1 = b.bench("gemm_is_rowunpack_m1", || {
+        black_box(is_k.forward(&x1, &pw_row));
+    });
+    let s_micro64 = b.bench("gemm_is_micro_m64", || {
+        black_box(is_k.forward(&x64, &pw_is));
+    });
+    let s_row64 = b.bench("gemm_is_rowunpack_m64", || {
+        black_box(is_k.forward(&x64, &pw_row));
+    });
+
     // end-to-end serve throughput at 1 vs 4 workers (tokens/sec records)
     let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
     let weights = ModelWeights::random(cfg, 42);
@@ -189,7 +229,20 @@ fn main() {
         QuantSpec::new(Method::Rtn, BitWidth::W4A8, Granularity::Group(128)).with_is(1024),
     );
     let model = quantize_model_plan(&weights, &plan, &calib);
-    let toks = serve_once(&Arc::new(model.clone()), &gen) as u64;
+
+    // gate-6 serve-level losslessness: stripping the tiled layouts from
+    // every layer must not change a single greedy token
+    let tiled_toks = serve_tokens(&Arc::new(model.clone()), &gen);
+    let mut model_row = model.clone();
+    model_row.strip_tiled_layouts();
+    assert_eq!(
+        tiled_toks,
+        serve_tokens(&Arc::new(model_row), &gen),
+        "strip_tiled_layouts changed greedy serve output"
+    );
+    println!("serve losslessness: microkernel layout on == off (token-identical streams)");
+
+    let toks = tiled_toks.iter().map(|t| t.len() as u64).sum::<u64>();
     let m1 = Arc::new(model.clone().with_runtime(Runtime::threaded(1)));
     let s_serve1 = b.bench_tokens("serve_is_workers1", toks, || {
         black_box(serve_once(&m1, &gen));
@@ -365,6 +418,21 @@ fn main() {
         }
     } else {
         println!("gate 5 SKIPPED: host has {host_cpus} CPUs (<4); speedup was {cb_speed:.2}x");
+    }
+
+    let micro1 = s_row1.median.as_secs_f64() / s_micro1.median.as_secs_f64();
+    let micro64 = s_row64.median.as_secs_f64() / s_micro64.median.as_secs_f64();
+    println!(
+        "gate 6: microkernel {micro1:.2}x at M=1 decode, {micro64:.2}x at M=64 prefill \
+         (require >= 1.25x both)"
+    );
+    if micro1 < 1.25 {
+        eprintln!("FAIL: microkernel GEMV {micro1:.2}x < 1.25x over row-unpack at M=1");
+        failed = true;
+    }
+    if micro64 < 1.25 {
+        eprintln!("FAIL: microkernel {micro64:.2}x < 1.25x over row-unpack at M=64");
+        failed = true;
     }
 
     if failed {

@@ -90,7 +90,7 @@ pub fn latency_scaled(
     let t_cuda = t.i32_to_f32 as f64 / gpu.convert
         + (t.int_scale_mac + t.expand_ops) as f64 / gpu.cuda_alu;
     // memory pipe
-    let bytes = t.weight_bytes + act_out_bytes(kernel, m, k, n);
+    let bytes = t.weight_bytes + t.scale_bytes + act_out_bytes(kernel, m, k, n);
     let t_mem = bytes as f64 / gpu.hbm;
     gpu.launch + (t_math + t_cuda).max(t_mem)
 }

@@ -1,0 +1,518 @@
+//! Register-blocked integer GEMM microkernel over an offline
+//! tile-interleaved weight layout.
+//!
+//! The row-unpack kernels (`w4a8_fg_int` & friends) stream one packed
+//! weight row at a time: unpack K nibbles into scratch, run every
+//! activation row against it, move on. That re-reads the whole activation
+//! matrix once **per output channel** — N passes over M×K int8 — and at
+//! M=1 it still pays a full unpack write+read round trip per row.
+//!
+//! This module fixes both with one offline transformation plus two inner
+//! loops:
+//!
+//! * [`TiledWeight`] — the output channels are grouped into column tiles of
+//!   `nr` lanes and the packed nibbles re-ordered **group-major within the
+//!   tile**: all `nr` lanes' bytes for group 0, then group 1, … with the
+//!   per-(lane, group) scales (float and integer) co-located in the same
+//!   order. Built once at quantization time ([`super::PackedWeight`]
+//!   carries it), never on the request path.
+//! * the **blocked path** (M > 1): per tile, each group's lane block is
+//!   unpacked once into per-lane scratch and an M×nr strip of accumulators
+//!   lives in scratch; the group loop is outermost, so one read of an
+//!   activation group feeds all `nr` lanes — activation traffic drops by
+//!   ~`nr`× vs row-unpack while each output element still sees *exactly*
+//!   the per-group arithmetic sequence of the row-unpack kernel.
+//! * the **GEMV path** (M = 1, the decode-dominant shape):
+//!   [`dot_packed`] fuses the nibble unpack into the dot product, reading
+//!   the tiled bytes directly, with a fixed `[i32; MAX_NR]` register
+//!   accumulator block — zero scratch allocation, no unpack round trip.
+//!
+//! ## Why bit-identity survives register blocking
+//!
+//! Every output element `(i, j)` is still computed as: for each group `gi`
+//! in ascending order, an i32 group partial (integer adds over the same
+//! codes in the same index order — [`dot_packed`] and
+//! [`dot_i8`](super::w4a8_fg_int::dot_i8) produce the same i32 because
+//! integer addition is associative and each term is identical), folded by
+//! the kernel's epilogue expression *verbatim* (integer `wrapping_mul`
+//! chain for Integer Scale, `part as f32 * s` f32 accumulation for float
+//! scale). Blocking only interleaves *independent* elements' sequences
+//! across registers; it never reorders one element's sequence. So
+//! microkernel output is bit-identical per element to `gemm_tile`, and the
+//! parallel-runtime determinism argument (runtime module docs) is
+//! unchanged.
+
+use super::PackedWeight;
+use super::QuantAct;
+use crate::quant::pack::unpack_row_into;
+use crate::quant::Bits;
+use crate::runtime::{with_f32_scratch, with_i32_scratch, with_i8_scratch};
+use crate::tensor::Mat;
+
+/// Default column-tile width. 8 lanes × i32 accumulators fit comfortably in
+/// registers next to the activation group pointer, and 8 output channels
+/// per activation read is already past the point where the activation
+/// stream (not the weight stream) stops dominating; wider tiles grow the
+/// per-group lane scratch with no further traffic win at CPU shapes.
+pub const MICRO_NR: usize = 8;
+
+/// Hard cap on the tile width: the GEMV path keeps one accumulator per
+/// lane in a fixed-size array (its register block), so `nr` may not exceed
+/// this.
+pub const MAX_NR: usize = 32;
+
+/// The offline column-tile-interleaved weight layout.
+///
+/// Tile `t` covers output channels `t*nr .. min((t+1)*nr, n)`; the last
+/// tile is padded to `nr` lanes with bytes `0x88` (both nibbles decode to
+/// code 0) and scales 0, so the inner loops never branch on tile width for
+/// layout indexing (they do bound the *active* lane range, so pad lanes
+/// are never computed or written).
+///
+/// For tile `t`, group `gi`, lane `l` (`gb = group/2` packed bytes per
+/// group, `gpr = k/group` groups per row):
+///
+/// * packed nibbles: `data[((t*gpr + gi)*nr + l)*gb ..][..gb]`
+/// * float scale:    `scales[(t*gpr + gi)*nr + l]`
+/// * integer scale:  `int_scales[(t*gpr + gi)*nr + l]`
+///
+/// i.e. a group's `nr` lane blocks and their scales are contiguous — the
+/// streaming unit of both inner loops.
+#[derive(Clone, Debug)]
+pub struct TiledWeight {
+    pub nr: usize,
+    pub n: usize,
+    pub k: usize,
+    pub group: usize,
+    /// Tile-interleaved packed nibbles (layout above).
+    pub data: Vec<u8>,
+    /// Per-(tile, group, lane) float scales, co-located with `data`.
+    pub scales: Vec<f32>,
+    /// Per-(tile, group, lane) integer scales, when Integer Scale is on.
+    pub int_scales: Option<Vec<i32>>,
+    pub amplifier: i64,
+}
+
+impl TiledWeight {
+    /// Re-order a [`PackedWeight`]'s nibbles into the tiled layout —
+    /// offline work, done once at quantization time. Returns `None` for
+    /// shapes the microkernel does not cover (non-int4 weights, odd K,
+    /// odd/zero group, `nr` out of `1..=MAX_NR`); callers fall back to the
+    /// row-unpack path.
+    pub fn repack(pw: &PackedWeight, nr: usize) -> Option<TiledWeight> {
+        if pw.bits != Bits::B4
+            || nr == 0
+            || nr > MAX_NR
+            || pw.n == 0
+            || pw.group == 0
+            || pw.group % 2 != 0
+            || pw.k % 2 != 0
+            || pw.k % pw.group != 0
+        {
+            return None;
+        }
+        let (n, k, group) = (pw.n, pw.k, pw.group);
+        let gpr = k / group;
+        let gb = group / 2;
+        let kb = k / 2;
+        let tiles = n.div_ceil(nr);
+        // pad byte 0x88: both nibbles decode to code 0
+        let mut data = vec![0x88u8; tiles * gpr * nr * gb];
+        let mut scales = vec![0f32; tiles * gpr * nr];
+        let mut int_scales = pw.int_scales.as_ref().map(|_| vec![0i32; tiles * gpr * nr]);
+        for jn in 0..n {
+            let (t, l) = (jn / nr, jn % nr);
+            for gi in 0..gpr {
+                let s = (t * gpr + gi) * nr + l;
+                data[s * gb..(s + 1) * gb]
+                    .copy_from_slice(&pw.packed[jn * kb + gi * gb..jn * kb + (gi + 1) * gb]);
+                scales[s] = pw.scales[jn * gpr + gi];
+                if let (Some(dst), Some(src)) = (int_scales.as_mut(), pw.int_scales.as_ref()) {
+                    dst[s] = src[jn * gpr + gi];
+                }
+            }
+        }
+        Some(TiledWeight { nr, n, k, group, data, scales, int_scales, amplifier: pw.amplifier })
+    }
+
+    #[inline]
+    fn gpr(&self) -> usize {
+        self.k / self.group
+    }
+}
+
+/// Fused nibble-unpack int8 dot product over one group: reads the packed
+/// bytes directly instead of materializing an unpacked buffer. Produces
+/// exactly the i32 of [`super::w4a8_fg_int::dot_i8`] over the unpacked
+/// codes — same terms, and i32 addition is associative.
+#[inline(always)]
+pub fn dot_packed(x: &[i8], wp: &[u8]) -> i32 {
+    debug_assert_eq!(x.len(), wp.len() * 2);
+    let mut acc = 0i32;
+    for (xc, &b) in x.chunks_exact(2).zip(wp.iter()) {
+        acc += xc[0] as i32 * (((b & 0x0F) as i8) - 8) as i32;
+        acc += xc[1] as i32 * (((b >> 4) as i8) - 8) as i32;
+    }
+    acc
+}
+
+/// Allocation-free iterator over the column tiles intersecting `j0..j1`:
+/// yields `(t, l_lo, l_hi)` — tile index and the active lane range within
+/// it (partial at both edges when the request starts or ends mid-tile).
+struct Tiles {
+    nr: usize,
+    j1: usize,
+    pos: usize,
+}
+
+#[inline]
+fn tiles(nr: usize, j0: usize, j1: usize) -> Tiles {
+    Tiles { nr, j1, pos: j0 }
+}
+
+impl Iterator for Tiles {
+    type Item = (usize, usize, usize);
+    #[inline]
+    fn next(&mut self) -> Option<(usize, usize, usize)> {
+        if self.pos >= self.j1 {
+            return None;
+        }
+        let t = self.pos / self.nr;
+        let l_lo = self.pos - t * self.nr;
+        let l_hi = (self.j1 - t * self.nr).min(self.nr);
+        self.pos = t * self.nr + l_hi;
+        Some((t, l_lo, l_hi))
+    }
+}
+
+/// Integer-Scale microkernel: output columns `j0..j1` of the W4A8/W4A4
+/// Integer-Scale GEMM on the tiled layout — bit-identical per element to
+/// `w4a8_fg_int::gemm_tile` / `w4a4::gemm_int_scale_tile` on the same
+/// weight.
+pub fn gemm_is_tile(x: &QuantAct, tw: &TiledWeight, j0: usize, j1: usize) -> Mat {
+    let is = tw.int_scales.as_deref().expect("integer scales required in tiled layout");
+    assert_eq!(x.k, tw.k, "K mismatch");
+    assert!(j0 <= j1 && j1 <= tw.n, "tile {j0}..{j1} out of 0..{}", tw.n);
+    let (m, g, nr) = (x.m, tw.group, tw.nr);
+    let (gpr, gb) = (tw.gpr(), tw.group / 2);
+    let nw = j1 - j0;
+    let inv_amp = 1.0f32 / tw.amplifier as f32;
+    let mut out = Mat::zeros(m, nw);
+
+    if m == 1 {
+        // GEMV fast path: fused unpack, register accumulator block, zero
+        // scratch — the decode-dominant shape.
+        let xrow = x.row(0);
+        let sa = x.scales[0] * inv_amp;
+        for (t, l_lo, l_hi) in tiles(nr, j0, j1) {
+            let mut acc = [0i32; MAX_NR];
+            for gi in 0..gpr {
+                let xg = &xrow[gi * g..(gi + 1) * g];
+                let sbase = (t * gpr + gi) * nr;
+                for l in l_lo..l_hi {
+                    let wp = &tw.data[(sbase + l) * gb..(sbase + l + 1) * gb];
+                    let part = dot_packed(xg, wp);
+                    let s = is[sbase + l];
+                    debug_assert!(
+                        (acc[l] as i64 + part as i64 * s as i64).abs() <= i32::MAX as i64,
+                        "IS accumulator overflowed i32 (α too large)"
+                    );
+                    acc[l] = acc[l].wrapping_add(part.wrapping_mul(s));
+                }
+            }
+            for l in l_lo..l_hi {
+                out.data[t * nr + l - j0] = acc[l] as f32 * sa;
+            }
+        }
+        return out;
+    }
+
+    // blocked path: unpack each (tile, group) lane block once, hold an
+    // M×nr accumulator strip; group loop outermost so one activation-group
+    // read feeds all nr lanes.
+    with_i8_scratch(nr * g, |lane_buf| {
+        with_i32_scratch(m * nr, |accs| {
+            for (t, l_lo, l_hi) in tiles(nr, j0, j1) {
+                let aw = l_hi - l_lo;
+                accs[..m * aw].fill(0);
+                for gi in 0..gpr {
+                    let sbase = (t * gpr + gi) * nr;
+                    for li in 0..aw {
+                        let b = (sbase + l_lo + li) * gb;
+                        unpack_row_into(&tw.data[b..b + gb], &mut lane_buf[li * g..(li + 1) * g]);
+                    }
+                    for i in 0..m {
+                        let xg = &x.row(i)[gi * g..(gi + 1) * g];
+                        let arow = &mut accs[i * aw..(i + 1) * aw];
+                        for li in 0..aw {
+                            let part =
+                                super::w4a8_fg_int::dot_i8(xg, &lane_buf[li * g..(li + 1) * g]);
+                            let s = is[sbase + l_lo + li];
+                            debug_assert!(
+                                (arow[li] as i64 + part as i64 * s as i64).abs()
+                                    <= i32::MAX as i64,
+                                "IS accumulator overflowed i32 (α too large)"
+                            );
+                            arow[li] = arow[li].wrapping_add(part.wrapping_mul(s));
+                        }
+                    }
+                }
+                for i in 0..m {
+                    let sa = x.scales[i] * inv_amp;
+                    for li in 0..aw {
+                        out.data[i * nw + t * nr + l_lo + li - j0] =
+                            accs[i * aw + li] as f32 * sa;
+                    }
+                }
+            }
+        })
+    });
+    out
+}
+
+/// Float-scale microkernel: output columns `j0..j1` of the fine-grained
+/// float-scale GEMM on the tiled layout — bit-identical per element to
+/// `w4a8_fg_float::gemm_tile` / `w4a4::gemm_float_scale_tile` (the f32
+/// accumulation order per element, group-ascending, is preserved).
+pub fn gemm_fs_tile(x: &QuantAct, tw: &TiledWeight, j0: usize, j1: usize) -> Mat {
+    assert_eq!(x.k, tw.k, "K mismatch");
+    assert!(j0 <= j1 && j1 <= tw.n, "tile {j0}..{j1} out of 0..{}", tw.n);
+    let (m, g, nr) = (x.m, tw.group, tw.nr);
+    let (gpr, gb) = (tw.gpr(), tw.group / 2);
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
+
+    if m == 1 {
+        let xrow = x.row(0);
+        let sa = x.scales[0];
+        for (t, l_lo, l_hi) in tiles(nr, j0, j1) {
+            let mut acc = [0f32; MAX_NR];
+            for gi in 0..gpr {
+                let xg = &xrow[gi * g..(gi + 1) * g];
+                let sbase = (t * gpr + gi) * nr;
+                for l in l_lo..l_hi {
+                    let wp = &tw.data[(sbase + l) * gb..(sbase + l + 1) * gb];
+                    acc[l] += dot_packed(xg, wp) as f32 * tw.scales[sbase + l];
+                }
+            }
+            for l in l_lo..l_hi {
+                out.data[t * nr + l - j0] = acc[l] * sa;
+            }
+        }
+        return out;
+    }
+
+    with_i8_scratch(nr * g, |lane_buf| {
+        with_f32_scratch(m * nr, |accs| {
+            for (t, l_lo, l_hi) in tiles(nr, j0, j1) {
+                let aw = l_hi - l_lo;
+                accs[..m * aw].fill(0.0);
+                for gi in 0..gpr {
+                    let sbase = (t * gpr + gi) * nr;
+                    for li in 0..aw {
+                        let b = (sbase + l_lo + li) * gb;
+                        unpack_row_into(&tw.data[b..b + gb], &mut lane_buf[li * g..(li + 1) * g]);
+                    }
+                    for i in 0..m {
+                        let xg = &x.row(i)[gi * g..(gi + 1) * g];
+                        let arow = &mut accs[i * aw..(i + 1) * aw];
+                        for li in 0..aw {
+                            let part =
+                                super::w4a8_fg_int::dot_i8(xg, &lane_buf[li * g..(li + 1) * g]);
+                            arow[li] += part as f32 * tw.scales[sbase + l_lo + li];
+                        }
+                    }
+                }
+                for i in 0..m {
+                    let sa = x.scales[i];
+                    for li in 0..aw {
+                        out.data[i * nw + t * nr + l_lo + li - j0] = accs[i * aw + li] * sa;
+                    }
+                }
+            }
+        })
+    });
+    out
+}
+
+/// Coarse (per-channel) microkernel: output columns `j0..j1` of the coarse
+/// W4A8 GEMM on the tiled layout — bit-identical per element to
+/// `w4a8_coarse::gemm_tile`. Per-channel means one group spanning K, so
+/// the "group loop" degenerates and the epilogue is the coarse kernel's
+/// left-associated `acc as f32 * s_a * s_w` expression verbatim.
+pub fn gemm_coarse_tile(x: &QuantAct, tw: &TiledWeight, j0: usize, j1: usize) -> Mat {
+    assert_eq!(x.k, tw.k, "K mismatch");
+    assert!(j0 <= j1 && j1 <= tw.n, "tile {j0}..{j1} out of 0..{}", tw.n);
+    let gpr = tw.gpr();
+    assert_eq!(gpr, 1, "coarse microkernel requires per-channel scales");
+    let (m, g, nr) = (x.m, tw.group, tw.nr);
+    let gb = g / 2;
+    let nw = j1 - j0;
+    let mut out = Mat::zeros(m, nw);
+
+    if m == 1 {
+        let xrow = x.row(0);
+        let sa = x.scales[0];
+        for (t, l_lo, l_hi) in tiles(nr, j0, j1) {
+            let sbase = t * nr;
+            for l in l_lo..l_hi {
+                let wp = &tw.data[(sbase + l) * gb..(sbase + l + 1) * gb];
+                let acc = dot_packed(xrow, wp);
+                out.data[t * nr + l - j0] = acc as f32 * sa * tw.scales[sbase + l];
+            }
+        }
+        return out;
+    }
+
+    with_i8_scratch(nr * g, |lane_buf| {
+        for (t, l_lo, l_hi) in tiles(nr, j0, j1) {
+            let aw = l_hi - l_lo;
+            let sbase = t * nr;
+            for li in 0..aw {
+                let b = (sbase + l_lo + li) * gb;
+                unpack_row_into(&tw.data[b..b + gb], &mut lane_buf[li * g..(li + 1) * g]);
+            }
+            for i in 0..m {
+                let xrow = x.row(i);
+                for li in 0..aw {
+                    let acc = super::w4a8_fg_int::dot_i8(xrow, &lane_buf[li * g..(li + 1) * g]);
+                    out.data[i * nw + t * nr + l_lo + li - j0] =
+                        acc as f32 * x.scales[i] * tw.scales[sbase + l_lo + li];
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::{pack_for_test, w4a8_coarse, w4a8_fg_float, w4a8_fg_int};
+    use crate::quant::pack::unpack_int4;
+    use crate::quant::Granularity;
+    use crate::tensor::{Mat, Rng};
+
+    fn qa(m: usize, k: usize, seed: u64) -> QuantAct {
+        let mut rng = Rng::new(seed);
+        QuantAct::quantize(&Mat::randn(m, k, 1.0, &mut rng), Bits::B8)
+    }
+
+    #[test]
+    fn repack_layout_roundtrips() {
+        let mut rng = Rng::new(90);
+        // n=21, nr=8: a padded final tile
+        let w = Mat::randn(21, 64, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(16), Some(1024));
+        let tw = TiledWeight::repack(&pw, 8).expect("repackable");
+        let (gpr, gb) = (64 / 16, 16 / 2);
+        let orig = unpack_int4(&pw.packed);
+        for jn in 0..21 {
+            let (t, l) = (jn / 8, jn % 8);
+            for gi in 0..gpr {
+                let s = (t * gpr + gi) * 8 + l;
+                let got = unpack_int4(&tw.data[s * gb..(s + 1) * gb]);
+                assert_eq!(got, &orig[jn * 64 + gi * 16..jn * 64 + (gi + 1) * 16]);
+                assert_eq!(tw.scales[s], pw.scales[jn * gpr + gi]);
+                assert_eq!(
+                    tw.int_scales.as_ref().unwrap()[s],
+                    pw.int_scales.as_ref().unwrap()[jn * gpr + gi]
+                );
+            }
+        }
+        // pad lanes: code 0 nibbles, zero scales
+        for l in 21 % 8..8 {
+            for gi in 0..gpr {
+                let s = ((21 / 8) * gpr + gi) * 8 + l;
+                assert!(tw.data[s * gb..(s + 1) * gb].iter().all(|&b| b == 0x88));
+                assert_eq!(tw.scales[s], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn repack_rejects_uncovered_shapes() {
+        let mut rng = Rng::new(91);
+        let w = Mat::randn(8, 64, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(16), None);
+        assert!(TiledWeight::repack(&pw, 0).is_none());
+        assert!(TiledWeight::repack(&pw, MAX_NR + 1).is_none());
+        let pw8 = pack_for_test(&w, Bits::B8, Granularity::PerChannel, None);
+        assert!(TiledWeight::repack(&pw8, 8).is_none(), "int8 weights have no tiled layout");
+    }
+
+    #[test]
+    fn dot_packed_equals_dot_i8_on_unpacked() {
+        let mut rng = Rng::new(92);
+        let codes: Vec<i8> = (0..64).map(|_| (rng.below(16) as i8) - 8).collect();
+        let x: Vec<i8> = (0..64).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let packed = crate::quant::pack::pack_int4(&codes, 64);
+        assert_eq!(dot_packed(&x, &packed), w4a8_fg_int::dot_i8(&x, &codes));
+    }
+
+    #[test]
+    fn is_bit_identical_to_rowunpack_at_awkward_shapes() {
+        let mut rng = Rng::new(93);
+        // n=29 (not a multiple of nr), tile boundaries mid-request
+        let w = Mat::randn(29, 128, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(32), Some(1024));
+        let tw = TiledWeight::repack(&pw, 8).unwrap();
+        for m in [1usize, 2, 5] {
+            let x = qa(m, 128, 100 + m as u64);
+            // compare against the row-unpack loop explicitly: gemm_tile on
+            // this weight would dispatch right back to the microkernel
+            let want = w4a8_fg_int::gemm_tile_rowunpack(&x, &pw, 0, 29);
+            let got = gemm_is_tile(&x, &tw, 0, 29);
+            assert_eq!(want.data, got.data, "m={m}");
+            // partial ranges: start and end mid-tile
+            for (j0, j1) in [(0, 0), (3, 3), (0, 29), (5, 17), (7, 9), (8, 16), (23, 29)] {
+                let want = w4a8_fg_int::gemm_tile_rowunpack(&x, &pw, j0, j1);
+                let got = gemm_is_tile(&x, &tw, j0, j1);
+                assert_eq!(want.data, got.data, "m={m} tile {j0}..{j1}");
+            }
+        }
+    }
+
+    #[test]
+    fn fs_bit_identical_to_rowunpack() {
+        let mut rng = Rng::new(94);
+        let w = Mat::randn(29, 128, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::Group(32), None);
+        let tw = TiledWeight::repack(&pw, 8).unwrap();
+        for m in [1usize, 4] {
+            let x = qa(m, 128, 110 + m as u64);
+            for (j0, j1) in [(0, 29), (5, 17), (8, 16)] {
+                let want = w4a8_fg_float::gemm_tile_rowunpack(&x, &pw, j0, j1);
+                let got = gemm_fs_tile(&x, &tw, j0, j1);
+                assert_eq!(want.data, got.data, "m={m} tile {j0}..{j1}");
+            }
+        }
+    }
+
+    #[test]
+    fn coarse_bit_identical_to_rowunpack() {
+        let mut rng = Rng::new(95);
+        let w = Mat::randn(19, 64, 0.05, &mut rng);
+        let pw = pack_for_test(&w, Bits::B4, Granularity::PerChannel, None);
+        let tw = TiledWeight::repack(&pw, 8).unwrap();
+        // strip the tiled layout so gemm_tile runs its row-unpack loop
+        let pw_rowunpack = pw.without_tiled();
+        for m in [1usize, 3] {
+            let x = qa(m, 64, 120 + m as u64);
+            for (j0, j1) in [(0, 19), (2, 11), (8, 16)] {
+                let want = w4a8_coarse::gemm_tile(&x, &pw_rowunpack, j0, j1);
+                let got = gemm_coarse_tile(&x, &tw, j0, j1);
+                assert_eq!(want.data, got.data, "m={m} tile {j0}..{j1}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiles_iterator_partitions_the_range() {
+        let got: Vec<_> = tiles(8, 5, 20).collect();
+        assert_eq!(got, vec![(0, 5, 8), (1, 0, 8), (2, 0, 4)]);
+        assert!(tiles(8, 7, 7).next().is_none(), "empty request yields no tiles");
+        let full: Vec<_> = tiles(4, 0, 8).collect();
+        assert_eq!(full, vec![(0, 0, 4), (1, 0, 4)]);
+    }
+}

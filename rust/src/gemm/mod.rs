@@ -15,6 +15,7 @@
 //! * output: row-major `M×N` f32.
 
 pub mod fp32;
+pub mod microkernel;
 pub mod qserve;
 pub mod registry;
 pub mod trace;
@@ -30,42 +31,8 @@ pub use registry::{GemmKernel, MathPipe, ScaleMode};
 use crate::quant::methods::QuantizedLinear;
 use crate::quant::pack::pack_int4;
 use crate::quant::{Bits, Granularity};
-use crate::runtime::{parallel_grid, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
-
-/// Shared parallel driver for the integer-activation kernels: quantize the
-/// activations **once**, then tile the integer GEMM over the runtime. The
-/// built-in kernels' `forward_rt` overrides delegate here so a T-tile
-/// parallel forward does not redo the M×K quantization pass per tile
-/// (the generic `forward_tile` path, used as the out-of-tree fallback,
-/// quantizes inside and so would).
-///
-/// Large-M calls (prefill) additionally tile the batch-row dimension via
-/// [`parallel_grid`]. Row tiling is bit-identical because activation
-/// quantization is per-token ([`QuantAct`] carries one scale per row), so a
-/// row band's codes and scales do not depend on which rows share its band.
-pub(crate) fn quantized_forward_rt<T>(
-    x: &Mat,
-    pw: &PackedWeight,
-    rt: &Runtime,
-    bits: Bits,
-    tile: T,
-) -> Mat
-where
-    T: Fn(&QuantAct, &PackedWeight, usize, usize) -> Mat + Sync,
-{
-    let qa = QuantAct::quantize(x, bits);
-    if !rt.is_parallel() || x.rows * pw.n * pw.k < PARALLEL_MIN_MACS {
-        return tile(&qa, pw, 0, pw.n);
-    }
-    parallel_grid(rt, x.rows, pw.n, &|i0, i1, j0, j1| {
-        if (i0, i1) == (0, qa.m) {
-            tile(&qa, pw, j0, j1)
-        } else {
-            tile(&qa.slice_rows(i0, i1), pw, j0, j1)
-        }
-    })
-}
+use std::sync::Arc;
 
 /// A weight tensor prepared (packed, scales laid out) for one kernel.
 /// Preparation happens offline at quantization time, exactly as the paper's
@@ -86,6 +53,12 @@ pub struct PackedWeight {
     /// Set when the Fig.-8 audit flags this layer: the W4A8FgInt dispatch
     /// falls back to the overflow-safe degraded kernel (paper §B.4).
     pub overflow_risk: bool,
+    /// The offline tile-interleaved microkernel layout
+    /// ([`microkernel::TiledWeight`]), built once here at quantization time
+    /// for int4 weights — never on the request path. `None` for shapes the
+    /// microkernel does not cover; kernels then run their row-unpack path.
+    /// Shared via `Arc` so cloning a packed weight stays cheap.
+    pub tiled: Option<Arc<microkernel::TiledWeight>>,
 }
 
 impl PackedWeight {
@@ -98,7 +71,7 @@ impl PackedWeight {
             Bits::B8 => (qw.q.data.iter().map(|&v| v as u8).collect(), Bits::B8),
             Bits::F16 => panic!("cannot pack float weights"),
         };
-        PackedWeight {
+        let mut pw = PackedWeight {
             n: qw.n,
             k: qw.k,
             group,
@@ -108,17 +81,34 @@ impl PackedWeight {
             int_scales: qw.int_scales.as_ref().map(|is| is.scales.clone()),
             amplifier: qw.int_scales.as_ref().map_or(1, |is| is.amplifier),
             overflow_risk: false,
-        }
+            tiled: None,
+        };
+        pw.tiled = pw.repack_tiled(microkernel::MICRO_NR).map(Arc::new);
+        pw
+    }
+
+    /// Build the tile-interleaved microkernel layout for this weight —
+    /// offline work (see [`microkernel::TiledWeight::repack`]); `None` for
+    /// shapes the microkernel does not cover.
+    pub fn repack_tiled(&self, nr: usize) -> Option<microkernel::TiledWeight> {
+        microkernel::TiledWeight::repack(self, nr)
+    }
+
+    /// A copy without the tiled microkernel layout, forcing the row-unpack
+    /// kernels — the A/B lever benches and bit-identity tests use.
+    pub fn without_tiled(&self) -> PackedWeight {
+        PackedWeight { tiled: None, ..self.clone() }
     }
 
     pub fn groups_per_row(&self) -> usize {
         self.k / self.group
     }
 
-    /// Packed bytes per weight row.
+    /// Packed bytes per weight row (odd K rounds up: the final byte carries
+    /// a pad nibble — see [`crate::quant::pack::pack_int4`]).
     fn row_bytes(&self) -> usize {
         match self.bits {
-            Bits::B4 => self.k / 2,
+            Bits::B4 => self.k.div_ceil(2),
             Bits::B8 => self.k,
             Bits::F16 => unreachable!("float weights are never packed"),
         }
@@ -144,6 +134,10 @@ impl PackedWeight {
             int_scales: self.int_scales.as_ref().map(|is| is[j0 * gpr..j1 * gpr].to_vec()),
             amplifier: self.amplifier,
             overflow_risk: self.overflow_risk,
+            // never re-tile on the request path: a slice runs row-unpack.
+            // (The registry's tile loops pass the FULL weight plus a column
+            // range, so the microkernel still serves the parallel path.)
+            tiled: None,
         }
     }
 }

@@ -13,7 +13,7 @@ use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
 use crate::quant::methods::dual_grained::DualGrainedWeight;
 use crate::quant::Bits;
-use crate::runtime::{parallel_columns, Runtime, PARALLEL_MIN_MACS};
+use crate::runtime::{parallel_columns, with_i8_scratch, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
 
 /// QServe/DGQ dual-grained kernel descriptor (cost-model + table rows).
@@ -71,6 +71,7 @@ impl GemmKernel for QServeKernel {
             i32_to_f32: conversions,
             float_mac: conversions,
             weight_bytes: n * k / 2,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -113,21 +114,22 @@ pub fn gemm_coarse_tile(x: &QuantAct, w: &DualGrainedWeight, j0: usize, j1: usiz
     let gpr = w.groups_per_row();
     let nw = j1 - j0;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        expand_row(
-            &w.q4.data[jn * k..(jn + 1) * k],
-            &w.s2[jn * gpr..(jn + 1) * gpr],
-            &w.z2[jn * gpr..(jn + 1) * gpr],
-            w.group,
-            &mut wbuf,
-        );
-        let s1 = w.s1[jn];
-        for i in 0..m {
-            let acc = crate::gemm::w4a8_fg_int::dot_i8(x.row(i), &wbuf);
-            out.data[i * nw + (jn - j0)] = acc as f32 * x.scales[i] * s1;
+    with_i8_scratch(k, |wbuf| {
+        for jn in j0..j1 {
+            expand_row(
+                &w.q4.data[jn * k..(jn + 1) * k],
+                &w.s2[jn * gpr..(jn + 1) * gpr],
+                &w.z2[jn * gpr..(jn + 1) * gpr],
+                w.group,
+                wbuf,
+            );
+            let s1 = w.s1[jn];
+            for i in 0..m {
+                let acc = crate::gemm::w4a8_fg_int::dot_i8(x.row(i), wbuf);
+                out.data[i * nw + (jn - j0)] = acc as f32 * x.scales[i] * s1;
+            }
         }
-    }
+    });
     out
 }
 
@@ -165,28 +167,31 @@ pub fn gemm_fine_tile(
     assert_eq!(group_scales.len(), w.n * gpr);
     let nw = j1 - j0;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        expand_row(
-            &w.q4.data[jn * k..(jn + 1) * k],
-            &w.s2[jn * gpr..(jn + 1) * gpr],
-            &w.z2[jn * gpr..(jn + 1) * gpr],
-            g,
-            &mut wbuf,
-        );
-        let s1 = w.s1[jn];
-        let srow = &group_scales[jn * gpr..(jn + 1) * gpr];
-        for i in 0..m {
-            let xrow = x.row(i);
-            let mut accf = 0f32;
-            for gi in 0..gpr {
-                let part =
-                    crate::gemm::w4a8_fg_int::dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
-                accf += part as f32 * srow[gi];
+    with_i8_scratch(k, |wbuf| {
+        for jn in j0..j1 {
+            expand_row(
+                &w.q4.data[jn * k..(jn + 1) * k],
+                &w.s2[jn * gpr..(jn + 1) * gpr],
+                &w.z2[jn * gpr..(jn + 1) * gpr],
+                g,
+                wbuf,
+            );
+            let s1 = w.s1[jn];
+            let srow = &group_scales[jn * gpr..(jn + 1) * gpr];
+            for i in 0..m {
+                let xrow = x.row(i);
+                let mut accf = 0f32;
+                for gi in 0..gpr {
+                    let part = crate::gemm::w4a8_fg_int::dot_i8(
+                        &xrow[gi * g..(gi + 1) * g],
+                        &wbuf[gi * g..(gi + 1) * g],
+                    );
+                    accf += part as f32 * srow[gi];
+                }
+                out.data[i * nw + (jn - j0)] = accf * x.scales[i] * s1;
             }
-            out.data[i * nw + (jn - j0)] = accf * x.scales[i] * s1;
         }
-    }
+    });
     out
 }
 

@@ -16,7 +16,7 @@
 //! time.
 
 use super::trace::OpTrace;
-use super::PackedWeight;
+use super::{PackedWeight, QuantAct};
 use crate::quant::Bits;
 use crate::runtime::{parallel_grid, Runtime, PARALLEL_MIN_MACS};
 use crate::tensor::Mat;
@@ -103,6 +103,28 @@ pub trait GemmKernel: Send + Sync {
         }
     }
 
+    /// Compute output columns `j0..j1` from **already-quantized**
+    /// activations — the hook that lets the parallel driver quantize the
+    /// M×K activation pass once and reuse it across every column tile and
+    /// row band, instead of paying it per tile inside
+    /// [`Self::forward_tile`]. Kernels that consume [`QuantAct`] (any
+    /// integer-activation kernel, in-tree or out-of-tree) override this
+    /// with their tile loop; kernels that don't (float activations, or
+    /// executables living outside [`PackedWeight`]) keep the `None`
+    /// default and the driver falls back to the `forward_tile` grid.
+    ///
+    /// The same bit-identity contract as `forward_tile` applies: columns
+    /// must be produced by exactly the arithmetic of the full forward.
+    fn forward_tile_quantized(
+        &self,
+        _qa: &QuantAct,
+        _pw: &PackedWeight,
+        _j0: usize,
+        _j1: usize,
+    ) -> Option<Mat> {
+        None
+    }
+
     /// [`Self::forward`] on an execution [`Runtime`]: the N dimension is
     /// split into contiguous tiles (deterministic ownership, disjoint
     /// output slices) executed on the runtime's worker pool, and large-M
@@ -111,9 +133,27 @@ pub trait GemmKernel: Send + Sync {
     /// for every worker count: columns are independent (weight-stationary
     /// kernels) and rows are independent (per-token activation
     /// quantization). GEMMs too small to amortize dispatch run serially.
+    ///
+    /// When the kernel implements [`Self::forward_tile_quantized`]
+    /// (probed once with an empty tile), activations are quantized **once**
+    /// here and the tile grid runs over the quantized hook; otherwise the
+    /// grid runs over [`Self::forward_tile`], which quantizes per tile.
     fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
         if !rt.is_parallel() || x.rows * pw.n * pw.k < PARALLEL_MIN_MACS {
             return self.forward(x, pw);
+        }
+        if self.act_bits() != Bits::F16 {
+            let qa = QuantAct::quantize(x, self.act_bits());
+            if self.forward_tile_quantized(&qa, pw, 0, 0).is_some() {
+                return parallel_grid(rt, x.rows, pw.n, &|i0, i1, j0, j1| {
+                    let q = if (i0, i1) == (0, qa.m) {
+                        self.forward_tile_quantized(&qa, pw, j0, j1)
+                    } else {
+                        self.forward_tile_quantized(&qa.slice_rows(i0, i1), pw, j0, j1)
+                    };
+                    q.expect("kernel answered the quantized-tile probe but refused a tile")
+                });
+            }
         }
         parallel_grid(rt, x.rows, pw.n, &|i0, i1, j0, j1| {
             if (i0, i1) == (0, x.rows) {

@@ -23,6 +23,11 @@ pub struct OpTrace {
     pub expand_ops: u64,
     /// Weight bytes read (memory-bound proxy).
     pub weight_bytes: u64,
+    /// Scale/metadata bytes read alongside the weights: the per-group f32
+    /// (or i32) scales the tile-interleaved layout co-locates with the
+    /// packed nibbles. One scale per (channel, group), 4 bytes each;
+    /// per-channel kernels read one per channel.
+    pub scale_bytes: u64,
 }
 
 #[cfg(test)]
@@ -60,6 +65,21 @@ mod tests {
         assert_eq!(q.expand_ops, N * K * M.div_ceil(128));
         let ours = registry::get_or_panic("w4a8-fg-is").trace(M, K, N, G);
         assert_eq!(ours.expand_ops, 0);
+    }
+
+    #[test]
+    fn scale_traffic_counts_group_metadata() {
+        // fine-grained kernels read one 4-byte scale per (channel, group);
+        // coarse reads one per channel; fp16 reads none
+        let is = registry::get_or_panic("w4a8-fg-is").trace(M, K, N, G);
+        assert_eq!(is.scale_bytes, N * (K / G) * 4);
+        let fs = registry::get_or_panic("w4a8-fg-fs").trace(M, K, N, G);
+        assert_eq!(fs.scale_bytes, is.scale_bytes);
+        let coarse = registry::get_or_panic("w4a8-coarse").trace(M, K, N, G);
+        assert_eq!(coarse.scale_bytes, N * 4);
+        assert_eq!(registry::get_or_panic("fp16").trace(M, K, N, G).scale_bytes, 0);
+        // scale metadata stays a small fraction of the packed-nibble bytes
+        assert!((is.scale_bytes as f64) < 0.10 * is.weight_bytes as f64);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use super::trace::OpTrace;
 use super::PackedWeight;
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
+use crate::runtime::{with_f32_scratch, with_i8_scratch};
 use crate::tensor::Mat;
 
 /// Marlin-like weight-only W4A16 kernel descriptor.
@@ -47,6 +48,7 @@ impl GemmKernel for W4A16Kernel {
         OpTrace {
             float_mac: m * n * k + m * n * groups,
             weight_bytes: n * k / 2,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -70,12 +72,19 @@ pub fn gemm(x: &Mat, w: &PackedWeight) -> Mat {
 }
 
 /// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+///
+/// This kernel keeps the row-unpack structure and takes no microkernel
+/// dispatch: its inner product is the 8-lane multi-accumulator
+/// [`super::fp32::dot_f32`], whose float-summation order a sequential
+/// register-blocked rewrite could not reproduce bit-identically. The hot
+/// unpack/dequant buffers come from the per-thread scratch pool instead of
+/// per-call allocations.
 pub fn gemm_tile(x: &Mat, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.cols, w.k);
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k, g) = (x.rows, x.cols, w.group);
     let gpr = w.groups_per_row();
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let eff_scale = |jn: usize, gi: usize| -> f32 {
         match &w.int_scales {
@@ -84,20 +93,22 @@ pub fn gemm_tile(x: &Mat, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
         }
     };
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    let mut wdeq = vec![0f32; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        for gi in 0..gpr {
-            let s = eff_scale(jn, gi);
-            for j in gi * g..(gi + 1) * g {
-                wdeq[j] = wbuf[j] as f32 * s;
+    with_i8_scratch(kb * 2, |wbuf| {
+        with_f32_scratch(k, |wdeq| {
+            for jn in j0..j1 {
+                unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+                for gi in 0..gpr {
+                    let s = eff_scale(jn, gi);
+                    for j in gi * g..(gi + 1) * g {
+                        wdeq[j] = wbuf[j] as f32 * s;
+                    }
+                }
+                for i in 0..m {
+                    out.data[i * nw + (jn - j0)] = super::fp32::dot_f32(x.row(i), wdeq);
+                }
             }
-        }
-        for i in 0..m {
-            out.data[i * nw + (jn - j0)] = super::fp32::dot_f32(x.row(i), &wdeq);
-        }
-    }
+        })
+    });
     out
 }
 

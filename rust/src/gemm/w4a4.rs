@@ -9,10 +9,10 @@
 use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::w4a8_fg_int::dot_i8;
-use super::{PackedWeight, QuantAct};
+use super::{microkernel, PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
-use crate::runtime::Runtime;
+use crate::runtime::with_i8_scratch;
 use crate::tensor::Mat;
 
 /// Atom-like fine-grained W4A4 kernel descriptor. Runs the Integer-Scale
@@ -52,6 +52,7 @@ impl GemmKernel for W4A4Kernel {
             i32_to_f32: mn * groups,
             float_mac: mn * groups,
             weight_bytes: n * k / 2,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -66,12 +67,18 @@ impl GemmKernel for W4A4Kernel {
             gemm_float_scale_tile(&qa, pw, j0, j1)
         }
     }
-    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
-        if pw.int_scales.is_some() {
-            super::quantized_forward_rt(x, pw, rt, Bits::B4, gemm_int_scale_tile)
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(if pw.int_scales.is_some() {
+            gemm_int_scale_tile(qa, pw, j0, j1)
         } else {
-            super::quantized_forward_rt(x, pw, rt, Bits::B4, gemm_float_scale_tile)
-        }
+            gemm_float_scale_tile(qa, pw, j0, j1)
+        })
     }
 }
 
@@ -81,29 +88,35 @@ pub fn gemm_float_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
     gemm_float_scale_tile(x, w, 0, w.n)
 }
 
-/// Output columns `j0..j1` of [`gemm_float_scale`].
+/// Output columns `j0..j1` of [`gemm_float_scale`]. The 4-bit activation
+/// codes live in i8 storage, so the shared float-scale microkernel applies
+/// unchanged when the weight carries the tiled layout.
 pub fn gemm_float_scale_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
+    if let Some(tw) = w.tiled.as_deref() {
+        return microkernel::gemm_fs_tile(x, tw, j0, j1);
+    }
     assert_eq!(x.k, w.k);
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
-        for i in 0..m {
-            let xrow = x.row(i);
-            let mut accf = 0f32;
-            for gi in 0..gpr {
-                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
-                accf += part as f32 * srow[gi];
+    with_i8_scratch(kb * 2, |wbuf| {
+        for jn in j0..j1 {
+            unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+            let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
+            for i in 0..m {
+                let xrow = x.row(i);
+                let mut accf = 0f32;
+                for gi in 0..gpr {
+                    let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                    accf += part as f32 * srow[gi];
+                }
+                out.data[i * nw + (jn - j0)] = accf * x.scales[i];
             }
-            out.data[i * nw + (jn - j0)] = accf * x.scales[i];
         }
-    }
+    });
     out
 }
 
@@ -112,30 +125,38 @@ pub fn gemm_int_scale(x: &QuantAct, w: &PackedWeight) -> Mat {
     gemm_int_scale_tile(x, w, 0, w.n)
 }
 
-/// Output columns `j0..j1` of [`gemm_int_scale`].
+/// Output columns `j0..j1` of [`gemm_int_scale`]. Shares the Integer-Scale
+/// microkernel with the W4A8 kernel when the tiled layout is present — the
+/// i32 accumulation sequence is the same at both activation widths.
 pub fn gemm_int_scale_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
+    if let Some(tw) = w.tiled.as_deref() {
+        if tw.int_scales.is_some() {
+            return microkernel::gemm_is_tile(x, tw, j0, j1);
+        }
+    }
     let is = w.int_scales.as_ref().expect("int scales required");
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let inv_amp = 1.0f32 / w.amplifier as f32;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        let srow = &is[jn * gpr..(jn + 1) * gpr];
-        for i in 0..m {
-            let xrow = x.row(i);
-            let mut acc: i32 = 0;
-            for gi in 0..gpr {
-                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
-                acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
+    with_i8_scratch(kb * 2, |wbuf| {
+        for jn in j0..j1 {
+            unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+            let srow = &is[jn * gpr..(jn + 1) * gpr];
+            for i in 0..m {
+                let xrow = x.row(i);
+                let mut acc: i32 = 0;
+                for gi in 0..gpr {
+                    let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                    acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
+                }
+                out.data[i * nw + (jn - j0)] = acc as f32 * (x.scales[i] * inv_amp);
             }
-            out.data[i * nw + (jn - j0)] = acc as f32 * (x.scales[i] * inv_amp);
         }
-    }
+    });
     out
 }
 

@@ -9,10 +9,10 @@
 use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::w4a8_fg_int::dot_i8;
-use super::{PackedWeight, QuantAct};
+use super::{microkernel, PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
-use crate::runtime::Runtime;
+use crate::runtime::with_i8_scratch;
 use crate::tensor::Mat;
 
 /// Odyssey-like coarse W4A8 kernel descriptor (per-channel scales).
@@ -50,6 +50,7 @@ impl GemmKernel for W4A8CoarseKernel {
             i32_to_f32: mn,
             float_mac: mn,
             weight_bytes: n * k / 2,
+            scale_bytes: n * 4,
             ..Default::default()
         }
     }
@@ -59,8 +60,14 @@ impl GemmKernel for W4A8CoarseKernel {
     fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
         gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
     }
-    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
-        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(gemm_tile(qa, pw, j0, j1))
     }
 }
 
@@ -69,25 +76,31 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
 }
 
 /// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+/// Dispatches to the coarse microkernel when the weight carries the tiled
+/// layout (per-channel granularity means one group spanning the row).
 pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
+    if let Some(tw) = w.tiled.as_deref() {
+        return microkernel::gemm_coarse_tile(x, tw, j0, j1);
+    }
     assert_eq!(x.k, w.k);
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k) = (x.m, x.k);
     let gpr = w.groups_per_row();
     assert_eq!(gpr, 1, "coarse kernel requires per-channel scales");
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        let sw = w.scales[jn];
-        for i in 0..m {
-            // full-K integer reduction, single conversion + scale epilogue
-            let acc = dot_i8(x.row(i), &wbuf);
-            out.data[i * nw + (jn - j0)] = acc as f32 * x.scales[i] * sw;
+    with_i8_scratch(kb * 2, |wbuf| {
+        for jn in j0..j1 {
+            unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+            let sw = w.scales[jn];
+            for i in 0..m {
+                // full-K integer reduction, single conversion + scale epilogue
+                let acc = dot_i8(x.row(i), wbuf);
+                out.data[i * nw + (jn - j0)] = acc as f32 * x.scales[i] * sw;
+            }
         }
-    }
+    });
     out
 }
 

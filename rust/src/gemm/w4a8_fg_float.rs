@@ -19,10 +19,10 @@
 use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::w4a8_fg_int::dot_i8;
-use super::{PackedWeight, QuantAct};
+use super::{microkernel, PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
-use crate::runtime::Runtime;
+use crate::runtime::with_i8_scratch;
 use crate::tensor::Mat;
 
 /// Fine-grained W4A8 float-scale kernel descriptor — Fig. 2(b), the
@@ -62,6 +62,7 @@ impl GemmKernel for W4A8FgFloatKernel {
             i32_to_f32: mn * groups,
             float_mac: mn * groups,
             weight_bytes: n * k / 2,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -71,8 +72,14 @@ impl GemmKernel for W4A8FgFloatKernel {
     fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
         gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
     }
-    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
-        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(gemm_tile(qa, pw, j0, j1))
     }
 }
 
@@ -86,32 +93,45 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
 }
 
 /// Output columns `j0..j1` of [`gemm`] — the unit of parallel work.
+/// Dispatches to the register-blocked microkernel when the weight carries
+/// the tile-interleaved layout; the row-unpack loop otherwise.
 pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
+    if let Some(tw) = w.tiled.as_deref() {
+        return microkernel::gemm_fs_tile(x, tw, j0, j1);
+    }
+    gemm_tile_rowunpack(x, w, j0, j1)
+}
+
+/// The row-unpack fallback behind [`gemm_tile`]: each packed weight row is
+/// unpacked into a thread-local L1 scratch buffer and reused across the
+/// activation batch.
+pub fn gemm_tile_rowunpack(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert_eq!(x.k, w.k, "K mismatch");
     assert!(w.group % 2 == 0);
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
-        for i in 0..m {
-            let xrow = x.row(i);
-            let mut accf = 0f32;
-            for gi in 0..gpr {
-                // --- integer domain: group partial (vectorized MAC loop)
-                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
-                // --- leave the integer domain: I32→F32 convert + float FMA,
-                //     once per group — the cost Integer Scale removes.
-                accf += part as f32 * srow[gi];
+    with_i8_scratch(kb * 2, |wbuf| {
+        for jn in j0..j1 {
+            unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+            let srow = &w.scales[jn * gpr..(jn + 1) * gpr];
+            for i in 0..m {
+                let xrow = x.row(i);
+                let mut accf = 0f32;
+                for gi in 0..gpr {
+                    // --- integer domain: group partial (vectorized MAC loop)
+                    let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                    // --- leave the integer domain: I32→F32 convert + float FMA,
+                    //     once per group — the cost Integer Scale removes.
+                    accf += part as f32 * srow[gi];
+                }
+                out.data[i * nw + (jn - j0)] = accf * x.scales[i];
             }
-            out.data[i * nw + (jn - j0)] = accf * x.scales[i];
         }
-    }
+    });
     out
 }
 

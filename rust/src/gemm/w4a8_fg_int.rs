@@ -18,10 +18,10 @@
 
 use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
-use super::{PackedWeight, QuantAct};
+use super::{microkernel, PackedWeight, QuantAct};
 use crate::quant::pack::unpack_row_into;
 use crate::quant::Bits;
-use crate::runtime::Runtime;
+use crate::runtime::with_i8_scratch;
 use crate::tensor::Mat;
 
 /// Fine-grained W4A8 Integer-Scale kernel descriptor — Fig. 2(c), the
@@ -53,7 +53,11 @@ impl GemmKernel for W4A8FgIntKernel {
         MathPipe::Int8Tc
     }
     fn utilization(&self) -> f64 {
-        0.82
+        // raised from 0.82 when the register-blocked microkernel landed:
+        // profile calibration measured the tiled path faster than the model
+        // claimed relative to the other kernels, which made
+        // auto_select_kernel_calibrated prefer stale ratios
+        0.86
     }
     fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
         let (mn, groups) = (m * n, k / g);
@@ -64,6 +68,7 @@ impl GemmKernel for W4A8FgIntKernel {
             i32_to_f32: mn,
             float_mac: mn,
             weight_bytes: n * k / 2,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -86,12 +91,18 @@ impl GemmKernel for W4A8FgIntKernel {
             gemm_tile(&qa, pw, j0, j1)
         }
     }
-    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
-        if pw.overflow_risk {
-            super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_overflow_safe_tile)
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(if pw.overflow_risk {
+            gemm_overflow_safe_tile(qa, pw, j0, j1)
         } else {
-            super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
-        }
+            gemm_tile(qa, pw, j0, j1)
+        })
     }
 }
 
@@ -132,6 +143,7 @@ impl GemmKernel for W4A8FgIntSafeKernel {
             i32_to_f32: mn * groups,
             float_mac: mn * groups,
             weight_bytes: n * k / 2,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -141,8 +153,14 @@ impl GemmKernel for W4A8FgIntSafeKernel {
     fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
         gemm_overflow_safe_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
     }
-    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
-        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_overflow_safe_tile)
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(gemm_overflow_safe_tile(qa, pw, j0, j1))
     }
 }
 
@@ -159,10 +177,10 @@ pub(crate) fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
 
 /// `x (M×K int8) @ wᵀ (N×K int4 packed, integer scales + amplifier)`
 ///
-/// Weight-major loop: each packed weight row is unpacked into L1 once and
-/// reused across the whole activation batch (Marlin's dequant-in-registers
-/// trick), so the measured cost difference vs the float-scale kernel is
-/// exactly the per-group epilogue.
+/// Dispatches to the register-blocked microkernel when the weight carries
+/// the offline tile-interleaved layout; otherwise runs the row-unpack loop.
+/// Both paths compute every output element by the identical arithmetic
+/// sequence (see [`microkernel`]), so the dispatch is invisible to results.
 pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
     gemm_tile(x, w, 0, w.n)
 }
@@ -171,6 +189,20 @@ pub fn gemm(x: &QuantAct, w: &PackedWeight) -> Mat {
 /// serial path is `gemm_tile(x, w, 0, n)`, so tiled and serial execution
 /// share one arithmetic sequence per output element (bit-identical).
 pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
+    if let Some(tw) = w.tiled.as_deref() {
+        if tw.int_scales.is_some() {
+            return microkernel::gemm_is_tile(x, tw, j0, j1);
+        }
+    }
+    gemm_tile_rowunpack(x, w, j0, j1)
+}
+
+/// The row-unpack fallback behind [`gemm_tile`]: each packed weight row is
+/// unpacked into a thread-local L1 scratch buffer once per tile call and
+/// reused across the activation batch (Marlin's dequant-in-registers
+/// trick). Serves weights without a tiled layout (e.g. `slice_rows`
+/// copies) and the microkernel bit-identity tests.
+pub fn gemm_tile_rowunpack(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     let is = w
         .int_scales
         .as_ref()
@@ -179,35 +211,36 @@ pub fn gemm_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: usize) -> Mat {
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let inv_amp = 1.0f32 / w.amplifier as f32;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        let srow = &is[jn * gpr..(jn + 1) * gpr];
-        for i in 0..m {
-            let xrow = x.row(i);
-            // INT32 accumulator — exactly the paper's kernel. α is chosen
-            // so this cannot overflow (Fig. 8 audit:
-            // `quant::integer_scale::overflow_audit`); debug builds verify.
-            let mut acc: i32 = 0;
-            for gi in 0..gpr {
-                // --- integer domain: group partial (same MAC loop as the
-                //     float-scale kernel — the ONLY difference is below)
-                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
-                // --- stay in the integer domain: int multiply-accumulate
-                debug_assert!(
-                    (acc as i64 + part as i64 * srow[gi] as i64).abs() <= i32::MAX as i64,
-                    "IS accumulator overflowed i32 (α too large)"
-                );
-                acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
+    with_i8_scratch(kb * 2, |wbuf| {
+        for jn in j0..j1 {
+            unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+            let srow = &is[jn * gpr..(jn + 1) * gpr];
+            for i in 0..m {
+                let xrow = x.row(i);
+                // INT32 accumulator — exactly the paper's kernel. α is chosen
+                // so this cannot overflow (Fig. 8 audit:
+                // `quant::integer_scale::overflow_audit`); debug builds verify.
+                let mut acc: i32 = 0;
+                for gi in 0..gpr {
+                    // --- integer domain: group partial (same MAC loop as the
+                    //     float-scale kernel — the ONLY difference is below)
+                    let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                    // --- stay in the integer domain: int multiply-accumulate
+                    debug_assert!(
+                        (acc as i64 + part as i64 * srow[gi] as i64).abs() <= i32::MAX as i64,
+                        "IS accumulator overflowed i32 (α too large)"
+                    );
+                    acc = acc.wrapping_add(part.wrapping_mul(srow[gi]));
+                }
+                // --- the single conversion of the whole reduction
+                out.data[i * nw + (jn - j0)] = acc as f32 * (x.scales[i] * inv_amp);
             }
-            // --- the single conversion of the whole reduction
-            out.data[i * nw + (jn - j0)] = acc as f32 * (x.scales[i] * inv_amp);
         }
-    }
+    });
     out
 }
 
@@ -231,26 +264,27 @@ pub fn gemm_overflow_safe_tile(x: &QuantAct, w: &PackedWeight, j0: usize, j1: us
     assert!(j0 <= j1 && j1 <= w.n, "tile {j0}..{j1} out of 0..{}", w.n);
     let (m, k, g) = (x.m, x.k, w.group);
     let gpr = w.groups_per_row();
-    let kb = k / 2;
+    let kb = k.div_ceil(2);
     let nw = j1 - j0;
     let inv_amp = 1.0f32 / w.amplifier as f32;
     let mut out = Mat::zeros(m, nw);
-    let mut wbuf = vec![0i8; k];
-    for jn in j0..j1 {
-        unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], &mut wbuf);
-        let srow = &is[jn * gpr..(jn + 1) * gpr];
-        for i in 0..m {
-            let xrow = x.row(i);
-            let mut accf = 0f64;
-            for gi in 0..gpr {
-                let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
-                // degraded epilogue: leave the integer domain per group so
-                // the accumulator can never overflow
-                accf += part as f64 * srow[gi] as f64;
+    with_i8_scratch(kb * 2, |wbuf| {
+        for jn in j0..j1 {
+            unpack_row_into(&w.packed[jn * kb..(jn + 1) * kb], wbuf);
+            let srow = &is[jn * gpr..(jn + 1) * gpr];
+            for i in 0..m {
+                let xrow = x.row(i);
+                let mut accf = 0f64;
+                for gi in 0..gpr {
+                    let part = dot_i8(&xrow[gi * g..(gi + 1) * g], &wbuf[gi * g..(gi + 1) * g]);
+                    // degraded epilogue: leave the integer domain per group
+                    // so the accumulator can never overflow
+                    accf += part as f64 * srow[gi] as f64;
+                }
+                out.data[i * nw + (jn - j0)] = (accf as f32) * (x.scales[i] * inv_amp);
             }
-            out.data[i * nw + (jn - j0)] = (accf as f32) * (x.scales[i] * inv_amp);
         }
-    }
+    });
     out
 }
 

@@ -8,7 +8,6 @@ use super::registry::{GemmKernel, MathPipe, ScaleMode};
 use super::trace::OpTrace;
 use super::{PackedWeight, QuantAct};
 use crate::quant::Bits;
-use crate::runtime::Runtime;
 use crate::tensor::Mat;
 
 /// W8A8 kernel descriptor (coarse per-channel by default; the same GEMM
@@ -49,6 +48,7 @@ impl GemmKernel for W8A8Kernel {
             i32_to_f32: mn * groups,
             float_mac: mn * groups,
             weight_bytes: n * k,
+            scale_bytes: n * groups * 4,
             ..Default::default()
         }
     }
@@ -58,8 +58,17 @@ impl GemmKernel for W8A8Kernel {
     fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
         gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
     }
-    fn forward_rt(&self, x: &Mat, pw: &PackedWeight, rt: &Runtime) -> Mat {
-        super::quantized_forward_rt(x, pw, rt, Bits::B8, gemm_tile)
+    // No tiled microkernel layout for B8: codes are one per byte already,
+    // so the GEMM reads them directly with no unpack scratch to amortize —
+    // only the quantize-once hook applies.
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(gemm_tile(qa, pw, j0, j1))
     }
 }
 

@@ -64,6 +64,16 @@ impl Linear {
         }
     }
 
+    /// Drop the offline tile-interleaved microkernel layout, forcing the
+    /// row-unpack kernel path. Outputs stay bit-identical (see
+    /// [`crate::gemm::microkernel`]); this is the serve-level A/B lever the
+    /// perf gate uses. No-op for float layers.
+    pub fn strip_tiled(&mut self) {
+        if let Linear::Quant { pw, .. } = self {
+            pw.tiled = None;
+        }
+    }
+
     pub fn out_features(&self) -> usize {
         match self {
             Linear::Float(w) => w.rows,

@@ -110,6 +110,33 @@ impl Transformer {
         self.rt = rt;
     }
 
+    /// Strip the microkernel weight layouts from every linear in the model,
+    /// forcing the row-unpack kernels. Token streams stay identical (the
+    /// microkernel is bit-identical per output element); this is the
+    /// model-level A/B lever for benchmarking the tiled layout.
+    pub fn strip_tiled_layouts(&mut self) {
+        for layer in &mut self.layers {
+            for lin in [&mut layer.wq, &mut layer.wk, &mut layer.wv, &mut layer.wo] {
+                lin.strip_tiled();
+            }
+            match &mut layer.mlp {
+                MlpOp::Dense { gate, up, down } => {
+                    gate.strip_tiled();
+                    up.strip_tiled();
+                    down.strip_tiled();
+                }
+                MlpOp::Moe(moe) => {
+                    for (g, u, d) in &mut moe.experts {
+                        g.strip_tiled();
+                        u.strip_tiled();
+                        d.strip_tiled();
+                    }
+                }
+            }
+        }
+        self.lm_head.strip_tiled();
+    }
+
     pub fn new_cache(&self) -> KvCache {
         KvCache::new(self.config.n_layers, self.config.d_model, self.config.max_seq)
     }

@@ -6,15 +6,21 @@
 //! unpacking happens inside the W4Axx kernels.
 
 /// Pack a row-major i8 matrix of int4 codes (each in [-8, 7]) into bytes,
-/// two codes per byte, low nibble first. `k` must be even.
+/// two codes per byte, low nibble first. Odd `k` pads each row's final
+/// byte with the nibble `0x8` in the high half — offset-binary for code 0,
+/// so a dot product that accidentally reads the pad contributes nothing.
+/// Rows then occupy `k.div_ceil(2)` bytes.
 pub fn pack_int4(codes: &[i8], k: usize) -> Vec<u8> {
-    assert!(k % 2 == 0, "k must be even to pack int4 pairs");
-    assert!(codes.len() % k == 0);
-    let mut out = Vec::with_capacity(codes.len() / 2);
+    assert!(codes.len() % k == 0, "codes must hold whole rows");
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
     for row in codes.chunks_exact(k) {
-        for pair in row.chunks_exact(2) {
+        for pair in row.chunks(2) {
             let lo = (pair[0] + 8) as u8 & 0x0F;
-            let hi = (pair[1] + 8) as u8 & 0x0F;
+            let hi = if pair.len() == 2 {
+                (pair[1] + 8) as u8 & 0x0F
+            } else {
+                0x8
+            };
             out.push(lo | (hi << 4));
         }
     }
@@ -39,17 +45,28 @@ pub fn unpack_int4(packed: &[u8]) -> Vec<i8> {
     out
 }
 
-/// Unpack one packed weight row into a caller-provided buffer
-/// (`out.len() == 2 * packed.len()`). This is the kernels' hot-path unpack:
-/// done once per weight row and amortized over the whole activation batch
-/// (the register-dequant trick Marlin/FastGEMM use), and written as two
-/// independent nibble streams so LLVM vectorizes it.
+/// Unpack one packed weight row into a caller-provided buffer of either
+/// `2 * packed.len()` (even K, or odd K including the pad nibble — which
+/// decodes to 0) or `2 * packed.len() - 1` (odd K, pad dropped: the final
+/// byte contributes only its low nibble). This is the kernels' hot-path
+/// unpack, amortized across the activation batch via the per-thread
+/// scratch pool, and written as two independent nibble streams so LLVM
+/// vectorizes it.
 #[inline]
 pub fn unpack_row_into(packed: &[u8], out: &mut [i8]) {
-    debug_assert_eq!(out.len(), packed.len() * 2);
+    debug_assert!(
+        out.len() == packed.len() * 2 || out.len() + 1 == packed.len() * 2,
+        "out length {} cannot hold {} packed bytes",
+        out.len(),
+        packed.len()
+    );
+    let pairs = out.len() / 2;
     for (o, &b) in out.chunks_exact_mut(2).zip(packed.iter()) {
         o[0] = ((b & 0x0F) as i8) - 8;
         o[1] = ((b >> 4) as i8) - 8;
+    }
+    if out.len() % 2 == 1 {
+        out[out.len() - 1] = ((packed[pairs] & 0x0F) as i8) - 8;
     }
 }
 
@@ -73,8 +90,35 @@ mod tests {
     }
 
     #[test]
-    #[should_panic]
-    fn odd_k_rejected() {
-        pack_int4(&[0, 1, 2], 3);
+    fn odd_k_pads_with_zero_code() {
+        let packed = pack_int4(&[3, -5, 7], 3);
+        assert_eq!(packed.len(), 2);
+        // pad nibble is 0x8 → decodes to code 0
+        assert_eq!(unpack_pair(packed[1]), (7, 0));
+    }
+
+    #[test]
+    fn odd_k_roundtrips_per_row() {
+        for k in [1usize, 15, 127] {
+            let mut rng = crate::tensor::Rng::new(13 + k as u64);
+            let rows = 5;
+            let codes: Vec<i8> = (0..rows * k).map(|_| (rng.below(16) as i8) - 8).collect();
+            let packed = pack_int4(&codes, k);
+            let rb = k.div_ceil(2);
+            assert_eq!(packed.len(), rows * rb);
+            for r in 0..rows {
+                // unpack into a k-length buffer: pad nibble dropped
+                let mut row = vec![0i8; k];
+                unpack_row_into(&packed[r * rb..(r + 1) * rb], &mut row);
+                assert_eq!(row, &codes[r * k..(r + 1) * k], "k={k} row={r}");
+                // unpack into a padded buffer: pad decodes to code 0
+                let mut padded = vec![99i8; rb * 2];
+                unpack_row_into(&packed[r * rb..(r + 1) * rb], &mut padded);
+                assert_eq!(&padded[..k], &codes[r * k..(r + 1) * k]);
+                if k % 2 == 1 {
+                    assert_eq!(padded[k], 0, "pad nibble must decode to 0");
+                }
+            }
+        }
     }
 }

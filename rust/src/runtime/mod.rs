@@ -38,8 +38,10 @@
 //! for all registry kernels and for end-to-end greedy serving.
 
 mod pool;
+mod scratch;
 
 pub use pool::{current_lane, LaneStats, WorkerPool};
+pub use scratch::{with_f32_scratch, with_i32_scratch, with_i8_scratch};
 
 use crate::obs::{Obs, SpanKind};
 use crate::tensor::Mat;

@@ -1,0 +1,116 @@
+//! Per-lane reusable scratch buffers for the GEMM hot paths.
+//!
+//! Every row-unpack kernel used to allocate `vec![0i8; k]` (and the W4A16
+//! path a second `vec![0f32; k]`) *per tile call* — on the request path,
+//! once per column tile per forward. These helpers keep one growable buffer
+//! of each element type per OS thread (worker lanes are OS threads, so
+//! "per lane" and "per thread" coincide) and lend out a `len`-sized slice,
+//! so steady-state serving performs zero heap allocation for kernel
+//! scratch.
+//!
+//! The buffers use a take/replace protocol on a [`Cell`] rather than a
+//! `RefCell` borrow: a caller that re-enters (e.g. W4A16 nesting the f32
+//! scratch inside the i8 scratch, or a kernel calling another kernel)
+//! simply finds an empty `Vec` and allocates a fresh one for the inner
+//! scope — correct, never a borrow panic, and the outer (largest) buffer
+//! is the one that survives for reuse.
+//!
+//! Contents are **unspecified** on entry: callers must fully initialize the
+//! slice before reading it (every kernel here overwrites its scratch via
+//! `unpack_row_into`/`expand_row` or explicitly zeroes accumulators).
+
+use std::cell::Cell;
+
+thread_local! {
+    static I8_SCRATCH: Cell<Vec<i8>> = const { Cell::new(Vec::new()) };
+    static I32_SCRATCH: Cell<Vec<i32>> = const { Cell::new(Vec::new()) };
+    static F32_SCRATCH: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+}
+
+macro_rules! with_scratch {
+    ($cell:ident, $len:expr, $f:expr) => {{
+        let mut buf = $cell.with(|c| c.take());
+        if buf.len() < $len {
+            buf.resize($len, Default::default());
+        }
+        let r = $f(&mut buf[..$len]);
+        $cell.with(|c| c.set(buf));
+        r
+    }};
+}
+
+/// Run `f` with a thread-local `&mut [i8]` of length `len` (uninitialized
+/// contents — overwrite before reading).
+#[inline]
+pub fn with_i8_scratch<R>(len: usize, f: impl FnOnce(&mut [i8]) -> R) -> R {
+    with_scratch!(I8_SCRATCH, len, f)
+}
+
+/// Run `f` with a thread-local `&mut [i32]` of length `len` (uninitialized
+/// contents — overwrite before reading).
+#[inline]
+pub fn with_i32_scratch<R>(len: usize, f: impl FnOnce(&mut [i32]) -> R) -> R {
+    with_scratch!(I32_SCRATCH, len, f)
+}
+
+/// Run `f` with a thread-local `&mut [f32]` of length `len` (uninitialized
+/// contents — overwrite before reading).
+#[inline]
+pub fn with_f32_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    with_scratch!(F32_SCRATCH, len, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lends_exact_length_and_grows() {
+        with_i8_scratch(16, |b| assert_eq!(b.len(), 16));
+        with_i8_scratch(64, |b| assert_eq!(b.len(), 64));
+        // shrinking requests still get exactly the requested view
+        with_i8_scratch(8, |b| assert_eq!(b.len(), 8));
+    }
+
+    #[test]
+    fn reentrant_nesting_is_safe() {
+        with_i8_scratch(32, |outer| {
+            outer[0] = 42;
+            // same-type nesting: the inner call sees an independent buffer
+            with_i8_scratch(32, |inner| {
+                inner[0] = 7;
+                assert_eq!(inner[0], 7);
+            });
+            assert_eq!(outer[0], 42, "inner scope must not alias the outer");
+            // cross-type nesting (the W4A16 shape)
+            with_f32_scratch(32, |f| {
+                f[0] = 1.5;
+                assert_eq!(f[0], 1.5);
+            });
+            with_i32_scratch(32, |acc| {
+                acc[0] = -1;
+                assert_eq!(acc[0], -1);
+            });
+        });
+    }
+
+    #[test]
+    fn buffer_is_reused_across_calls() {
+        // write a sentinel, observe it on re-entry at the same size: the
+        // allocation survived (contents are unspecified but in practice
+        // reused on the same thread — this is the zero-alloc property)
+        with_i32_scratch(4, |b| b[3] = 99);
+        with_i32_scratch(4, |b| assert_eq!(b[3], 99));
+    }
+
+    #[test]
+    fn threads_do_not_share_scratch() {
+        with_i8_scratch(4, |b| b[0] = 1);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                // fresh thread: fresh (zero-resized) buffer
+                with_i8_scratch(4, |b| assert_eq!(b[0], 0));
+            });
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Registry-driven edge-case sweep for the tile loops and the
+//! register-blocked microkernel: every servable kernel must treat an empty
+//! tile, a full-width tile, awkward mid-tile ranges, and single-group rows
+//! identically with and without the offline tiled layout — bit-identical
+//! per output element, which is what lets the runtime dispatch freely.
+
+use integer_scale::gemm::registry::{self, ScaleMode};
+use integer_scale::gemm::{pack_for_test, PackedWeight};
+use integer_scale::quant::{Bits, Granularity};
+use integer_scale::tensor::{Mat, Rng};
+use std::sync::Arc;
+
+/// Pack a weight matching `name`'s self-description (granularity + scale
+/// mode), as the plan layer would.
+fn pack_for(name: &str, wf: &Mat) -> PackedWeight {
+    let kernel = registry::get_or_panic(name);
+    let gran = if kernel.fine_grained() {
+        Granularity::Group(64)
+    } else {
+        Granularity::PerChannel
+    };
+    let amp = if kernel.scale_mode() == ScaleMode::Integer { Some(1024) } else { None };
+    pack_for_test(wf, kernel.weight_bits(), gran, amp)
+}
+
+/// The kernels this sweep drives: servable, non-float weights (fp16 runs as
+/// `Linear::Float`; the qserve executables live on `DualGrainedWeight`).
+fn sweep_kernels() -> Vec<(&'static str, Arc<dyn registry::GemmKernel>)> {
+    registry::names()
+        .into_iter()
+        .map(|n| (n, registry::get_or_panic(n)))
+        .filter(|(_, k)| k.servable() && k.weight_bits() != Bits::F16)
+        .collect()
+}
+
+#[test]
+fn empty_tiles_yield_zero_width_everywhere() {
+    let mut rng = Rng::new(200);
+    let x = Mat::randn(3, 128, 1.0, &mut rng);
+    let wf = Mat::randn(29, 128, 0.05, &mut rng);
+    for (name, kernel) in sweep_kernels() {
+        let pw = pack_for(name, &wf);
+        for j in [0usize, 7, 29] {
+            let out = kernel.forward_tile(&x, &pw, j, j);
+            assert_eq!((out.rows, out.cols), (3, 0), "{name}: empty tile at {j}");
+        }
+    }
+}
+
+#[test]
+fn full_width_tile_equals_forward() {
+    let mut rng = Rng::new(201);
+    let x = Mat::randn(4, 128, 1.0, &mut rng);
+    let wf = Mat::randn(29, 128, 0.05, &mut rng);
+    for (name, kernel) in sweep_kernels() {
+        let pw = pack_for(name, &wf);
+        let full = kernel.forward(&x, &pw);
+        let tile = kernel.forward_tile(&x, &pw, 0, 29);
+        assert_eq!(full.data, tile.data, "{name}: full-width tile diverged");
+    }
+}
+
+#[test]
+fn tiled_and_rowunpack_bit_identical_per_element() {
+    let mut rng = Rng::new(202);
+    let wf = Mat::randn(29, 128, 0.05, &mut rng);
+    for (name, kernel) in sweep_kernels() {
+        let pw = pack_for(name, &wf);
+        let rowunpack = pw.without_tiled();
+        // decode (M=1, GEMV path) and small-batch shapes; awkward ranges
+        // that start and end mid-tile for the default MICRO_NR=8
+        for m in [1usize, 4] {
+            let x = Mat::randn(m, 128, 1.0, &mut rng);
+            for (j0, j1) in [(0usize, 29usize), (5, 17), (7, 9), (8, 16), (23, 29)] {
+                let a = kernel.forward_tile(&x, &pw, j0, j1);
+                let b = kernel.forward_tile(&x, &rowunpack, j0, j1);
+                assert_eq!(a.data, b.data, "{name}: m={m} tile {j0}..{j1}");
+                // and both are exactly the matching columns of the forward
+                let full = kernel.forward(&x, &pw);
+                for i in 0..m {
+                    for j in j0..j1 {
+                        assert_eq!(
+                            a[(i, j - j0)],
+                            full[(i, j)],
+                            "{name}: m={m} element ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn single_group_rows_agree_with_and_without_tiling() {
+    // group == K: one group spanning each row — the degenerate granularity
+    // where fine-grained epilogues collapse to a single partial
+    let mut rng = Rng::new(203);
+    let x = Mat::randn(3, 64, 1.0, &mut rng);
+    let wf = Mat::randn(19, 64, 0.05, &mut rng);
+    for (name, kernel) in sweep_kernels() {
+        let gran = if kernel.fine_grained() {
+            Granularity::Group(64) // == K: single group per row
+        } else {
+            Granularity::PerChannel
+        };
+        let amp = if kernel.scale_mode() == ScaleMode::Integer { Some(1024) } else { None };
+        let pw = pack_for_test(&wf, kernel.weight_bits(), gran, amp);
+        assert_eq!(pw.groups_per_row(), 1, "{name}: expected single-group rows");
+        let a = kernel.forward(&x, &pw);
+        let b = kernel.forward(&x, &pw.without_tiled());
+        assert_eq!(a.data, b.data, "{name}: single-group rows diverged");
+    }
+}
+
+#[test]
+fn int4_weights_carry_the_tiled_layout() {
+    // the offline repack is built at quantization time exactly for the
+    // shapes the microkernel covers: int4, even K, even group dividing K
+    let mut rng = Rng::new(204);
+    let wf = Mat::randn(29, 128, 0.05, &mut rng);
+    for (name, kernel) in sweep_kernels() {
+        let pw = pack_for(name, &wf);
+        match kernel.weight_bits() {
+            Bits::B4 => assert!(pw.tiled.is_some(), "{name}: int4 weight missing tiled layout"),
+            _ => assert!(pw.tiled.is_none(), "{name}: non-int4 weight must not be tiled"),
+        }
+        // slices are request-path copies and must never re-tile
+        assert!(pw.slice_rows(3, 11).tiled.is_none(), "{name}: slice re-tiled");
+    }
+}

@@ -84,6 +84,47 @@ fn every_servable_kernel_parallel_bit_identical() {
     }
 }
 
+#[test]
+fn microkernel_and_rowunpack_agree_under_parallelism() {
+    // workers × the register-blocked microkernel: the offline tiled layout
+    // must be invisible to results — serial rowunpack, serial microkernel,
+    // and every parallel combination all produce the same bits
+    let mut rng = Rng::new(32);
+    let x = Mat::randn(6, 256, 1.0, &mut rng);
+    let wf = Mat::randn(96, 256, 0.05, &mut rng);
+    let cases: [(&str, Granularity, Option<i64>); 4] = [
+        ("w4a8-fg-is", Granularity::Group(64), Some(1024)),
+        ("w4a8-fg-fs", Granularity::Group(64), None),
+        ("w4a8-coarse", Granularity::PerChannel, None),
+        ("w4a4", Granularity::Group(64), None),
+    ];
+    for (name, gran, amp) in cases {
+        let kernel = registry::get_or_panic(name);
+        let pw = pack_for_test(&wf, kernel.weight_bits(), gran, amp);
+        assert!(pw.tiled.is_some(), "{name}: int4 pack must carry the tiled layout");
+        let rowunpack = pw.without_tiled();
+        let serial = kernel.forward(&x, &pw);
+        assert_eq!(
+            serial.data,
+            kernel.forward(&x, &rowunpack).data,
+            "{name}: serial microkernel vs rowunpack"
+        );
+        for workers in [2usize, 3, 4] {
+            let rt = Runtime::threaded(workers);
+            assert_eq!(
+                serial.data,
+                kernel.forward_rt(&x, &pw, &rt).data,
+                "{name}: microkernel diverged at workers={workers}"
+            );
+            assert_eq!(
+                serial.data,
+                kernel.forward_rt(&x, &rowunpack, &rt).data,
+                "{name}: rowunpack diverged at workers={workers}"
+            );
+        }
+    }
+}
+
 fn small_cfg() -> ModelConfig {
     // Group(128) plans need d_model/d_ff divisible by 128; tiny() is the
     // smallest committed config that satisfies every recipe

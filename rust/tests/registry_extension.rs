@@ -6,12 +6,14 @@
 use integer_scale::costmodel::{latency, Gpu};
 use integer_scale::gemm::registry::{self, GemmKernel, MathPipe, ScaleMode};
 use integer_scale::gemm::trace::OpTrace;
-use integer_scale::gemm::{self, PackedWeight};
+use integer_scale::gemm::{self, w4a8_fg_float, PackedWeight, QuantAct};
 use integer_scale::model::Linear;
 use integer_scale::quant::methods::{PtqMethod, Rtn};
 use integer_scale::quant::pack::unpack_int4;
 use integer_scale::quant::{BitWidth, Bits, Granularity};
+use integer_scale::runtime::Runtime;
 use integer_scale::tensor::{Mat, Rng};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// A toy out-of-tree scheme: dequantize the int4 codes to f32 with the
@@ -99,6 +101,96 @@ fn register_and_serve_a_new_kernel_from_one_file() {
     let fused = Linear::from_quantized(&ql, registry::get("w4a16").unwrap()).forward(&x);
     assert_eq!((got.rows, got.cols), (3, 24));
     assert!(got.max_abs_diff(&fused) < 1e-3);
+}
+
+/// Counts how many times the *unquantized* entry points run — each one
+/// pays a fresh M×K activation quantization, which is exactly what the
+/// `forward_tile_quantized` hook exists to avoid on the parallel path.
+static FULL_QUANT_PASSES: AtomicUsize = AtomicUsize::new(0);
+
+/// An out-of-tree integer-activation kernel that implements the
+/// quantize-once hook: float-scale arithmetic, with `forward`/`forward_tile`
+/// instrumented to count redundant activation-quantization passes.
+struct HookProbeKernel;
+
+impl GemmKernel for HookProbeKernel {
+    fn name(&self) -> &'static str {
+        "w4a8-hook-probe"
+    }
+    fn label(&self) -> &'static str {
+        "W4A8 quantize-once hook probe (test)"
+    }
+    fn weight_bits(&self) -> Bits {
+        Bits::B4
+    }
+    fn act_bits(&self) -> Bits {
+        Bits::B8
+    }
+    fn scale_mode(&self) -> ScaleMode {
+        ScaleMode::Float
+    }
+    fn fine_grained(&self) -> bool {
+        true
+    }
+    fn math_pipe(&self) -> MathPipe {
+        MathPipe::Int8Tc
+    }
+    fn utilization(&self) -> f64 {
+        0.5
+    }
+    fn trace(&self, m: u64, k: u64, n: u64, g: u64) -> OpTrace {
+        OpTrace {
+            int_mac: m * n * k,
+            i32_to_f32: m * n * (k / g),
+            float_mac: m * n * (k / g),
+            weight_bytes: n * k / 2,
+            ..Default::default()
+        }
+    }
+    fn forward(&self, x: &Mat, pw: &PackedWeight) -> Mat {
+        FULL_QUANT_PASSES.fetch_add(1, Ordering::SeqCst);
+        w4a8_fg_float::gemm(&QuantAct::quantize(x, Bits::B8), pw)
+    }
+    fn forward_tile(&self, x: &Mat, pw: &PackedWeight, j0: usize, j1: usize) -> Mat {
+        FULL_QUANT_PASSES.fetch_add(1, Ordering::SeqCst);
+        w4a8_fg_float::gemm_tile(&QuantAct::quantize(x, Bits::B8), pw, j0, j1)
+    }
+    fn forward_tile_quantized(
+        &self,
+        qa: &QuantAct,
+        pw: &PackedWeight,
+        j0: usize,
+        j1: usize,
+    ) -> Option<Mat> {
+        Some(w4a8_fg_float::gemm_tile(qa, pw, j0, j1))
+    }
+}
+
+#[test]
+fn quantized_hook_avoids_per_tile_requantization() {
+    // regression for the generic fallback that re-quantized activations in
+    // every column tile: a kernel implementing forward_tile_quantized must
+    // have its parallel forward driven entirely through the hook — zero
+    // calls to the unquantized entry points — and still match serial output
+    let kernel: Arc<dyn GemmKernel> = Arc::new(HookProbeKernel);
+    let mut rng = Rng::new(5);
+    let w = Mat::randn(64, 256, 0.05, &mut rng);
+    let x = Mat::randn(4, 256, 1.0, &mut rng); // 4*64*256 MACs > parallel gate
+    let pw = gemm::pack_for_test(&w, Bits::B4, Granularity::Group(64), None);
+
+    let serial = kernel.forward(&x, &pw);
+    let before = FULL_QUANT_PASSES.load(Ordering::SeqCst);
+    let rt = Runtime::threaded(3);
+    let par = kernel.forward_rt(&x, &pw, &rt);
+    let after = FULL_QUANT_PASSES.load(Ordering::SeqCst);
+
+    assert_eq!(serial.data, par.data, "hook path changed results");
+    assert_eq!(
+        after - before,
+        0,
+        "parallel forward re-quantized activations {} times despite the hook",
+        after - before
+    );
 }
 
 #[test]
