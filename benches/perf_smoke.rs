@@ -28,7 +28,12 @@
 //!    both M=1 (the zero-alloc decode GEMV) and M=64 (prefill) — with,
 //!    checked before timing anything, bit-identical outputs at both
 //!    shapes and token-identical greedy serve output after
-//!    `strip_tiled_layouts`.
+//!    `strip_tiled_layouts`;
+//! 7. **the wire is thin**: serving the same workload over the loopback
+//!    TCP frontend with 8 concurrent client connections delivers at least
+//!    0.9x the in-process tokens/sec (min-of-samples, gated on >= 4 CPUs)
+//!    — with, checked before timing anything, byte-identical streamed
+//!    tokens.
 //!
 //! Also asserts — before timing anything — that parallel tiles are
 //! bit-identical to serial execution, records end-to-end serve tokens/sec
@@ -49,6 +54,9 @@ use integer_scale::obs::Obs;
 use integer_scale::plan::PlanBuilder;
 use integer_scale::quant::{BitWidth, Bits, Granularity};
 use integer_scale::runtime::Runtime;
+use integer_scale::server::{
+    client::drive_concurrent, send_shutdown, ClientRequest, Server, ServerConfig, StreamOutcome,
+};
 use integer_scale::specdec::SpecConfig;
 use integer_scale::tensor::{Mat, Rng};
 use std::path::PathBuf;
@@ -75,6 +83,48 @@ fn serve_tokens(model: &Arc<Transformer>, gen: &CorpusGen) -> Vec<Vec<u32>> {
 
 fn serve_once(model: &Arc<Transformer>, gen: &CorpusGen) -> usize {
     serve_tokens(model, gen).iter().map(|t| t.len()).sum()
+}
+
+/// The [`serve_tokens`] workload expressed as wire requests: 8 client
+/// connections, one request each, same prompts (same corpus rng seed).
+fn net_requests(gen: &CorpusGen) -> Vec<Vec<ClientRequest>> {
+    let mut rng = Rng::new(9);
+    (0..8u64)
+        .map(|i| {
+            vec![ClientRequest {
+                id: i,
+                prompt: gen.document(12, Split::C4, &mut rng),
+                max_new_tokens: 8,
+                deadline_ms: None,
+                stop_at_eos: false,
+            }]
+        })
+        .collect()
+}
+
+/// One full loopback serve pass: boot the TCP frontend on an ephemeral
+/// port, drive 8 concurrent client connections, drain. The gate-7
+/// comparator for [`serve_once`].
+fn serve_loopback(
+    model: &Arc<Transformer>,
+    batches: &[Vec<ClientRequest>],
+) -> Vec<Vec<StreamOutcome>> {
+    let e = Engine::new(
+        model.clone(),
+        EngineConfig { max_batch: 8, kv_token_budget: 8 * 256, seed: 1 },
+    );
+    let mut router = Router::new(vec![e], Policy::LeastLoaded);
+    let server = Server::bind("127.0.0.1:0", ServerConfig::default()).expect("bind loopback");
+    let addr = server.local_addr();
+    std::thread::scope(|s| {
+        let clients = s.spawn(move || {
+            let outs = drive_concurrent(&addr, batches).expect("loopback clients");
+            send_shutdown(&addr).expect("shutdown ack");
+            outs
+        });
+        server.run(&mut router);
+        clients.join().expect("client thread panicked")
+    })
 }
 
 /// Repeat-heavy prompts: a two-token pattern cycled, the regime
@@ -348,6 +398,40 @@ fn main() {
         black_box(serve_fleet(&m_fleet, true, Some(2)));
     });
 
+    // gate-7 correctness first: the loopback frontend must stream the
+    // exact tokens the in-process engine produces for the same workload
+    let batches = net_requests(&gen);
+    let net_once = serve_loopback(&m1, &batches);
+    let mut reference: Vec<(u64, Vec<u32>)> = {
+        let mut e = Engine::new(
+            m1.clone(),
+            EngineConfig { max_batch: 8, kv_token_budget: 8 * 256, seed: 1 },
+        );
+        let mut rng = Rng::new(9);
+        for i in 0..8u64 {
+            let mut r = Request::greedy(i, gen.document(12, Split::C4, &mut rng), 8);
+            r.stop_at_eos = false;
+            e.submit(r);
+        }
+        e.run_to_completion().into_iter().map(|r| (r.id, r.tokens)).collect()
+    };
+    reference.sort_by_key(|(id, _)| *id);
+    let mut resolved = 0;
+    for o in net_once.iter().flatten() {
+        assert!(o.intact(), "loopback stream not intact: {o:?}");
+        assert_eq!(
+            o.streamed, reference[o.id as usize].1,
+            "loopback stream diverged from in-process at id {}",
+            o.id
+        );
+        resolved += 1;
+    }
+    assert_eq!(resolved, 8, "all 8 loopback requests resolved");
+    println!("serving losslessness: loopback streams == in-process greedy (8 connections)");
+    let s_net = b.bench_tokens("serve_is_loopback_8conns", toks, || {
+        black_box(serve_loopback(&m1, &batches));
+    });
+
     let out = std::env::var("BENCH_JSON_OUT")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("BENCH_pr.json"));
@@ -433,6 +517,22 @@ fn main() {
     if micro64 < 1.25 {
         eprintln!("FAIL: microkernel {micro64:.2}x < 1.25x over row-unpack at M=64");
         failed = true;
+    }
+
+    // min-of-samples: each loopback pass spawns an acceptor + 2 threads
+    // per connection, the noisiest setup cost in this file
+    let net_ratio = s_serve1.min.as_secs_f64() / s_net.min.as_secs_f64();
+    if host_cpus >= 4 {
+        println!(
+            "gate 7: loopback serving {net_ratio:.2}x of in-process tokens/sec \
+             at 8 concurrent clients (require >= 0.90x)"
+        );
+        if net_ratio < 0.90 {
+            eprintln!("FAIL: loopback serving {net_ratio:.2}x < 0.90x of in-process throughput");
+            failed = true;
+        }
+    } else {
+        println!("gate 7 SKIPPED: host has {host_cpus} CPUs (<4); ratio was {net_ratio:.2}x");
     }
 
     if failed {

@@ -1,0 +1,98 @@
+//! **Serving-frontend quickstart**: boot the TCP serving frontend on an
+//! ephemeral loopback port, stream three requests over two concurrent
+//! client connections, then drain gracefully — all in one process, the
+//! same path `repro serve --listen` and `repro client` exercise across
+//! two.
+//!
+//! The wire protocol is newline-delimited JSON both ways: the client
+//! sends `{"op":"generate","id":..,"prompt":[..],"max_new_tokens":..}`
+//! lines, the server streams back one `{"type":"token",...}` frame per
+//! generated token the moment the engine emits it (no buffering of whole
+//! completions), then a terminal `{"type":"done",...}` frame with the
+//! authoritative token list and latency figures. `{"op":"shutdown"}`
+//! latches the drain: no new work is admitted, in-flight requests stream
+//! to completion, and `Server::run` returns a report.
+//!
+//! ```sh
+//! cargo run --release --example serve_client
+//! ```
+
+use integer_scale::coordinator::{Engine, EngineConfig, Policy, Router};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::server::{
+    client::drive_concurrent, send_shutdown, ClientRequest, Server, ServerConfig,
+};
+use std::sync::Arc;
+
+fn main() {
+    // a tiny fp16 model is enough to demonstrate the wire
+    let cfg = ModelConfig { n_layers: 2, ..ModelConfig::tiny() };
+    let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 42)));
+    let engine = Engine::new(
+        model,
+        EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: 0 },
+    );
+    let mut router = Router::new(vec![engine], Policy::LeastLoaded);
+
+    // port 0: the OS picks a free port, read it back from local_addr
+    let server = Server::bind("127.0.0.1:0", ServerConfig::default()).expect("bind loopback");
+    let addr = server.local_addr();
+    println!("listening on {addr}");
+
+    let clients = std::thread::spawn(move || {
+        // two concurrent connections: one carries two requests, one carries
+        // one — frames interleave per connection, routed back by id
+        let batches = vec![
+            vec![
+                ClientRequest {
+                    id: 0,
+                    prompt: vec![3, 4, 5, 6],
+                    max_new_tokens: 8,
+                    deadline_ms: None,
+                    stop_at_eos: false,
+                },
+                ClientRequest {
+                    id: 1,
+                    prompt: vec![9, 10, 11],
+                    max_new_tokens: 8,
+                    deadline_ms: None,
+                    stop_at_eos: false,
+                },
+            ],
+            vec![ClientRequest {
+                id: 2,
+                prompt: vec![20, 21, 22, 23, 24],
+                max_new_tokens: 6,
+                // a generous deadline: expiry would return a structured
+                // `deadline_exceeded` error frame instead of tokens
+                deadline_ms: Some(30_000),
+                stop_at_eos: false,
+            }],
+        ];
+        let outcomes = drive_concurrent(&addr, &batches).expect("drive clients");
+        send_shutdown(&addr).expect("shutdown ack");
+        outcomes
+    });
+
+    // the server runs on this thread until the drain completes
+    let report = server.run(&mut router);
+
+    for o in clients.join().expect("client thread").iter().flatten() {
+        println!(
+            "request {}: finish={} streamed={:?} (ttft {:.3} ms, total {:.3} ms, intact={})",
+            o.id,
+            o.finish.as_deref().unwrap_or("?"),
+            o.streamed,
+            o.ttft_ms,
+            o.total_ms,
+            o.intact(),
+        );
+    }
+    println!(
+        "drained: {} connection(s), {} response(s), shed overloaded={} draining={}",
+        report.connections,
+        report.responses.len(),
+        report.shed_overloaded,
+        report.shed_draining,
+    );
+}

@@ -19,7 +19,7 @@
 //! [`crate::runtime::Runtime`] is threaded.
 
 use super::metrics::Metrics;
-use super::request::{FinishReason, Request, Response, Tracked};
+use super::request::{FinishReason, Request, Response, TokenSink, Tracked};
 use super::scheduler::Scheduler;
 use crate::data::tokenizer::EOS;
 use crate::kvpool::{BlockPool, PoolGauges, BLOCK_SIZE};
@@ -82,6 +82,10 @@ pub struct Engine {
     /// subtracted from the speculative window's pool headroom so the two
     /// concurrent allocators cannot race the pool dry.
     prefill_inflight: usize,
+    /// Streaming/cancellation hook ([`Engine::set_token_sink`]); `None`
+    /// keeps the buffered-response behaviour every existing caller relies
+    /// on — emission and the per-step cancellation sweep cost nothing.
+    sink: Option<Arc<dyn TokenSink>>,
 }
 
 /// The pure compute half of one admission's prefill — produced without
@@ -120,7 +124,19 @@ impl Engine {
             overlap: false,
             prefill_budget: usize::MAX,
             prefill_inflight: 0,
+            sink: None,
         }
+    }
+
+    /// Attach a [`TokenSink`]: every generated token is delivered the
+    /// moment it is sampled (no whole-completion buffering), each request
+    /// gets exactly one terminal [`TokenSink::on_finish`], and the engine
+    /// polls [`TokenSink::cancelled`] each step to reap abandoned requests
+    /// — queued or running — returning their KV blocks to the pool.
+    /// Responses still flow through [`Engine::step`] unchanged, so the
+    /// sink observes the same tokens the buffered path returns.
+    pub fn set_token_sink(&mut self, sink: Arc<dyn TokenSink>) {
+        self.sink = Some(sink);
     }
 
     /// Enable overlapped continuous batching: when a step has both a
@@ -208,6 +224,9 @@ impl Engine {
         // the guard stays open for the whole iteration, so prefill/decode/
         // layer/kernel spans recorded below parent to this Step span
         let _step_span = self.obs().cloned().and_then(|o| o.span(SpanKind::Step, "step"));
+        // 0. reap requests the sink has cancelled (disconnect / deadline)
+        //    before admission spends pool blocks on them
+        self.reap_cancelled();
         // 1. admission. With overlap on, the standing batch's growth blocks
         //    are secured FIRST and subtracted from what admission may hand
         //    out — decode will allocate them concurrently with the
@@ -274,6 +293,29 @@ impl Engine {
         std::mem::take(&mut self.finished)
     }
 
+    /// Finish every pending request the sink reports cancelled: queued
+    /// requests just leave the queue (they own nothing yet); running ones
+    /// release their batch slot and drop their cache, returning every KV
+    /// block to the pool. Both finish with [`FinishReason::Cancelled`] and
+    /// whatever tokens were already generated.
+    fn reap_cancelled(&mut self) {
+        let Some(sink) = self.sink.clone() else { return };
+        for t in self.scheduler.drain_where(|t| sink.cancelled(t.req.id)) {
+            self.finish(t, FinishReason::Cancelled);
+        }
+        let mut i = 0;
+        while i < self.running.len() {
+            if sink.cancelled(self.running[i].tracked.req.id) {
+                let Running { tracked, cache, .. } = self.running.swap_remove(i);
+                self.scheduler.retire();
+                drop(cache); // returns its blocks to the pool
+                self.finish(tracked, FinishReason::Cancelled);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
     /// Prefill one admitted request into a fresh pool-backed cache. A
     /// sequence resuming after preemption re-prefills `prompt + generated`
     /// (minus the newest token, which stays pending as `next_token`); its
@@ -333,8 +375,12 @@ impl Engine {
                 let tok = sample(&row, tracked.req.sampling, &mut self.rng);
                 tracked.first_token_at = Some(Instant::now());
                 tracked.generated.push(tok);
+                if let Some(s) = &self.sink {
+                    s.on_token(tracked.req.id, 0, tok);
+                }
                 tok
             }
+            // a resume re-prefilled old context: nothing new to emit
             None => *tracked.generated.last().unwrap(),
         };
         self.admit_counter += 1;
@@ -430,9 +476,13 @@ impl Engine {
                 o.decode_tokens.fetch_add(tokens.len() as u64, Relaxed);
             }
             let mut row = 0usize;
+            let sink = self.sink.clone();
             for (r, _) in self.running.iter_mut().zip(&flags).filter(|&(_, &f)| !f) {
                 let tok = sample(logits.row(row), r.tracked.req.sampling, &mut self.rng);
                 r.tracked.generated.push(tok);
+                if let Some(s) = &sink {
+                    s.on_token(r.tracked.req.id, r.tracked.generated.len() - 1, tok);
+                }
                 r.next_token = tok;
                 row += 1;
             }
@@ -501,7 +551,13 @@ impl Engine {
                     emitted.truncate(p + 1);
                 }
             }
+            let base = r.tracked.generated.len();
             r.tracked.generated.extend_from_slice(&emitted);
+            if let Some(s) = &self.sink {
+                for (j, &tok) in emitted.iter().enumerate() {
+                    s.on_token(r.tracked.req.id, base + j, tok);
+                }
+            }
             r.next_token = *emitted.last().expect("a spec step always emits");
             let n = emitted.len() as u64;
             let (drafted, accepted) = (step.drafted as u64, step.accepted as u64);
@@ -565,33 +621,43 @@ impl Engine {
     }
 
     fn finish(&mut self, t: Tracked, finish: FinishReason) {
-        self.metrics.completed += 1;
         let ttft = t.first_token_at.map(|at| at - t.arrived);
         let total = t.arrived.elapsed();
-        if let Some(ttft) = ttft {
-            self.metrics.ttft_hist.record(ttft);
-        }
-        self.metrics.e2e_hist.record(total);
-        if let Some(o) = self.obs() {
+        if finish == FinishReason::Cancelled {
+            // reaped, not served: keep the latency histograms honest
+            self.metrics.cancelled += 1;
+        } else {
+            self.metrics.completed += 1;
             if let Some(ttft) = ttft {
-                o.ttft.record(ttft);
+                self.metrics.ttft_hist.record(ttft);
             }
-            o.e2e.record(total);
-            o.completed.fetch_add(1, Relaxed);
-            // retrospective whole-request timeline span (roots the request
-            // on the trace timeline; one batched step serves many requests)
-            let total_ns = total.as_nanos().min(u64::MAX as u128) as u64;
-            let start_ns = o.now_ns().saturating_sub(total_ns);
-            o.record_span(SpanKind::Request, "request", 0, start_ns, total_ns, t.req.id);
+            self.metrics.e2e_hist.record(total);
+            if let Some(o) = self.obs() {
+                if let Some(ttft) = ttft {
+                    o.ttft.record(ttft);
+                }
+                o.e2e.record(total);
+                o.completed.fetch_add(1, Relaxed);
+                // retrospective whole-request timeline span (roots the
+                // request on the trace timeline; one batched step serves
+                // many requests)
+                let total_ns = total.as_nanos().min(u64::MAX as u128) as u64;
+                let start_ns = o.now_ns().saturating_sub(total_ns);
+                o.record_span(SpanKind::Request, "request", 0, start_ns, total_ns, t.req.id);
+            }
         }
-        self.finished.push(Response {
+        let resp = Response {
             id: t.req.id,
             prompt_len: t.req.prompt.len(),
             tokens: t.generated,
             finish,
             ttft: ttft.unwrap_or_default(),
             total,
-        });
+        };
+        if let Some(s) = &self.sink {
+            s.on_finish(&resp);
+        }
+        self.finished.push(resp);
     }
 
     fn retire_done(&mut self) {

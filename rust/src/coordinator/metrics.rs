@@ -10,6 +10,9 @@ use std::time::Duration;
 pub struct Metrics {
     pub submitted: u64,
     pub completed: u64,
+    /// Requests reaped mid-flight on sink cancellation (client disconnect
+    /// or deadline expiry) — disjoint from `completed`.
+    pub cancelled: u64,
     /// Prompt tokens actually computed at prefill (prefix-cache hits are
     /// excluded — they are counted in `prefix_hit_tokens`).
     pub prefill_tokens: u64,
@@ -94,6 +97,7 @@ impl Metrics {
     pub fn merge(&mut self, o: &Metrics) {
         self.submitted += o.submitted;
         self.completed += o.completed;
+        self.cancelled += o.cancelled;
         self.prefill_tokens += o.prefill_tokens;
         self.decode_tokens += o.decode_tokens;
         self.prefill_time += o.prefill_time;
@@ -182,6 +186,9 @@ impl Metrics {
                 ms(self.draft_time),
                 ms(self.verify_time),
             ));
+        }
+        if self.cancelled > 0 {
+            s.push_str(&format!(" cancelled={}", self.cancelled));
         }
         if self.prefill_overlaps > 0 || self.steal_events > 0 {
             s.push_str(&format!(

@@ -16,6 +16,6 @@ pub mod scheduler;
 
 pub use engine::{Engine, EngineConfig};
 pub use metrics::Metrics;
-pub use request::{FinishReason, Request, RequestId, Response};
+pub use request::{FinishReason, Request, RequestId, Response, TokenSink, Tracked};
 pub use router::{Policy, Router};
 pub use scheduler::{Scheduler, SchedulerState};

@@ -33,6 +33,38 @@ pub enum FinishReason {
     /// Never servable: the context exceeds the model window or the whole
     /// KV pool, so generation was not attempted.
     Failed,
+    /// Abandoned mid-flight: the attached [`TokenSink`] reported the
+    /// request cancelled (client disconnect, deadline expiry) and the
+    /// engine reaped it, returning its KV blocks to the pool. The response
+    /// carries whatever tokens were generated before the cut.
+    Cancelled,
+}
+
+/// Streaming hook for token-by-token delivery — how the network serving
+/// frontend ([`crate::server`]) forwards tokens the moment the engine
+/// produces them instead of buffering whole completions.
+///
+/// The engine calls [`TokenSink::on_token`] at every site that appends to
+/// a request's `generated` vector (first token at prefill, plain decode,
+/// speculative emission) and [`TokenSink::on_finish`] exactly once per
+/// request with the final [`Response`]. Preemption/resume never re-emits:
+/// a resumed sequence re-prefills its context but only *new* tokens are
+/// pushed, so `index` is strictly increasing per request.
+///
+/// [`TokenSink::cancelled`] is the reverse channel: the engine polls it
+/// each step and reaps any request (queued or running) the sink no longer
+/// wants, finishing it with [`FinishReason::Cancelled`] and freeing its
+/// pool blocks. Implementations must be cheap — it is called once per
+/// pending request per engine step.
+pub trait TokenSink: Send + Sync {
+    /// `token` is the `index`-th (0-based) generated token of request `id`.
+    fn on_token(&self, id: RequestId, index: usize, token: u32);
+    /// Exactly one terminal call per request, after its last `on_token`.
+    fn on_finish(&self, resp: &Response);
+    /// Should the engine abandon this request? Default: never.
+    fn cancelled(&self, _id: RequestId) -> bool {
+        false
+    }
 }
 
 /// Completed generation with per-request latency accounting.

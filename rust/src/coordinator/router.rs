@@ -24,11 +24,11 @@
 
 use super::engine::Engine;
 use super::metrics::Metrics;
-use super::request::{Request, Response, Tracked};
+use super::request::{Request, Response, TokenSink, Tracked};
 use crate::obs::SpanKind;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
 /// Routing policy.
@@ -272,6 +272,17 @@ impl Router {
         self
     }
 
+    /// Attach one [`TokenSink`] to every replica engine — the serving
+    /// frontend's streaming/cancellation hook. Set before
+    /// [`Router::run_threaded`] / [`Router::run_service`]; a request's
+    /// tokens reach the sink from whichever replica serves it (work
+    /// stealing included), still exactly once per token.
+    pub fn set_token_sink(&mut self, sink: Arc<dyn TokenSink>) {
+        for e in self.engines.iter_mut() {
+            e.set_token_sink(sink.clone());
+        }
+    }
+
     /// Pick a replica for the next request (synchronous mode: loads are
     /// the engines' current pending counts).
     pub fn pick(&mut self) -> usize {
@@ -317,6 +328,22 @@ impl Router {
     /// Replicas sharing a threaded model runtime also share its worker
     /// pool — inter-replica and intra-op parallelism compose.
     pub fn run_threaded(&mut self, requests: Vec<Request>) -> Vec<Response> {
+        let (tx, rx) = mpsc::channel();
+        for req in requests {
+            tx.send(req).expect("feeding an open channel cannot fail");
+        }
+        drop(tx);
+        self.run_service(rx)
+    }
+
+    /// [`Router::run_threaded`] with an open intake: requests arrive over
+    /// `rx` (from the serving frontend's connection threads) instead of as
+    /// a pre-built batch, and the fleet keeps serving until every sender
+    /// has hung up AND the backlog is drained — the router-side half of
+    /// graceful drain. Dispatch, stealing, and response merging are
+    /// identical to the batch mode; `run_threaded` is literally this with
+    /// a pre-loaded channel.
+    pub fn run_service(&mut self, rx: mpsc::Receiver<Request>) -> Vec<Response> {
         let n = self.engines.len();
         let policy = self.policy;
         // stealing needs a peer to steal from
@@ -337,7 +364,8 @@ impl Router {
                 }));
                 txs.push(tx);
             }
-            for req in requests {
+            // blocks between arrivals; ends when every intake sender drops
+            for req in rx {
                 let snapshot: Vec<usize> =
                     loads.iter().map(|l| l.load(Ordering::Relaxed)).collect();
                 let i = pick_index(policy, rr_next, &snapshot);

@@ -157,6 +157,24 @@ impl Scheduler {
         self.waiting.push_front(t);
     }
 
+    /// Remove and return every waiting request matching `pred` — how the
+    /// engine reaps cancelled requests that were never admitted (they hold
+    /// no running slot and no pool blocks, so only the queue entry goes).
+    /// Relative order of the survivors is preserved.
+    pub fn drain_where(&mut self, mut pred: impl FnMut(&Tracked) -> bool) -> Vec<Tracked> {
+        let mut out = Vec::new();
+        let mut keep = VecDeque::with_capacity(self.waiting.len());
+        for t in self.waiting.drain(..) {
+            if pred(&t) {
+                out.push(t);
+            } else {
+                keep.push_back(t);
+            }
+        }
+        self.waiting = keep;
+        out
+    }
+
     /// If nothing is running and the front request could never fit even in
     /// an empty pool, pop it so the engine can fail it instead of spinning.
     pub fn pop_never_fits(&mut self) -> Option<Tracked> {
@@ -263,6 +281,20 @@ mod tests {
         let a = s.admit(64);
         assert_eq!(a.len(), 1);
         assert_eq!(a[0].arrived, arrived);
+    }
+
+    #[test]
+    fn drain_where_pulls_matches_and_keeps_order() {
+        let mut s = Scheduler::new(8, 64, 16);
+        for i in 0..5 {
+            s.submit(req(i, 4, 4));
+        }
+        let gone = s.drain_where(|t| t.req.id % 2 == 0);
+        assert_eq!(gone.iter().map(|t| t.req.id).collect::<Vec<_>>(), vec![0, 2, 4]);
+        assert_eq!(s.queue_depth(), 2);
+        let rest = s.admit(64);
+        assert_eq!(rest.iter().map(|t| t.req.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert!(s.drain_where(|_| true).is_empty(), "queue already drained");
     }
 
     #[test]

@@ -33,6 +33,14 @@
 //! [`coordinator::Router::run_threaded`] — greedy outputs are
 //! token-identical for every worker/replica count.
 //!
+//! **Serving:** `serve --listen ADDR` exposes the coordinator over TCP
+//! through the [`server`] frontend — newline-delimited JSON, per-token
+//! streaming straight off the engine's [`coordinator::TokenSink`],
+//! deadline + max-in-flight admission control with structured shed
+//! responses, disconnect-triggered KV reclamation, and graceful drain.
+//! The `client` subcommand and `examples/serve_client.rs` speak the same
+//! protocol via [`server::client`].
+//!
 //! **Observability:** attaching an [`obs::Obs`] hub to the runtime
 //! (`serve --metrics-out`, or the `profile` subcommand) records
 //! hierarchical spans (request → step → prefill/decode → layer → kernel →
@@ -57,6 +65,7 @@ pub mod obs;
 pub mod plan;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod specdec;
 pub mod tables;
 pub mod tensor;

@@ -29,8 +29,18 @@
 //!                                             # `serve --calibration`
 //!                                  # run a workload per scheme, print per-kernel
 //!                                  # measured ns next to OpTrace-predicted costs
+//! repro serve --listen 127.0.0.1:7151   # network mode: same engine flags,
+//!             [--max-inflight 64]       # but requests arrive as newline-
+//!                                       # delimited JSON over TCP, tokens
+//!                                       # stream back per-frame, and the run
+//!                                       # drains gracefully on a shutdown op
+//! repro client [--connect 127.0.0.1:7151] [--requests 8] [--prompt-len 16]
+//!             [--new-tokens 32] [--concurrency 1] [--deadline-ms 0]
+//!             [--vocab 512] [--shutdown]    # drive a serve --listen server;
+//!                                           # prompts match in-process serve
 //! repro runtime-check [--workers N]  # parallel == serial + speedup
 //! repro info                       # model / config / artifact inventory
+//! repro help                       # list every subcommand
 //! repro --eval-tokens 1536 tables  # steadier PPL estimates
 //! ```
 //!
@@ -47,6 +57,7 @@ use integer_scale::obs::{format_table, MetricsSnapshot, Obs};
 use integer_scale::plan::{PlanBuilder, QuantPlan};
 use integer_scale::quant::{BitWidth, Bits, Granularity};
 use integer_scale::runtime::Runtime;
+use integer_scale::server::{self, ClientRequest, Server, ServerConfig};
 use integer_scale::specdec::{self, SpecConfig};
 use integer_scale::tables::{self, Ctx};
 use integer_scale::tensor::Mat;
@@ -69,7 +80,7 @@ fn parse_args() -> Args {
         let a = &argv[i];
         if let Some(name) = a.strip_prefix("--") {
             // boolean flags take no value; value flags consume the next arg
-            if name == "moe" || name == "spec-decode" || name == "overlap" {
+            if name == "moe" || name == "spec-decode" || name == "overlap" || name == "shutdown" {
                 flags.insert(name.to_string(), "true".to_string());
             } else if i + 1 < argv.len() {
                 flags.insert(name.to_string(), argv[i + 1].clone());
@@ -90,8 +101,18 @@ fn parse_args() -> Args {
 }
 
 impl Args {
+    /// Absent flag → default; present-but-unparseable → exit(2) with a
+    /// usage pointer (like unknown `--scheme`), never a silent default.
     fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+        match self.flags.get(name) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!(
+                    "invalid value '{v}' for --{name}: expected a non-negative integer\nrun 'repro help' for usage"
+                );
+                std::process::exit(2);
+            }),
+        }
     }
     fn get_str(&self, name: &str, default: &str) -> String {
         self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
@@ -155,6 +176,9 @@ fn serve(args: &Args) {
     let overlap = args.get_bool("overlap");
     let prefill_budget = args.get_usize("prefill-budget", 0);
     let steal = args.get_usize("steal", 0);
+    // network mode: requests arrive over TCP instead of being generated
+    let listen = args.flags.get("listen").cloned();
+    let max_inflight = args.get_usize("max-inflight", 64);
 
     let cfg = if moe { ModelConfig::moe_tiny() } else { ModelConfig::tiny() };
     let wpath = if moe { "artifacts/weights_moe.bin" } else { "artifacts/weights.bin" };
@@ -256,15 +280,19 @@ fn serve(args: &Args) {
     } else {
         None
     };
-    let mut rng = integer_scale::tensor::Rng::new(77);
-    let reqs: Vec<Request> = (0..requests)
-        .map(|i| {
-            let doc = gen.document(prompt_len, Split::C4, &mut rng);
-            let mut req = Request::greedy(i as u64, doc, new_tokens);
-            req.stop_at_eos = false;
-            req
-        })
-        .collect();
+    // in-process workload; `repro client` regenerates the identical
+    // prompts (same corpus seed 7, same rng seed 77) for network runs
+    let make_reqs = || {
+        let mut rng = integer_scale::tensor::Rng::new(77);
+        (0..requests)
+            .map(|i| {
+                let doc = gen.document(prompt_len, Split::C4, &mut rng);
+                let mut req = Request::greedy(i as u64, doc, new_tokens);
+                req.stop_at_eos = false;
+                req
+            })
+            .collect::<Vec<Request>>()
+    };
     let engine_cfg = |seed: u64| EngineConfig { max_batch, kv_token_budget: 128 * 256, seed };
     // periodic dumper: while serving, write a live snapshot (synthesized
     // from the obs hub's mirrors) to --metrics-out every interval
@@ -285,10 +313,8 @@ fn serve(args: &Args) {
         }
         _ => None,
     };
-    let (res, wall, metrics, routed) = if replicas > 1 {
-        // true multi-replica serving: one engine per OS thread behind a
-        // request channel, least-loaded dispatch with round-robin ties
-        let engines = (0..replicas)
+    let build_engines = |n: usize| -> Vec<Engine> {
+        (0..n)
             .map(|i| {
                 let mut e = Engine::new(model.clone(), engine_cfg(i as u64));
                 if let Some(d) = &draft {
@@ -300,19 +326,56 @@ fn serve(args: &Args) {
                 }
                 e
             })
-            .collect();
-        let mut router = Router::new(engines, Policy::LeastLoaded);
+            .collect()
+    };
+    let (res, wall, metrics, routed) = if let Some(addr) = &listen {
+        // network serving: always a Router (1..N replicas share one
+        // intake), the TCP frontend streams tokens as engines emit them
+        let mut router = Router::new(build_engines(replicas), Policy::LeastLoaded);
+        if steal > 0 {
+            router = router.with_stealing(steal);
+        }
+        let srv = match Server::bind(addr, ServerConfig { max_inflight }) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("failed to bind {addr}: {e}");
+                std::process::exit(2);
+            }
+        };
+        // parseable line so scripts can discover a `--listen :0` port;
+        // flush explicitly — stdout is block-buffered under a pipe
+        println!("listening on {}", srv.local_addr());
+        let _ = std::io::Write::flush(&mut std::io::stdout());
+        let t0 = Instant::now();
+        let report = srv.run(&mut router);
+        let wall = t0.elapsed();
+        println!(
+            "server drained: {} connection(s), {} response(s), shed overloaded={} draining={}, cancelled disconnect={} deadline={}",
+            report.connections,
+            report.responses.len(),
+            report.shed_overloaded,
+            report.shed_draining,
+            report.cancelled_disconnect,
+            report.deadline_expired,
+        );
+        println!("routed per replica: {:?}", router.routed);
+        let routed = router.routed.clone();
+        (report.responses, wall, router.merged_metrics(), routed)
+    } else if replicas > 1 {
+        // true multi-replica serving: one engine per OS thread behind a
+        // request channel, least-loaded dispatch with round-robin ties
+        let mut router = Router::new(build_engines(replicas), Policy::LeastLoaded);
         if steal > 0 {
             router = router.with_stealing(steal);
         }
         let t0 = Instant::now();
-        let res = router.run_threaded(reqs);
+        let res = router.run_threaded(make_reqs());
         let wall = t0.elapsed();
         println!("routed per replica: {:?}", router.routed);
         let routed = router.routed.clone();
         (res, wall, router.merged_metrics(), routed)
     } else {
-        let mut engine = Engine::new(model, engine_cfg(3));
+        let mut engine = Engine::new(model.clone(), engine_cfg(3));
         if let Some(d) = &draft {
             engine.enable_spec_decode(d.clone(), SpecConfig::with_k(spec_k));
         }
@@ -320,7 +383,7 @@ fn serve(args: &Args) {
         if prefill_budget > 0 {
             engine.set_prefill_budget(prefill_budget);
         }
-        for req in reqs {
+        for req in make_reqs() {
             engine.submit(req);
         }
         let t0 = Instant::now();
@@ -328,10 +391,9 @@ fn serve(args: &Args) {
         (res, t0.elapsed(), engine.metrics.clone(), Vec::new())
     };
     let gen_toks: usize = res.iter().map(|r| r.tokens.len()).sum();
-    let mean_ttft: f64 =
-        res.iter().map(|r| r.ttft.as_secs_f64()).sum::<f64>() / res.len() as f64;
-    let mean_tpot: f64 =
-        res.iter().map(|r| r.tpot().as_secs_f64()).sum::<f64>() / res.len() as f64;
+    let denom = res.len().max(1) as f64;
+    let mean_ttft: f64 = res.iter().map(|r| r.ttft.as_secs_f64()).sum::<f64>() / denom;
+    let mean_tpot: f64 = res.iter().map(|r| r.tpot().as_secs_f64()).sum::<f64>() / denom;
     println!("completed {} requests in {:.3}s", res.len(), wall.as_secs_f64());
     println!(
         "throughput {:.1} tok/s | mean TTFT {:.1} ms | mean TPOT {:.2} ms | mean batch {:.2}",
@@ -482,6 +544,109 @@ fn runtime_check(args: &Args) {
     }
 }
 
+/// `repro client` — drive a `serve --listen` server over TCP. Prompts are
+/// generated exactly like the in-process serve workload (corpus seed 7,
+/// request rng seed 77, ids 0..N), so greedy outputs are byte-comparable
+/// with a local `repro serve` run of the same shape. Exits 1 unless every
+/// request finished with its stream intact (tokens arrived in order and
+/// match the `done` frame).
+fn client(args: &Args) {
+    let connect = args.get_str("connect", "127.0.0.1:7151");
+    let requests = args.get_usize("requests", 8);
+    let prompt_len = args.get_usize("prompt-len", 16);
+    let new_tokens = args.get_usize("new-tokens", 32);
+    let concurrency = args.get_usize("concurrency", 1).max(1);
+    let deadline_ms = args.get_usize("deadline-ms", 0);
+    let vocab = args.get_usize("vocab", 512) as u32;
+    let shutdown = args.get_bool("shutdown");
+    use std::net::ToSocketAddrs;
+    let Some(addr) = connect.to_socket_addrs().ok().and_then(|mut it| it.next()) else {
+        eprintln!("cannot resolve --connect address '{connect}'");
+        std::process::exit(2);
+    };
+    // identical prompt stream to `serve` without --listen
+    let gen = CorpusGen::new(vocab, 7);
+    let mut rng = integer_scale::tensor::Rng::new(77);
+    let all: Vec<ClientRequest> = (0..requests)
+        .map(|i| ClientRequest {
+            id: i as u64,
+            prompt: gen.document(prompt_len, Split::C4, &mut rng),
+            max_new_tokens: new_tokens,
+            deadline_ms: if deadline_ms > 0 { Some(deadline_ms as u64) } else { None },
+            stop_at_eos: false,
+        })
+        .collect();
+    let per_conn = requests.div_ceil(concurrency).max(1);
+    let batches: Vec<Vec<ClientRequest>> = all.chunks(per_conn).map(|c| c.to_vec()).collect();
+    let t0 = Instant::now();
+    let results = if batches.is_empty() {
+        Vec::new()
+    } else {
+        match server::client::drive_concurrent(&addr, &batches) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("client error: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+    let wall = t0.elapsed();
+    let mut all_ok = true;
+    let mut streamed_total = 0usize;
+    for o in results.iter().flatten() {
+        streamed_total += o.streamed.len();
+        if let Some((code, msg)) = &o.error {
+            all_ok = false;
+            println!("request {}: error {code}: {msg}", o.id);
+        } else {
+            let ok = o.intact();
+            all_ok &= ok;
+            println!(
+                "request {}: finish={} tokens=[{}] intact={ok}",
+                o.id,
+                o.finish.as_deref().unwrap_or("?"),
+                o.tokens.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","),
+            );
+        }
+    }
+    println!(
+        "client: {requests} request(s), {streamed_total} streamed tokens, {:.1} tok/s over {} connection(s)",
+        streamed_total as f64 / wall.as_secs_f64().max(1e-9),
+        batches.len(),
+    );
+    if shutdown {
+        if let Err(e) = server::client::send_shutdown(&addr) {
+            eprintln!("shutdown request failed: {e}");
+            std::process::exit(1);
+        }
+        println!("shutdown requested: server draining");
+    }
+    if !all_ok {
+        std::process::exit(1);
+    }
+}
+
+const COMMANDS: &str = "tables table1..table8 figs fig1 fig3 fig4 fig5a fig5b fig6 fig7 fig8 serve client profile runtime-check info help";
+
+fn help() {
+    println!("repro — experiment harness + serving CLI\n");
+    println!("commands: {COMMANDS}\n");
+    println!("  tables / tableN      regenerate accuracy tables (Δppl vs FP16)");
+    println!("  figs / figN          regenerate figures (latency, overflow, speedup)");
+    println!("  serve                run the continuous-batching engine in-process");
+    println!("                       (--scheme/--plan, --replicas, --workers, --overlap,");
+    println!("                        --steal, --spec-decode, --metrics-out, --trace-out)");
+    println!("  serve --listen ADDR  network mode: newline-delimited JSON over TCP,");
+    println!("                       per-token streaming, --max-inflight admission,");
+    println!("                       graceful drain on a shutdown op");
+    println!("  client               drive a serve --listen server (--connect, --requests,");
+    println!("                       --concurrency, --deadline-ms, --shutdown)");
+    println!("  profile              per-kernel measured-vs-predicted table + calibration");
+    println!("  runtime-check        verify parallel GEMM tiles are bit-identical");
+    println!("  info                 model / config / artifact inventory");
+    println!("\nsee the module docs at the top of rust/src/main.rs for every flag");
+}
+
 fn info() {
     let cfg = ModelConfig::tiny();
     println!("dense config: {cfg:?}  params={}", cfg.param_count());
@@ -579,13 +744,13 @@ fn main() {
             println!("{}", toks.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(","));
         }
         "serve" => serve(&args),
+        "client" => client(&args),
         "profile" => profile(&args),
         "runtime-check" => runtime_check(&args),
         "info" => info(),
+        "help" | "" => help(),
         other => {
-            eprintln!(
-                "unknown command '{other}'\ncommands: tables table1..table8 figs fig1 fig3 fig4 fig5a fig5b fig6 fig7 fig8 serve profile runtime-check info"
-            );
+            eprintln!("unknown command '{other}'\ncommands: {COMMANDS}");
             std::process::exit(2);
         }
     }

@@ -28,6 +28,9 @@ pub struct MetricsSnapshot {
     pub routed: Vec<u64>,
     pub spans_recorded: u64,
     pub spans_dropped: u64,
+    /// Serving frontend wire latency (request line received → terminal
+    /// frame written), populated only for network `serve --listen` runs.
+    pub wire: super::LatencyHist,
 }
 
 impl MetricsSnapshot {
@@ -45,6 +48,7 @@ impl MetricsSnapshot {
                 snap.kernels = obs.profiles.rows();
                 snap.spans_recorded = obs.spans.recorded();
                 snap.spans_dropped = obs.spans.dropped();
+                snap.wire = obs.wire.clone();
             }
         }
         snap
@@ -81,6 +85,7 @@ impl MetricsSnapshot {
             routed: Vec::new(),
             spans_recorded: obs.spans.recorded(),
             spans_dropped: obs.spans.dropped(),
+            wire: obs.wire.clone(),
         }
     }
 
@@ -147,6 +152,7 @@ impl MetricsSnapshot {
             ("e2e_seconds", "End-to-end request latency.", &m.e2e_hist),
             ("spec_draft_seconds", "Per-sequence speculative draft loop.", &m.draft_hist),
             ("spec_verify_seconds", "Per-sequence batched verify call.", &m.verify_hist),
+            ("wire_seconds", "Request line received to terminal frame written.", &self.wire),
         ] {
             s.push_str(&format!("# HELP is_{name} {help}\n# TYPE is_{name} summary\n"));
             for q in [0.5, 0.9, 0.99] {
@@ -238,7 +244,7 @@ impl MetricsSnapshot {
              \"pool\":{{\"blocks_total\":{},\"peak_blocks_in_use\":{},\"prefix_hit_rate\":{}}},\n\
              \"spec\":{{\"steps\":{},\"draft_tokens\":{},\"accepted_tokens\":{},\"rollbacks\":{},\"rejected_tokens\":{},\"acceptance_rate\":{},\"draft\":{},\"verify\":{}}},\n\
              \"scheduling\":{{\"prefill_overlaps\":{},\"steal_events\":{},\"requests_stolen\":{}}},\n\
-             \"latency\":{{\"ttft\":{},\"tpot\":{},\"queue_wait\":{},\"e2e\":{}}},\n\
+             \"latency\":{{\"ttft\":{},\"tpot\":{},\"queue_wait\":{},\"e2e\":{},\"wire\":{}}},\n\
              \"lanes\":[{}],\n\
              \"kernels\":[{}],\n\
              \"spans\":{{\"recorded\":{},\"dropped\":{}}},\n\
@@ -272,6 +278,7 @@ impl MetricsSnapshot {
             hist(&m.tpot_hist),
             hist(&m.queue_wait_hist),
             hist(&m.e2e_hist),
+            hist(&self.wire),
             lanes.join(","),
             kernels.join(","),
             self.spans_recorded,
@@ -343,8 +350,9 @@ fn fnum(x: f64) -> String {
     }
 }
 
-/// JSON string literal with escaping.
-fn jstr(s: &str) -> String {
+/// JSON string literal with escaping. Crate-visible so the serving
+/// frontend's protocol frames reuse the same escaper.
+pub(crate) fn jstr(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -748,6 +756,19 @@ mod tests {
         assert_eq!(doc.path("scheduling.prefill_overlaps").unwrap().as_f64(), Some(7.0));
         assert_eq!(doc.path("scheduling.steal_events").unwrap().as_f64(), Some(3.0));
         assert_eq!(doc.path("scheduling.requests_stolen").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn wire_latency_exports_in_both_formats() {
+        let mut snap = sample_snapshot();
+        snap.wire.record(Duration::from_millis(6));
+        snap.wire.record(Duration::from_millis(18));
+        let text = snap.prometheus();
+        assert!(text.contains("is_wire_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("is_wire_seconds_count 2"));
+        let doc = parse_json(&snap.json()).unwrap();
+        assert_eq!(doc.path("latency.wire.count").unwrap().as_f64(), Some(2.0));
+        assert!(doc.path("latency.wire.p99_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -73,6 +73,11 @@ pub struct Obs {
     pub prefill_overlaps: AtomicU64,
     pub steal_events: AtomicU64,
     pub requests_stolen: AtomicU64,
+    /// Serving frontend: wire latency per streamed request (receipt of the
+    /// `generate` line → terminal frame handed to the writer thread).
+    /// Engine-side `e2e` covers submit → completion; `wire` adds protocol
+    /// parse, admission, and frame fan-out on top.
+    pub wire: LatencyHist,
 }
 
 impl Obs {
@@ -100,6 +105,7 @@ impl Obs {
             prefill_overlaps: AtomicU64::new(0),
             steal_events: AtomicU64::new(0),
             requests_stolen: AtomicU64::new(0),
+            wire: LatencyHist::new(),
         })
     }
 

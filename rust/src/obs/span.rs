@@ -46,6 +46,15 @@ pub enum SpanKind {
     /// stolen. Recorded by the thief's replica thread as a root span
     /// (migration happens between engine steps, outside any Step).
     Steal,
+    /// One client TCP connection to the serving frontend (accept → socket
+    /// close), tag = generate requests served on it. Root span.
+    Connection,
+    /// One streamed request on the wire: receipt of the `generate` line →
+    /// terminal frame handed to the writer, tag = the client-chosen
+    /// request id. Root span — the engine-side `Request` span covers the
+    /// compute slice; `Stream` adds queueing plus frame fan-out, so the
+    /// difference is serving overhead.
+    Stream,
 }
 
 /// One completed span. `start_ns` is relative to the owning

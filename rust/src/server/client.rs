@@ -1,0 +1,267 @@
+//! Blocking protocol client: connect, send `generate` ops, collect the
+//! streamed frames. Used by the `client` CLI subcommand, the loopback
+//! integration tests, the perf-smoke serving gate, and
+//! `examples/serve_client.rs`.
+
+use crate::obs::export::{parse_json, JsonValue};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, ErrorKind, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// One `generate` op to send. `id` is client-chosen and must be unique
+/// within the connection — frames are routed back by it.
+#[derive(Clone, Debug)]
+pub struct ClientRequest {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub deadline_ms: Option<u64>,
+    pub stop_at_eos: bool,
+}
+
+/// Everything the server streamed back for one request.
+#[derive(Clone, Debug, Default)]
+pub struct StreamOutcome {
+    pub id: u64,
+    /// Tokens in arrival order, index-checked against the frame stream.
+    pub streamed: Vec<u32>,
+    /// The `done` frame's authoritative token list.
+    pub tokens: Vec<u32>,
+    /// `stop` / `capacity` / `failed` / `cancelled` when `done` arrived.
+    pub finish: Option<String>,
+    /// `(code, message)` when an `error` frame ended the request.
+    pub error: Option<(String, String)>,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+}
+
+impl StreamOutcome {
+    /// Did the stream arrive complete and in order?
+    pub fn intact(&self) -> bool {
+        self.error.is_none() && self.finish.is_some() && self.streamed == self.tokens
+    }
+}
+
+/// Render a `generate` line (newline-terminated).
+pub fn generate_line(r: &ClientRequest) -> String {
+    let toks: Vec<String> = r.prompt.iter().map(|t| t.to_string()).collect();
+    let mut s = format!(
+        "{{\"op\":\"generate\",\"id\":{},\"prompt\":[{}],\"max_new_tokens\":{}",
+        r.id,
+        toks.join(","),
+        r.max_new_tokens
+    );
+    if let Some(ms) = r.deadline_ms {
+        s.push_str(&format!(",\"deadline_ms\":{ms}"));
+    }
+    if r.stop_at_eos {
+        s.push_str(",\"stop_at_eos\":true");
+    }
+    s.push_str("}\n");
+    s
+}
+
+/// Open one connection, send every request, and read frames until each
+/// has a terminal (`done` or `error`) frame. Returns outcomes in the
+/// order of `reqs`. Token interleaving across requests is expected — the
+/// engine batches them; per-request `index` ordering is verified.
+pub fn drive(addr: &SocketAddr, reqs: &[ClientRequest]) -> std::io::Result<Vec<StreamOutcome>> {
+    let stream = TcpStream::connect(addr)?;
+    let mut w = BufWriter::new(stream.try_clone()?);
+    for r in reqs {
+        w.write_all(generate_line(r).as_bytes())?;
+    }
+    w.flush()?;
+
+    let mut by_id: HashMap<u64, usize> = HashMap::new();
+    let mut outcomes: Vec<StreamOutcome> = Vec::with_capacity(reqs.len());
+    for (i, r) in reqs.iter().enumerate() {
+        if by_id.insert(r.id, i).is_some() {
+            return Err(bad_proto(format!("duplicate client request id {}", r.id)));
+        }
+        outcomes.push(StreamOutcome { id: r.id, ..StreamOutcome::default() });
+    }
+
+    let mut pending = reqs.len();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    while pending > 0 {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Err(std::io::Error::new(
+                ErrorKind::UnexpectedEof,
+                format!("server closed with {pending} request(s) unresolved"),
+            ));
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let doc = parse_json(trimmed).map_err(|e| bad_proto(format!("bad frame: {e}")))?;
+        let ty = doc
+            .get("type")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| bad_proto("frame without \"type\"".into()))?;
+        match ty {
+            "pong" | "draining" => continue,
+            "token" => {
+                let o = lookup(&doc, &by_id, &mut outcomes)?;
+                let index = field_u64(&doc, "index")? as usize;
+                let token = field_u64(&doc, "token")? as u32;
+                if index != o.streamed.len() {
+                    return Err(bad_proto(format!(
+                        "request {}: token index {} after {} streamed",
+                        o.id,
+                        index,
+                        o.streamed.len()
+                    )));
+                }
+                o.streamed.push(token);
+            }
+            "done" => {
+                let o = lookup(&doc, &by_id, &mut outcomes)?;
+                let toks = doc
+                    .get("tokens")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| bad_proto("done frame without \"tokens\"".into()))?;
+                o.tokens = toks.iter().filter_map(|t| t.as_f64()).map(|x| x as u32).collect();
+                o.finish =
+                    doc.get("finish").and_then(|v| v.as_str()).map(|s| s.to_string());
+                o.ttft_ms = doc.get("ttft_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                o.total_ms = doc.get("total_ms").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                pending -= 1;
+            }
+            "error" => {
+                let code = doc
+                    .get("code")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("unknown")
+                    .to_string();
+                let msg = doc
+                    .get("message")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string();
+                if matches!(doc.get("id"), None | Some(JsonValue::Null)) {
+                    // unattributable — we only send well-formed lines
+                    return Err(bad_proto(format!("server error [{code}]: {msg}")));
+                }
+                let o = lookup(&doc, &by_id, &mut outcomes)?;
+                o.error = Some((code, msg));
+                pending -= 1;
+            }
+            other => return Err(bad_proto(format!("unknown frame type \"{other}\""))),
+        }
+    }
+    Ok(outcomes)
+}
+
+/// Drive several connections concurrently, one per request batch.
+/// Returns per-connection outcomes in batch order.
+pub fn drive_concurrent(
+    addr: &SocketAddr,
+    batches: &[Vec<ClientRequest>],
+) -> std::io::Result<Vec<Vec<StreamOutcome>>> {
+    let mut results: Vec<std::io::Result<Vec<StreamOutcome>>> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            batches.iter().map(|b| s.spawn(move || drive(addr, b))).collect();
+        for h in handles {
+            results.push(h.join().expect("client thread panicked"));
+        }
+    });
+    results.into_iter().collect()
+}
+
+/// Request a graceful drain and wait for the `draining` ack.
+pub fn send_shutdown(addr: &SocketAddr) -> std::io::Result<()> {
+    let stream = TcpStream::connect(addr)?;
+    let mut w = BufWriter::new(stream.try_clone()?);
+    w.write_all(b"{\"op\":\"shutdown\"}\n")?;
+    w.flush()?;
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    if line.contains("\"draining\"") {
+        Ok(())
+    } else {
+        Err(bad_proto(format!("expected draining ack, got: {}", line.trim())))
+    }
+}
+
+fn lookup<'a>(
+    doc: &JsonValue,
+    by_id: &HashMap<u64, usize>,
+    outcomes: &'a mut [StreamOutcome],
+) -> std::io::Result<&'a mut StreamOutcome> {
+    let id = field_u64(doc, "id")?;
+    let i = *by_id
+        .get(&id)
+        .ok_or_else(|| bad_proto(format!("frame for unknown request id {id}")))?;
+    Ok(&mut outcomes[i])
+}
+
+fn field_u64(doc: &JsonValue, key: &str) -> std::io::Result<u64> {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .map(|x| x as u64)
+        .ok_or_else(|| bad_proto(format!("frame missing numeric \"{key}\"")))
+}
+
+fn bad_proto(msg: String) -> std::io::Error {
+    std::io::Error::new(ErrorKind::InvalidData, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::protocol::{parse_op, ClientOp};
+
+    #[test]
+    fn generate_line_round_trips_through_the_server_parser() {
+        let r = ClientRequest {
+            id: 5,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 7,
+            deadline_ms: Some(400),
+            stop_at_eos: true,
+        };
+        let ClientOp::Generate(g) = parse_op(generate_line(&r).trim()).unwrap() else {
+            panic!("not a generate op")
+        };
+        assert_eq!(g.id, 5);
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert_eq!(g.max_new_tokens, 7);
+        assert_eq!(g.deadline_ms, Some(400));
+        assert!(g.stop_at_eos);
+
+        // minimal form omits the optional fields entirely
+        let min = ClientRequest {
+            id: 0,
+            prompt: vec![],
+            max_new_tokens: 1,
+            deadline_ms: None,
+            stop_at_eos: false,
+        };
+        let l = generate_line(&min);
+        assert!(!l.contains("deadline_ms") && !l.contains("stop_at_eos"), "{l}");
+        assert!(parse_op(l.trim()).is_ok());
+    }
+
+    #[test]
+    fn outcome_intact_requires_matching_stream() {
+        let mut o = StreamOutcome {
+            id: 1,
+            streamed: vec![4, 5],
+            tokens: vec![4, 5],
+            finish: Some("stop".into()),
+            ..StreamOutcome::default()
+        };
+        assert!(o.intact());
+        o.streamed.pop();
+        assert!(!o.intact(), "short stream is not intact");
+        o.streamed.push(5);
+        o.error = Some(("overloaded".into(), "".into()));
+        assert!(!o.intact(), "errored request is not intact");
+    }
+}

@@ -1,0 +1,406 @@
+//! Per-connection plumbing: the [`StreamHub`] that bridges engine token
+//! emission to client sockets, and the reader/writer thread bodies.
+//!
+//! Each accepted socket gets two threads. The **reader** parses request
+//! lines, runs admission, and forwards [`Request`]s to the router's
+//! intake channel; the **writer** drains a per-connection frame channel
+//! to the socket. Engine replica threads never touch a socket: they call
+//! the hub's [`TokenSink`] hooks, which look up the request's entry and
+//! enqueue pre-rendered frames on the owning connection's channel. A slow
+//! or dead client therefore never stalls a decode step.
+//!
+//! Disconnect handling is flag-based: reader EOF (or a writer I/O error)
+//! sets the `cancel` flag on every in-flight entry of that connection.
+//! The engine polls [`TokenSink::cancelled`] each step, reaps the
+//! sequence, frees its KV blocks, and the terminal `on_finish` releases
+//! the admission slot — so an abandoned request costs at most one engine
+//! step of KV residency.
+
+use super::gate::{Denied, Gate};
+use super::protocol::{self, ClientOp};
+use crate::coordinator::{FinishReason, Request, RequestId, Response, TokenSink};
+use crate::obs::{Obs, SpanKind};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Routing state for one in-flight request.
+pub(crate) struct StreamEntry {
+    /// Client-chosen id, echoed on every frame.
+    pub client_id: u64,
+    /// Owning connection (for disconnect fan-out).
+    pub conn: u64,
+    /// The owning connection's frame channel.
+    pub tx: mpsc::Sender<String>,
+    /// Set on disconnect; the engine reaps the request at its next step.
+    pub cancel: Arc<AtomicBool>,
+    /// Absolute expiry from `deadline_ms`, if any.
+    pub deadline: Option<Instant>,
+    /// Receipt time — the wire-latency clock.
+    pub started: Instant,
+    /// Receipt in obs-epoch ns, for the `Stream` span.
+    pub start_ns: u64,
+}
+
+/// Shared token-to-socket bridge; one per server, attached to every
+/// engine replica via [`crate::coordinator::Router::set_token_sink`].
+pub struct StreamHub {
+    entries: Mutex<HashMap<RequestId, StreamEntry>>,
+    pub gate: Gate,
+    obs: Option<Arc<Obs>>,
+    /// Requests reaped because their client disconnected mid-stream.
+    pub cancelled_disconnect: AtomicU64,
+    /// Requests reaped at deadline expiry (client still connected — it
+    /// gets a `deadline_exceeded` error frame).
+    pub deadline_expired: AtomicU64,
+}
+
+impl StreamHub {
+    pub fn new(max_inflight: usize, obs: Option<Arc<Obs>>) -> StreamHub {
+        StreamHub {
+            entries: Mutex::new(HashMap::new()),
+            gate: Gate::new(max_inflight),
+            obs,
+            cancelled_disconnect: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn obs(&self) -> Option<&Arc<Obs>> {
+        self.obs.as_ref()
+    }
+
+    pub(crate) fn obs_now_ns(&self) -> u64 {
+        self.obs.as_ref().map(|o| o.now_ns()).unwrap_or(0)
+    }
+
+    /// Register an admitted request. Must happen BEFORE the request is
+    /// sent to the router, so no token can arrive unroutable.
+    pub(crate) fn register(&self, internal_id: RequestId, entry: StreamEntry) {
+        self.entries.lock().unwrap().insert(internal_id, entry);
+    }
+
+    /// Roll back a registration whose router hand-off failed; releases
+    /// the admission slot without a terminal frame.
+    pub(crate) fn withdraw(&self, internal_id: RequestId) {
+        if self.entries.lock().unwrap().remove(&internal_id).is_some() {
+            self.gate.release();
+        }
+    }
+
+    /// Disconnect fan-out: flag every in-flight request of `conn` for
+    /// engine-side reaping. Entries stay until their `on_finish`.
+    pub(crate) fn cancel_conn(&self, conn: u64) {
+        let entries = self.entries.lock().unwrap();
+        for e in entries.values() {
+            if e.conn == conn {
+                e.cancel.store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// In-flight entries (test/report introspection).
+    pub fn inflight_entries(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+}
+
+impl TokenSink for StreamHub {
+    fn on_token(&self, id: RequestId, index: usize, token: u32) {
+        let entries = self.entries.lock().unwrap();
+        if let Some(e) = entries.get(&id) {
+            if e.cancel.load(Ordering::Relaxed) {
+                return; // client gone — drop the frame, reap comes next step
+            }
+            let _ = e.tx.send(protocol::token_frame(e.client_id, index, token));
+        }
+    }
+
+    fn on_finish(&self, resp: &Response) {
+        let entry = self.entries.lock().unwrap().remove(&resp.id);
+        let Some(e) = entry else { return };
+        if resp.finish == FinishReason::Cancelled {
+            if e.cancel.load(Ordering::Relaxed) {
+                // disconnect reap: nobody is listening
+                self.cancelled_disconnect.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // deadline reap: the client is still there — tell it
+                self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                let _ = e.tx.send(protocol::error_frame(
+                    Some(e.client_id),
+                    "deadline_exceeded",
+                    "deadline expired before completion",
+                ));
+            }
+        } else {
+            let _ = e.tx.send(protocol::done_frame(e.client_id, resp));
+        }
+        if let Some(obs) = &self.obs {
+            let dur = e.started.elapsed();
+            obs.wire.record(dur);
+            let dur_ns = dur.as_nanos().min(u64::MAX as u128) as u64;
+            obs.record_span(SpanKind::Stream, "stream", 0, e.start_ns, dur_ns, e.client_id);
+        }
+        self.gate.release();
+    }
+
+    fn cancelled(&self, id: RequestId) -> bool {
+        let entries = self.entries.lock().unwrap();
+        match entries.get(&id) {
+            Some(e) => {
+                e.cancel.load(Ordering::Relaxed)
+                    || e.deadline.is_some_and(|d| Instant::now() >= d)
+            }
+            None => false,
+        }
+    }
+}
+
+/// Writer thread body: drain pre-rendered frames to the socket, one per
+/// line. Exits when every sender (the reader + all hub entries for this
+/// connection) is gone, or on the first write error — which flags the
+/// connection's requests for reaping.
+pub(crate) fn writer_loop(
+    stream: TcpStream,
+    frames: mpsc::Receiver<String>,
+    hub: &StreamHub,
+    conn_id: u64,
+) {
+    let mut w = BufWriter::new(stream);
+    for mut line in frames {
+        line.push('\n');
+        if w.write_all(line.as_bytes()).and_then(|_| w.flush()).is_err() {
+            hub.cancel_conn(conn_id);
+            break;
+        }
+    }
+}
+
+/// Reader thread body: parse lines, admit, forward. Returns only on EOF,
+/// socket error, or a server-side `shutdown(Read)` during drain — and
+/// always flags the connection's in-flight requests on the way out
+/// (harmless if the connection finished cleanly: entries are then gone).
+/// Records a `Connection` span (tag = generates admitted) at exit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reader_loop(
+    stream: TcpStream,
+    frame_tx: mpsc::Sender<String>,
+    hub: &Arc<StreamHub>,
+    req_tx: &mpsc::Sender<Request>,
+    next_internal_id: &AtomicU64,
+    conn_id: u64,
+    max_prompt: usize,
+) {
+    let started = Instant::now();
+    let start_ns = hub.obs_now_ns();
+    let mut admitted = 0u64;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let op = match protocol::parse_op(trimmed) {
+            Ok(op) => op,
+            Err(msg) => {
+                let _ = frame_tx.send(protocol::error_frame(None, "bad_request", &msg));
+                continue;
+            }
+        };
+        match op {
+            ClientOp::Ping => {
+                let _ = frame_tx.send(protocol::pong_frame());
+            }
+            ClientOp::Shutdown => {
+                hub.gate.begin_drain();
+                let _ = frame_tx.send(protocol::draining_frame());
+            }
+            ClientOp::Generate(g) => {
+                if g.prompt.len() > max_prompt {
+                    let _ = frame_tx.send(protocol::error_frame(
+                        Some(g.id),
+                        "oversized_prompt",
+                        &format!(
+                            "prompt length {} exceeds the model window {}",
+                            g.prompt.len(),
+                            max_prompt
+                        ),
+                    ));
+                    continue;
+                }
+                match hub.gate.try_admit() {
+                    Err(Denied::Overloaded) => {
+                        let _ = frame_tx.send(protocol::error_frame(
+                            Some(g.id),
+                            "overloaded",
+                            "in-flight ceiling reached; retry later",
+                        ));
+                        continue;
+                    }
+                    Err(Denied::Draining) => {
+                        let _ = frame_tx.send(protocol::error_frame(
+                            Some(g.id),
+                            "draining",
+                            "server is draining; not accepting new requests",
+                        ));
+                        continue;
+                    }
+                    Ok(()) => {}
+                }
+                let internal = next_internal_id.fetch_add(1, Ordering::Relaxed);
+                let now = Instant::now();
+                hub.register(
+                    internal,
+                    StreamEntry {
+                        client_id: g.id,
+                        conn: conn_id,
+                        tx: frame_tx.clone(),
+                        cancel: Arc::new(AtomicBool::new(false)),
+                        deadline: g.deadline_ms.map(|ms| now + Duration::from_millis(ms)),
+                        started: now,
+                        start_ns: hub.obs_now_ns(),
+                    },
+                );
+                let mut req = Request::greedy(internal, g.prompt, g.max_new_tokens);
+                req.stop_at_eos = g.stop_at_eos;
+                admitted += 1;
+                if req_tx.send(req).is_err() {
+                    // intake already closed (shutdown race): roll back
+                    hub.withdraw(internal);
+                    let _ = frame_tx.send(protocol::error_frame(
+                        Some(g.id),
+                        "draining",
+                        "service stopped before hand-off",
+                    ));
+                }
+            }
+        }
+    }
+    hub.cancel_conn(conn_id);
+    if let Some(obs) = hub.obs() {
+        let dur_ns = started.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        obs.record_span(SpanKind::Connection, "connection", 0, start_ns, dur_ns, admitted);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+    use std::time::Duration;
+
+    fn entry(client_id: u64, conn: u64, tx: mpsc::Sender<String>) -> StreamEntry {
+        StreamEntry {
+            client_id,
+            conn,
+            tx,
+            cancel: Arc::new(AtomicBool::new(false)),
+            deadline: None,
+            started: Instant::now(),
+            start_ns: 0,
+        }
+    }
+
+    fn resp(id: u64, finish: FinishReason) -> Response {
+        Response {
+            id,
+            prompt_len: 2,
+            tokens: vec![4, 5],
+            finish,
+            ttft: Duration::from_millis(1),
+            total: Duration::from_millis(2),
+        }
+    }
+
+    #[test]
+    fn tokens_route_to_the_owning_connection_with_client_ids() {
+        let hub = StreamHub::new(4, None);
+        let (tx_a, rx_a) = mpsc::channel();
+        let (tx_b, rx_b) = mpsc::channel();
+        hub.gate.try_admit().unwrap();
+        hub.gate.try_admit().unwrap();
+        hub.register(100, entry(1, 0, tx_a));
+        hub.register(101, entry(1, 1, tx_b)); // same client id, other conn
+        hub.on_token(100, 0, 42);
+        hub.on_token(101, 0, 43);
+        hub.on_token(999, 0, 44); // unknown request: silently dropped
+        assert_eq!(rx_a.try_recv().unwrap(), protocol::token_frame(1, 0, 42));
+        assert_eq!(rx_b.try_recv().unwrap(), protocol::token_frame(1, 0, 43));
+        hub.on_finish(&resp(100, FinishReason::Stop));
+        hub.on_finish(&resp(101, FinishReason::Stop));
+        assert!(rx_a.try_recv().unwrap().contains("\"type\":\"done\""));
+        assert_eq!(hub.gate.inflight(), 0);
+        assert_eq!(hub.inflight_entries(), 0);
+    }
+
+    #[test]
+    fn disconnect_flags_only_that_connections_requests() {
+        let hub = StreamHub::new(4, None);
+        let (tx, rx) = mpsc::channel();
+        hub.gate.try_admit().unwrap();
+        hub.gate.try_admit().unwrap();
+        hub.register(1, entry(10, 0, tx.clone()));
+        hub.register(2, entry(11, 1, tx));
+        hub.cancel_conn(0);
+        assert!(hub.cancelled(1));
+        assert!(!hub.cancelled(2));
+        // tokens for the cancelled request are suppressed
+        hub.on_token(1, 0, 7);
+        hub.on_token(2, 0, 8);
+        assert!(rx.try_recv().unwrap().contains("\"id\":11"));
+        assert!(rx.try_recv().is_err());
+        // the reap's terminal finish is silent and counted
+        hub.on_finish(&resp(1, FinishReason::Cancelled));
+        assert_eq!(hub.cancelled_disconnect.load(Relaxed), 1);
+        assert!(rx.try_recv().is_err());
+        assert_eq!(hub.gate.inflight(), 1, "other request still holds its slot");
+    }
+
+    #[test]
+    fn deadline_expiry_reports_a_structured_error() {
+        let hub = StreamHub::new(4, None);
+        let (tx, rx) = mpsc::channel();
+        hub.gate.try_admit().unwrap();
+        let mut e = entry(5, 0, tx);
+        e.deadline = Some(Instant::now() - Duration::from_millis(1));
+        hub.register(9, e);
+        assert!(hub.cancelled(9), "expired deadline reads as cancelled");
+        hub.on_finish(&resp(9, FinishReason::Cancelled));
+        assert_eq!(hub.deadline_expired.load(Relaxed), 1);
+        let frame = rx.try_recv().unwrap();
+        assert!(frame.contains("\"code\":\"deadline_exceeded\""), "{frame}");
+        assert!(frame.contains("\"id\":5"), "{frame}");
+        assert_eq!(hub.gate.inflight(), 0);
+    }
+
+    #[test]
+    fn unknown_requests_are_never_cancelled() {
+        let hub = StreamHub::new(4, None);
+        assert!(!hub.cancelled(12345));
+        // finishing an unknown request is a no-op, not a panic
+        hub.on_finish(&resp(12345, FinishReason::Stop));
+    }
+
+    #[test]
+    fn wire_latency_and_stream_span_record_on_finish() {
+        let obs = Obs::new(16);
+        let hub = StreamHub::new(4, Some(obs.clone()));
+        let (tx, _rx) = mpsc::channel();
+        hub.gate.try_admit().unwrap();
+        hub.register(3, entry(8, 0, tx));
+        hub.on_finish(&resp(3, FinishReason::Stop));
+        assert_eq!(obs.wire.count(), 1);
+        let spans = obs.spans.snapshot();
+        let s = spans.iter().find(|s| s.kind == SpanKind::Stream).unwrap();
+        assert_eq!(s.tag, 8, "Stream span tags the client id");
+    }
+}

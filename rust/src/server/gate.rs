@@ -1,0 +1,148 @@
+//! Admission control: a lock-free in-flight counter with a hard ceiling,
+//! plus the drain latch.
+//!
+//! Every accepted `generate` holds one admission slot from
+//! [`Gate::try_admit`] until the hub's terminal `on_finish` calls
+//! [`Gate::release`] — so "in flight" covers queued, running, and
+//! cancelled-but-not-yet-reaped requests alike. Past the ceiling the
+//! server sheds load with a structured `overloaded` error instead of
+//! queueing without bound; after [`Gate::begin_drain`] it sheds with
+//! `draining`. The drain latch is one-way: the server finishes what it
+//! admitted and exits.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Why admission was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Denied {
+    /// In-flight ceiling reached — retry later.
+    Overloaded,
+    /// Graceful shutdown in progress — no new work, ever.
+    Draining,
+}
+
+/// See the module docs.
+pub struct Gate {
+    max_inflight: usize,
+    inflight: AtomicUsize,
+    draining: AtomicBool,
+    /// Requests shed at the ceiling / after the drain latch.
+    pub shed_overloaded: AtomicU64,
+    pub shed_draining: AtomicU64,
+}
+
+impl Gate {
+    pub fn new(max_inflight: usize) -> Gate {
+        Gate {
+            max_inflight: max_inflight.max(1),
+            inflight: AtomicUsize::new(0),
+            draining: AtomicBool::new(false),
+            shed_overloaded: AtomicU64::new(0),
+            shed_draining: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim an admission slot. Drain is checked first: a draining server
+    /// refuses even when idle.
+    pub fn try_admit(&self) -> Result<(), Denied> {
+        if self.draining.load(Ordering::Acquire) {
+            self.shed_draining.fetch_add(1, Ordering::Relaxed);
+            return Err(Denied::Draining);
+        }
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_inflight {
+                self.shed_overloaded.fetch_add(1, Ordering::Relaxed);
+                return Err(Denied::Overloaded);
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Ok(()),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Return a slot claimed by [`Gate::try_admit`] — exactly once per
+    /// admitted request, at its terminal frame.
+    pub fn release(&self) {
+        let prev = self.inflight.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "release without a matching admit");
+    }
+
+    /// Flip the one-way drain latch: stop admitting, finish in-flight.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering::Relaxed;
+
+    #[test]
+    fn admits_to_ceiling_then_sheds() {
+        let g = Gate::new(2);
+        assert_eq!(g.try_admit(), Ok(()));
+        assert_eq!(g.try_admit(), Ok(()));
+        assert_eq!(g.try_admit(), Err(Denied::Overloaded));
+        assert_eq!(g.inflight(), 2);
+        assert_eq!(g.shed_overloaded.load(Relaxed), 1);
+        g.release();
+        assert_eq!(g.try_admit(), Ok(()), "released slot is reusable");
+    }
+
+    #[test]
+    fn drain_latch_wins_over_free_slots() {
+        let g = Gate::new(8);
+        g.try_admit().unwrap();
+        g.begin_drain();
+        assert!(g.draining());
+        assert_eq!(g.try_admit(), Err(Denied::Draining));
+        assert_eq!(g.shed_draining.load(Relaxed), 1);
+        // the in-flight request still drains to zero
+        g.release();
+        assert_eq!(g.inflight(), 0);
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_ceiling() {
+        let g = Gate::new(5);
+        let admitted = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        if g.try_admit().is_ok() {
+                            admitted.fetch_add(1, Relaxed);
+                            assert!(g.inflight() <= 5);
+                            g.release();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(g.inflight(), 0);
+        assert!(admitted.load(Relaxed) > 0);
+    }
+
+    #[test]
+    fn zero_ceiling_clamps_to_one() {
+        let g = Gate::new(0);
+        assert_eq!(g.try_admit(), Ok(()));
+        assert_eq!(g.try_admit(), Err(Denied::Overloaded));
+    }
+}

@@ -1,0 +1,241 @@
+//! L4 serving frontend: a std-only TCP server that exposes the
+//! [`crate::coordinator`] runtime over newline-delimited JSON.
+//!
+//! The shape (see `DESIGN.md` § Serving frontend for the full protocol
+//! grammar and the shed/drain state machine):
+//!
+//! * [`protocol`] — request/frame grammar on top of the crate's own JSON
+//!   reader; malformed input gets structured `bad_request` errors.
+//! * [`gate`] — admission control: a hard in-flight ceiling (shed with
+//!   `overloaded`) and the one-way drain latch (shed with `draining`).
+//! * [`connection`] — per-socket reader/writer threads and the
+//!   [`StreamHub`] token sink that fans engine emissions out to the
+//!   owning connection the moment they are produced — no buffering of
+//!   whole completions anywhere on the path.
+//! * [`client`] — a blocking client used by the `client` CLI subcommand,
+//!   the loopback tests, and `examples/serve_client.rs`.
+//!
+//! Threading: `Server::run` drives one [`Router::run_service`] thread
+//! (which owns the engine replica threads), one acceptor thread, and a
+//! reader+writer pair per connection — all inside one `std::thread::scope`
+//! so shutdown is a join, not a detach. Graceful drain is triggered by a
+//! `shutdown` op: the gate latches, the acceptor stops, in-flight
+//! requests stream to completion, sockets unblock via
+//! `shutdown(Shutdown::Read)`, and `run` returns a [`ServerReport`].
+
+pub mod client;
+pub mod connection;
+pub mod gate;
+pub mod protocol;
+
+pub use client::{drive, send_shutdown, ClientRequest, StreamOutcome};
+pub use connection::StreamHub;
+pub use gate::{Denied, Gate};
+pub use protocol::{ClientOp, GenerateOp};
+
+use crate::coordinator::{Request, Response, Router};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Admission ceiling: `generate` ops past this many in-flight
+    /// requests shed with an `overloaded` error.
+    pub max_inflight: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { max_inflight: 64 }
+    }
+}
+
+/// What a completed serve run did, for logs and tests. Engine-side
+/// metrics stay in [`Router::merged_metrics`]; this covers the wire.
+#[derive(Debug)]
+pub struct ServerReport {
+    /// Every admitted request's engine response (internal ids,
+    /// ascending), including cancelled ones.
+    pub responses: Vec<Response>,
+    pub connections: u64,
+    pub shed_overloaded: u64,
+    pub shed_draining: u64,
+    pub cancelled_disconnect: u64,
+    pub deadline_expired: u64,
+}
+
+/// See the module docs.
+pub struct Server {
+    listener: TcpListener,
+    cfg: ServerConfig,
+}
+
+impl Server {
+    /// Bind the listen socket. `addr` may use port 0; read the chosen
+    /// port back via [`Server::local_addr`].
+    pub fn bind(addr: &str, cfg: ServerConfig) -> std::io::Result<Server> {
+        Ok(Server { listener: TcpListener::bind(addr)?, cfg })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Serve until a client sends `{"op":"shutdown"}`, then drain and
+    /// return. Attaches a [`StreamHub`] to every replica as the token
+    /// sink, so tokens stream to sockets as the engines emit them.
+    pub fn run(&self, router: &mut Router) -> ServerReport {
+        assert!(!router.engines.is_empty(), "server needs at least one engine");
+        let max_prompt = router.engines[0].model.config.max_seq;
+        let obs = router.engines[0].obs().cloned();
+        let hub = Arc::new(StreamHub::new(self.cfg.max_inflight, obs));
+        router.set_token_sink(hub.clone());
+
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let next_internal_id = AtomicU64::new(0);
+        let stop = AtomicBool::new(false);
+        // every accepted socket, for the drain-time reader unblock
+        let conn_socks: Mutex<Vec<TcpStream>> = Mutex::new(Vec::new());
+        let connections = AtomicU64::new(0);
+        let mut responses = Vec::new();
+
+        std::thread::scope(|s| {
+            let service = s.spawn(|| router.run_service(req_rx));
+
+            let acceptor = {
+                let hub = hub.clone();
+                let (listener, stop) = (&self.listener, &stop);
+                let (next_internal_id, conn_socks) = (&next_internal_id, &conn_socks);
+                let connections = &connections;
+                // req_tx moves in: when the acceptor exits, the master
+                // intake sender drops, and run_service ends once the
+                // per-connection clones (held by readers) drop too.
+                s.spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let Ok(sock) = conn else { continue };
+                        let (Ok(rsock), Ok(wsock)) = (sock.try_clone(), sock.try_clone())
+                        else {
+                            continue;
+                        };
+                        conn_socks.lock().unwrap().push(sock);
+                        let conn_id = connections.fetch_add(1, Ordering::Relaxed);
+                        let (frame_tx, frame_rx) = mpsc::channel::<String>();
+                        let whub = hub.clone();
+                        s.spawn(move || {
+                            connection::writer_loop(wsock, frame_rx, &whub, conn_id)
+                        });
+                        let rhub = hub.clone();
+                        let rtx = req_tx.clone();
+                        s.spawn(move || {
+                            connection::reader_loop(
+                                rsock,
+                                frame_tx,
+                                &rhub,
+                                &rtx,
+                                next_internal_id,
+                                conn_id,
+                                max_prompt,
+                            )
+                        });
+                    }
+                })
+            };
+
+            // Drain sequencing: wait for the latch AND an empty gate, then
+            // (1) stop + self-connect to unblock the blocking accept,
+            // (2) join the acceptor — no new sockets register after this,
+            // (3) shutdown(Read) every socket so parked readers see EOF
+            //     and drop their intake senders (pending writes survive:
+            //     only the read half closes),
+            // (4) join the service — all senders gone, backlog drained.
+            while !(hub.gate.draining() && hub.gate.inflight() == 0) {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            stop.store(true, Ordering::Relaxed);
+            let _ = TcpStream::connect(self.local_addr());
+            acceptor.join().expect("acceptor thread panicked");
+            for sock in conn_socks.lock().unwrap().iter() {
+                let _ = sock.shutdown(Shutdown::Read);
+            }
+            responses = service.join().expect("service thread panicked");
+        });
+
+        use Ordering::Relaxed;
+        ServerReport {
+            responses,
+            connections: connections.load(Relaxed),
+            shed_overloaded: hub.gate.shed_overloaded.load(Relaxed),
+            shed_draining: hub.gate.shed_draining.load(Relaxed),
+            cancelled_disconnect: hub.cancelled_disconnect.load(Relaxed),
+            deadline_expired: hub.deadline_expired.load(Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Engine, EngineConfig, Policy};
+    use crate::model::{ModelConfig, ModelWeights, Transformer};
+    use std::sync::Arc;
+
+    fn tiny_router() -> Router {
+        let cfg = ModelConfig {
+            n_layers: 1,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 64,
+            vocab: 64,
+            max_seq: 32,
+            n_experts: None,
+        };
+        let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 1)));
+        let e = Engine::new(model, EngineConfig { max_batch: 4, kv_token_budget: 512, seed: 0 });
+        Router::new(vec![e], Policy::LeastLoaded)
+    }
+
+    #[test]
+    fn boots_serves_and_drains_over_loopback() {
+        let server = Server::bind("127.0.0.1:0", ServerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let mut router = tiny_router();
+        let driver = std::thread::spawn(move || {
+            let reqs = vec![ClientRequest {
+                id: 1,
+                prompt: vec![3, 4, 5],
+                max_new_tokens: 4,
+                deadline_ms: None,
+                stop_at_eos: false,
+            }];
+            let outcomes = drive(&addr, &reqs).unwrap();
+            send_shutdown(&addr).unwrap();
+            outcomes
+        });
+        let report = server.run(&mut router);
+        let outcomes = driver.join().unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].finish.as_deref(), Some("stop"));
+        assert_eq!(outcomes[0].streamed, outcomes[0].tokens);
+        assert_eq!(outcomes[0].streamed.len(), 4);
+        assert_eq!(report.responses.len(), 1);
+        assert_eq!(report.connections, 2, "driver + shutdown connections");
+        assert_eq!(report.cancelled_disconnect, 0);
+    }
+
+    #[test]
+    fn shutdown_only_run_exits_with_empty_report() {
+        let server = Server::bind("127.0.0.1:0", ServerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let mut router = tiny_router();
+        let driver = std::thread::spawn(move || send_shutdown(&addr).unwrap());
+        let report = server.run(&mut router);
+        driver.join().unwrap();
+        assert!(report.responses.is_empty());
+        assert_eq!(report.shed_overloaded, 0);
+    }
+}

@@ -1,0 +1,265 @@
+//! Wire protocol: newline-delimited JSON, one object per line in both
+//! directions, parsed with the crate's own dependency-free reader
+//! ([`crate::obs::export::parse_json`]).
+//!
+//! Client → server ops:
+//! ```text
+//! {"op":"generate","id":1,"prompt":[3,14,15],"max_new_tokens":8,
+//!  "deadline_ms":500,"stop_at_eos":false}
+//! {"op":"ping"}
+//! {"op":"shutdown"}
+//! ```
+//! `id` is client-chosen and scoped to the connection; `deadline_ms` and
+//! `stop_at_eos` are optional (no deadline / run to `max_new_tokens`).
+//!
+//! Server → client frames (`id` always echoes the client's):
+//! ```text
+//! {"type":"token","id":1,"index":0,"token":42}
+//! {"type":"done","id":1,"finish":"stop","tokens":[42,7],"ttft_ms":1.2,"total_ms":3.4}
+//! {"type":"error","id":1,"code":"overloaded","message":"..."}
+//! {"type":"pong"}
+//! {"type":"draining"}
+//! ```
+//! Token frames stream as the engine emits; `done` carries the full token
+//! list again so clients can assert the stream arrived intact. Error codes:
+//! `bad_request`, `oversized_prompt`, `overloaded`, `draining`,
+//! `deadline_exceeded`. A malformed line never kills the connection — it
+//! gets a `bad_request` error (with `"id":null`) and the reader keeps going.
+
+use crate::coordinator::{FinishReason, Response};
+use crate::obs::export::{jstr, parse_json, JsonValue};
+
+/// A parsed client request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientOp {
+    Generate(GenerateOp),
+    Ping,
+    Shutdown,
+}
+
+/// The `generate` op's fields.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateOp {
+    /// Client-chosen id, echoed on every frame for this request.
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Wall-clock budget from receipt; expiry cancels the request with a
+    /// `deadline_exceeded` error frame.
+    pub deadline_ms: Option<u64>,
+    pub stop_at_eos: bool,
+}
+
+/// Parse one request line. The error string is client-facing (it rides in
+/// the `bad_request` frame), so it names the missing/invalid field.
+pub fn parse_op(line: &str) -> Result<ClientOp, String> {
+    let doc = parse_json(line).map_err(|e| format!("invalid JSON: {e}"))?;
+    let op = doc.get("op").and_then(|v| v.as_str()).ok_or("missing string field \"op\"")?;
+    match op {
+        "ping" => Ok(ClientOp::Ping),
+        "shutdown" => Ok(ClientOp::Shutdown),
+        "generate" => {
+            let id = num_field(&doc, "id")?;
+            if id < 0.0 || id.fract() != 0.0 {
+                return Err("\"id\" must be a non-negative integer".into());
+            }
+            let prompt_v = doc
+                .get("prompt")
+                .and_then(|v| v.as_arr())
+                .ok_or("generate needs a \"prompt\" array of token ids")?;
+            let mut prompt = Vec::with_capacity(prompt_v.len());
+            for t in prompt_v {
+                let x = t.as_f64().ok_or("prompt entries must be numeric token ids")?;
+                if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+                    return Err("prompt entries must be u32 token ids".into());
+                }
+                prompt.push(x as u32);
+            }
+            let max_new = num_field(&doc, "max_new_tokens")?;
+            if max_new < 0.0 || max_new.fract() != 0.0 {
+                return Err("\"max_new_tokens\" must be a non-negative integer".into());
+            }
+            let deadline_ms = match doc.get("deadline_ms") {
+                None | Some(JsonValue::Null) => None,
+                Some(v) => Some(
+                    v.as_f64()
+                        .filter(|x| *x >= 0.0)
+                        .ok_or("\"deadline_ms\" must be a non-negative number")?
+                        as u64,
+                ),
+            };
+            let stop_at_eos = match doc.get("stop_at_eos") {
+                None | Some(JsonValue::Null) => false,
+                Some(JsonValue::Bool(b)) => *b,
+                Some(_) => return Err("\"stop_at_eos\" must be a boolean".into()),
+            };
+            Ok(ClientOp::Generate(GenerateOp {
+                id: id as u64,
+                prompt,
+                max_new_tokens: max_new as usize,
+                deadline_ms,
+                stop_at_eos,
+            }))
+        }
+        other => Err(format!("unknown op \"{other}\"")),
+    }
+}
+
+fn num_field(doc: &JsonValue, key: &str) -> Result<f64, String> {
+    doc.get(key)
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| format!("generate needs a numeric \"{key}\""))
+}
+
+/// `finish` string on the `done` frame.
+pub fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Stop => "stop",
+        FinishReason::Capacity => "capacity",
+        FinishReason::Failed => "failed",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+/// One streamed token. Frames carry no trailing newline; the writer
+/// thread appends it.
+pub fn token_frame(id: u64, index: usize, token: u32) -> String {
+    format!("{{\"type\":\"token\",\"id\":{id},\"index\":{index},\"token\":{token}}}")
+}
+
+/// Terminal success frame: the full token list rides along so clients can
+/// verify the stream arrived intact, plus per-request latency.
+pub fn done_frame(id: u64, resp: &Response) -> String {
+    let toks: Vec<String> = resp.tokens.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"type\":\"done\",\"id\":{id},\"finish\":{},\"tokens\":[{}],\"ttft_ms\":{:.3},\"total_ms\":{:.3}}}",
+        jstr(finish_str(resp.finish)),
+        toks.join(","),
+        resp.ttft.as_secs_f64() * 1e3,
+        resp.total.as_secs_f64() * 1e3,
+    )
+}
+
+/// Terminal failure frame. `id` is `None` (rendered `null`) only for
+/// lines too malformed to carry one.
+pub fn error_frame(id: Option<u64>, code: &str, message: &str) -> String {
+    let id = id.map_or_else(|| "null".to_string(), |i| i.to_string());
+    format!(
+        "{{\"type\":\"error\",\"id\":{id},\"code\":{},\"message\":{}}}",
+        jstr(code),
+        jstr(message)
+    )
+}
+
+pub fn pong_frame() -> String {
+    "{\"type\":\"pong\"}".to_string()
+}
+
+/// Ack for a `shutdown` op: the gate stopped admitting; in-flight
+/// requests still stream to completion.
+pub fn draining_frame() -> String {
+    "{\"type\":\"draining\"}".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parses_full_generate_op() {
+        let op = parse_op(
+            r#"{"op":"generate","id":7,"prompt":[1,2,3],"max_new_tokens":8,"deadline_ms":250,"stop_at_eos":true}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            op,
+            ClientOp::Generate(GenerateOp {
+                id: 7,
+                prompt: vec![1, 2, 3],
+                max_new_tokens: 8,
+                deadline_ms: Some(250),
+                stop_at_eos: true,
+            })
+        );
+    }
+
+    #[test]
+    fn optional_fields_default() {
+        let op = parse_op(r#"{"op":"generate","id":0,"prompt":[],"max_new_tokens":1}"#).unwrap();
+        let ClientOp::Generate(g) = op else { panic!("not a generate") };
+        assert_eq!(g.deadline_ms, None);
+        assert!(!g.stop_at_eos);
+    }
+
+    #[test]
+    fn parses_control_ops() {
+        assert_eq!(parse_op(r#"{"op":"ping"}"#).unwrap(), ClientOp::Ping);
+        assert_eq!(parse_op(r#"{"op":"shutdown"}"#).unwrap(), ClientOp::Shutdown);
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_field_naming_errors() {
+        assert!(parse_op("not json at all").unwrap_err().contains("invalid JSON"));
+        assert!(parse_op(r#"{"id":1}"#).unwrap_err().contains("\"op\""));
+        assert!(parse_op(r#"{"op":"launch"}"#).unwrap_err().contains("unknown op"));
+        assert!(parse_op(r#"{"op":"generate","prompt":[1],"max_new_tokens":1}"#)
+            .unwrap_err()
+            .contains("\"id\""));
+        assert!(parse_op(r#"{"op":"generate","id":1,"max_new_tokens":1}"#)
+            .unwrap_err()
+            .contains("\"prompt\""));
+        assert!(parse_op(r#"{"op":"generate","id":1,"prompt":["a"],"max_new_tokens":1}"#)
+            .unwrap_err()
+            .contains("token ids"));
+        assert!(parse_op(r#"{"op":"generate","id":1,"prompt":[-3],"max_new_tokens":1}"#)
+            .unwrap_err()
+            .contains("u32"));
+        assert!(parse_op(r#"{"op":"generate","id":1,"prompt":[1]}"#)
+            .unwrap_err()
+            .contains("max_new_tokens"));
+        assert!(parse_op(r#"{"op":"generate","id":1,"prompt":[1],"max_new_tokens":1,"stop_at_eos":3}"#)
+            .unwrap_err()
+            .contains("stop_at_eos"));
+    }
+
+    #[test]
+    fn frames_are_valid_json_and_round_trip() {
+        use crate::obs::export::parse_json;
+        let resp = Response {
+            id: 99, // internal id — the frame must carry the CLIENT id instead
+            prompt_len: 4,
+            tokens: vec![5, 6, 7],
+            finish: FinishReason::Stop,
+            ttft: Duration::from_millis(2),
+            total: Duration::from_millis(10),
+        };
+        let d = parse_json(&done_frame(3, &resp)).unwrap();
+        assert_eq!(d.get("type").unwrap().as_str(), Some("done"));
+        assert_eq!(d.get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(d.get("finish").unwrap().as_str(), Some("stop"));
+        assert_eq!(d.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(d.get("ttft_ms").unwrap().as_f64(), Some(2.0));
+
+        let t = parse_json(&token_frame(3, 1, 6)).unwrap();
+        assert_eq!(t.get("type").unwrap().as_str(), Some("token"));
+        assert_eq!(t.get("index").unwrap().as_f64(), Some(1.0));
+        assert_eq!(t.get("token").unwrap().as_f64(), Some(6.0));
+
+        let e = parse_json(&error_frame(None, "bad_request", "missing \"op\"")).unwrap();
+        assert_eq!(e.get("id"), Some(&crate::obs::export::JsonValue::Null));
+        assert_eq!(e.get("code").unwrap().as_str(), Some("bad_request"));
+        assert!(e.get("message").unwrap().as_str().unwrap().contains("op"));
+
+        assert!(parse_json(&pong_frame()).is_ok());
+        assert!(parse_json(&draining_frame()).is_ok());
+    }
+
+    #[test]
+    fn finish_strings_cover_all_reasons() {
+        assert_eq!(finish_str(FinishReason::Stop), "stop");
+        assert_eq!(finish_str(FinishReason::Capacity), "capacity");
+        assert_eq!(finish_str(FinishReason::Failed), "failed");
+        assert_eq!(finish_str(FinishReason::Cancelled), "cancelled");
+    }
+}

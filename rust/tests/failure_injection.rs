@@ -110,3 +110,116 @@ fn many_tiny_requests_all_complete() {
     let res = e.run_to_completion();
     assert_eq!(res.len(), 40);
 }
+
+// ---------------------------------------------------------------------------
+// Protocol-level faults against a live loopback server: malformed JSON,
+// oversized prompts, and pre-expired deadlines each get a structured error
+// frame on the wire — never a hung connection. Read timeouts turn any hang
+// into a fast failure.
+// ---------------------------------------------------------------------------
+
+use integer_scale::coordinator::{Policy, Router};
+use integer_scale::server::{drive, send_shutdown, ClientRequest, Server, ServerConfig};
+use std::io::{BufRead, BufReader};
+use std::net::TcpStream;
+use std::time::Duration;
+
+fn tiny_server() -> (Server, Router) {
+    let cfg = ModelConfig { n_layers: 1, d_model: 32, n_heads: 2, d_ff: 64, vocab: 64, max_seq: 32, n_experts: None };
+    let model = Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 1)));
+    let e = Engine::new(model, EngineConfig { max_batch: 4, kv_token_budget: 512, seed: 0 });
+    let router = Router::new(vec![e], Policy::LeastLoaded);
+    let server = Server::bind("127.0.0.1:0", ServerConfig::default()).unwrap();
+    (server, router)
+}
+
+#[test]
+fn malformed_json_line_gets_structured_error_not_a_hang() {
+    let (server, mut router) = tiny_server();
+    let addr = server.local_addr();
+    let driver = std::thread::spawn(move || {
+        let sock = TcpStream::connect(addr).unwrap();
+        sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut w = sock.try_clone().unwrap();
+        let mut r = BufReader::new(sock);
+        w.write_all(b"this is { not json\n").unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("\"type\":\"error\""), "{line}");
+        assert!(line.contains("\"code\":\"bad_request\""), "{line}");
+        assert!(line.contains("\"id\":null"), "unattributable error carries a null id: {line}");
+        // the connection survives the bad line: a valid request on the
+        // same socket streams to completion
+        w.write_all(
+            b"{\"op\":\"generate\",\"id\":7,\"prompt\":[3,4],\"max_new_tokens\":2,\"stop_at_eos\":false}\n",
+        )
+        .unwrap();
+        let mut got_done = false;
+        while !got_done {
+            line.clear();
+            assert!(r.read_line(&mut line).unwrap() > 0, "server closed before done frame");
+            got_done = line.contains("\"type\":\"done\"");
+        }
+        assert!(line.contains("\"finish\":\"stop\""), "{line}");
+        send_shutdown(&addr).unwrap();
+    });
+    let report = server.run(&mut router);
+    driver.join().unwrap();
+    assert_eq!(report.responses.len(), 1, "the valid follow-up request was served");
+}
+
+#[test]
+fn oversized_prompt_is_shed_with_a_structured_error() {
+    let (server, mut router) = tiny_server();
+    let addr = server.local_addr();
+    let driver = std::thread::spawn(move || {
+        let reqs = vec![
+            // 40 tokens against max_seq = 32: rejected before admission
+            ClientRequest { id: 0, prompt: vec![5; 40], max_new_tokens: 4, deadline_ms: None, stop_at_eos: false },
+            ClientRequest { id: 1, prompt: vec![5, 6], max_new_tokens: 2, deadline_ms: None, stop_at_eos: false },
+        ];
+        let outs = drive(&addr, &reqs).unwrap();
+        send_shutdown(&addr).unwrap();
+        outs
+    });
+    let report = server.run(&mut router);
+    let outs = driver.join().unwrap();
+    assert_eq!(
+        outs[0].error.as_ref().map(|e| e.0.as_str()),
+        Some("oversized_prompt"),
+        "{:?}",
+        outs[0]
+    );
+    assert!(outs[1].intact(), "well-sized request on the same connection completed: {:?}", outs[1]);
+    assert_eq!(report.responses.len(), 1, "the oversized request never reached the engine");
+}
+
+#[test]
+fn pre_expired_deadline_is_rejected_with_deadline_exceeded() {
+    let (server, mut router) = tiny_server();
+    let addr = server.local_addr();
+    let driver = std::thread::spawn(move || {
+        let reqs = vec![ClientRequest {
+            id: 3,
+            prompt: vec![2, 3, 4],
+            max_new_tokens: 20,
+            deadline_ms: Some(0), // already expired at registration
+            stop_at_eos: false,
+        }];
+        let outs = drive(&addr, &reqs).unwrap();
+        send_shutdown(&addr).unwrap();
+        outs
+    });
+    let report = server.run(&mut router);
+    let outs = driver.join().unwrap();
+    assert_eq!(
+        outs[0].error.as_ref().map(|e| e.0.as_str()),
+        Some("deadline_exceeded"),
+        "{:?}",
+        outs[0]
+    );
+    assert_eq!(report.deadline_expired, 1);
+    assert_eq!(report.responses.len(), 1, "the reaped request still yields an engine response");
+    assert_eq!(report.responses[0].finish, FinishReason::Cancelled);
+    assert_eq!(router.engines[0].pool_gauges().blocks_in_use, 0, "no KV blocks leaked");
+}

@@ -1,0 +1,300 @@
+//! Loopback integration tests for the TCP serving frontend: streamed
+//! tokens must be byte-identical to in-process Engine runs in every
+//! serving mode, a mid-stream disconnect must free the abandoned
+//! request's KV blocks without disturbing its neighbours, and the
+//! streaming sink itself must not change what the engine produces.
+
+use integer_scale::coordinator::{
+    Engine, EngineConfig, FinishReason, Policy, Request, RequestId, Response, Router, TokenSink,
+};
+use integer_scale::model::{ModelConfig, ModelWeights, Transformer};
+use integer_scale::server::{
+    client::{drive_concurrent, generate_line},
+    drive, send_shutdown, ClientRequest, Server, ServerConfig,
+};
+use integer_scale::specdec::SpecConfig;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+fn tiny_model() -> Arc<Transformer> {
+    let cfg = ModelConfig {
+        n_layers: 1,
+        d_model: 32,
+        n_heads: 2,
+        d_ff: 64,
+        vocab: 64,
+        max_seq: 64,
+        n_experts: None,
+    };
+    Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 1)))
+}
+
+/// Bigger model whose decode steps are slow enough that a mid-stream
+/// disconnect reliably lands while its request is still generating.
+fn slow_model() -> Arc<Transformer> {
+    let cfg = ModelConfig {
+        n_layers: 2,
+        d_model: 128,
+        n_heads: 4,
+        d_ff: 256,
+        vocab: 256,
+        max_seq: 256,
+        n_experts: None,
+    };
+    Arc::new(Transformer::from_weights(&ModelWeights::random(cfg, 2)))
+}
+
+struct Mode {
+    replicas: usize,
+    overlap: bool,
+    steal: Option<usize>,
+    spec: bool,
+}
+
+fn build_router(model: &Arc<Transformer>, m: &Mode) -> Router {
+    let engines = (0..m.replicas)
+        .map(|i| {
+            let mut e = Engine::new(
+                model.clone(),
+                EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: i as u64 },
+            );
+            e.set_overlap(m.overlap);
+            if m.spec {
+                // self-speculative with draft == target: 100% acceptance,
+                // exercising the spec emission path end to end
+                e.enable_spec_decode(model.clone(), SpecConfig::with_k(3));
+            }
+            e
+        })
+        .collect();
+    let mut r = Router::new(engines, Policy::LeastLoaded);
+    if let Some(w) = m.steal {
+        r = r.with_stealing(w);
+    }
+    r
+}
+
+fn prompts(n: usize, len: usize, vocab: u32) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| (0..len).map(|j| ((i * 7 + j * 3) as u32 + 1) % vocab).collect())
+        .collect()
+}
+
+/// Gold standard: a plain single in-process engine. Greedy tokens depend
+/// only on weights + own context, so this is the reference for EVERY
+/// serving mode.
+fn reference_tokens(
+    model: &Arc<Transformer>,
+    prompts: &[Vec<u32>],
+    new_tokens: usize,
+) -> Vec<Vec<u32>> {
+    let mut e = Engine::new(
+        model.clone(),
+        EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: 9 },
+    );
+    for (i, p) in prompts.iter().enumerate() {
+        let mut r = Request::greedy(i as u64, p.clone(), new_tokens);
+        r.stop_at_eos = false;
+        e.submit(r);
+    }
+    let mut res = e.run_to_completion();
+    res.sort_by_key(|r| r.id);
+    res.into_iter().map(|r| r.tokens).collect()
+}
+
+#[test]
+fn loopback_streams_match_in_process_across_modes() {
+    let model = tiny_model();
+    const N: usize = 8;
+    const NEW: usize = 6;
+    let ps = prompts(N, 6, 64);
+    let gold = reference_tokens(&model, &ps, NEW);
+    let modes = [
+        ("plain", Mode { replicas: 1, overlap: false, steal: None, spec: false }),
+        ("overlap+steal", Mode { replicas: 2, overlap: true, steal: Some(2), spec: false }),
+        ("spec-decode", Mode { replicas: 1, overlap: false, steal: None, spec: true }),
+    ];
+    for (name, mode) in &modes {
+        let mut router = build_router(&model, mode);
+        let server = Server::bind("127.0.0.1:0", ServerConfig::default()).unwrap();
+        let addr = server.local_addr();
+        let ps2 = ps.clone();
+        let driver = std::thread::spawn(move || {
+            // 4 concurrent connections, 2 requests each
+            let batches: Vec<Vec<ClientRequest>> = ps2
+                .chunks(2)
+                .enumerate()
+                .map(|(c, chunk)| {
+                    chunk
+                        .iter()
+                        .enumerate()
+                        .map(|(j, p)| ClientRequest {
+                            id: (c * 2 + j) as u64,
+                            prompt: p.clone(),
+                            max_new_tokens: NEW,
+                            deadline_ms: None,
+                            stop_at_eos: false,
+                        })
+                        .collect()
+                })
+                .collect();
+            let out = drive_concurrent(&addr, &batches).unwrap();
+            send_shutdown(&addr).unwrap();
+            out
+        });
+        let report = server.run(&mut router);
+        let outs = driver.join().unwrap();
+        let mut seen = 0;
+        for o in outs.iter().flatten() {
+            assert!(o.intact(), "{name}: request {} not intact: {o:?}", o.id);
+            assert_eq!(
+                o.streamed, gold[o.id as usize],
+                "{name}: request {} streamed tokens diverged from in-process",
+                o.id
+            );
+            seen += 1;
+        }
+        assert_eq!(seen, N, "{name}: every request resolved");
+        assert_eq!(report.responses.len(), N, "{name}: drain completed all admitted");
+        assert!(
+            report.responses.iter().all(|r| r.finish != FinishReason::Cancelled),
+            "{name}: nothing was cancelled"
+        );
+        assert_eq!(report.cancelled_disconnect, 0, "{name}");
+        for (i, e) in router.engines.iter().enumerate() {
+            assert_eq!(
+                e.pool_gauges().blocks_in_use,
+                0,
+                "{name}: replica {i} leaked KV blocks"
+            );
+        }
+    }
+}
+
+#[test]
+fn mid_stream_disconnect_frees_blocks_and_other_requests_finish() {
+    let model = slow_model();
+    let ps = prompts(2, 8, 256);
+    let gold = reference_tokens(&model, &ps, 6);
+    let mut router =
+        build_router(&model, &Mode { replicas: 1, overlap: false, steal: None, spec: false });
+    let server = Server::bind("127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = server.local_addr();
+    let ps2 = ps.clone();
+    let driver = std::thread::spawn(move || {
+        // connection A: a long request; read exactly one token frame,
+        // then drop the socket mid-stream
+        {
+            use std::io::{BufRead, BufReader, Write};
+            let mut sock = std::net::TcpStream::connect(addr).unwrap();
+            let line = generate_line(&ClientRequest {
+                id: 0,
+                prompt: ps2[0].clone(),
+                max_new_tokens: 200,
+                deadline_ms: None,
+                stop_at_eos: false,
+            });
+            sock.write_all(line.as_bytes()).unwrap();
+            let mut r = BufReader::new(sock.try_clone().unwrap());
+            let mut first = String::new();
+            r.read_line(&mut first).unwrap();
+            assert!(first.contains("\"type\":\"token\""), "unexpected first frame: {first}");
+        } // both socket halves drop here
+        // connection B: a normal request that must finish intact
+        let outs = drive(
+            &addr,
+            &[ClientRequest {
+                id: 1,
+                prompt: ps2[1].clone(),
+                max_new_tokens: 6,
+                deadline_ms: None,
+                stop_at_eos: false,
+            }],
+        )
+        .unwrap();
+        send_shutdown(&addr).unwrap();
+        outs
+    });
+    let report = server.run(&mut router);
+    let outs = driver.join().unwrap();
+    assert!(outs[0].intact(), "request B not intact: {:?}", outs[0]);
+    assert_eq!(outs[0].streamed, gold[1], "request B diverged from in-process");
+    assert_eq!(report.cancelled_disconnect, 1, "A was reaped on disconnect");
+    let cancelled: Vec<&Response> =
+        report.responses.iter().filter(|r| r.finish == FinishReason::Cancelled).collect();
+    assert_eq!(cancelled.len(), 1);
+    assert!(
+        cancelled[0].tokens.len() < 200,
+        "A was cut mid-stream, not run to completion ({} tokens)",
+        cancelled[0].tokens.len()
+    );
+    // the abandoned request's KV blocks all came back
+    assert_eq!(router.engines[0].pool_gauges().blocks_in_use, 0, "leaked KV blocks");
+    assert_eq!(router.merged_metrics().cancelled, 1);
+    assert_eq!(router.merged_metrics().completed, 1, "B completed normally");
+}
+
+/// Satellite check: attaching a [`TokenSink`] must not change what the
+/// engine produces — buffered responses stay identical, and the streamed
+/// (id, index, token) sequence reassembles to exactly those responses.
+#[test]
+fn token_sink_streaming_matches_buffered_responses() {
+    #[derive(Default)]
+    struct Collect {
+        tokens: Mutex<HashMap<RequestId, Vec<u32>>>,
+        finished: Mutex<Vec<RequestId>>,
+    }
+    impl TokenSink for Collect {
+        fn on_token(&self, id: RequestId, index: usize, token: u32) {
+            let mut m = self.tokens.lock().unwrap();
+            let v = m.entry(id).or_default();
+            assert_eq!(index, v.len(), "request {id}: indices must be dense and ordered");
+            v.push(token);
+        }
+        fn on_finish(&self, resp: &Response) {
+            self.finished.lock().unwrap().push(resp.id);
+        }
+    }
+
+    let model = tiny_model();
+    let ps = prompts(6, 6, 64);
+    let mk = |sink: Option<Arc<Collect>>| {
+        let mut e = Engine::new(
+            model.clone(),
+            EngineConfig { max_batch: 4, kv_token_budget: 2048, seed: 5 },
+        );
+        if let Some(s) = sink {
+            e.set_token_sink(s);
+        }
+        for (i, p) in ps.iter().enumerate() {
+            let mut r = Request::greedy(i as u64, p.clone(), 5);
+            r.stop_at_eos = false;
+            e.submit(r);
+        }
+        let mut res = e.run_to_completion();
+        res.sort_by_key(|r| r.id);
+        res
+    };
+
+    let plain = mk(None);
+    let sink = Arc::new(Collect::default());
+    let sunk = mk(Some(sink.clone()));
+    assert_eq!(plain.len(), sunk.len());
+    for (a, b) in plain.iter().zip(&sunk) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "sink changed request {}'s output", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+    let streamed = sink.tokens.lock().unwrap();
+    for r in &sunk {
+        assert_eq!(
+            streamed.get(&r.id).cloned().unwrap_or_default(),
+            r.tokens,
+            "request {}: streamed tokens reassemble to the buffered response",
+            r.id
+        );
+    }
+    let mut fin = sink.finished.lock().unwrap().clone();
+    fin.sort_unstable();
+    assert_eq!(fin, (0..6).collect::<Vec<u64>>(), "exactly one on_finish per request");
+}
